@@ -1,0 +1,68 @@
+//! Energy-driven NAHAS (Fig. 1): chip energy (power x latency) vs
+//! accuracy, joint search vs platform-aware NAS (fixed baseline
+//! accelerator) vs manually crafted models.
+//!
+//! Run with: `cargo run --release --example energy_pareto`
+
+use nahas::accel::{simulate_network, AcceleratorConfig};
+use nahas::bench::Table;
+use nahas::has::HasSpace;
+use nahas::nas::{baselines, NasSpace, NasSpaceId};
+use nahas::search::joint::JointLayout;
+use nahas::search::ppo::PpoController;
+use nahas::search::{joint_search, RewardCfg, SearchCfg, SurrogateSim};
+use nahas::trainer::surrogate;
+
+fn main() {
+    let mut table = Table::new(&["Config", "Top-1(%)", "Energy(mJ)", "Latency(ms)"]);
+
+    // Manually crafted references through the same simulator.
+    let base_hw = AcceleratorConfig::baseline();
+    for (name, net) in [
+        ("MobileNetV2 (manual)", baselines::mobilenet_v2(1.0)),
+        ("Manual-EdgeTPU-S", baselines::manual_edgetpu(false)),
+        ("Manual-EdgeTPU-M", baselines::manual_edgetpu(true)),
+    ] {
+        let rep = simulate_network(&base_hw, &net).unwrap();
+        let acc = surrogate::imagenet_accuracy(&net, 0);
+        table.row(vec![
+            name.into(),
+            format!("{acc:.1}"),
+            format!("{:.3}", rep.energy_mj),
+            format!("{:.3}", rep.latency_ms),
+        ]);
+    }
+
+    // Searches at three energy targets: joint vs fixed-hardware.
+    for (i, &t_mj) in [0.7, 1.0, 1.5].iter().enumerate() {
+        let has = HasSpace::new();
+        for fixed in [false, true] {
+            let space = NasSpace::new(NasSpaceId::Evolved);
+            let (cards, layout) = JointLayout::cards(&space, &has);
+            let free = if fixed { cards[..layout.nas_len].to_vec() } else { cards };
+            let mut ev = SurrogateSim::new(space, 7 + i as u64);
+            let mut ctl = PpoController::new(&free);
+            let cfg = SearchCfg::new(600, RewardCfg::energy(t_mj), 7 + i as u64);
+            let baseline_hw = fixed.then(|| has.baseline_decisions());
+            let out =
+                joint_search(&mut ev, &mut ctl, &layout, baseline_hw.as_deref(), None, &cfg);
+            let label = if fixed {
+                format!("platform-aware NAS @ {t_mj} mJ")
+            } else {
+                format!("NAHAS joint @ {t_mj} mJ")
+            };
+            match out.best_feasible {
+                Some(b) => table.row(vec![
+                    label,
+                    format!("{:.1}", b.result.acc * 100.0),
+                    format!("{:.3}", b.result.energy_mj),
+                    format!("{:.3}", b.result.latency_ms),
+                ]),
+                None => table.row(vec![label, "-".into(), "infeasible".into(), "-".into()]),
+            }
+        }
+    }
+
+    println!("Energy vs accuracy (cf. paper Fig. 1; surrogate fidelity):");
+    table.print();
+}

@@ -1,0 +1,202 @@
+"""AOT-lower every L2 program to HLO **text** + a JSON manifest.
+
+This is the only python entrypoint in the build (``make artifacts``); the
+rust coordinator is self-contained afterwards.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every program is lowered with ``return_tuple=True`` so the rust side
+always unwraps one tuple. ``manifest.json`` records, per program, the
+input/output names, dtypes and shapes, plus the shared configuration
+constants — the single source of truth the rust runtime loads.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import config, costmodel, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    # The HLO text printer ELIDES large literals as `constant({...})`,
+    # which the rust-side text parser silently reconstructs as ZEROS.
+    # Any graph constant bigger than the print threshold must be rebuilt
+    # from iota/arithmetic (see model._kmasks) or passed as an input.
+    if "constant({...})" in text:
+        raise RuntimeError(
+            "exported HLO contains an elided large constant — it would "
+            "silently become zeros on the rust side; rebuild it from "
+            "iota/arithmetic or pass it as an input"
+        )
+    return text
+
+
+def _spec(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def f32(name, *shape):
+    return (_spec(name, "f32", shape), jax.ShapeDtypeStruct(shape, jnp.float32))
+
+
+def i32(name, *shape):
+    return (_spec(name, "i32", shape), jax.ShapeDtypeStruct(shape, jnp.int32))
+
+
+def quickstart_matmul(x, w):
+    from compile.kernels.matmul import matmul_pallas
+
+    return matmul_pallas(x, w)
+
+
+def build_programs():
+    """(name, fn, [(spec, ShapeDtypeStruct)...], [output specs]) tuples."""
+    P = model.PARAM_COUNT
+    CP = costmodel.PARAM_COUNT
+    B, NB = config.TRAIN_BATCH, config.BLOCKS
+    EB = config.EVAL_BATCH
+    mask_args = [
+        f32("opsel", NB, 2),
+        f32("ksel", NB, 3),
+        f32("expmask", NB, config.CEXP_MAX),
+        f32("outmask", NB, config.CMAX),
+    ]
+    img = (config.IMG, config.IMG, 3)
+    progs = []
+    progs.append(
+        (
+            "supernet_init",
+            lambda seed: model.init_fn(seed),
+            [i32("seed")],
+            [_spec(n, "f32", (P,)) for n in ("flat", "m", "v")],
+        )
+    )
+    progs.append(
+        (
+            "supernet_train",
+            model.train_step,
+            [
+                f32("flat", P),
+                f32("m", P),
+                f32("v", P),
+                i32("step"),
+                f32("x", B, *img),
+                i32("y", B),
+            ]
+            + mask_args
+            + [f32("lr")],
+            [_spec(n, "f32", (P,)) for n in ("flat", "m", "v")]
+            + [
+                _spec("loss", "f32", ()),
+                _spec("acc", "f32", ()),
+            ],
+        )
+    )
+    progs.append(
+        (
+            "supernet_eval",
+            model.eval_step,
+            [f32("flat", P), f32("x", EB, *img), i32("y", EB)] + mask_args,
+            [_spec("loss", "f32", ()), _spec("acc", "f32", ())],
+        )
+    )
+    progs.append(
+        (
+            "costmodel_init",
+            lambda seed: costmodel.init_fn(seed),
+            [i32("seed")],
+            [_spec(n, "f32", (CP,)) for n in ("flat", "m", "v")],
+        )
+    )
+    progs.append(
+        (
+            "costmodel_train",
+            costmodel.train_step,
+            [
+                f32("flat", CP),
+                f32("m", CP),
+                f32("v", CP),
+                i32("step"),
+                i32("seed"),
+                f32("x", config.COST_BATCH, config.FEATURE_DIM),
+                f32("y_lat", config.COST_BATCH),
+                f32("y_area", config.COST_BATCH),
+            ],
+            [_spec(n, "f32", (CP,)) for n in ("flat", "m", "v")]
+            + [_spec("loss", "f32", ())],
+        )
+    )
+    for bs in (1, 256):
+        progs.append(
+            (
+                f"costmodel_infer_b{bs}",
+                costmodel.infer,
+                [f32("flat", CP), f32("x", bs, config.FEATURE_DIM)],
+                [
+                    _spec("lat", "f32", (bs,)),
+                    _spec("area", "f32", (bs,)),
+                ],
+            )
+        )
+    progs.append(
+        (
+            "quickstart_matmul",
+            quickstart_matmul,
+            [f32("x", 16, 16), f32("w", 16, 16)],
+            [_spec("out", "f32", (16, 16))],
+        )
+    )
+    return progs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "config": {
+            k: getattr(config, k)
+            for k in dir(config)
+            if k.isupper() and not k.startswith("_")
+        },
+        "supernet_param_count": model.PARAM_COUNT,
+        "costmodel_param_count": costmodel.PARAM_COUNT,
+        "programs": {},
+    }
+    for name, fn, inputs, outputs in build_programs():
+        specs = [s for s, _ in inputs]
+        shapes = [sd for _, sd in inputs]
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["programs"][name] = {
+            "file": fname,
+            "inputs": specs,
+            "outputs": outputs,
+        }
+        print(f"lowered {name}: {len(text)} chars, {len(specs)} inputs")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['programs'])} programs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Shared configuration constants for the L1/L2 build-time programs.
+
+These constants define the *trainable proxy* supernet (the scaled-down
+stand-in for the paper's ImageNet child programs — see DESIGN.md
+§Substitutions) and the cost model (paper Table 2). They are exported to
+``artifacts/manifest.json`` by ``aot.py`` so the rust coordinator reads a
+single source of truth and never hard-codes shapes.
+"""
+
+# ---------------------------------------------------------------------------
+# Proxy task (synthetic stand-in for ImageNet; see DESIGN.md §Substitutions).
+# ---------------------------------------------------------------------------
+IMG = 8                # input resolution (IMG x IMG x 3)
+NUM_CLASSES = 16
+TRAIN_BATCH = 32
+EVAL_BATCH = 128
+
+# ---------------------------------------------------------------------------
+# Supernet: B switchable IBN / Fused-IBN blocks with mask-encoded decisions.
+# ---------------------------------------------------------------------------
+STEM_CH = 8
+BLOCKS = 5
+WIDTHS = [8, 16, 16, 32, 32]     # allocated (multiplier=1.0) output channels
+STRIDES = [1, 2, 1, 2, 1]
+MAX_EXPANSION = 6                # expansion masks select {3, 6} of this
+KMAX = 7                         # allocated depthwise / fused kernel size
+KERNEL_SIZES = [3, 5, 7]
+CMAX = max(WIDTHS)                       # widest block output
+CEXP_MAX = MAX_EXPANSION * CMAX          # widest expanded tensor
+
+# ---------------------------------------------------------------------------
+# Cost model (paper Table 2): 3-layer MLP, hidden 256, input feature 394,
+# dual heads (latency, area), loss = MSE(area) + LAMBDA * MSE(latency).
+# ---------------------------------------------------------------------------
+FEATURE_DIM = 394
+COST_HIDDEN = 256
+COST_LAYERS = 3
+COST_BATCH = 128
+COST_LR = 1e-3
+COST_LAMBDA = 10.0
+COST_DROPOUT = 0.1
+
+# ---------------------------------------------------------------------------
+# Pallas kernel tiling (L1). Small shapes: blocks clamp to the dimension.
+# ---------------------------------------------------------------------------
+BLOCK_M = 32
+BLOCK_N = 64
+BLOCK_K = 64

@@ -1,0 +1,136 @@
+"""L2: the NAHAS cost model (paper §3.5.2, Table 2, Eq. 7).
+
+A 3-layer MLP (hidden 256, ReLU, dropout 0.1) over a 394-dim encoding of
+the joint (neural-architecture, accelerator) configuration, with two
+prediction heads sharing the trunk:
+
+    latency head  f_l(alpha, h)      area head  f_a(h)
+    Loss = MSE(area) + lambda * MSE(latency),  lambda = 10   (Eq. 7)
+
+Trained with Adam (lr 1e-3, batch 128) on simulator-labelled samples the
+rust coordinator generates — the "labelled data is cheap, use the
+simulator farm" setup of the paper.
+
+Two graphs are exported:
+
+  * ``train_step`` — differentiates through the *composable* L1 pallas
+    matmul (custom VJP), so the whole optimisation path runs the kernel;
+  * ``infer`` — runs the *fused* L1 MLP-trunk kernel (kernels/mlp.py),
+    the hot path that replaces the simulator inside oneshot search.
+
+Both are asserted equal to the jnp oracle and to each other in pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile import config
+from compile.kernels.matmul import matmul
+from compile.kernels.mlp import fused_mlp
+
+F, H = config.FEATURE_DIM, config.COST_HIDDEN
+
+
+def params_template():
+    z = jnp.zeros
+    return {
+        "w1": z((F, H)),
+        "b1": z((H,)),
+        "w2": z((H, H)),
+        "b2": z((H,)),
+        "w3": z((H, H)),
+        "b3": z((H,)),
+        # Dual heads on the shared trunk (paper: "largely share parameters
+        # with only separate parameterization in the prediction heads").
+        "wl": z((H, 1)),
+        "bl": z((1,)),
+        "wa": z((H, 1)),
+        "ba": z((1,)),
+    }
+
+
+_TEMPLATE = params_template()
+FLAT_TEMPLATE, unravel = ravel_pytree(_TEMPLATE)
+PARAM_COUNT = FLAT_TEMPLATE.shape[0]
+
+
+def init_fn(seed):
+    """He-normal init; returns (flat, adam_m, adam_v) all length P."""
+    leaves, treedef = jax.tree_util.tree_flatten(_TEMPLATE)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if leaf.ndim == 1:
+            out.append(jnp.zeros_like(leaf))
+        else:
+            std = (2.0 / leaf.shape[0]) ** 0.5
+            out.append(std * jax.random.normal(k, leaf.shape))
+    flat, _ = ravel_pytree(jax.tree_util.tree_unflatten(treedef, out))
+    return flat, jnp.zeros_like(flat), jnp.zeros_like(flat)
+
+
+def _trunk_composable(p, x, dropout_key=None):
+    """Trunk via the composable pallas matmul (training path)."""
+    h = jnp.maximum(matmul(x, p["w1"]) + p["b1"], 0.0)
+    h = _dropout(h, dropout_key, 0)
+    h = jnp.maximum(matmul(h, p["w2"]) + p["b2"], 0.0)
+    h = _dropout(h, dropout_key, 1)
+    h = jnp.maximum(matmul(h, p["w3"]) + p["b3"], 0.0)
+    h = _dropout(h, dropout_key, 2)
+    return h
+
+
+def _dropout(h, key, layer):
+    if key is None:
+        return h
+    keep = 1.0 - config.COST_DROPOUT
+    mask = jax.random.bernoulli(jax.random.fold_in(key, layer), keep, h.shape)
+    return h * mask / keep
+
+
+def _heads(p, h):
+    lat = (matmul(h, p["wl"]) + p["bl"])[:, 0]
+    area = (matmul(h, p["wa"]) + p["ba"])[:, 0]
+    return lat, area
+
+
+def predict(p, x, dropout_key=None):
+    """Composable-kernel prediction (used by train and by tests)."""
+    h = _trunk_composable(p, x, dropout_key)
+    return _heads(p, h)
+
+
+def infer(flat, x):
+    """Inference via the fused L1 MLP-trunk kernel. Returns (lat, area)."""
+    p = unravel(flat)
+    h = fused_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"])
+    return _heads(p, h)
+
+
+def train_step(flat, m, v, step, seed, x, y_lat, y_area):
+    """One Adam step of Eq. 7. Returns (flat', m', v', loss).
+
+    ``step`` is the 0-based global step (for bias correction), ``seed``
+    drives the dropout mask (folded with the step so every batch gets a
+    fresh mask).
+    """
+
+    def loss_fn(f):
+        p = unravel(f)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        lat, area = predict(p, x, dropout_key=key)
+        mse_l = jnp.mean((lat - y_lat) ** 2)
+        mse_a = jnp.mean((area - y_area) ** 2)
+        return mse_a + config.COST_LAMBDA * mse_l
+
+    loss, g = jax.value_and_grad(loss_fn)(flat)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m / (1 - b1**t)
+    vhat = v / (1 - b2**t)
+    flat = flat - config.COST_LR * mhat / (jnp.sqrt(vhat) + eps)
+    return flat, m, v, loss

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: MXU-style tiled matmul with a custom VJP.
+
+The kernel tiles the ``[M, K] @ [K, N]`` product over a ``(M/bm, N/bn,
+K/bk)`` grid. Each ``(i, j)`` output tile stays resident in VMEM while the
+``k`` grid dimension (innermost, sequential) streams ``bm x bk`` /
+``bk x bn`` operand tiles from HBM and accumulates into it — the
+K-reduction systolic pass a TPU MXU performs, and exactly the compute
+pattern the L3 accelerator simulator costs for regular convolutions (see
+DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the pallas interpreter into
+plain HLO (loops + dynamic slices). Correctness vs the jnp oracle is the
+contract; real-TPU performance is estimated analytically in DESIGN.md.
+
+The backward pass re-uses the same kernel (``dx = g @ w^T``, ``dw = x^T @
+g``) through ``jax.custom_vjp`` — pallas_call itself has no transpose
+rule, and routing the VJP through the kernel keeps the AOT training graph
+on the L1 code path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import config
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps):
+    """One (i, j, k) grid step: o_tile += x_tile @ w_tile.
+
+    The output tile is revisited across the sequential ``k`` dimension
+    (its index map ignores ``k``), so it acts as the VMEM accumulator: it
+    is zeroed on the first k step and accumulated into afterwards.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def matmul_pallas(x, w, *, bm=None, bn=None, bk=None):
+    """``x [M, K] @ w [K, N]`` via the tiled pallas kernel (f32).
+
+    Shapes need not be tile-aligned: operands are zero-padded up to the
+    tile grid and the result is sliced back. Zero padding is exact for a
+    matmul (padded rows/cols contribute zeros).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {w.shape}"
+    bm = min(bm or config.BLOCK_M, _ceil_to(m, 8))
+    bn = min(bn or config.BLOCK_N, _ceil_to(n, 8))
+    bk = min(bk or config.BLOCK_K, _ceil_to(k, 8))
+
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable tiled-pallas matmul (forward and backward on L1)."""
+    return matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: fused 3-layer MLP trunk (the cost-model hot path).
+
+The paper's cost model (Table 2) is a 3-layer MLP of hidden size 256 over
+a 394-dim feature. During oneshot search its *inference* is the inner
+loop replacing the accelerator simulator, so the whole trunk
+
+    h = relu(relu(relu(x @ W1 + b1) @ W2 + b2) @ W3 + b3)
+
+is fused into a single pallas kernel: the weights (394*256 + 2*256*256
+floats ~ 0.9 MB) are small enough to stay VMEM-resident across the whole
+batch, so the kernel tiles only over batch rows and never re-streams the
+weights — the compute-intensity argument the paper makes for fused ops,
+applied to our own hot path.
+
+``interpret=True`` as everywhere (see matmul.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import config
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    """One batch-row tile through the whole trunk; weights VMEM-resident."""
+    h = x_ref[...]
+    h = jnp.maximum(
+        jnp.dot(h, w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...],
+        0.0,
+    )
+    h = jnp.maximum(
+        jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...],
+        0.0,
+    )
+    h = jnp.maximum(
+        jnp.dot(h, w3_ref[...], preferred_element_type=jnp.float32)
+        + b3_ref[...],
+        0.0,
+    )
+    o_ref[...] = h
+
+
+def fused_mlp(x, w1, b1, w2, b2, w3, b3, *, bm=None):
+    """Fused relu-MLP trunk: ``x [M, F] -> [M, H]`` in one pallas call."""
+    m, f = x.shape
+    h = w1.shape[1]
+    assert w2.shape == (h, h) and w3.shape == (h, h), (w2.shape, w3.shape)
+    bm = min(bm or config.BLOCK_M, m)
+    mp = ((m + bm - 1) // bm) * bm
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    # Biases as [1, H] rows so they broadcast inside the kernel.
+    b1r, b2r, b3r = (b.reshape(1, h) for b in (b1, b2, b3))
+
+    whole = lambda i: (0, 0)  # noqa: E731 — weights: one full-tensor block
+    out = pl.pallas_call(
+        _mlp_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, h), whole),
+            pl.BlockSpec((1, h), whole),
+            pl.BlockSpec((h, h), whole),
+            pl.BlockSpec((1, h), whole),
+            pl.BlockSpec((h, h), whole),
+            pl.BlockSpec((1, h), whole),
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, h), jnp.float32),
+        interpret=True,
+    )(xp, w1, b1r, w2, b2r, w3, b3r)
+    return out[:m]

@@ -1,0 +1,82 @@
+"""Pure-jnp correctness oracles for the L1 kernels and L2 blocks.
+
+Everything here is the "obviously correct" reference implementation: no
+pallas, no masking tricks. pytest (``python/tests/``) asserts the pallas
+kernels and the mask-encoded supernet blocks agree with these within
+float32 tolerance — the core correctness signal of the compile path.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w):
+    """Oracle for kernels.matmul: plain f32 matmul."""
+    return jnp.matmul(x, w)
+
+
+def fused_mlp_ref(x, w1, b1, w2, b2, w3, b3):
+    """Oracle for kernels.mlp.fused_mlp: 3x (matmul + bias + relu)."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    h = jnp.maximum(h @ w2 + b2, 0.0)
+    return jnp.maximum(h @ w3 + b3, 0.0)
+
+
+def conv2d_ref(x, w, stride=1):
+    """NHWC x HWIO 'same' conv oracle."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def dwconv2d_ref(x, w, stride=1):
+    """Depthwise 'same' conv oracle; ``w`` is ``[kh, kw, 1, C]``."""
+    c = x.shape[-1]
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def rmsnorm_ref(h, eps=1e-6):
+    """Channel RMSNorm oracle (matches model.rmsnorm_masked on a dense,
+    fully-active tensor)."""
+    ms = (h * h).mean(axis=-1, keepdims=True)
+    return h * lax.rsqrt(ms + eps)
+
+
+def ibn_block_ref(x, w1, b1, dw, bdw, w2, b2, stride=1, residual=False):
+    """Plain (un-masked) inverted-bottleneck block oracle.
+
+    expand 1x1 -> relu -> rmsnorm -> depthwise kxk (stride) -> relu ->
+    rmsnorm -> project 1x1, linear output, optional residual.
+    ``w1 [cin, cexp]``, ``dw [k, k, 1, cexp]``, ``w2 [cexp, cout]``.
+    """
+    n, h, w_, cin = x.shape
+    hmid = jnp.maximum(x.reshape(-1, cin) @ w1 + b1, 0.0)
+    hmid = rmsnorm_ref(hmid.reshape(n, h, w_, -1))
+    hmid = rmsnorm_ref(jnp.maximum(dwconv2d_ref(hmid, dw, stride) + bdw, 0.0))
+    nh, nw = hmid.shape[1], hmid.shape[2]
+    out = hmid.reshape(-1, hmid.shape[-1]) @ w2 + b2
+    out = out.reshape(n, nh, nw, -1)
+    return out + x if residual else out
+
+
+def fused_ibn_block_ref(x, wf, bf, w2, b2, stride=1, residual=False):
+    """Plain fused-IBN block oracle: full kxk conv -> relu -> rmsnorm ->
+    project 1x1. ``wf [k, k, cin, cexp]``, ``w2 [cexp, cout]``.
+    """
+    n = x.shape[0]
+    hmid = rmsnorm_ref(jnp.maximum(conv2d_ref(x, wf, stride) + bf, 0.0))
+    nh, nw = hmid.shape[1], hmid.shape[2]
+    out = hmid.reshape(-1, hmid.shape[-1]) @ w2 + b2
+    out = out.reshape(n, nh, nw, -1)
+    return out + x if residual else out

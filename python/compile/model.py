@@ -1,0 +1,252 @@
+"""L2: the NAHAS proxy-task supernetwork (JAX, build-time only).
+
+A weight-sharing ConvNet whose architectural decisions are *runtime mask
+inputs*, so a single AOT-lowered HLO artifact serves both search modes the
+paper compares (§3.5):
+
+  * **oneshot** — shared weights, controller-sampled masks per step
+    (ProxylessNAS / TuNAS style);
+  * **multi-trial** — fresh weights (re-initialised via ``init_fn``), one
+    fixed mask per sampled child (MnasNet-style child programs).
+
+Every block is the paper's *switchable Fused-IBN layer* (Fig. 3): a
+``one_of`` between a conventional IBN and a Fused-IBN path, plus tunable
+kernel size, expansion factor and filter (output-channel) multiplier —
+the PyGlove-symbolised knobs of the evolved search space (§3.2.2),
+expressed here as dense masks so shapes stay static for AOT:
+
+  * kernel size ∈ {3,5,7}: a one-hot ``ksel`` contracts constant centered
+    k×k masks over the allocated 7×7 weights (equivalent to a true k×k
+    conv at stride 1; at stride 2 it is the same operator up to 'SAME'
+    padding alignment — see tests/test_model.py);
+  * expansion ∈ {3,6}: channel mask over the allocated 6× hidden width
+    (applied *after* bias+relu so masked lanes are exactly zero);
+  * op type: convex selection between the two paths (one-hot in search);
+  * filter multiplier: channel mask over the allocated output width.
+
+The classifier head runs on the L1 pallas matmul kernel, putting the
+kernel on the differentiated training path of the exported artifact.
+
+This proxy is deliberately small (see config.py and DESIGN.md
+§Substitutions): the paper's full 17-block S1 / 16-block S2 spaces are
+modelled in the rust ``nas`` module and costed by the rust simulator; this
+network is the *trainable* stand-in for the paper's 5-epoch ImageNet proxy
+task.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.flatten_util import ravel_pytree
+
+from compile import config
+from compile.kernels.matmul import matmul
+
+# Block input widths: stem feeds block 0.
+CINS = [config.STEM_CH] + config.WIDTHS[:-1]
+CEXPS = [config.MAX_EXPANSION * c for c in CINS]
+
+def kernel_mask(ksel_i):
+    """Centered k x k spatial mask in the allocated KMAX x KMAX window.
+
+    Built from the *runtime* ``ksel`` one-hot: radius = ksel . (1, 2, 3),
+    mask = (|dh| <= r) & (|dw| <= r). IMPORTANT: this must stay a
+    runtime-dependent expression — a materialized [3,7,7] mask constant
+    (or any iota construction XLA can constant-fold) gets ELIDED by the
+    HLO text printer as ``constant({...})`` and silently reconstructed
+    as zeros by the rust-side text parser. aot.py hard-fails the build if
+    an elided constant ever appears in an exported program.
+    """
+    r = ksel_i[0] * 1.0 + ksel_i[1] * 2.0 + ksel_i[2] * 3.0
+    pos = jnp.abs(lax.iota(jnp.float32, config.KMAX) - (config.KMAX - 1) / 2.0)
+    box = (pos[:, None] <= r + 0.25) & (pos[None, :] <= r + 0.25)
+    return box.astype(jnp.float32)
+
+
+def params_template():
+    """Allocated (maximum-width) parameter pytree, all zeros."""
+    z = jnp.zeros
+    blocks = []
+    for i in range(config.BLOCKS):
+        cin, cout, cexp = CINS[i], config.WIDTHS[i], CEXPS[i]
+        k = config.KMAX
+        blocks.append(
+            {
+                # IBN path: expand 1x1 -> depthwise kxk -> project 1x1.
+                "w1": z((cin, cexp)),
+                "b1": z((cexp,)),
+                "dw": z((k, k, 1, cexp)),
+                "bdw": z((cexp,)),
+                "w2": z((cexp, cout)),
+                "b2": z((cout,)),
+                # Fused path: full kxk conv -> project 1x1.
+                "wf": z((k, k, cin, cexp)),
+                "bf": z((cexp,)),
+                "w2f": z((cexp, cout)),
+                "b2f": z((cout,)),
+            }
+        )
+    return {
+        "stem_w": z((3, 3, 3, config.STEM_CH)),
+        "stem_b": z((config.STEM_CH,)),
+        "blocks": blocks,
+        "head_w": z((config.WIDTHS[-1], config.NUM_CLASSES)),
+        "head_b": z((config.NUM_CLASSES,)),
+    }
+
+
+_TEMPLATE = params_template()
+FLAT_TEMPLATE, unravel = ravel_pytree(_TEMPLATE)
+PARAM_COUNT = FLAT_TEMPLATE.shape[0]
+
+
+def init_fn(seed):
+    """He-normal init of the flat parameter vector from an int32 seed.
+
+    Returned alongside zero Adam moment buffers so the rust side can
+    feed all three straight into ``train_step``.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(_TEMPLATE)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if leaf.ndim == 1:  # biases
+            out.append(jnp.zeros_like(leaf))
+        else:
+            fan_in = 1
+            for d in leaf.shape[:-1]:
+                fan_in *= d
+            std = (2.0 / fan_in) ** 0.5
+            out.append(std * jax.random.normal(k, leaf.shape))
+    params = jax.tree_util.tree_unflatten(treedef, out)
+    flat, _ = ravel_pytree(params)
+    return flat, jnp.zeros_like(flat), jnp.zeros_like(flat)
+
+
+def _conv1x1(x, w, b):
+    n, h, ww, c = x.shape
+    y = x.reshape(-1, c) @ w + b
+    return y.reshape(n, h, ww, -1)
+
+
+def _conv(x, w, stride):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _dwconv(x, w, stride):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )
+
+
+def rmsnorm_masked(h, em):
+    """RMS-normalize over the *active* channels only.
+
+    ``em`` is the 0/1 channel mask. Masked lanes are exactly zero in
+    ``h`` and stay zero; dividing by the RMS over active lanes matches a
+    plain channel-RMSNorm of the equivalent narrow network, so the
+    narrow-network oracle tests still hold. Without normalization the
+    BN-free supernet is badly conditioned at small effective widths
+    (training diverges or stalls).
+    """
+    denom = jnp.maximum(em.sum(), 1.0)
+    ms = (h * h * em).sum(axis=-1, keepdims=True) / denom
+    return h * lax.rsqrt(ms + 1e-6) * em
+
+
+def rmsnorm(h):
+    """Unmasked channel RMSNorm (stem)."""
+    ms = (h * h).mean(axis=-1, keepdims=True)
+    return h * lax.rsqrt(ms + 1e-6)
+
+
+def block_forward(x, bp, i, opsel, ksel, expmask, outmask):
+    """One switchable IBN/Fused-IBN block (paper Fig. 3) with masks."""
+    stride = config.STRIDES[i]
+    cin, cout, cexp = CINS[i], config.WIDTHS[i], CEXPS[i]
+    km = kernel_mask(ksel[i])
+    em = expmask[i, :cexp]
+
+    # IBN path. Masked hidden lanes are re-zeroed after every bias+relu so
+    # the path is exactly a narrower network; masked RMSNorm keeps the
+    # BN-free stack well-conditioned at every effective width.
+    h = rmsnorm_masked(jnp.maximum(_conv1x1(x, bp["w1"], bp["b1"]), 0.0) * em, em)
+    dww = bp["dw"] * km[:, :, None, None]
+    h = rmsnorm_masked(jnp.maximum(_dwconv(h, dww, stride) + bp["bdw"], 0.0) * em, em)
+    y_ibn = _conv1x1(h, bp["w2"], bp["b2"])
+
+    # Fused path: full kxk conv straight from block input.
+    wfm = bp["wf"] * km[:, :, None, None]
+    h2 = rmsnorm_masked(jnp.maximum(_conv(x, wfm, stride) + bp["bf"], 0.0) * em, em)
+    y_fused = _conv1x1(h2, bp["w2f"], bp["b2f"])
+
+    out = opsel[i, 0] * y_ibn + opsel[i, 1] * y_fused
+    out = out * outmask[i, :cout]
+    if stride == 1 and cin == cout:
+        out = out + x
+    return out
+
+
+def forward(params, x, opsel, ksel, expmask, outmask):
+    """Supernet logits. ``x`` is ``[N, IMG, IMG, 3]`` NHWC float32."""
+    h = rmsnorm(jnp.maximum(_conv(x, params["stem_w"], 1) + params["stem_b"], 0.0))
+    for i in range(config.BLOCKS):
+        h = block_forward(h, params["blocks"][i], i, opsel, ksel, expmask, outmask)
+    feats = jnp.mean(h, axis=(1, 2))  # global average pool
+    # Classifier head on the L1 pallas kernel (differentiated via its
+    # custom VJP, which also runs the kernel).
+    return matmul(feats, params["head_w"]) + params["head_b"]
+
+
+def _loss_acc(params, x, y, opsel, ksel, expmask, outmask):
+    logits = forward(params, x, opsel, ksel, expmask, outmask)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - ll)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def train_step(flat, m, v, step, x, y, opsel, ksel, expmask, outmask, lr):
+    """One Adam step (global-norm-clipped) on the flat parameter vector.
+
+    Returns ``(flat', m', v', loss, acc)``. Adam + clipping is the only
+    recipe we found that trains *every* masked subnetwork of the
+    supernet stably — SGD+momentum (the paper's RMSProp child setting)
+    diverges at large effective widths and stalls at small ones on the
+    BN-free proxy (see DESIGN.md §Substitutions). The learning rate is a
+    runtime scalar so the rust trainer owns the schedule; masked
+    parameters receive zero gradient and therefore never move.
+    """
+
+    def loss_fn(f):
+        return _loss_acc(unravel(f), x, y, opsel, ksel, expmask, outmask)
+
+    (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+    gn = jnp.sqrt((g * g).sum())
+    g = g * jnp.minimum(1.0, 5.0 / (gn + 1e-9))
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m / (1 - b1**t)
+    vhat = v / (1 - b2**t)
+    flat = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return flat, m, v, loss, acc
+
+
+def eval_step(flat, x, y, opsel, ksel, expmask, outmask):
+    """Loss and accuracy of the masked subnetwork on one eval batch."""
+    return _loss_acc(unravel(flat), x, y, opsel, ksel, expmask, outmask)

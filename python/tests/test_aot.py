@@ -1,0 +1,64 @@
+"""AOT manifest/lowering sanity: every exported program lowers, the
+manifest agrees with the jitted signatures, and the config block carries
+what the rust runtime needs."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, config, costmodel, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestManifest:
+    def test_program_inventory(self):
+        progs = aot.build_programs()
+        names = {p[0] for p in progs}
+        assert {
+            "supernet_init",
+            "supernet_train",
+            "supernet_eval",
+            "costmodel_init",
+            "costmodel_train",
+            "costmodel_infer_b1",
+            "costmodel_infer_b256",
+            "quickstart_matmul",
+        } <= names
+
+    def test_param_counts_positive_and_consistent(self):
+        assert model.PARAM_COUNT > 100_000
+        assert costmodel.PARAM_COUNT == (
+            (config.FEATURE_DIM * config.COST_HIDDEN + config.COST_HIDDEN)
+            + 2 * (config.COST_HIDDEN**2 + config.COST_HIDDEN)
+            + 2 * (config.COST_HIDDEN + 1)
+        )
+
+    def test_quickstart_lowers_to_hlo_text(self):
+        progs = {p[0]: p for p in aot.build_programs()}
+        name, fn, inputs, outputs = progs["quickstart_matmul"]
+        lowered = jax.jit(fn).lower(*[sd for _, sd in inputs])
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "HloModule" in text
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+        reason="artifacts not built (run `make artifacts`)",
+    )
+    def test_built_manifest_matches_code(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["supernet_param_count"] == model.PARAM_COUNT
+        assert man["costmodel_param_count"] == costmodel.PARAM_COUNT
+        assert man["config"]["FEATURE_DIM"] == config.FEATURE_DIM
+        for name, entry in man["programs"].items():
+            path = os.path.join(ARTIFACTS, entry["file"])
+            assert os.path.exists(path), name
+            # Inputs recorded with concrete shapes/dtypes.
+            for spec in entry["inputs"]:
+                assert spec["dtype"] in ("f32", "i32")
+                assert all(isinstance(d, int) for d in spec["shape"])

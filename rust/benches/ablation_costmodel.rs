@@ -1,0 +1,91 @@
+//! Ablation — learned cost model vs direct simulator as the search's
+//! latency oracle (paper §3.5.2: the simulator query "becomes the new
+//! bottleneck for NAHAS oneshot search", motivating the MLP).
+//!
+//! Compares (a) oracle quality: search outcome when rewards come from
+//! MLP predictions vs ground truth, and (b) oracle throughput:
+//! queries/s of each path.
+
+use nahas::bench;
+use nahas::bench::Table;
+use nahas::costmodel::{featurize, generate_dataset, CostModel, FEATURE_DIM};
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::runtime::Runtime;
+use nahas::search::evaluator::{CostModelEval, Evaluator};
+use nahas::search::joint::JointLayout;
+use nahas::search::ppo::PpoController;
+use nahas::search::{joint_search, RewardCfg, SearchCfg, SurrogateSim};
+use nahas::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::load(Runtime::default_dir())?;
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(44);
+    let (data, norm) = generate_dataset(&space, 4000, &mut rng);
+    let mut cm = CostModel::init(&mut rt, norm, 0)?;
+    cm.train(&mut rt, &data, 1000, &mut rng)?;
+
+    // --- oracle throughput ------------------------------------------------
+    let nas_d = space.random(&mut rng);
+    let hw_d = has.baseline_decisions();
+    let net = space.decode(&nas_d);
+    let cfg_hw = has.decode(&hw_d);
+    bench::bench("oracle: direct simulator", 10, 200, || {
+        nahas::accel::simulate_network(&cfg_hw, &net).unwrap()
+    });
+    let mut feat = vec![0.0f32; FEATURE_DIM];
+    featurize(&space, &nas_d, &hw_d, &mut feat);
+    bench::bench("oracle: cost model (b1, incl PJRT)", 5, 50, || {
+        cm.predict_one(&mut rt, &feat).unwrap()
+    });
+    let feats: Vec<Vec<f32>> = (0..256).map(|_| feat.clone()).collect();
+    let r = bench::bench("oracle: cost model (b256 batch)", 3, 20, || {
+        cm.predict(&mut rt, &feats).unwrap()
+    });
+    println!(
+        "batched cost model: {:.0} predictions/s\n",
+        256.0 / (r.mean_ns / 1e9)
+    );
+
+    // --- search-quality comparison ----------------------------------------
+    let mut table =
+        Table::new(&["Oracle", "Best feasible top-1(%)", "True latency(ms)", "Within target?"]);
+    let t_ms = 0.5;
+    for which in ["simulator", "costmodel"] {
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let (cards, layout) = JointLayout::cards(&space, &has);
+        let mut ctl = PpoController::new(&cards);
+        let cfg = SearchCfg::new(1500, RewardCfg::latency(t_ms), 9);
+        let out = if which == "simulator" {
+            let mut ev = SurrogateSim::new(space, 9);
+            joint_search(&mut ev, &mut ctl, &layout, None, None, &cfg)
+        } else {
+            let mut ev = CostModelEval::new(&mut rt, cm, NasSpace::new(NasSpaceId::EfficientNet), 9);
+            let out = joint_search(&mut ev, &mut ctl, &layout, None, None, &cfg);
+            cm = ev.cm;
+            out
+        };
+        if let Some(b) = out.best_feasible {
+            // Ground-truth re-simulation of the winner.
+            let sp = NasSpace::new(NasSpaceId::EfficientNet);
+            let truth = nahas::accel::simulate_network(&has.decode(&b.has_d), &sp.decode(&b.nas_d));
+            let (lat, ok) = match truth {
+                Ok(rep) => (rep.latency_ms, rep.latency_ms <= t_ms * 1.1),
+                Err(_) => (f64::NAN, false),
+            };
+            table.row(vec![
+                which.into(),
+                format!("{:.2}", b.result.acc * 100.0),
+                format!("{lat:.3}"),
+                format!("{ok}"),
+            ]);
+        } else {
+            table.row(vec![which.into(), "-".into(), "-".into(), "false".into()]);
+        }
+    }
+    println!("Search with each oracle (1500 samples, target {t_ms} ms, winner re-simulated):");
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Fig. 1 — Chip energy (power x latency) vs ImageNet top-1.
+//!
+//! Regenerates the figure's three series: NAHAS joint search,
+//! platform-aware NAS on the fixed baseline accelerator, and the manual
+//! EdgeTPU / MobileNet models — all costed by the same simulator.
+//! Paper headline: NAHAS reduces energy up to 2x at matched accuracy.
+//! Writes results/fig1_energy_pareto.csv.
+
+use nahas::accel::{simulate_network, AcceleratorConfig};
+use nahas::bench::Table;
+use nahas::has::HasSpace;
+use nahas::metrics;
+use nahas::nas::{baselines, NasSpace, NasSpaceId};
+use nahas::pareto::{frontier, Point};
+use nahas::search::joint::JointLayout;
+use nahas::search::ppo::PpoController;
+use nahas::search::{joint_search, RewardCfg, SearchCfg, SurrogateSim};
+use nahas::trainer::surrogate;
+
+fn search(fixed_hw: bool, t_mj: f64, samples: usize, seed: u64) -> Option<(f64, f64)> {
+    // Best of two controller seeds (the paper reports its best search).
+    let mut best: Option<(f64, f64)> = None;
+    for s in 0..2u64 {
+        let space = NasSpace::new(NasSpaceId::Evolved);
+        let has = HasSpace::new();
+        let (cards, layout) = JointLayout::cards(&space, &has);
+        let free = if fixed_hw { cards[..layout.nas_len].to_vec() } else { cards };
+        let mut ev = SurrogateSim::new(space, seed);
+        let mut ctl = PpoController::new(&free);
+        let cfg = SearchCfg::new(samples, RewardCfg::energy(t_mj), seed + 131 * s);
+        let baseline = fixed_hw.then(|| has.baseline_decisions());
+        let out = joint_search(&mut ev, &mut ctl, &layout, baseline.as_deref(), None, &cfg);
+        if let Some(b) = out.best_feasible {
+            let cand = (b.result.acc * 100.0, b.result.energy_mj);
+            if best.map(|x| cand.0 > x.0).unwrap_or(true) {
+                best = Some(cand);
+            }
+        }
+    }
+    best
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let mut rows = Vec::new();
+    let mut table = Table::new(&["Series", "Target(mJ)", "Top-1(%)", "Energy(mJ)"]);
+    let mut nahas_pts = Vec::new();
+    let mut pa_pts = Vec::new();
+
+    let targets = [0.6, 0.8, 1.0, 1.25, 1.5, 2.0];
+    for (i, &t) in targets.iter().enumerate() {
+        let seed = 100 + i as u64;
+        if let Some((acc, e)) = search(false, t, 3000, seed) {
+            table.row(vec!["NAHAS".into(), format!("{t}"), format!("{acc:.1}"), format!("{e:.3}")]);
+            rows.push(vec!["nahas".into(), format!("{t}"), format!("{acc:.3}"), format!("{e:.4}")]);
+            nahas_pts.push(Point::new(acc, e, format!("{t}")));
+        }
+        if let Some((acc, e)) = search(true, t, 3000, seed) {
+            table.row(vec![
+                "Platform-aware NAS".into(),
+                format!("{t}"),
+                format!("{acc:.1}"),
+                format!("{e:.3}"),
+            ]);
+            rows.push(vec![
+                "platform-aware".into(),
+                format!("{t}"),
+                format!("{acc:.3}"),
+                format!("{e:.4}"),
+            ]);
+            pa_pts.push(Point::new(acc, e, format!("{t}")));
+        }
+    }
+    let base_hw = AcceleratorConfig::baseline();
+    let mut manual_pts = Vec::new();
+    for (name, net) in [
+        ("MobileNetV2", baselines::mobilenet_v2(1.0)),
+        ("MobileNetV2-1.4", baselines::mobilenet_v2(1.4)),
+        ("Manual-EdgeTPU-S", baselines::manual_edgetpu(false)),
+        ("Manual-EdgeTPU-M", baselines::manual_edgetpu(true)),
+        ("EfficientNet-B0", baselines::efficientnet(0, false)),
+        ("EfficientNet-B1", baselines::efficientnet(1, false)),
+    ] {
+        let rep = simulate_network(&base_hw, &net).unwrap();
+        let acc = surrogate::imagenet_accuracy(&net, 0);
+        table.row(vec![
+            format!("Manual: {name}"),
+            "-".into(),
+            format!("{acc:.1}"),
+            format!("{:.3}", rep.energy_mj),
+        ]);
+        rows.push(vec![name.into(), String::new(), format!("{acc:.3}"), format!("{:.4}", rep.energy_mj)]);
+        manual_pts.push(Point::new(acc, rep.energy_mj, name.to_string()));
+    }
+
+    println!("Fig. 1 — Chip Energy vs ImageNet top-1 (surrogate fidelity, 2000 samples/point):");
+    table.print();
+
+    // Headline check (the paper's Fig. 1 claim): NAHAS vs "other
+    // platform-aware NAS, or manually crafted efficient ConvNets" —
+    // max energy reduction at matched accuracy.
+    let nf = frontier(&nahas_pts);
+    let mut others = pa_pts.clone();
+    others.extend(manual_pts.iter().cloned());
+    let mut best_ratio: f64 = 1.0;
+    let mut at: String = String::new();
+    for p in &others {
+        // cheapest NAHAS point at >= this accuracy
+        if let Some(n) = nf.iter().filter(|n| n.acc >= p.acc - 0.05).map(|n| n.cost).fold(
+            None::<f64>,
+            |m, c| Some(m.map_or(c, |m| m.min(c))),
+        ) {
+            if p.cost / n > best_ratio {
+                best_ratio = p.cost / n;
+                at = format!("vs {} ({:.1}% top-1)", p.tag, p.acc);
+            }
+        }
+    }
+    println!(
+        "\nmax energy reduction at matched accuracy: {best_ratio:.2}x {at} (paper: up to 2x)"
+    );
+    metrics::write_csv(
+        "results/fig1_energy_pareto.csv",
+        &["series", "target_mj", "top1", "energy_mj"],
+        &rows,
+    )
+    .unwrap();
+    println!("took {:.1}s; results/fig1_energy_pareto.csv written", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,95 @@
+//! Fig. 9 — joint search vs phase-based (HAS-then-NAS) search.
+//!
+//! Phase search at the same sample budget is much worse than joint
+//! multi-trial; doubling its budget helps; the initial architecture
+//! choice creates large variance (the paper's three findings). Three
+//! initial architectures (MobileNetV2-like minimal, EfficientNet-B1-ish
+//! mid, EfficientNet-B2-ish max decisions in the S2 space) x 3 seeds.
+//! Writes results/fig9_phase_vs_joint.csv.
+
+use nahas::bench::Table;
+use nahas::has::HasSpace;
+use nahas::metrics;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::joint::JointLayout;
+use nahas::search::phase::phase_search;
+use nahas::search::ppo::PpoController;
+use nahas::search::{joint_search, RewardCfg, SearchCfg, SurrogateSim};
+
+fn main() {
+    let samples = 1200;
+    let target = RewardCfg::latency(0.6);
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let nd = space.num_decisions();
+    // Initial architectures for phase-1 HAS (paper: MobileNetV2, B1, B2).
+    let initials: Vec<(&str, Vec<usize>)> = vec![
+        ("min (MobileNetV2-ish)", vec![0; nd]),
+        ("mid (B1-ish)", (0..nd).map(|i| if i % 2 == 0 { 1 } else { 0 }).collect()),
+        ("max (B2-ish)", space.specs().iter().map(|s| s.cardinality - 1).collect()),
+    ];
+
+    let mut table = Table::new(&["Method", "Initial arch", "Seed", "Best feasible top-1(%)"]);
+    let mut rows = Vec::new();
+    let mut joint_accs = Vec::new();
+    let mut phase1_accs = Vec::new();
+    let mut phase2_accs = Vec::new();
+
+    for seed in [1u64, 2, 3] {
+        let has = HasSpace::new();
+        let (cards, layout) = JointLayout::cards(&space, &has);
+        let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+        let mut ctl = PpoController::new(&cards);
+        let cfg = SearchCfg::new(samples, target, seed);
+        let out = joint_search(&mut ev, &mut ctl, &layout, None, None, &cfg);
+        let acc = out.best_feasible.map(|b| b.result.acc * 100.0).unwrap_or(0.0);
+        table.row(vec!["joint (1x)".into(), "-".into(), format!("{seed}"), format!("{acc:.2}")]);
+        rows.push(vec!["joint-1x".into(), "-".into(), format!("{seed}"), format!("{acc:.3}")]);
+        joint_accs.push(acc);
+
+        for (iname, init) in &initials {
+            for (mult, bucket) in [(1usize, &mut phase1_accs), (2usize, &mut phase2_accs)] {
+                let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+                let cfg = SearchCfg::new(samples * mult, target, seed);
+                let out = phase_search(&mut ev, &space, init, &cfg);
+                let acc =
+                    out.nas_phase.best_feasible.map(|b| b.result.acc * 100.0).unwrap_or(0.0);
+                table.row(vec![
+                    format!("phase ({mult}x)"),
+                    iname.to_string(),
+                    format!("{seed}"),
+                    format!("{acc:.2}"),
+                ]);
+                rows.push(vec![
+                    format!("phase-{mult}x"),
+                    iname.to_string(),
+                    format!("{seed}"),
+                    format!("{acc:.3}"),
+                ]);
+                bucket.push(acc);
+            }
+        }
+    }
+
+    println!("Fig. 9 — joint vs phase-based search ({samples} samples at 1x):");
+    table.print();
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let std = |v: &[f64]| {
+        let m = mean(v);
+        (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+    };
+    println!("\njoint 1x:  mean {:.2}% (std {:.2})", mean(&joint_accs), std(&joint_accs));
+    println!("phase 1x:  mean {:.2}% (std {:.2})", mean(&phase1_accs), std(&phase1_accs));
+    println!("phase 2x:  mean {:.2}% (std {:.2})", mean(&phase2_accs), std(&phase2_accs));
+    println!(
+        "paper shape: joint > phase-2x > phase-1x -> {} {}",
+        mean(&joint_accs) >= mean(&phase2_accs) - 0.05,
+        mean(&phase2_accs) >= mean(&phase1_accs) - 0.05
+    );
+    metrics::write_csv(
+        "results/fig9_phase_vs_joint.csv",
+        &["method", "initial", "seed", "top1"],
+        &rows,
+    )
+    .unwrap();
+}

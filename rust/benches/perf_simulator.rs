@@ -1,0 +1,69 @@
+//! §Perf — L3 hot-path micro-benchmarks.
+//!
+//! The cycle-level simulator is the inner loop of every search
+//! (thousands of (model, hw) evaluations per run), so its throughput
+//! gates end-to-end search speed. Targets (DESIGN.md §Perf): >= 100k
+//! layer-evals/s; search >= 1000 samples/s; featurizer and decoder off
+//! the critical path. Results recorded in EXPERIMENTS.md §Perf.
+
+use nahas::accel::{simulate_network, simulate_network_detailed, AcceleratorConfig};
+use nahas::bench;
+use nahas::costmodel::{featurize, FEATURE_DIM};
+use nahas::has::HasSpace;
+use nahas::nas::{baselines, NasSpace, NasSpaceId};
+use nahas::search::joint::JointLayout;
+use nahas::search::ppo::PpoController;
+use nahas::search::{joint_search, RewardCfg, SearchCfg, SurrogateSim};
+use nahas::util::Rng;
+
+fn main() {
+    let cfg = AcceleratorConfig::baseline();
+
+    // Simulator throughput on representative networks.
+    let nets = [
+        ("MobileNetV2 (54 layers)", baselines::mobilenet_v2(1.0)),
+        ("EfficientNet-B3 (~80 layers)", baselines::efficientnet(3, false)),
+        ("Manual-EdgeTPU-M", baselines::manual_edgetpu(true)),
+    ];
+    for (name, net) in &nets {
+        let layers = net.layers.len();
+        let r = bench::bench(&format!("simulate {name}"), 50, 2000, || {
+            simulate_network(&cfg, net).unwrap()
+        });
+        println!(
+            "    -> {:.0} net-evals/s, {:.2}M layer-evals/s",
+            1e9 / r.mean_ns,
+            layers as f64 * 1e9 / r.mean_ns / 1e6
+        );
+    }
+
+    // Detailed (per-layer vector) variant: allocation cost visibility.
+    let net = baselines::mobilenet_v2(1.0);
+    let mut per = Vec::new();
+    bench::bench("simulate_network_detailed MobileNetV2", 50, 2000, || {
+        simulate_network_detailed(&cfg, &net, &mut per).unwrap()
+    });
+
+    // Space decode + featurize.
+    let space = NasSpace::new(NasSpaceId::Evolved);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(1);
+    let nas_d = space.random(&mut rng);
+    let has_d = has.baseline_decisions();
+    bench::bench("decode evolved-space sample -> IR", 100, 5000, || space.decode(&nas_d));
+    let mut feat = vec![0.0f32; FEATURE_DIM];
+    bench::bench("featurize (394-dim) incl decode", 100, 5000, || {
+        featurize(&space, &nas_d, &has_d, &mut feat)
+    });
+
+    // End-to-end search throughput (the composite hot loop).
+    let r = bench::bench("joint_search 500 samples (PPO+sim+surrogate)", 1, 5, || {
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let (cards, layout) = JointLayout::cards(&space, &has);
+        let mut ev = SurrogateSim::new(space, 3);
+        let mut ctl = PpoController::new(&cards);
+        let cfg = SearchCfg::new(500, RewardCfg::latency(0.5), 3);
+        joint_search(&mut ev, &mut ctl, &layout, None, None, &cfg)
+    });
+    println!("    -> {:.0} search samples/s", 500.0 * 1e9 / r.mean_ns);
+}

@@ -1,0 +1,226 @@
+//! Table 3 — detailed comparison with SoTA across three size regimes
+//! (small 0.3 ms / 0.7 mJ, medium 0.5 ms / 1.0 mJ, large 0.7 ms /
+//! 1.5 mJ): manual + platform-aware baselines vs NAHAS variants:
+//!
+//!   * "fixed accelerator" — NAS on the baseline hw (IBN-only or fused);
+//!   * "NAHAS multi-trial" — PPO joint search (IBN-only and fused);
+//!   * "NAHAS oneshot" — REINFORCE controller with the learned cost
+//!     model as the latency oracle (the oneshot regime at ImageNet
+//!     scale; the true weight-sharing oneshot runs on the proxy supernet
+//!     in examples/oneshot_e2e.rs).
+//!
+//! Every row reports accuracy, latency and energy with ratio-to-best,
+//! like the paper. Writes results/table3_sota.csv.
+
+use nahas::accel::{simulate_network, AcceleratorConfig};
+use nahas::bench::Table;
+use nahas::costmodel::{generate_dataset, CostModel};
+use nahas::has::HasSpace;
+use nahas::metrics;
+use nahas::nas::{baselines, NasSpace, NasSpaceId};
+use nahas::runtime::Runtime;
+use nahas::search::evaluator::{CostModelEval, Evaluator};
+use nahas::search::joint::JointLayout;
+use nahas::search::ppo::PpoController;
+use nahas::search::reinforce::ReinforceController;
+use nahas::search::{joint_search, Controller, RewardCfg, SearchCfg, SurrogateSim};
+use nahas::trainer::surrogate;
+
+struct Row {
+    name: String,
+    acc: f64,
+    lat: f64,
+    energy: f64,
+}
+
+fn baseline_row(name: &str, net: &nahas::model::NetworkIr) -> Row {
+    let rep = simulate_network(&AcceleratorConfig::baseline(), net).unwrap();
+    Row {
+        name: name.to_string(),
+        acc: surrogate::imagenet_accuracy(net, 0),
+        lat: rep.latency_ms,
+        energy: rep.energy_mj,
+    }
+}
+
+fn search_row(
+    name: &str,
+    space_id: NasSpaceId,
+    t_ms: f64,
+    fixed_hw: bool,
+    controller: &str,
+    mut cm_eval: Option<&mut CostModelEval>,
+    seed: u64,
+) -> Option<Row> {
+    // The joint space is ~40% larger than the fixed-hw one; like the
+    // paper (5000-sample searches, best run reported) we give every
+    // search row two controller restarts and keep the best.
+    let mut b: Option<nahas::search::joint::Sample> = None;
+    for r in 0..2u64 {
+        let space = NasSpace::new(space_id);
+        let has = HasSpace::new();
+        let (cards, layout) = JointLayout::cards(&space, &has);
+        let free = if fixed_hw { cards[..layout.nas_len].to_vec() } else { cards };
+        let mut ctl: Box<dyn Controller> = match controller {
+            "reinforce" => Box::new(ReinforceController::new(&free)),
+            _ => Box::new(PpoController::new(&free)),
+        };
+        let cfg = SearchCfg::new(2500, RewardCfg::latency(t_ms), seed + 97 * r);
+        let baseline = fixed_hw.then(|| has.baseline_decisions());
+        let out = match cm_eval.as_deref_mut() {
+            Some(ev) => joint_search(ev, ctl.as_mut(), &layout, baseline.as_deref(), None, &cfg),
+            None => {
+                let mut ev = SurrogateSim::new(space, seed);
+                joint_search(&mut ev, ctl.as_mut(), &layout, baseline.as_deref(), None, &cfg)
+            }
+        };
+        if let Some(cand) = out.best_feasible {
+            if b.as_ref().map(|x| cand.result.acc > x.result.acc).unwrap_or(true) {
+                b = Some(cand);
+            }
+        }
+    }
+    let b = b?;
+    let has = HasSpace::new();
+    // Re-simulate (cost-model rows report simulator ground truth, like
+    // the paper's final table).
+    let sp = NasSpace::new(space_id);
+    let rep = simulate_network(&has.decode(&b.has_d), &sp.decode(&b.nas_d)).ok()?;
+    Some(Row {
+        name: name.to_string(),
+        acc: b.result.acc * 100.0,
+        lat: rep.latency_ms,
+        energy: rep.energy_mj,
+    })
+}
+
+fn print_regime(title: &str, rows: &[Row], out_rows: &mut Vec<Vec<String>>) {
+    let best_lat = rows.iter().map(|r| r.lat).fold(f64::MAX, f64::min);
+    let best_e = rows.iter().map(|r| r.energy).fold(f64::MAX, f64::min);
+    let mut table =
+        Table::new(&["Model", "Top-1 Acc.", "Latency ms (Ratio-to-best)", "Energy mJ (Ratio-to-best)"]);
+    let mut sorted: Vec<&Row> = rows.iter().collect();
+    sorted.sort_by(|a, b| a.acc.partial_cmp(&b.acc).unwrap());
+    for r in sorted {
+        table.row(vec![
+            r.name.clone(),
+            format!("{:.1}%", r.acc),
+            format!("{:.2} ({:.2}x)", r.lat, r.lat / best_lat),
+            format!("{:.2} ({:.2}x)", r.energy, r.energy / best_e),
+        ]);
+        out_rows.push(vec![
+            title.to_string(),
+            r.name.clone(),
+            format!("{:.2}", r.acc),
+            format!("{:.4}", r.lat),
+            format!("{:.4}", r.energy),
+        ]);
+    }
+    println!("\n--- {title} ---");
+    table.print();
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    // Train the cost model once (for the oneshot rows).
+    let mut rt = Runtime::load(Runtime::default_dir())?;
+    let space = NasSpace::new(NasSpaceId::MobileNetV2);
+    let mut rng = nahas::util::Rng::new(33);
+    let (data, norm) = generate_dataset(&space, 3000, &mut rng);
+    let mut cm = CostModel::init(&mut rt, norm, 0)?;
+    cm.train(&mut rt, &data, 800, &mut rng)?;
+    println!("cost model trained for the oneshot rows ({} samples)", data.len());
+
+    let mut out_rows = Vec::new();
+
+    // ---- small regime: 0.3 ms ------------------------------------------
+    let mut small = vec![
+        baseline_row("EfficientNet-B0 wo SE/Swish", &baselines::efficientnet(0, false)),
+        baseline_row("MobileNetV2", &baselines::mobilenet_v2(1.0)),
+        baseline_row("MnasNet-B1", &baselines::mnasnet_b1()),
+        baseline_row("ProxylessNAS", &baselines::proxyless_mobile()),
+        baseline_row("Manual-EdgeTPU-small", &baselines::manual_edgetpu(false)),
+    ];
+    if let Some(r) =
+        search_row("IBN-only fixed accelerator", NasSpaceId::MobileNetV2, 0.3, true, "ppo", None, 51)
+    {
+        small.push(r);
+    }
+    if let Some(r) =
+        search_row("IBN-only NAHAS multi-trial", NasSpaceId::MobileNetV2, 0.3, false, "ppo", None, 52)
+    {
+        small.push(r);
+    }
+    {
+        let mut ev = CostModelEval::new(&mut rt, cm, NasSpace::new(NasSpaceId::MobileNetV2), 53);
+        if let Some(r) = search_row(
+            "IBN-only NAHAS oneshot (cost model)",
+            NasSpaceId::MobileNetV2,
+            0.3,
+            false,
+            "reinforce",
+            Some(&mut ev),
+            53,
+        ) {
+            small.push(r);
+        }
+        cm = ev.cm;
+    }
+    print_regime("small (target 0.3 ms / 0.7 mJ)", &small, &mut out_rows);
+
+    // ---- medium regime: 0.5 ms -----------------------------------------
+    let mut medium = vec![
+        baseline_row("EfficientNet-B1 wo SE/Swish", &baselines::efficientnet(1, false)),
+        baseline_row("MnasNet-D1", &baselines::mnasnet_d1()),
+    ];
+    for (name, sid, fixed) in [
+        ("Fixed accelerator multi-trial w fused-IBN", NasSpaceId::Evolved, true),
+        ("IBN-only NAHAS multi-trial", NasSpaceId::EfficientNet, false),
+        ("NAHAS multi-trial w fused-IBN", NasSpaceId::Evolved, false),
+    ] {
+        if let Some(r) = search_row(name, sid, 0.5, fixed, "ppo", None, 61) {
+            medium.push(r);
+        }
+    }
+    {
+        let mut ev = CostModelEval::new(&mut rt, cm, NasSpace::new(NasSpaceId::EfficientNet), 62);
+        if let Some(r) = search_row(
+            "IBN-only NAHAS oneshot (cost model)",
+            NasSpaceId::EfficientNet,
+            0.5,
+            false,
+            "reinforce",
+            Some(&mut ev),
+            62,
+        ) {
+            medium.push(r);
+        }
+        cm = ev.cm;
+    }
+    let _ = cm;
+    print_regime("medium (target 0.5 ms / 1.0 mJ)", &medium, &mut out_rows);
+
+    // ---- large regime: 0.7 ms ------------------------------------------
+    let mut large = vec![
+        baseline_row("EfficientNet-B3 wo SE/Swish", &baselines::efficientnet(3, false)),
+        baseline_row("Manual-EdgeTPU-medium", &baselines::manual_edgetpu(true)),
+        baseline_row("MobilenetV3 w SE", &baselines::mobilenet_v3_se()),
+    ];
+    for (name, sid, fixed) in [
+        ("Fixed accelerator multi-trial w fused-IBN", NasSpaceId::Evolved, true),
+        ("NAHAS multi-trial w fused-IBN", NasSpaceId::Evolved, false),
+    ] {
+        if let Some(r) = search_row(name, sid, 0.7, fixed, "ppo", None, 71) {
+            large.push(r);
+        }
+    }
+    print_regime("large (target 0.7 ms / 1.5 mJ)", &large, &mut out_rows);
+
+    metrics::write_csv(
+        "results/table3_sota.csv",
+        &["regime", "model", "top1", "latency_ms", "energy_mj"],
+        &out_rows,
+    )?;
+    println!("\ntook {:.1}s; results/table3_sota.csv written", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Analytical chip-area model (stands in for the paper's
+//! synthesis-derived area estimator; see DESIGN.md §Substitutions).
+//!
+//! Component densities are representative of an edge-node (7–16 nm class)
+//! implementation; absolute mm² values matter less than *relative* cost —
+//! the area constraint in the reward (Eq. 4) is normalized to the
+//! baseline design's area, exactly as the paper sets `T_area`.
+
+use super::config::AcceleratorConfig;
+
+/// mm^2 per SIMD unit (4 int8 MACs + operand routing).
+const A_SIMD_UNIT: f64 = 0.0020;
+/// mm^2 per KB of register file (flop-dense, multiported).
+const A_RF_PER_KB: f64 = 0.0080;
+/// Fixed per-lane overhead (sequencer, load/store) mm^2.
+const A_LANE_FIXED: f64 = 0.050;
+/// mm^2 per MB of local SRAM (incl. controller/banking).
+const A_MEM_PER_MB: f64 = 1.20;
+/// Fixed per-PE overhead (NoC port, control) mm^2.
+const A_PE_FIXED: f64 = 0.20;
+/// mm^2 per GB/s of IO bandwidth (PHY + SerDes lanes).
+const A_IO_PER_GBPS: f64 = 0.30;
+/// Fixed chip overhead (host interface, clocking, pads) mm^2.
+const A_CHIP_FIXED: f64 = 5.0;
+
+/// Die area of a configuration, mm^2.
+pub fn chip_area_mm2(c: &AcceleratorConfig) -> f64 {
+    let lane = c.simd_units as f64 * A_SIMD_UNIT
+        + c.register_file_kb as f64 * A_RF_PER_KB
+        + A_LANE_FIXED;
+    let pe = c.compute_lanes as f64 * lane + c.local_memory_mb * A_MEM_PER_MB + A_PE_FIXED;
+    c.num_pes() as f64 * pe + c.io_bandwidth_gbps * A_IO_PER_GBPS + A_CHIP_FIXED
+}
+
+/// The paper's `T_area`: the baseline design's area.
+pub fn baseline_area_mm2() -> f64 {
+    chip_area_mm2(&AcceleratorConfig::baseline())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::Rng;
+
+    fn random_config(r: &mut Rng) -> AcceleratorConfig {
+        let pick = |r: &mut Rng, v: &[usize]| v[r.below(v.len())];
+        AcceleratorConfig {
+            pe_x: pick(r, &[1, 2, 4, 6, 8]),
+            pe_y: pick(r, &[1, 2, 4, 6, 8]),
+            simd_units: pick(r, &[16, 32, 64, 128]),
+            compute_lanes: pick(r, &[1, 2, 4, 8]),
+            local_memory_mb: [0.5, 1.0, 2.0, 3.0, 4.0][r.below(5)],
+            register_file_kb: pick(r, &[8, 16, 32, 64, 128]),
+            io_bandwidth_gbps: [5.0, 10.0, 15.0, 20.0, 25.0][r.below(5)],
+        }
+    }
+
+    #[test]
+    fn baseline_area_is_edge_scale() {
+        let a = baseline_area_mm2();
+        // An edge accelerator die, not a datacenter one.
+        assert!((20.0..200.0).contains(&a), "baseline area {a} mm^2");
+    }
+
+    #[test]
+    fn area_monotone_in_every_knob() {
+        let b = AcceleratorConfig::baseline();
+        let a0 = chip_area_mm2(&b);
+        for f in [
+            &mut |c: &mut AcceleratorConfig| c.pe_x = 8,
+            &mut |c: &mut AcceleratorConfig| c.simd_units = 128,
+            &mut |c: &mut AcceleratorConfig| c.compute_lanes = 8,
+            &mut |c: &mut AcceleratorConfig| c.local_memory_mb = 4.0,
+            &mut |c: &mut AcceleratorConfig| c.register_file_kb = 128,
+            &mut |c: &mut AcceleratorConfig| c.io_bandwidth_gbps = 25.0,
+        ] as [&mut dyn FnMut(&mut AcceleratorConfig); 6]
+        {
+            let mut c = b;
+            f(&mut c);
+            assert!(chip_area_mm2(&c) > a0);
+        }
+    }
+
+    #[test]
+    fn prop_area_positive_and_bounded() {
+        proptest::check(
+            "area in sane band",
+            proptest::CASES,
+            random_config,
+            |c| {
+                let a = chip_area_mm2(c);
+                if a > A_CHIP_FIXED && a < 1000.0 {
+                    Ok(())
+                } else {
+                    Err(format!("area {a}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_area_additive_in_pes() {
+        // area(pe_x=2k) - fixed == 2 * (area(pe_x=k) - fixed) at equal y.
+        proptest::check("pe additivity", 64, random_config, |c| {
+            if c.pe_x > 4 {
+                return Ok(());
+            }
+            let mut c2 = *c;
+            c2.pe_x *= 2;
+            let io = c.io_bandwidth_gbps * A_IO_PER_GBPS + A_CHIP_FIXED;
+            let lhs = chip_area_mm2(&c2) - io;
+            let rhs = 2.0 * (chip_area_mm2(c) - io);
+            if (lhs - rhs).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("{lhs} vs {rhs}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! Energy model: switching energy per MAC / SRAM byte / DRAM byte plus
+//! area-proportional leakage. Calibrated (with `timing`) so the baseline
+//! reproduces the paper's Table 3 energy scale — MobileNetV2 ~0.70 mJ —
+//! and the qualitative orderings (fused-IBN trades MAC energy for DRAM
+//! energy, SE/Swish burn leakage through serialization).
+
+use super::timing::LayerCost;
+
+/// pJ per int8 MAC (datapath switching, incl. operand movement within
+/// the lane). Calibrated against the paper's Table 3: MobileNetV2
+/// 0.70 mJ, Manual-EdgeTPU-S 1.78 mJ, EfficientNet-B1 1.50 mJ.
+pub const E_MAC_PJ: f64 = 1.0;
+/// pJ per byte of on-chip SRAM traffic.
+pub const E_SRAM_PJ_PER_BYTE: f64 = 2.0;
+/// pJ per byte of off-chip DRAM traffic (LPDDR-class).
+pub const E_DRAM_PJ_PER_BYTE: f64 = 40.0;
+/// Leakage + clock-tree power density, W per mm^2.
+pub const LEAK_W_PER_MM2: f64 = 0.012;
+
+/// Joules for one simulated layer (dynamic part only; leakage is added
+/// at network level from total latency x area).
+pub fn layer_dynamic_energy_j(c: &LayerCost, dram_write_bytes: u64) -> f64 {
+    let mac = c.macs as f64 * E_MAC_PJ;
+    let sram = c.sram_bytes as f64 * E_SRAM_PJ_PER_BYTE;
+    let dram = (c.dram_read_bytes + dram_write_bytes) as f64 * E_DRAM_PJ_PER_BYTE;
+    (mac + sram + dram) * 1e-12
+}
+
+/// Leakage energy over `latency_s` for a die of `area_mm2`.
+pub fn leakage_energy_j(area_mm2: f64, latency_s: f64) -> f64 {
+    area_mm2 * LEAK_W_PER_MM2 * latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(macs: u64, sram: u64, dram: u64) -> LayerCost {
+        LayerCost { macs, sram_bytes: sram, dram_read_bytes: dram, ..Default::default() }
+    }
+
+    #[test]
+    fn dram_byte_costs_far_more_than_mac() {
+        let mac_only = layer_dynamic_energy_j(&cost(1000, 0, 0), 0);
+        let dram_only = layer_dynamic_energy_j(&cost(0, 0, 1000), 0);
+        assert!(dram_only > 20.0 * mac_only);
+    }
+
+    #[test]
+    fn write_traffic_counted() {
+        let base = layer_dynamic_energy_j(&cost(0, 0, 0), 0);
+        let w = layer_dynamic_energy_j(&cost(0, 0, 0), 10_000);
+        assert!(w > base);
+        assert!((w - 10_000.0 * E_DRAM_PJ_PER_BYTE * 1e-12).abs() < 1e-18);
+    }
+
+    #[test]
+    fn leakage_scales_with_area_and_time() {
+        let e = leakage_energy_j(80.0, 0.3e-3);
+        assert!((e - 80.0 * LEAK_W_PER_MM2 * 0.3e-3).abs() < 1e-12);
+        assert!(leakage_energy_j(160.0, 0.3e-3) > e);
+    }
+}

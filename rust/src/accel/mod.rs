@@ -1,0 +1,28 @@
+//! The parameterized edge-accelerator substrate (paper Fig. 5, Table 1).
+//!
+//! The paper evaluates against an in-house, validated cycle-accurate
+//! simulator of an industry-standard edge accelerator plus an analytical
+//! area model from hardware synthesis. Neither is available, so this
+//! module rebuilds the closest behavioural equivalent from scratch (see
+//! DESIGN.md §Substitutions):
+//!
+//! * [`config`] — the hardware configuration knobs (Table 1) and the
+//!   production-baseline design point (4×4 PEs, 4 lanes, 64×4-way SIMD,
+//!   2 MB local memory, 32 KB RF ⇒ 26 TOPS/s at 0.8 GHz);
+//! * [`area`] — analytical per-component area model;
+//! * [`energy`] — MAC/SRAM/DRAM/leakage energy model;
+//! * [`timing`] — cycle-level, pass-by-pass layer timing with
+//!   double-buffered DMA/compute overlap, register-file-bounded
+//!   accumulation chunks and depthwise-datapath penalties;
+//! * [`simulator`] — whole-network simulation with inter-layer on-chip
+//!   activation retention, utilization accounting and invalid-point
+//!   detection.
+
+pub mod area;
+pub mod config;
+pub mod energy;
+pub mod simulator;
+pub mod timing;
+
+pub use config::AcceleratorConfig;
+pub use simulator::{simulate_network, simulate_network_detailed, SimError, SimReport};

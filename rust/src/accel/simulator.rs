@@ -1,0 +1,259 @@
+//! Whole-network simulation: walks the IR layer list through the
+//! cycle-level timing model, decides inter-layer on-chip retention, and
+//! aggregates latency / energy / power / utilization.
+//!
+//! This is the inner loop of every search (`search::*` evaluates tens of
+//! thousands of (model, hw) pairs through it), so the hot entry point
+//! [`simulate_network`] allocates nothing.
+
+use super::area::chip_area_mm2;
+use super::config::{AcceleratorConfig, CLOCK_GHZ};
+use super::energy::{layer_dynamic_energy_j, leakage_energy_j};
+use super::timing::{layer_cost, LayerCost};
+use crate::model::NetworkIr;
+
+/// Why a (model, hw) pairing could not be simulated — the paper's
+/// "invalid points" in the HAS space (§3.3): configurations the
+/// compiler/mapper rejects for the given network.
+#[derive(Clone, Debug)]
+pub enum SimError {
+    /// One layer's activation working set exceeds PE-local memory.
+    WorkingSetTooLarge { layer: String, need: u64, have: u64 },
+    /// Static hardware validity rule failed (see `has::validity`).
+    InvalidHardware(String),
+    /// The network has no layers.
+    EmptyNetwork,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::WorkingSetTooLarge { layer, need, have } => write!(
+                f,
+                "working set of {layer} needs {need} B but PE memory offers {have} B"
+            ),
+            SimError::InvalidHardware(msg) => write!(f, "invalid hardware: {msg}"),
+            SimError::EmptyNetwork => write!(f, "empty network"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Aggregate simulation result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimReport {
+    pub latency_ms: f64,
+    pub energy_mj: f64,
+    pub power_w: f64,
+    pub area_mm2: f64,
+    /// MAC-weighted average utilization of the array.
+    pub utilization: f64,
+    pub dram_traffic_mb: f64,
+    pub total_cycles: u64,
+    pub total_macs: u64,
+}
+
+/// Simulate `net` on `cfg`. Allocation-free hot path.
+pub fn simulate_network(
+    cfg: &AcceleratorConfig,
+    net: &NetworkIr,
+) -> Result<SimReport, SimError> {
+    simulate_inner(cfg, net, None)
+}
+
+/// As [`simulate_network`], also filling `per_layer` with each layer's
+/// cost breakdown (for reports and the perf benches).
+pub fn simulate_network_detailed(
+    cfg: &AcceleratorConfig,
+    net: &NetworkIr,
+    per_layer: &mut Vec<LayerCost>,
+) -> Result<SimReport, SimError> {
+    per_layer.clear();
+    simulate_inner(cfg, net, Some(per_layer))
+}
+
+fn simulate_inner(
+    cfg: &AcceleratorConfig,
+    net: &NetworkIr,
+    mut per_layer: Option<&mut Vec<LayerCost>>,
+) -> Result<SimReport, SimError> {
+    if net.layers.is_empty() {
+        return Err(SimError::EmptyNetwork);
+    }
+    let area = chip_area_mm2(cfg);
+    let retain_budget = cfg.total_local_memory_bytes() * 0.25;
+    // Steady-state serving: weights pinned on-chip when the whole model
+    // fits the weight slice of local memory; otherwise every inference
+    // streams them (the memory-to-compute-ratio effect of paper §4.4).
+    let weights_resident = (net.total_params() as f64)
+        <= cfg.total_local_memory_bytes()
+            * super::config::WEIGHT_RESIDENT_FRACTION;
+
+    let mut cycles: u64 = 0;
+    let mut dyn_energy = 0.0f64;
+    let mut dram_bytes: u64 = 0;
+    let mut macs: u64 = 0;
+    let mut util_weighted = 0.0f64;
+    // The network input arrives from DRAM.
+    let mut prev_retained = false;
+
+    for li in &net.layers {
+        let cost = layer_cost(cfg, li, prev_retained, weights_resident)?;
+        // Retain this layer's output on-chip iff it fits in the
+        // retention slice of local memory (then the next layer skips its
+        // input fetch and we skip this output's write-back).
+        let retain_out = (cost.out_bytes as f64) <= retain_budget;
+        let write_bytes = if retain_out { 0 } else { cost.out_bytes };
+
+        cycles += cost.cycles;
+        dram_bytes += cost.dram_read_bytes + write_bytes;
+        macs += cost.macs;
+        util_weighted += cost.utilization * cost.macs as f64;
+        dyn_energy += layer_dynamic_energy_j(&cost, write_bytes);
+        if let Some(v) = per_layer.as_deref_mut() {
+            v.push(cost);
+        }
+        prev_retained = retain_out;
+    }
+
+    let latency_s = cycles as f64 / (CLOCK_GHZ * 1e9);
+    let energy_j = dyn_energy + leakage_energy_j(area, latency_s);
+    Ok(SimReport {
+        latency_ms: latency_s * 1e3,
+        energy_mj: energy_j * 1e3,
+        power_w: energy_j / latency_s,
+        area_mm2: area,
+        utilization: if macs > 0 { util_weighted / macs as f64 } else { 0.0 },
+        dram_traffic_mb: dram_bytes as f64 / 1e6,
+        total_cycles: cycles,
+        total_macs: macs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Layer, NetworkIr};
+    use crate::util::proptest;
+    use crate::util::Rng;
+
+    fn tiny_net() -> NetworkIr {
+        let mut net = NetworkIr::new("tiny", 32, 32, 3);
+        net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: 16, stride: 2, groups: 1 });
+        net.push_ibn(3, 6, 16, 1);
+        net.push_ibn(5, 6, 24, 2);
+        net.push(Layer::GlobalPool { c: 24 });
+        net.push(Layer::Dense { cin: 24, cout: 10 });
+        net
+    }
+
+    #[test]
+    fn basic_report_sane() {
+        let r = simulate_network(&AcceleratorConfig::baseline(), &tiny_net()).unwrap();
+        assert!(r.latency_ms > 0.0 && r.latency_ms < 10.0, "{r:?}");
+        assert!(r.energy_mj > 0.0 && r.power_w > 0.0);
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        assert_eq!(r.total_macs, tiny_net().total_macs());
+    }
+
+    #[test]
+    fn empty_network_rejected() {
+        let net = NetworkIr::new("empty", 8, 8, 3);
+        assert!(matches!(
+            simulate_network(&AcceleratorConfig::baseline(), &net),
+            Err(SimError::EmptyNetwork)
+        ));
+    }
+
+    #[test]
+    fn detailed_matches_aggregate() {
+        let mut per = Vec::new();
+        let cfg = AcceleratorConfig::baseline();
+        let r = simulate_network_detailed(&cfg, &tiny_net(), &mut per).unwrap();
+        assert_eq!(per.len(), tiny_net().layers.len());
+        assert_eq!(per.iter().map(|c| c.cycles).sum::<u64>(), r.total_cycles);
+    }
+
+    #[test]
+    fn latency_monotone_in_depth() {
+        let cfg = AcceleratorConfig::baseline();
+        let mut small = NetworkIr::new("s", 32, 32, 16);
+        small.push_ibn(3, 6, 16, 1);
+        let mut big = small.clone();
+        for _ in 0..4 {
+            big.push_ibn(3, 6, 16, 1);
+        }
+        let rs = simulate_network(&cfg, &small).unwrap();
+        let rb = simulate_network(&cfg, &big).unwrap();
+        assert!(rb.latency_ms > rs.latency_ms);
+        assert!(rb.energy_mj > rs.energy_mj);
+    }
+
+    #[test]
+    fn prop_more_compute_never_increases_cycles_much() {
+        // Quadrupling the PE array must never slow a network down by
+        // more than the halo over-fetch it adds (bounded regression):
+        // compute strictly parallelizes, but tiles gain halo bytes on a
+        // fixed-bandwidth link, so a small DMA-side regression is
+        // physical (and exactly the compute/memory-balance effect the
+        // paper's HAS is searching over).
+        proptest::check(
+            "pe monotonicity",
+            64,
+            |r: &mut Rng| {
+                let mut net = NetworkIr::new("p", 32, 32, 8);
+                for _ in 0..(1 + r.below(4)) {
+                    let k = [3, 5, 7][r.below(3)];
+                    let e = [3, 6][r.below(2)];
+                    let w = [8, 16, 24][r.below(3)];
+                    let s = [1, 2][r.below(2)];
+                    if r.below(2) == 0 {
+                        net.push_ibn(k, e, w, s);
+                    } else {
+                        net.push_fused_ibn(k, e, w, s, 1);
+                    }
+                }
+                net
+            },
+            |net| {
+                let mut small = AcceleratorConfig::baseline();
+                small.pe_x = 2;
+                small.pe_y = 2;
+                let mut big = small;
+                big.pe_x = 4;
+                big.pe_y = 4;
+                let rs = simulate_network(&small, net).map_err(|e| e.to_string())?;
+                let rb = simulate_network(&big, net).map_err(|e| e.to_string())?;
+                if rb.total_cycles as f64 <= rs.total_cycles as f64 * 1.25 {
+                    Ok(())
+                } else {
+                    Err(format!("{} -> {}", rs.total_cycles, rb.total_cycles))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_power_times_latency_is_energy() {
+        proptest::check(
+            "energy identity",
+            32,
+            |r: &mut Rng| {
+                let mut net = NetworkIr::new("p", 16, 16, 8);
+                net.push_ibn([3, 5, 7][r.below(3)], 6, 16, 1);
+                net
+            },
+            |net| {
+                let r = simulate_network(&AcceleratorConfig::baseline(), net)
+                    .map_err(|e| e.to_string())?;
+                let e = r.power_w * (r.latency_ms * 1e-3) * 1e3;
+                if (e - r.energy_mj).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("{} vs {}", e, r.energy_mj))
+                }
+            },
+        );
+    }
+}

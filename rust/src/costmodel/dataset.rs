@@ -1,0 +1,151 @@
+//! Simulator-labelled training data for the cost model.
+//!
+//! The paper trains on 500k randomly generated (alpha, h) permutations
+//! labelled by the performance simulator — "the collection of data can
+//! utilize the vast amount of CPU resources, we do not consider the cost
+//! of training a cost model". Our generator does the same against the
+//! rust simulator (invalid points are skipped, as the paper trains on
+//! simulable samples only) and z-scores log-latency / log-area targets.
+
+use crate::accel::simulate_network;
+use crate::costmodel::features::{featurize, FEATURE_DIM};
+use crate::has::{validate, HasSpace};
+use crate::nas::NasSpace;
+use crate::util::Rng;
+
+/// One labelled sample.
+#[derive(Clone, Debug)]
+pub struct CostSample {
+    pub features: Vec<f32>,
+    /// Normalized targets (see [`Normalizer`]).
+    pub lat: f32,
+    pub area: f32,
+    /// Raw (un-normalized) values.
+    pub latency_ms: f64,
+    pub area_mm2: f64,
+}
+
+/// z-score normalization of log10 targets.
+#[derive(Clone, Copy, Debug)]
+pub struct Normalizer {
+    pub lat_mean: f64,
+    pub lat_std: f64,
+    pub area_mean: f64,
+    pub area_std: f64,
+}
+
+impl Normalizer {
+    pub fn fit(lat_log: &[f64], area_log: &[f64]) -> Self {
+        let stats = |v: &[f64]| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            let s = (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt();
+            (m, s.max(1e-6))
+        };
+        let (lm, ls) = stats(lat_log);
+        let (am, as_) = stats(area_log);
+        Normalizer { lat_mean: lm, lat_std: ls, area_mean: am, area_std: as_ }
+    }
+
+    pub fn norm_lat(&self, latency_ms: f64) -> f32 {
+        ((latency_ms.max(1e-9).log10() - self.lat_mean) / self.lat_std) as f32
+    }
+
+    pub fn denorm_lat(&self, z: f32) -> f64 {
+        10f64.powf(z as f64 * self.lat_std + self.lat_mean)
+    }
+
+    pub fn norm_area(&self, area_mm2: f64) -> f32 {
+        ((area_mm2.max(1e-9).log10() - self.area_mean) / self.area_std) as f32
+    }
+
+    pub fn denorm_area(&self, z: f32) -> f64 {
+        10f64.powf(z as f64 * self.area_std + self.area_mean)
+    }
+}
+
+/// Generate `n` valid labelled samples (plus the fitted normalizer).
+pub fn generate_dataset(
+    space: &NasSpace,
+    n: usize,
+    rng: &mut Rng,
+) -> (Vec<CostSample>, Normalizer) {
+    let has = HasSpace::new();
+    let mut raw = Vec::with_capacity(n);
+    let mut attempts = 0usize;
+    while raw.len() < n && attempts < n * 20 {
+        attempts += 1;
+        let nas_d = space.random(rng);
+        let has_d = has.random(rng);
+        let cfg = has.decode(&has_d);
+        if validate(&cfg).is_err() {
+            continue;
+        }
+        let net = space.decode(&nas_d);
+        let Ok(rep) = simulate_network(&cfg, &net) else { continue };
+        let mut features = vec![0.0f32; FEATURE_DIM];
+        featurize(space, &nas_d, &has_d, &mut features);
+        raw.push((features, rep.latency_ms, rep.area_mm2));
+    }
+    let lat_log: Vec<f64> = raw.iter().map(|r| r.1.log10()).collect();
+    let area_log: Vec<f64> = raw.iter().map(|r| r.2.log10()).collect();
+    let norm = Normalizer::fit(&lat_log, &area_log);
+    let samples = raw
+        .into_iter()
+        .map(|(features, lat, area)| CostSample {
+            lat: norm.norm_lat(lat),
+            area: norm.norm_area(area),
+            latency_ms: lat,
+            area_mm2: area,
+            features,
+        })
+        .collect();
+    (samples, norm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::NasSpaceId;
+
+    #[test]
+    fn generates_requested_count() {
+        let sp = NasSpace::new(NasSpaceId::EfficientNet);
+        let (data, _) = generate_dataset(&sp, 64, &mut Rng::new(3));
+        assert_eq!(data.len(), 64);
+        for s in &data {
+            assert_eq!(s.features.len(), FEATURE_DIM);
+            assert!(s.latency_ms > 0.0 && s.area_mm2 > 0.0);
+        }
+    }
+
+    #[test]
+    fn normalizer_roundtrips() {
+        let n = Normalizer { lat_mean: -0.5, lat_std: 0.3, area_mean: 1.9, area_std: 0.2 };
+        for v in [0.05, 0.3, 1.3, 4.0] {
+            assert!((n.denorm_lat(n.norm_lat(v)) - v).abs() / v < 1e-4);
+        }
+        assert!((n.denorm_area(n.norm_area(80.0)) - 80.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn targets_zscored() {
+        let sp = NasSpace::new(NasSpaceId::Evolved);
+        let (data, _) = generate_dataset(&sp, 128, &mut Rng::new(4));
+        let mean: f32 = data.iter().map(|s| s.lat).sum::<f32>() / data.len() as f32;
+        let var: f32 =
+            data.iter().map(|s| (s.lat - mean) * (s.lat - mean)).sum::<f32>() / data.len() as f32;
+        assert!(mean.abs() < 0.15, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.3, "var {var}");
+    }
+
+    #[test]
+    fn latency_spread_is_wide() {
+        // The HAS x NAS joint space must produce a broad latency range —
+        // otherwise the cost model has nothing to learn.
+        let sp = NasSpace::new(NasSpaceId::EfficientNet);
+        let (data, _) = generate_dataset(&sp, 128, &mut Rng::new(5));
+        let min = data.iter().map(|s| s.latency_ms).fold(f64::MAX, f64::min);
+        let max = data.iter().map(|s| s.latency_ms).fold(0.0f64, f64::max);
+        assert!(max / min > 5.0, "latency spread {min}..{max}");
+    }
+}

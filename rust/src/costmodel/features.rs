@@ -1,0 +1,179 @@
+//! 394-dim featurization of a joint (neural architecture, accelerator)
+//! sample — the paper's "input feature size 394" (Table 2).
+//!
+//! Layout (fixed, padded with zeros):
+//! * `[0, 280)`   — 20 block slots x 14 dims: one-hots for kernel(3),
+//!   expansion(2), op(2), filter(4), groups(2) plus a presence bit;
+//! * `[280, 313)` — HAS one-hots (5+5+4+4+5+5+5 = 33);
+//! * `[313, 317)` — NAS-space id one-hot;
+//! * `[317, 334)` — 17 scalar descriptors: log-MACs, log-params,
+//!   log-weight-bytes, depth, input resolution, 8 per-stage MAC
+//!   fractions, depthwise/fused MAC fractions, SE + Swish counts;
+//! * `[334, 338)` — evolved-space global compound-scale one-hot;
+//! * `[338, 394)` — zero padding (reserved).
+
+use crate::model::{Layer, NetworkIr};
+use crate::nas::{NasSpace, NasSpaceId};
+
+pub const FEATURE_DIM: usize = 394;
+const BLOCK_SLOTS: usize = 20;
+const BLOCK_DIMS: usize = 14;
+const HAS_OFF: usize = BLOCK_SLOTS * BLOCK_DIMS; // 280
+const SPACE_OFF: usize = HAS_OFF + 33; // 313
+const SCALAR_OFF: usize = SPACE_OFF + 4; // 317
+const SCALE_OFF: usize = SCALAR_OFF + 17; // 334
+
+/// Encode a joint sample. `nas_d` is indexed per the space's decision
+/// layout; `has_d` per `has::HasSpace` (7 categorical decisions).
+pub fn featurize(space: &NasSpace, nas_d: &[usize], has_d: &[usize], out: &mut [f32]) {
+    assert_eq!(out.len(), FEATURE_DIM);
+    out.fill(0.0);
+
+    // Evolved-space global compound-scale decision precedes the blocks.
+    let global = usize::from(space.id == NasSpaceId::Evolved);
+    if global == 1 {
+        out[SCALE_OFF + nas_d[0]] = 1.0;
+    }
+    // Per-block one-hots.
+    let per_block = (nas_d.len() - global) / space.blocks.len();
+    for (b, _) in space.blocks.iter().enumerate().take(BLOCK_SLOTS) {
+        let base = b * BLOCK_DIMS;
+        let d = &nas_d[global + b * per_block..global + (b + 1) * per_block];
+        out[base + d[0]] = 1.0; // kernel (3)
+        out[base + 3 + d[1]] = 1.0; // expansion (2)
+        let (op, filt, groups) = match space.id {
+            NasSpaceId::Evolved => (d[2], d[3], d[4]),
+            NasSpaceId::Proxy => (d[2], d[3], 0),
+            _ => (0, 2, 0),
+        };
+        out[base + 5 + op] = 1.0; // op (2)
+        out[base + 7 + filt] = 1.0; // filter (4)
+        out[base + 11 + groups] = 1.0; // groups (2)
+        out[base + 13] = 1.0; // presence
+    }
+
+    // HAS one-hots.
+    let cards = [5usize, 5, 4, 4, 5, 5, 5];
+    let mut off = HAS_OFF;
+    for (i, &c) in cards.iter().enumerate() {
+        out[off + has_d[i]] = 1.0;
+        off += c;
+    }
+
+    // Space id.
+    let sid = match space.id {
+        NasSpaceId::MobileNetV2 => 0,
+        NasSpaceId::EfficientNet => 1,
+        NasSpaceId::Evolved => 2,
+        NasSpaceId::Proxy => 3,
+    };
+    out[SPACE_OFF + sid] = 1.0;
+
+    // Scalars from the decoded IR.
+    let net = space.decode(nas_d);
+    write_scalars(&net, &mut out[SCALAR_OFF..SCALAR_OFF + 17]);
+}
+
+fn write_scalars(net: &NetworkIr, s: &mut [f32]) {
+    let macs = net.total_macs() as f64;
+    let params = net.total_params() as f64;
+    s[0] = (macs.max(1.0)).log10() as f32 / 12.0;
+    s[1] = (params.max(1.0)).log10() as f32 / 9.0;
+    s[2] = ((params).max(1.0)).log10() as f32 / 9.0; // int8 weight bytes == params
+    s[3] = net.layers.len() as f32 / 100.0;
+    s[4] = net.input_h as f32 / 224.0;
+    // Per-stage (8 equal layer buckets) MAC fractions.
+    let nl = net.layers.len();
+    for (i, l) in net.layers.iter().enumerate() {
+        let bucket = (i * 8 / nl).min(7);
+        s[5 + bucket] += (l.macs() as f64 / macs.max(1.0)) as f32;
+    }
+    let frac = |pred: &dyn Fn(&Layer) -> bool| -> f32 {
+        (net.layers.iter().filter(|l| pred(&l.op)).map(|l| l.macs()).sum::<u64>() as f64
+            / macs.max(1.0)) as f32
+    };
+    s[13] = frac(&|op| matches!(op, Layer::DwConv { .. }));
+    s[14] = frac(&|op| matches!(op, Layer::Conv2d { kh, cin, .. } if *kh > 1 && *cin > 3));
+    s[15] = net.layers.iter().filter(|l| matches!(l.op, Layer::SePool { .. })).count() as f32
+        / 20.0;
+    s[16] =
+        net.layers.iter().filter(|l| matches!(l.op, Layer::Swish { .. })).count() as f32 / 40.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::has::HasSpace;
+    use crate::util::proptest;
+    use crate::util::Rng;
+
+    fn feat(space: &NasSpace, nas_d: &[usize], has_d: &[usize]) -> Vec<f32> {
+        let mut f = vec![0.0; FEATURE_DIM];
+        featurize(space, nas_d, has_d, &mut f);
+        f
+    }
+
+    #[test]
+    fn paper_feature_dim() {
+        assert_eq!(FEATURE_DIM, 394);
+        assert!(SCALAR_OFF + 17 <= FEATURE_DIM);
+    }
+
+    #[test]
+    fn onehots_sum_correctly() {
+        let sp = NasSpace::new(NasSpaceId::Evolved);
+        let hs = HasSpace::new();
+        let mut rng = Rng::new(5);
+        let f = feat(&sp, &sp.random(&mut rng), &hs.random(&mut rng));
+        // 16 present blocks x (5 one-hots + presence) + 7 HAS + 1 space.
+        let onehot_sum: f32 = f[..SPACE_OFF + 4].iter().sum();
+        assert_eq!(onehot_sum, (16 * 6 + 7 + 1) as f32);
+    }
+
+    #[test]
+    fn distinct_samples_get_distinct_features() {
+        let sp = NasSpace::new(NasSpaceId::MobileNetV2);
+        let hs = HasSpace::new();
+        let mut rng = Rng::new(6);
+        let a = (sp.random(&mut rng), hs.random(&mut rng));
+        let b = (sp.random(&mut rng), hs.random(&mut rng));
+        assert_ne!(feat(&sp, &a.0, &a.1), feat(&sp, &b.0, &b.1));
+    }
+
+    #[test]
+    fn prop_features_bounded() {
+        let sp = NasSpace::new(NasSpaceId::Evolved);
+        let hs = HasSpace::new();
+        proptest::check(
+            "features in [0, 1.5]",
+            128,
+            |r| (sp.random(r), hs.random(r)),
+            |(nd, hd)| {
+                let f = feat(&sp, nd, hd);
+                for (i, v) in f.iter().enumerate() {
+                    if !v.is_finite() || *v < 0.0 || *v > 1.5 {
+                        return Err(format!("f[{i}] = {v}"));
+                    }
+                }
+                // Stage fractions sum to ~1.
+                let stage_sum: f32 = f[SCALAR_OFF + 5..SCALAR_OFF + 13].iter().sum();
+                if (stage_sum - 1.0).abs() > 1e-3 {
+                    return Err(format!("stage fractions sum {stage_sum}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn hardware_changes_only_has_block() {
+        let sp = NasSpace::new(NasSpaceId::EfficientNet);
+        let hs = HasSpace::new();
+        let mut rng = Rng::new(7);
+        let nd = sp.random(&mut rng);
+        let f1 = feat(&sp, &nd, &hs.baseline_decisions());
+        let f2 = feat(&sp, &nd, &hs.random(&mut rng));
+        assert_eq!(f1[..HAS_OFF], f2[..HAS_OFF]);
+        assert_eq!(f1[SPACE_OFF..], f2[SPACE_OFF..]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Rust-side driver for the AOT cost-model MLP (paper Table 2 / Eq. 7).
+//!
+//! Training runs `costmodel_train` (Adam, batch 128, loss = MSE(area) +
+//! 10 x MSE(latency), dropout 0.1 — all baked into the L2 graph, which
+//! differentiates through the L1 pallas matmul). Inference runs the
+//! fused-trunk kernel via `costmodel_infer_b256` / `_b1`.
+
+use anyhow::Result;
+
+use crate::costmodel::dataset::{CostSample, Normalizer};
+use crate::costmodel::features::FEATURE_DIM;
+use crate::runtime::{lit_f32, lit_i32_scalar, scalar_f32, to_vec_f32, Runtime};
+use crate::util::Rng;
+
+const BATCH: usize = 128;
+const INFER_BATCH: usize = 256;
+
+/// Trained cost model state (parameters live as PJRT literals).
+pub struct CostModel {
+    flat: xla::Literal,
+    m: xla::Literal,
+    v: xla::Literal,
+    step: i32,
+    pub norm: Normalizer,
+}
+
+impl CostModel {
+    /// Fresh parameters + the dataset's normalizer.
+    pub fn init(rt: &mut Runtime, norm: Normalizer, seed: i32) -> Result<Self> {
+        let out = rt.run("costmodel_init", &[&lit_i32_scalar(seed)])?;
+        let mut it = out.into_iter();
+        Ok(CostModel {
+            flat: it.next().unwrap(),
+            m: it.next().unwrap(),
+            v: it.next().unwrap(),
+            step: 0,
+            norm,
+        })
+    }
+
+    /// Train for `steps` minibatches sampled from `data`; returns the
+    /// per-step losses.
+    pub fn train(
+        &mut self,
+        rt: &mut Runtime,
+        data: &[CostSample],
+        steps: usize,
+        rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let mut losses = Vec::with_capacity(steps);
+        let mut x = vec![0.0f32; BATCH * FEATURE_DIM];
+        let mut ylat = vec![0.0f32; BATCH];
+        let mut yarea = vec![0.0f32; BATCH];
+        for _ in 0..steps {
+            for i in 0..BATCH {
+                let s = &data[rng.below(data.len())];
+                x[i * FEATURE_DIM..(i + 1) * FEATURE_DIM].copy_from_slice(&s.features);
+                ylat[i] = s.lat;
+                yarea[i] = s.area;
+            }
+            let xb = lit_f32(&x, &[BATCH, FEATURE_DIM])?;
+            let lb = lit_f32(&ylat, &[BATCH])?;
+            let ab = lit_f32(&yarea, &[BATCH])?;
+            let out = rt.run(
+                "costmodel_train",
+                &[
+                    &self.flat,
+                    &self.m,
+                    &self.v,
+                    &lit_i32_scalar(self.step),
+                    &lit_i32_scalar(17),
+                    &xb,
+                    &lb,
+                    &ab,
+                ],
+            )?;
+            let mut it = out.into_iter();
+            self.flat = it.next().unwrap();
+            self.m = it.next().unwrap();
+            self.v = it.next().unwrap();
+            losses.push(scalar_f32(&it.next().unwrap())?);
+            self.step += 1;
+        }
+        Ok(losses)
+    }
+
+    /// Predict (latency_ms, area_mm2) for a batch of feature vectors.
+    pub fn predict(&mut self, rt: &mut Runtime, feats: &[Vec<f32>]) -> Result<Vec<(f64, f64)>> {
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(INFER_BATCH) {
+            let mut x = vec![0.0f32; INFER_BATCH * FEATURE_DIM];
+            for (i, f) in chunk.iter().enumerate() {
+                x[i * FEATURE_DIM..(i + 1) * FEATURE_DIM].copy_from_slice(f);
+            }
+            let xb = lit_f32(&x, &[INFER_BATCH, FEATURE_DIM])?;
+            let res = rt.run("costmodel_infer_b256", &[&self.flat, &xb])?;
+            let lat = to_vec_f32(&res[0])?;
+            let area = to_vec_f32(&res[1])?;
+            for i in 0..chunk.len() {
+                out.push((self.norm.denorm_lat(lat[i]), self.norm.denorm_area(area[i])));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Single-sample prediction through the b1 artifact (request-path
+    /// latency benchmarking).
+    pub fn predict_one(&mut self, rt: &mut Runtime, feat: &[f32]) -> Result<(f64, f64)> {
+        let xb = lit_f32(feat, &[1, FEATURE_DIM])?;
+        let res = rt.run("costmodel_infer_b1", &[&self.flat, &xb])?;
+        let lat = to_vec_f32(&res[0])?[0];
+        let area = to_vec_f32(&res[1])?[0];
+        Ok((self.norm.denorm_lat(lat), self.norm.denorm_area(area)))
+    }
+}
+
+/// Mean relative error + Pearson correlation of predictions vs
+/// simulator ground truth (the paper's Fig. 6 quality metrics).
+pub fn accuracy_metrics(pred: &[(f64, f64)], truth: &[&CostSample]) -> (f64, f64) {
+    let n = pred.len() as f64;
+    let rel: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p.0 - t.latency_ms).abs() / t.latency_ms.max(1e-9))
+        .sum::<f64>()
+        / n;
+    let mx = pred.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = truth.iter().map(|t| t.latency_ms).sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (p, t) in pred.iter().zip(truth) {
+        cov += (p.0 - mx) * (t.latency_ms - my);
+        vx += (p.0 - mx) * (p.0 - mx);
+        vy += (t.latency_ms - my) * (t.latency_ms - my);
+    }
+    (rel, cov / (vx.sqrt() * vy.sqrt()).max(1e-12))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_metrics_perfect_prediction() {
+        let truth: Vec<CostSample> = (1..=4)
+            .map(|i| CostSample {
+                features: vec![],
+                lat: 0.0,
+                area: 0.0,
+                latency_ms: i as f64 * 0.1,
+                area_mm2: 80.0,
+            })
+            .collect();
+        let refs: Vec<&CostSample> = truth.iter().collect();
+        let pred: Vec<(f64, f64)> = truth.iter().map(|t| (t.latency_ms, 80.0)).collect();
+        let (rel, corr) = accuracy_metrics(&pred, &refs);
+        assert!(rel < 1e-12);
+        assert!((corr - 1.0).abs() < 1e-9);
+    }
+}

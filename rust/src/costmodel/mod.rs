@@ -1,0 +1,16 @@
+//! The learned latency/area cost model (paper §3.5.2, Table 2, Fig. 6).
+//!
+//! * [`features`] — the 394-dim joint (alpha, h) encoding;
+//! * [`dataset`] — simulator-labelled sample generation ("labelled data
+//!   for accelerator performance is much cheaper than NAS accuracy");
+//! * [`host`] — rust-side training/inference driver over the AOT MLP
+//!   artifacts (`costmodel_train` / `costmodel_infer_*`), whose trunk is
+//!   the L1 fused pallas kernel.
+
+pub mod dataset;
+pub mod features;
+pub mod host;
+
+pub use dataset::{generate_dataset, CostSample};
+pub use features::{featurize, FEATURE_DIM};
+pub use host::CostModel;

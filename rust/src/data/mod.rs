@@ -1,0 +1,165 @@
+//! Synthetic proxy-task dataset (stand-in for ImageNet; DESIGN.md
+//! §Substitutions).
+//!
+//! Class-conditional oriented sinusoid ("Gabor-like") textures over RGB
+//! with random phase, amplitude jitter and additive noise. Sixteen
+//! classes live on a 4x4 grid of (x-frequency, y-frequency) pairs, so
+//! class identity is recoverable by oriented filters — exactly what small
+//! ConvNets learn — and accuracy rises smoothly with model capacity,
+//! which is the gradient the NAS controllers climb.
+//!
+//! The generator is pure-rust, deterministic per seed, and fills
+//! caller-provided buffers (NHWC f32 + i32 labels) sized for the AOT
+//! artifact batch shapes.
+
+use crate::util::Rng;
+
+/// Mirror of python/compile/config.py (checked against the manifest at
+/// runtime-load).
+pub const IMG: usize = 8;
+pub const CHANNELS: usize = 3;
+pub const NUM_CLASSES: usize = 16;
+
+/// Synthetic dataset generator.
+pub struct DataGen {
+    rng: Rng,
+    /// Noise standard deviation (difficulty knob).
+    pub noise: f32,
+}
+
+impl DataGen {
+    pub fn new(seed: u64) -> Self {
+        DataGen { rng: Rng::new(seed), noise: 0.35 }
+    }
+
+    /// Fill one batch: `x` is `[n, IMG, IMG, 3]` flattened NHWC, `y` is
+    /// `[n]` class ids.
+    pub fn fill_batch(&mut self, x: &mut [f32], y: &mut [i32]) {
+        let n = y.len();
+        assert_eq!(x.len(), n * IMG * IMG * CHANNELS);
+        for i in 0..n {
+            let class = self.rng.below(NUM_CLASSES);
+            y[i] = class as i32;
+            let img = &mut x[i * IMG * IMG * CHANNELS..(i + 1) * IMG * IMG * CHANNELS];
+            self.fill_image(img, class);
+        }
+    }
+
+    fn fill_image(&mut self, img: &mut [f32], class: usize) {
+        // Class -> (fx, fy) on a 4x4 frequency grid.
+        let fx = 0.35 + 0.30 * (class % 4) as f32;
+        let fy = 0.25 + 0.28 * (class / 4) as f32;
+        let phase = self.rng.f32() * std::f32::consts::TAU;
+        let amp = 0.8 + 0.4 * self.rng.f32();
+        for h in 0..IMG {
+            for w in 0..IMG {
+                let base = amp * (fx * w as f32 + fy * h as f32 + phase).sin();
+                let o = (h * IMG + w) * CHANNELS;
+                img[o] = base + self.noise * self.rng.normal();
+                img[o + 1] = 0.5 * base + self.noise * self.rng.normal();
+                img[o + 2] = -base + self.noise * self.rng.normal();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(seed: u64, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut g = DataGen::new(seed);
+        let mut x = vec![0.0; n * IMG * IMG * CHANNELS];
+        let mut y = vec![0; n];
+        g.fill_batch(&mut x, &mut y);
+        (x, y)
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (x1, y1) = batch(3, 16);
+        let (x2, y2) = batch(3, 16);
+        assert_eq!(y1, y2);
+        assert_eq!(x1, x2);
+        let (x3, _) = batch(4, 16);
+        assert_ne!(x1, x3);
+    }
+
+    #[test]
+    fn labels_in_range_and_cover_classes() {
+        let (_, y) = batch(5, 2_000);
+        assert!(y.iter().all(|&c| (0..NUM_CLASSES as i32).contains(&c)));
+        let mut seen = [false; NUM_CLASSES];
+        for &c in &y {
+            seen[c as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all classes appear in 2000 draws");
+    }
+
+    #[test]
+    fn pixels_bounded() {
+        let (x, _) = batch(6, 64);
+        assert!(x.iter().all(|v| v.is_finite() && v.abs() < 10.0));
+    }
+
+    #[test]
+    fn classes_are_linearly_distinguishable_in_frequency() {
+        // Nearest-centroid on the raw pixels of clean images should beat
+        // chance comfortably — the signal the ConvNet amplifies.
+        let mut g = DataGen::new(7);
+        g.noise = 0.0;
+        let n = 320;
+        let mut x = vec![0.0; n * IMG * IMG * CHANNELS];
+        let mut y = vec![0; n];
+        g.fill_batch(&mut x, &mut y);
+        // Centroid per class of |FFT|-like energy: use mean |pixel| per
+        // row/col as a crude frequency signature.
+        let d = IMG * 2;
+        let feat = |img: &[f32]| -> Vec<f32> {
+            let mut f = vec![0.0f32; d];
+            for h in 0..IMG {
+                for w in 0..IMG {
+                    let v = img[(h * IMG + w) * CHANNELS];
+                    // discrete gradient magnitudes by row/col
+                    if w + 1 < IMG {
+                        f[h] += (img[(h * IMG + w + 1) * CHANNELS] - v).abs();
+                    }
+                    if h + 1 < IMG {
+                        f[IMG + w] += (img[((h + 1) * IMG + w) * CHANNELS] - v).abs();
+                    }
+                }
+            }
+            f
+        };
+        let mut cents = vec![vec![0.0f32; d]; NUM_CLASSES];
+        let mut counts = vec![0usize; NUM_CLASSES];
+        for i in 0..n / 2 {
+            let f = feat(&x[i * IMG * IMG * CHANNELS..]);
+            for j in 0..d {
+                cents[y[i] as usize][j] += f[j];
+            }
+            counts[y[i] as usize] += 1;
+        }
+        for (c, cent) in cents.iter_mut().enumerate() {
+            for v in cent.iter_mut() {
+                *v /= counts[c].max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in n / 2..n {
+            let f = feat(&x[i * IMG * IMG * CHANNELS..]);
+            let best = (0..NUM_CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f32 = f.iter().zip(&cents[a]).map(|(u, v)| (u - v) * (u - v)).sum();
+                    let db: f32 = f.iter().zip(&cents[b]).map(|(u, v)| (u - v) * (u - v)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / (n / 2) as f64;
+        assert!(acc > 0.20, "nearest-centroid acc {acc} should beat 1/16 chance");
+    }
+}

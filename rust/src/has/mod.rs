@@ -1,0 +1,13 @@
+//! Hardware Accelerator Search space (paper §3.3, Table 1).
+//!
+//! Exposes the seven Table-1 knobs as categorical decisions (same
+//! currency as `nas::DecisionSpec`, so the joint space is just the
+//! concatenation) and the static validity rules that make the HAS space
+//! contain "many invalid points" (§3.3) — configurations the
+//! compiler/mapper rejects before simulation.
+
+pub mod space;
+pub mod validity;
+
+pub use space::HasSpace;
+pub use validity::validate;

@@ -1,0 +1,125 @@
+//! Table-1 HAS space: encode/decode between decision vectors and
+//! [`AcceleratorConfig`]s.
+
+use crate::accel::AcceleratorConfig;
+use crate::nas::DecisionSpec;
+use crate::util::Rng;
+
+pub const PE_DIM: [usize; 5] = [1, 2, 4, 6, 8];
+pub const SIMD_UNITS: [usize; 4] = [16, 32, 64, 128];
+pub const COMPUTE_LANES: [usize; 4] = [1, 2, 4, 8];
+pub const LOCAL_MEMORY_MB: [f64; 5] = [0.5, 1.0, 2.0, 3.0, 4.0];
+pub const REGISTER_FILE_KB: [usize; 5] = [8, 16, 32, 64, 128];
+pub const IO_BANDWIDTH_GBPS: [f64; 5] = [5.0, 10.0, 15.0, 20.0, 25.0];
+
+/// The seven-knob accelerator search space.
+#[derive(Clone, Debug)]
+pub struct HasSpace {
+    specs: Vec<DecisionSpec>,
+}
+
+impl Default for HasSpace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HasSpace {
+    pub fn new() -> Self {
+        let mk = |name: &str, c: usize| DecisionSpec { name: name.into(), cardinality: c };
+        HasSpace {
+            specs: vec![
+                mk("hw/pe_x", PE_DIM.len()),
+                mk("hw/pe_y", PE_DIM.len()),
+                mk("hw/simd_units", SIMD_UNITS.len()),
+                mk("hw/compute_lanes", COMPUTE_LANES.len()),
+                mk("hw/local_memory_mb", LOCAL_MEMORY_MB.len()),
+                mk("hw/register_file_kb", REGISTER_FILE_KB.len()),
+                mk("hw/io_bandwidth_gbps", IO_BANDWIDTH_GBPS.len()),
+            ],
+        }
+    }
+
+    pub fn specs(&self) -> &[DecisionSpec] {
+        &self.specs
+    }
+
+    pub fn num_decisions(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn random(&self, rng: &mut Rng) -> Vec<usize> {
+        self.specs.iter().map(|s| rng.below(s.cardinality)).collect()
+    }
+
+    pub fn decode(&self, d: &[usize]) -> AcceleratorConfig {
+        assert_eq!(d.len(), 7, "HAS decision vector length");
+        AcceleratorConfig {
+            pe_x: PE_DIM[d[0]],
+            pe_y: PE_DIM[d[1]],
+            simd_units: SIMD_UNITS[d[2]],
+            compute_lanes: COMPUTE_LANES[d[3]],
+            local_memory_mb: LOCAL_MEMORY_MB[d[4]],
+            register_file_kb: REGISTER_FILE_KB[d[5]],
+            io_bandwidth_gbps: IO_BANDWIDTH_GBPS[d[6]],
+        }
+    }
+
+    /// The decision vector of the paper's baseline configuration.
+    pub fn baseline_decisions(&self) -> Vec<usize> {
+        let b = AcceleratorConfig::baseline();
+        vec![
+            PE_DIM.iter().position(|&v| v == b.pe_x).unwrap(),
+            PE_DIM.iter().position(|&v| v == b.pe_y).unwrap(),
+            SIMD_UNITS.iter().position(|&v| v == b.simd_units).unwrap(),
+            COMPUTE_LANES.iter().position(|&v| v == b.compute_lanes).unwrap(),
+            LOCAL_MEMORY_MB.iter().position(|&v| v == b.local_memory_mb).unwrap(),
+            REGISTER_FILE_KB.iter().position(|&v| v == b.register_file_kb).unwrap(),
+            IO_BANDWIDTH_GBPS.iter().position(|&v| v == b.io_bandwidth_gbps).unwrap(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn seven_knobs_match_table1() {
+        let sp = HasSpace::new();
+        assert_eq!(sp.num_decisions(), 7);
+        let card: usize = sp.specs().iter().map(|s| s.cardinality).product();
+        assert_eq!(card, 5 * 5 * 4 * 4 * 5 * 5 * 5); // Table 1 cardinality
+    }
+
+    #[test]
+    fn baseline_roundtrips() {
+        let sp = HasSpace::new();
+        let d = sp.baseline_decisions();
+        assert_eq!(sp.decode(&d), AcceleratorConfig::baseline());
+    }
+
+    #[test]
+    fn prop_decode_in_table_ranges() {
+        let sp = HasSpace::new();
+        proptest::check(
+            "has decode",
+            proptest::CASES,
+            |r| sp.random(r),
+            |d| {
+                let c = sp.decode(d);
+                if !PE_DIM.contains(&c.pe_x) || !PE_DIM.contains(&c.pe_y) {
+                    return Err("pe".into());
+                }
+                if !SIMD_UNITS.contains(&c.simd_units) {
+                    return Err("simd".into());
+                }
+                if !REGISTER_FILE_KB.contains(&c.register_file_kb) {
+                    return Err("rf".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

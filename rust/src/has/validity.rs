@@ -1,0 +1,106 @@
+//! Static hardware validity rules.
+//!
+//! The paper (§3.3): "the HAS search space contains many invalid points
+//! ... the created accelerator configuration in combination with the NAS
+//! model may not be supported by the compiler". We model this with two
+//! layers of rejection:
+//!
+//! 1. The *static* rules here — properties of the hardware alone, the
+//!    kind a design-rule checker or the compiler's target validator
+//!    rejects immediately.
+//! 2. The *model-dependent* failures raised by the simulator
+//!    ([`crate::accel::SimError::WorkingSetTooLarge`]) when a particular
+//!    network cannot be mapped onto an otherwise-legal configuration.
+
+use crate::accel::config::SIMD_WAY;
+use crate::accel::AcceleratorConfig;
+
+/// Check static design rules; `Err` carries the human-readable reason.
+pub fn validate(c: &AcceleratorConfig) -> Result<(), String> {
+    // Register file must hold double-buffered operands for the SIMD
+    // datapath (8 B per 4-way unit, two buffers) plus accumulators.
+    let min_rf_bytes = c.simd_units * SIMD_WAY * 2 * 2 + c.simd_units * 4;
+    if c.register_file_kb * 1024 < min_rf_bytes {
+        return Err(format!(
+            "register file {} KB cannot feed {} SIMD units",
+            c.register_file_kb, c.simd_units
+        ));
+    }
+    // Widest datapaths need register bandwidth: 128-unit lanes require
+    // at least a 32 KB RF (port/banking constraint).
+    if c.simd_units == 128 && c.register_file_kb < 32 {
+        return Err("128 SIMD units require >=32 KB register file".into());
+    }
+    // 8-lane PEs with the widest SIMD exceed the local-memory port
+    // budget unless the scratchpad is banked >=2 MB (wiring congestion).
+    if c.compute_lanes == 8 && c.simd_units >= 128 && c.local_memory_mb < 2.0 {
+        return Err("8 lanes x 128 SIMD needs >=2 MB banked local memory".into());
+    }
+    // Large PE arrays starve below 10 GB/s (the NoC injection rate the
+    // compiler's mapper assumes).
+    if c.num_pes() >= 48 && c.io_bandwidth_gbps < 10.0 {
+        return Err(format!("{} PEs starve at {} GB/s", c.num_pes(), c.io_bandwidth_gbps));
+    }
+    // Degenerate chip: a 1x1 array with 1 lane and minimal SIMD cannot
+    // sustain the runtime's minimum batch scheduling quantum.
+    if c.num_pes() == 1 && c.compute_lanes == 1 && c.simd_units <= 16 {
+        return Err("single-PE single-lane 16-SIMD config below runtime minimum".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::has::HasSpace;
+    use crate::util::Rng;
+
+    #[test]
+    fn baseline_is_valid() {
+        assert!(validate(&AcceleratorConfig::baseline()).is_ok());
+    }
+
+    #[test]
+    fn rejects_rf_starved_wide_simd() {
+        let mut c = AcceleratorConfig::baseline();
+        c.simd_units = 128;
+        c.register_file_kb = 8;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_starved_large_array() {
+        let mut c = AcceleratorConfig::baseline();
+        c.pe_x = 8;
+        c.pe_y = 8;
+        c.io_bandwidth_gbps = 5.0;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_chip() {
+        let c = AcceleratorConfig {
+            pe_x: 1,
+            pe_y: 1,
+            simd_units: 16,
+            compute_lanes: 1,
+            local_memory_mb: 0.5,
+            register_file_kb: 8,
+            io_bandwidth_gbps: 5.0,
+        };
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn space_contains_many_invalid_points_but_not_mostly() {
+        // Paper: "the HAS search space contains many invalid points".
+        let sp = HasSpace::new();
+        let mut rng = Rng::new(11);
+        let total = 5_000;
+        let invalid = (0..total)
+            .filter(|_| validate(&sp.decode(&sp.random(&mut rng))).is_err())
+            .count();
+        let frac = invalid as f64 / total as f64;
+        assert!((0.01..0.60).contains(&frac), "invalid fraction {frac}");
+    }
+}

@@ -1,0 +1,34 @@
+//! NAHAS — joint Neural Architecture and Hardware Accelerator Search.
+//!
+//! A reproduction of "Rethinking Co-design of Neural Architectures and
+//! Hardware Accelerators" (Zhou et al., 2021) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the search framework: NAS/HAS search spaces,
+//!   PPO / REINFORCE controllers, the weighted-product constrained reward
+//!   (paper Eq. 4–6), multi-trial / oneshot / phase-based search drivers,
+//!   a cycle-level simulator of the paper's parameterized edge
+//!   accelerator (Fig. 5 / Table 1) with analytical area + energy models,
+//!   a learned latency/area cost model, and a simulator-as-a-service.
+//! * **L2** — JAX programs (proxy-task supernet, cost-model MLP)
+//!   AOT-lowered to HLO text at build time (`make artifacts`).
+//! * **L1** — Pallas kernels (tiled matmul, fused MLP trunk) on the
+//!   training/inference paths of the L2 programs.
+//!
+//! Python never runs on the search path: the L3 binary loads the HLO
+//! artifacts through PJRT (`runtime`) and owns every loop.
+
+pub mod accel;
+pub mod bench;
+pub mod costmodel;
+pub mod data;
+pub mod has;
+pub mod metrics;
+pub mod model;
+pub mod nas;
+pub mod pareto;
+pub mod runtime;
+pub mod search;
+pub mod service;
+pub mod trainer;
+pub mod util;

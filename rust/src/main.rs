@@ -1,0 +1,382 @@
+//! `nahas` — the NAHAS coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   simulate    cost every Table-3 baseline (or random samples) on a hw config
+//!   search      multi-trial joint / platform-aware / HAS-only search
+//!   phase       phase-based (HAS-then-NAS) search (Fig. 9 ablation)
+//!   oneshot     weight-sharing search on the AOT proxy supernet
+//!   train-child train one proxy child end-to-end through PJRT
+//!   costmodel   generate simulator-labelled data, train + evaluate the MLP
+//!   serve       run the simulator service (newline-JSON over TCP)
+//!
+//! Run `nahas help` for flags. clap is not vendored in this offline
+//! build; flags are simple `--key value` pairs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use nahas::accel::{simulate_network, AcceleratorConfig};
+use nahas::bench::Table;
+use nahas::costmodel::{self, CostModel};
+use nahas::has::HasSpace;
+use nahas::metrics;
+use nahas::nas::{baselines, NasSpace, NasSpaceId};
+use nahas::runtime::Runtime;
+use nahas::search::joint::JointLayout;
+use nahas::search::oneshot::{oneshot_search, OneshotCfg, SimOracle};
+use nahas::search::phase::phase_search;
+use nahas::search::ppo::PpoController;
+use nahas::search::reinforce::ReinforceController;
+use nahas::search::{
+    evolution::EvolutionController, joint_search, Controller, RandomController, RewardCfg,
+    SearchCfg, SurrogateSim,
+};
+use nahas::service::{RemoteEval, Server};
+use nahas::trainer::ProxyTrainer;
+use nahas::util::Rng;
+
+/// Parsed `--key value` flags after the subcommand.
+struct Flags(BTreeMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut m = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(k.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Flags(m))
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.0.get(k).map(|s| s.as_str())
+    }
+
+    fn usize(&self, k: &str, default: usize) -> Result<usize> {
+        self.get(k).map_or(Ok(default), |v| {
+            v.parse().with_context(|| format!("--{k} must be an integer"))
+        })
+    }
+
+    fn f64(&self, k: &str, default: f64) -> Result<f64> {
+        self.get(k)
+            .map_or(Ok(default), |v| v.parse().with_context(|| format!("--{k} must be a number")))
+    }
+
+    fn u64(&self, k: &str, default: u64) -> Result<u64> {
+        self.get(k).map_or(Ok(default), |v| {
+            v.parse().with_context(|| format!("--{k} must be an integer"))
+        })
+    }
+
+    fn bool(&self, k: &str) -> bool {
+        self.get(k) == Some("true")
+    }
+}
+
+fn space_arg(flags: &Flags) -> Result<NasSpace> {
+    let name = flags.get("space").unwrap_or("s2");
+    let id = match name {
+        "s1" | "mobilenetv2" => NasSpaceId::MobileNetV2,
+        "s2" | "efficientnet" => NasSpaceId::EfficientNet,
+        "s3" | "evolved" => NasSpaceId::Evolved,
+        "proxy" => NasSpaceId::Proxy,
+        other => bail!("unknown space '{other}' (s1|s2|s3|proxy)"),
+    };
+    Ok(NasSpace::new(id))
+}
+
+fn reward_arg(flags: &Flags) -> Result<RewardCfg> {
+    let mut r = if let Some(e) = flags.get("target-mj") {
+        RewardCfg::energy(e.parse().context("--target-mj")?)
+    } else {
+        RewardCfg::latency(flags.f64("target-ms", 0.5)?)
+    };
+    if flags.get("mode") == Some("soft") {
+        r = r.soft();
+    }
+    Ok(r)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(&flags),
+        "search" => cmd_search(&flags),
+        "phase" => cmd_phase(&flags),
+        "oneshot" => cmd_oneshot(&flags),
+        "train-child" => cmd_train_child(&flags),
+        "costmodel" => cmd_costmodel(&flags),
+        "serve" => cmd_serve(&flags),
+        "help" | "--help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try 'nahas help')"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "nahas — joint Neural Architecture and Hardware Accelerator Search\n\
+         \n\
+         commands:\n\
+         \x20 simulate     [--random N --space s1|s2|s3|proxy --seed S --detail MODEL]\n\
+         \x20 search       [--space s2 --samples 500 --target-ms 0.5 | --target-mj 1.0]\n\
+         \x20              [--controller ppo|random|evolution|reinforce --fixed-hw]\n\
+         \x20              [--mode hard|soft --seg --seed S --out results/search.csv]\n\
+\x20              [--remote ADDR   use a `nahas serve` simulator service]\n\
+         \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
+         \x20 oneshot      [--warmup 60 --steps 200 --target-ms 0.02 --seed S]\n\
+         \x20 train-child  [--steps 30 --seed S]\n\
+         \x20 costmodel    [--data 2000 --train-steps 600 --eval 256 --space s2]\n\
+         \x20 serve        [--addr 127.0.0.1:7878]"
+    );
+}
+
+fn cmd_simulate(flags: &Flags) -> Result<()> {
+    let cfg = AcceleratorConfig::baseline();
+    if let Some(which) = flags.get("detail") {
+        return cmd_simulate_detail(which);
+    }
+    let mut table = Table::new(&[
+        "Model", "MACs(M)", "Params(M)", "Latency(ms)", "Energy(mJ)", "Power(W)", "Util",
+    ]);
+    let nets: Vec<(String, nahas::model::NetworkIr)> = if flags.get("random").is_some() {
+        let n = flags.usize("random", 8)?;
+        let space = space_arg(flags)?;
+        let mut rng = Rng::new(flags.u64("seed", 0)?);
+        (0..n)
+            .map(|i| {
+                let d = space.random(&mut rng);
+                let net = space.decode(&d);
+                (format!("{}#{i}", net.name), net)
+            })
+            .collect()
+    } else {
+        baselines::all_baselines().into_iter().map(|(n, net)| (n.to_string(), net)).collect()
+    };
+    for (name, net) in nets {
+        match simulate_network(&cfg, &net) {
+            Err(e) => println!("{name}: INVALID ({e})"),
+            Ok(r) => table.row(vec![
+                name,
+                format!("{:.0}", net.total_macs() as f64 / 1e6),
+                format!("{:.2}", net.total_params() as f64 / 1e6),
+                format!("{:.3}", r.latency_ms),
+                format!("{:.3}", r.energy_mj),
+                format!("{:.2}", r.power_w),
+                format!("{:.2}", r.utilization),
+            ]),
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+/// Per-layer cost breakdown of one named baseline (profiling view).
+fn cmd_simulate_detail(which: &str) -> Result<()> {
+    let net = baselines::all_baselines()
+        .into_iter()
+        .find(|(n, _)| n.eq_ignore_ascii_case(which) || n.to_lowercase().contains(&which.to_lowercase()))
+        .map(|(_, net)| net)
+        .ok_or_else(|| anyhow!("unknown model '{which}' (see `nahas simulate` for names)"))?;
+    let cfg = AcceleratorConfig::baseline();
+    let mut per = Vec::new();
+    let rep = nahas::accel::simulate_network_detailed(&cfg, &net, &mut per)
+        .map_err(|e| anyhow!("{e}"))?;
+    let mut table = Table::new(&[
+        "#", "Layer", "MACs(M)", "Cycles(k)", "Compute(k)", "DMA(k)", "Util", "DRAM(KB)",
+    ]);
+    for (i, (li, c)) in net.layers.iter().zip(&per).enumerate() {
+        table.row(vec![
+            format!("{i}"),
+            format!("{:?}", li.op).chars().take(44).collect(),
+            format!("{:.2}", c.macs as f64 / 1e6),
+            format!("{:.1}", c.cycles as f64 / 1e3),
+            format!("{:.1}", c.compute_cycles as f64 / 1e3),
+            format!("{:.1}", c.dma_cycles as f64 / 1e3),
+            format!("{:.2}", c.utilization),
+            format!("{:.1}", c.dram_read_bytes as f64 / 1e3),
+        ]);
+    }
+    table.print();
+    println!(
+        "total: {:.3} ms, {:.3} mJ, util {:.2}, dram {:.2} MB",
+        rep.latency_ms, rep.energy_mj, rep.utilization, rep.dram_traffic_mb
+    );
+    Ok(())
+}
+
+fn cmd_search(flags: &Flags) -> Result<()> {
+    let space = space_arg(flags)?;
+    let has = HasSpace::new();
+    let (cards, layout) = JointLayout::cards(&space, &has);
+    let reward = reward_arg(flags)?;
+    let seed = flags.u64("seed", 0)?;
+    let cfg = SearchCfg::new(flags.usize("samples", 500)?, reward, seed);
+    let fixed_hw = flags.bool("fixed-hw").then(|| has.baseline_decisions());
+    let free_cards = if fixed_hw.is_some() { cards[..layout.nas_len].to_vec() } else { cards };
+
+    let mut controller: Box<dyn Controller> = match flags.get("controller").unwrap_or("ppo") {
+        "ppo" => Box::new(PpoController::new(&free_cards)),
+        "random" => Box::new(RandomController::new(free_cards)),
+        "evolution" => Box::new(EvolutionController::new(free_cards)),
+        "reinforce" => Box::new(ReinforceController::new(&free_cards)),
+        other => bail!("unknown controller '{other}'"),
+    };
+    let t0 = std::time::Instant::now();
+    let out = if let Some(addr) = flags.get("remote") {
+        // Hardware metrics served by a remote `nahas serve` simulator.
+        let mut ev = RemoteEval::connect(addr, space.id, seed)?;
+        joint_search(&mut ev, controller.as_mut(), &layout, fixed_hw.as_deref(), None, &cfg)
+    } else {
+        let mut ev = SurrogateSim::new(space, seed);
+        if flags.bool("seg") {
+            ev = ev.segmentation();
+        }
+        joint_search(&mut ev, controller.as_mut(), &layout, fixed_hw.as_deref(), None, &cfg)
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "search done: {} samples in {:.2}s ({:.0} samples/s), {} invalid",
+        cfg.samples,
+        dt,
+        cfg.samples as f64 / dt,
+        out.num_invalid
+    );
+    if let Some(b) = &out.best_feasible {
+        println!(
+            "best feasible: acc {:.2}% lat {:.3}ms energy {:.3}mJ area {:.1}mm2",
+            b.result.acc * 100.0,
+            b.result.latency_ms,
+            b.result.energy_mj,
+            b.result.area_mm2
+        );
+        println!("  nas = {:?}", b.nas_d);
+        println!("  hw  = {:?}", b.has_d);
+    } else {
+        println!("no feasible sample found");
+    }
+    if let Some(path) = flags.get("out") {
+        metrics::write_history_csv(path, &out.history)?;
+        println!("history written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_phase(flags: &Flags) -> Result<()> {
+    let space = space_arg(flags)?;
+    let seed = flags.u64("seed", 0)?;
+    let cfg = SearchCfg::new(flags.usize("samples", 500)?, reward_arg(flags)?, seed);
+    let mut ev = SurrogateSim::new(space.clone(), seed);
+    let initial = vec![0; space.num_decisions()];
+    let out = phase_search(&mut ev, &space, &initial, &cfg);
+    println!("phase 1 selected hw: {:?}", out.selected_hw);
+    match &out.nas_phase.best_feasible {
+        Some(b) => println!(
+            "phase 2 best feasible: acc {:.2}% lat {:.3}ms",
+            b.result.acc * 100.0,
+            b.result.latency_ms
+        ),
+        None => println!("phase 2 found no feasible sample"),
+    }
+    Ok(())
+}
+
+fn cmd_oneshot(flags: &Flags) -> Result<()> {
+    let rt = Runtime::load(Runtime::default_dir())?;
+    let mut trainer = ProxyTrainer::new(rt, flags.u64("seed", 0)?)?;
+    let cfg = OneshotCfg {
+        warmup_steps: flags.usize("warmup", 60)?,
+        search_steps: flags.usize("steps", 200)?,
+        t_latency_ms: flags.f64("target-ms", 0.02)?,
+        seed: flags.u64("seed", 0)?,
+        ..Default::default()
+    };
+    let mut oracle = SimOracle { space: NasSpace::new(NasSpaceId::Proxy), has: HasSpace::new() };
+    let t0 = std::time::Instant::now();
+    let out = oneshot_search(&mut trainer, &mut oracle, &cfg)?;
+    println!(
+        "oneshot done in {:.1}s: final acc {:.3}, lat {:.4}ms (target {}), area {:.1}mm2",
+        t0.elapsed().as_secs_f64(),
+        out.final_acc,
+        out.final_latency_ms,
+        cfg.t_latency_ms,
+        out.final_area_mm2
+    );
+    println!("  nas = {:?}", out.best_nas);
+    println!("  hw  = {:?}", out.best_has);
+    Ok(())
+}
+
+fn cmd_train_child(flags: &Flags) -> Result<()> {
+    let rt = Runtime::load(Runtime::default_dir())?;
+    let mut trainer = ProxyTrainer::new(rt, flags.u64("seed", 0)?)?;
+    trainer.steps = flags.usize("steps", 30)?;
+    let space = trainer.space().clone();
+    let mut rng = Rng::new(flags.u64("seed", 0)?);
+    let d = space.random(&mut rng);
+    let t0 = std::time::Instant::now();
+    let acc = trainer.train_child(&d, 1)?;
+    println!(
+        "child {:?}: acc {:.3} after {} steps in {:.1}s",
+        d,
+        acc,
+        trainer.steps,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_costmodel(flags: &Flags) -> Result<()> {
+    let space = space_arg(flags)?;
+    let mut rng = Rng::new(flags.u64("seed", 0)?);
+    let n = flags.usize("data", 2000)?;
+    let t0 = std::time::Instant::now();
+    let (data, norm) = costmodel::generate_dataset(&space, n, &mut rng);
+    println!("generated {} labelled samples in {:.2}s", data.len(), t0.elapsed().as_secs_f64());
+
+    let mut rt = Runtime::load(Runtime::default_dir())?;
+    let mut cm = CostModel::init(&mut rt, norm, 0)?;
+    let holdout = flags.usize("eval", 256)?.min(data.len() / 4);
+    let (test, train) = data.split_at(holdout);
+    let steps = flags.usize("train-steps", 600)?;
+    let losses = cm.train(&mut rt, train, steps, &mut rng)?;
+    println!(
+        "trained {} steps: loss {:.4} -> {:.4}",
+        steps,
+        losses.first().unwrap_or(&0.0),
+        losses.last().unwrap_or(&0.0)
+    );
+    let feats: Vec<Vec<f32>> = test.iter().map(|s| s.features.clone()).collect();
+    let preds = cm.predict(&mut rt, &feats)?;
+    let refs: Vec<&costmodel::CostSample> = test.iter().collect();
+    let (rel, corr) = costmodel::host::accuracy_metrics(&preds, &refs);
+    println!("holdout: mean relative latency error {:.1}%, corr {:.3}", rel * 100.0, corr);
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let addr = flags.get("addr").unwrap_or("127.0.0.1:7878");
+    let server = Server::spawn(addr)?;
+    println!("simulator service on {}; Ctrl-C to stop", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,118 @@
+//! Run logging: CSV/JSON emitters for search histories and bench rows,
+//! written under `results/` so every paper figure can be re-plotted.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::search::joint::Sample;
+
+/// Write a search history as CSV (one row per trial — the raw data
+/// behind Fig. 7's scatter and Fig. 9's curves).
+pub fn write_history_csv(path: impl AsRef<Path>, history: &[Sample]) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    writeln!(f, "index,valid,acc,latency_ms,energy_mj,area_mm2,reward")?;
+    for s in history {
+        writeln!(
+            f,
+            "{},{},{:.6},{:.6},{:.6},{:.3},{:.6}",
+            s.index,
+            s.result.valid as u8,
+            s.result.acc,
+            s.result.latency_ms,
+            s.result.energy_mj,
+            s.result.area_mm2,
+            s.reward
+        )?;
+    }
+    Ok(())
+}
+
+/// Write generic (x, series...) rows as CSV.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut f = std::fs::File::create(path.as_ref())?;
+    writeln!(f, "{}", headers.join(","))?;
+    for r in rows {
+        writeln!(f, "{}", r.join(","))?;
+    }
+    Ok(())
+}
+
+/// Running mean/max tracker for reward curves.
+#[derive(Default, Clone, Debug)]
+pub struct RewardCurve {
+    pub steps: Vec<usize>,
+    pub mean: Vec<f64>,
+    pub max: Vec<f64>,
+    window: Vec<f64>,
+    best: f64,
+}
+
+impl RewardCurve {
+    pub fn new() -> Self {
+        RewardCurve { best: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    pub fn push(&mut self, step: usize, reward: f64, window: usize) {
+        self.window.push(reward);
+        if self.window.len() > window {
+            self.window.remove(0);
+        }
+        self.best = self.best.max(reward);
+        self.steps.push(step);
+        self.mean.push(self.window.iter().sum::<f64>() / self.window.len() as f64);
+        self.max.push(self.best);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::evaluator::EvalResult;
+
+    #[test]
+    fn history_csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("nahas_test_metrics");
+        let path = dir.join("h.csv");
+        let hist = vec![Sample {
+            index: 0,
+            nas_d: vec![0],
+            has_d: vec![0],
+            result: EvalResult {
+                acc: 0.75,
+                latency_ms: 0.4,
+                energy_mj: 0.9,
+                area_mm2: 80.0,
+                valid: true,
+            },
+            reward: 0.75,
+        }];
+        write_history_csv(&path, &hist).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("index,valid,acc"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reward_curve_tracks_max_and_mean() {
+        let mut c = RewardCurve::new();
+        for (i, r) in [0.1, 0.5, 0.3].iter().enumerate() {
+            c.push(i, *r, 2);
+        }
+        assert_eq!(c.max, vec![0.1, 0.5, 0.5]);
+        assert!((c.mean[2] - 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,292 @@
+//! Primitive layer IR with shape inference and MACs/params accounting.
+
+/// A primitive operator, as the accelerator executes it. Activation
+/// functions are fused into the producing op (free on the SIMD datapath)
+/// except [`Layer::Swish`]/[`Layer::SePool`], which the paper calls out as
+/// expensive on edge accelerators and which we model explicitly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Layer {
+    /// Regular (possibly grouped) convolution, 'same' padding.
+    Conv2d { kh: usize, kw: usize, cin: usize, cout: usize, stride: usize, groups: usize },
+    /// Depthwise convolution, 'same' padding.
+    DwConv { k: usize, c: usize, stride: usize },
+    /// Fully connected.
+    Dense { cin: usize, cout: usize },
+    /// Global average pool over the spatial dims.
+    GlobalPool { c: usize },
+    /// Squeeze-and-excite block (pool + 2 tiny FC + scale): cheap in
+    /// MACs, expensive in serialization on the PE array (paper §1).
+    SePool { c: usize, reduced: usize },
+    /// Standalone Swish/SiLU activation pass over the tensor (the paper:
+    /// "often not supported or inefficient in many specialized
+    /// accelerators").
+    Swish { c: usize },
+    /// Elementwise residual add.
+    Add { c: usize },
+}
+
+/// A layer plus its concrete input spatial size.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerInstance {
+    pub op: Layer,
+    pub in_h: usize,
+    pub in_w: usize,
+}
+
+impl LayerInstance {
+    /// Output (h, w, c).
+    pub fn out_shape(&self) -> (usize, usize, usize) {
+        let ceil_div = |a: usize, b: usize| a.div_ceil(b);
+        match self.op {
+            Layer::Conv2d { cout, stride, .. } => {
+                (ceil_div(self.in_h, stride), ceil_div(self.in_w, stride), cout)
+            }
+            Layer::DwConv { c, stride, .. } => {
+                (ceil_div(self.in_h, stride), ceil_div(self.in_w, stride), c)
+            }
+            Layer::Dense { cout, .. } => (1, 1, cout),
+            Layer::GlobalPool { c } => (1, 1, c),
+            Layer::SePool { c, .. } => (self.in_h, self.in_w, c),
+            Layer::Swish { c } | Layer::Add { c } => (self.in_h, self.in_w, c),
+        }
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        let (oh, ow, _) = self.out_shape();
+        let (oh, ow) = (oh as u64, ow as u64);
+        match self.op {
+            Layer::Conv2d { kh, kw, cin, cout, groups, .. } => {
+                oh * ow * (cout as u64) * (cin as u64 / groups as u64) * (kh * kw) as u64
+            }
+            Layer::DwConv { k, c, .. } => oh * ow * (c as u64) * (k * k) as u64,
+            Layer::Dense { cin, cout } => (cin * cout) as u64,
+            Layer::GlobalPool { c } => (self.in_h * self.in_w * c) as u64,
+            Layer::SePool { c, reduced } => {
+                (self.in_h * self.in_w * c + 2 * c * reduced + self.in_h * self.in_w * c)
+                    as u64
+            }
+            Layer::Swish { c } => (self.in_h * self.in_w * c * 4) as u64, // sigmoid approx
+            Layer::Add { c } => (self.in_h * self.in_w * c) as u64,
+        }
+    }
+
+    /// Trainable parameter count (weights + biases).
+    pub fn params(&self) -> u64 {
+        match self.op {
+            Layer::Conv2d { kh, kw, cin, cout, groups, .. } => {
+                (kh * kw * (cin / groups) * cout + cout) as u64
+            }
+            Layer::DwConv { k, c, .. } => (k * k * c + c) as u64,
+            Layer::Dense { cin, cout } => (cin * cout + cout) as u64,
+            Layer::SePool { c, reduced } => (2 * c * reduced + reduced + c) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Weight bytes at int8 (the accelerator runs 8-bit quantized).
+    pub fn weight_bytes(&self) -> u64 {
+        self.params()
+    }
+
+    /// Input activation bytes at int8.
+    pub fn input_bytes(&self) -> u64 {
+        let cin = match self.op {
+            Layer::Conv2d { cin, .. } => cin,
+            Layer::DwConv { c, .. } => c,
+            Layer::Dense { cin, .. } => cin,
+            Layer::GlobalPool { c }
+            | Layer::SePool { c, .. }
+            | Layer::Swish { c }
+            | Layer::Add { c } => c,
+        };
+        let mult = if matches!(self.op, Layer::Add { .. }) { 2 } else { 1 };
+        (self.in_h * self.in_w * cin * mult) as u64
+    }
+
+    /// Output activation bytes at int8.
+    pub fn output_bytes(&self) -> u64 {
+        let (oh, ow, oc) = self.out_shape();
+        (oh * ow * oc) as u64
+    }
+}
+
+/// A whole network: input shape plus layers in execution order.
+#[derive(Clone, Debug, Default)]
+pub struct NetworkIr {
+    pub name: String,
+    pub input_h: usize,
+    pub input_w: usize,
+    pub input_c: usize,
+    pub layers: Vec<LayerInstance>,
+}
+
+impl NetworkIr {
+    pub fn new(name: &str, h: usize, w: usize, c: usize) -> Self {
+        NetworkIr { name: name.to_string(), input_h: h, input_w: w, input_c: c, layers: vec![] }
+    }
+
+    /// Append a layer; its input spatial size is the current output.
+    pub fn push(&mut self, op: Layer) {
+        let (h, w) = self.cur_hw();
+        self.layers.push(LayerInstance { op, in_h: h, in_w: w });
+    }
+
+    /// Current output spatial size.
+    pub fn cur_hw(&self) -> (usize, usize) {
+        match self.layers.last() {
+            None => (self.input_h, self.input_w),
+            Some(l) => {
+                let (h, w, _) = l.out_shape();
+                (h, w)
+            }
+        }
+    }
+
+    /// Current output channel count.
+    pub fn cur_c(&self) -> usize {
+        match self.layers.last() {
+            None => self.input_c,
+            Some(l) => l.out_shape().2,
+        }
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Convenience: IBN block = expand 1x1 + depthwise kxk + project 1x1
+    /// (+ residual add when stride 1 and cin == cout).
+    pub fn push_ibn(&mut self, k: usize, expansion: usize, cout: usize, stride: usize) {
+        let cin = self.cur_c();
+        let cexp = (cin * expansion).max(1);
+        if expansion != 1 {
+            self.push(Layer::Conv2d { kh: 1, kw: 1, cin, cout: cexp, stride: 1, groups: 1 });
+        }
+        self.push(Layer::DwConv { k, c: cexp, stride });
+        self.push(Layer::Conv2d { kh: 1, kw: 1, cin: cexp, cout, stride: 1, groups: 1 });
+        if stride == 1 && cin == cout {
+            self.push(Layer::Add { c: cout });
+        }
+    }
+
+    /// Fused-IBN block = full kxk conv (to the expanded width, possibly
+    /// grouped) + project 1x1 (+ residual). Paper §3.2.2 / MobileDets.
+    pub fn push_fused_ibn(
+        &mut self,
+        k: usize,
+        expansion: usize,
+        cout: usize,
+        stride: usize,
+        groups: usize,
+    ) {
+        let cin = self.cur_c();
+        let cexp = (cin * expansion).max(1);
+        // Group count must divide both widths; fall back to 1 otherwise.
+        let g = if cin % groups == 0 && cexp % groups == 0 { groups } else { 1 };
+        self.push(Layer::Conv2d { kh: k, kw: k, cin, cout: cexp, stride, groups: g });
+        self.push(Layer::Conv2d { kh: 1, kw: 1, cin: cexp, cout, stride: 1, groups: 1 });
+        if stride == 1 && cin == cout {
+            self.push(Layer::Add { c: cout });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(k: usize, cin: usize, cout: usize, stride: usize) -> Layer {
+        Layer::Conv2d { kh: k, kw: k, cin, cout, stride, groups: 1 }
+    }
+
+    #[test]
+    fn conv_shape_and_macs() {
+        let l = LayerInstance { op: conv(3, 3, 16, 2), in_h: 224, in_w: 224 };
+        assert_eq!(l.out_shape(), (112, 112, 16));
+        assert_eq!(l.macs(), 112 * 112 * 16 * 3 * 9);
+        assert_eq!(l.params(), 3 * 3 * 3 * 16 + 16);
+    }
+
+    #[test]
+    fn dwconv_macs_much_cheaper_than_full() {
+        let dw = LayerInstance { op: Layer::DwConv { k: 3, c: 96, stride: 1 }, in_h: 56, in_w: 56 };
+        let full = LayerInstance { op: conv(3, 96, 96, 1), in_h: 56, in_w: 56 };
+        // The paper: regular conv has ~7x the FLOPs of depthwise+1x1 for
+        // some shapes; here full/dw = cin = 96.
+        assert_eq!(full.macs() / dw.macs(), 96);
+    }
+
+    #[test]
+    fn grouped_conv_divides_macs_and_params() {
+        let g1 = LayerInstance { op: conv(3, 32, 64, 1), in_h: 8, in_w: 8 };
+        let g4 = LayerInstance {
+            op: Layer::Conv2d { kh: 3, kw: 3, cin: 32, cout: 64, stride: 1, groups: 4 },
+            in_h: 8,
+            in_w: 8,
+        };
+        assert_eq!(g1.macs() / g4.macs(), 4);
+        assert!(g4.params() < g1.params());
+    }
+
+    #[test]
+    fn ibn_block_structure() {
+        let mut net = NetworkIr::new("t", 32, 32, 16);
+        net.push_ibn(5, 6, 16, 1);
+        // expand + dw + project + residual
+        assert_eq!(net.layers.len(), 4);
+        assert!(matches!(net.layers[3].op, Layer::Add { c: 16 }));
+        assert_eq!(net.cur_c(), 16);
+        assert_eq!(net.cur_hw(), (32, 32));
+    }
+
+    #[test]
+    fn fused_ibn_skips_dwconv() {
+        let mut net = NetworkIr::new("t", 32, 32, 16);
+        net.push_fused_ibn(3, 6, 24, 2, 1);
+        assert_eq!(net.layers.len(), 2);
+        assert_eq!(net.cur_hw(), (16, 16));
+        assert_eq!(net.cur_c(), 24);
+    }
+
+    #[test]
+    fn fused_ibn_invalid_groups_fall_back() {
+        let mut net = NetworkIr::new("t", 8, 8, 10); // 10 % 4 != 0
+        net.push_fused_ibn(3, 6, 16, 1, 4);
+        match net.layers[0].op {
+            Layer::Conv2d { groups, .. } => assert_eq!(groups, 1),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn stride_on_odd_input_rounds_up() {
+        let l = LayerInstance { op: conv(3, 8, 8, 2), in_h: 7, in_w: 7 };
+        assert_eq!(l.out_shape(), (4, 4, 8));
+    }
+
+    #[test]
+    fn network_totals_accumulate() {
+        let mut net = NetworkIr::new("t", 16, 16, 3);
+        net.push(conv(3, 3, 8, 1));
+        net.push_ibn(3, 3, 8, 1);
+        assert_eq!(
+            net.total_macs(),
+            net.layers.iter().map(|l| l.macs()).sum::<u64>()
+        );
+        assert!(net.total_params() > 0);
+    }
+
+    #[test]
+    fn se_and_swish_shapes_passthrough() {
+        let se = LayerInstance { op: Layer::SePool { c: 64, reduced: 16 }, in_h: 14, in_w: 14 };
+        assert_eq!(se.out_shape(), (14, 14, 64));
+        let sw = LayerInstance { op: Layer::Swish { c: 64 }, in_h: 14, in_w: 14 };
+        assert_eq!(sw.out_shape(), (14, 14, 64));
+        assert!(se.params() > 0 && sw.params() == 0);
+    }
+}

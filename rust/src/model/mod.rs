@@ -1,0 +1,12 @@
+//! Neural-network layer IR: the common language between the NAS search
+//! spaces (`nas`), the accelerator simulator (`accel`) and the cost-model
+//! featurizer (`costmodel`).
+//!
+//! A [`NetworkIr`] is an ordered list of primitive layers with concrete
+//! input spatial dimensions, produced by decoding a NAS sample. The
+//! simulator costs each primitive independently (the paper's accelerator
+//! executes networks layer-by-layer with on-chip double buffering).
+
+pub mod ir;
+
+pub use ir::{Layer, LayerInstance, NetworkIr};

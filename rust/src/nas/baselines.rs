@@ -1,0 +1,356 @@
+//! Fixed reference models of Table 3 / Fig. 1 / Fig. 8.
+//!
+//! Each baseline is expressed in the same layer IR and costed by the same
+//! simulator as the searched models, exactly as the paper runs every
+//! comparator through its performance simulator. Architectures follow the
+//! published tables of their papers (MobileNetV2, EfficientNet compound
+//! scaling, MnasNet-B1, ProxylessNAS-Mobile, MobileNetV3-Large); the
+//! "wo SE/Swish" variants strip squeeze-excite and swish exactly as the
+//! paper's Table 3 does. Manual-EdgeTPU-S/M are the paper's hand-crafted
+//! models on the evolved space: fused-IBN in the early stages, IBN later.
+
+use crate::model::{Layer, NetworkIr};
+
+fn round8(x: f64) -> usize {
+    (((x / 8.0).round() as usize) * 8).max(8)
+}
+
+/// MobileNetV2 at a width multiplier (1.0 or the paper's 1.4).
+pub fn mobilenet_v2(width: f64) -> NetworkIr {
+    let w = |c: usize| round8(c as f64 * width);
+    let mut net = NetworkIr::new("mobilenetv2", 224, 224, 3);
+    net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: w(32), stride: 2, groups: 1 });
+    let spec: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for (t, c, n, s) in spec {
+        for i in 0..n {
+            net.push_ibn(3, t, w(c), if i == 0 { s } else { 1 });
+        }
+    }
+    let c = net.cur_c();
+    net.push(Layer::Conv2d { kh: 1, kw: 1, cin: c, cout: w(1280), stride: 1, groups: 1 });
+    net.push(Layer::GlobalPool { c: w(1280) });
+    net.push(Layer::Dense { cin: w(1280), cout: 1000 });
+    net
+}
+
+/// EfficientNet-B{n} via compound scaling; `with_se_swish` adds the SE +
+/// Swish ops the paper strips for its "wo SE/Swish" rows.
+pub fn efficientnet(n: usize, with_se_swish: bool) -> NetworkIr {
+    // (width, depth, resolution) for B0..B3.
+    let (wm, dm, res) = match n {
+        0 => (1.0, 1.0, 224),
+        1 => (1.0, 1.1, 240),
+        2 => (1.1, 1.2, 260),
+        3 => (1.2, 1.4, 300),
+        _ => panic!("efficientnet B{n} not modelled"),
+    };
+    let w = |c: usize| round8(c as f64 * wm);
+    let d = |reps: usize| ((reps as f64 * dm).ceil() as usize).max(1);
+    let mut net = NetworkIr::new("efficientnet", res, res, 3);
+    net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: w(32), stride: 2, groups: 1 });
+    let spec: [(usize, usize, usize, usize, usize); 7] = [
+        // (expand, cout, reps, stride, kernel)
+        (1, 16, 1, 1, 3),
+        (6, 24, 2, 2, 3),
+        (6, 40, 2, 2, 5),
+        (6, 80, 3, 2, 3),
+        (6, 112, 3, 1, 5),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    for (t, c, reps, s, k) in spec {
+        for i in 0..d(reps) {
+            let cin = net.cur_c();
+            net.push_ibn(k, t, w(c), if i == 0 { s } else { 1 });
+            if with_se_swish {
+                let cexp = cin * t;
+                net.push(Layer::SePool { c: w(c), reduced: (cexp / 24).max(8) });
+                net.push(Layer::Swish { c: w(c) });
+            }
+        }
+    }
+    let c = net.cur_c();
+    net.push(Layer::Conv2d { kh: 1, kw: 1, cin: c, cout: w(1280), stride: 1, groups: 1 });
+    net.push(Layer::GlobalPool { c: w(1280) });
+    net.push(Layer::Dense { cin: w(1280), cout: 1000 });
+    net
+}
+
+/// MnasNet-B1 (Tan et al. 2019, Table 1 of that paper).
+pub fn mnasnet_b1() -> NetworkIr {
+    let mut net = NetworkIr::new("mnasnet-b1", 224, 224, 3);
+    net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: 32, stride: 2, groups: 1 });
+    // SepConv: dw3x3 + 1x1 (expansion 1).
+    net.push_ibn(3, 1, 16, 1);
+    let spec: [(usize, usize, usize, usize, usize); 6] = [
+        (3, 24, 3, 2, 3),
+        (3, 40, 3, 2, 5),
+        (6, 80, 3, 2, 5),
+        (6, 96, 2, 1, 3),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    for (t, c, n, s, k) in spec {
+        for i in 0..n {
+            net.push_ibn(k, t, c, if i == 0 { s } else { 1 });
+        }
+    }
+    let c = net.cur_c();
+    net.push(Layer::Conv2d { kh: 1, kw: 1, cin: c, cout: 1280, stride: 1, groups: 1 });
+    net.push(Layer::GlobalPool { c: 1280 });
+    net.push(Layer::Dense { cin: 1280, cout: 1000 });
+    net
+}
+
+/// MnasNet-D1-like: a deeper/wider latency-relaxed variant (the paper's
+/// medium-regime MnasNet row).
+pub fn mnasnet_d1() -> NetworkIr {
+    let mut net = NetworkIr::new("mnasnet-d1", 224, 224, 3);
+    net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: 32, stride: 2, groups: 1 });
+    net.push_ibn(3, 1, 16, 1);
+    let spec: [(usize, usize, usize, usize, usize); 6] = [
+        (3, 24, 3, 2, 3),
+        (3, 48, 3, 2, 5),
+        (6, 88, 4, 2, 5),
+        (6, 112, 3, 1, 3),
+        (6, 224, 4, 2, 5),
+        (6, 352, 1, 1, 3),
+    ];
+    for (t, c, n, s, k) in spec {
+        for i in 0..n {
+            net.push_ibn(k, t, c, if i == 0 { s } else { 1 });
+        }
+    }
+    let c = net.cur_c();
+    net.push(Layer::Conv2d { kh: 1, kw: 1, cin: c, cout: 1536, stride: 1, groups: 1 });
+    net.push(Layer::GlobalPool { c: 1536 });
+    net.push(Layer::Dense { cin: 1536, cout: 1000 });
+    net
+}
+
+/// ProxylessNAS-Mobile (Cai et al. 2019): mixed kernel/expansion IBNs.
+pub fn proxyless_mobile() -> NetworkIr {
+    let mut net = NetworkIr::new("proxylessnas", 224, 224, 3);
+    net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: 32, stride: 2, groups: 1 });
+    net.push_ibn(3, 1, 16, 1);
+    let blocks: [(usize, usize, usize, usize); 20] = [
+        (5, 3, 24, 2),
+        (3, 3, 24, 1),
+        (7, 3, 40, 2),
+        (3, 3, 40, 1),
+        (5, 6, 40, 1),
+        (7, 6, 80, 2),
+        (5, 3, 80, 1),
+        (5, 3, 80, 1),
+        (5, 3, 80, 1),
+        (5, 6, 96, 1),
+        (5, 3, 96, 1),
+        (5, 3, 96, 1),
+        (5, 3, 96, 1),
+        (7, 6, 192, 2),
+        (7, 6, 192, 1),
+        (7, 3, 192, 1),
+        (7, 3, 192, 1),
+        (7, 6, 320, 1),
+        (5, 6, 320, 1),
+        (3, 6, 320, 1),
+    ];
+    for (k, t, c, s) in blocks {
+        net.push_ibn(k, t, c, s);
+    }
+    let c = net.cur_c();
+    net.push(Layer::Conv2d { kh: 1, kw: 1, cin: c, cout: 1280, stride: 1, groups: 1 });
+    net.push(Layer::GlobalPool { c: 1280 });
+    net.push(Layer::Dense { cin: 1280, cout: 1000 });
+    net
+}
+
+/// MobileNetV3-Large *with* SE + Swish (the Table 3 row showing how
+/// badly SE/Swish map onto the edge array).
+pub fn mobilenet_v3_se() -> NetworkIr {
+    let mut net = NetworkIr::new("mobilenetv3-se", 224, 224, 3);
+    net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: 16, stride: 2, groups: 1 });
+    // (k, exp_ch/cin ratio approximated to nearest int, c, s, use_se)
+    let blocks: [(usize, usize, usize, usize, bool); 15] = [
+        (3, 1, 16, 1, false),
+        (3, 4, 24, 2, false),
+        (3, 3, 24, 1, false),
+        (5, 3, 40, 2, true),
+        (5, 3, 40, 1, true),
+        (5, 3, 40, 1, true),
+        (3, 6, 80, 2, false),
+        (3, 3, 80, 1, false),
+        (3, 3, 80, 1, false),
+        (3, 3, 80, 1, false),
+        (3, 6, 112, 1, true),
+        (3, 6, 112, 1, true),
+        (5, 6, 160, 2, true),
+        (5, 6, 160, 1, true),
+        (5, 6, 160, 1, true),
+    ];
+    for (k, t, c, s, se) in blocks {
+        let cin = net.cur_c();
+        net.push_ibn(k, t, c, s);
+        if se {
+            net.push(Layer::SePool { c, reduced: (cin * t / 4).max(8) });
+        }
+        net.push(Layer::Swish { c });
+    }
+    let c = net.cur_c();
+    net.push(Layer::Conv2d { kh: 1, kw: 1, cin: c, cout: 1280, stride: 1, groups: 1 });
+    net.push(Layer::Swish { c: 1280 });
+    net.push(Layer::GlobalPool { c: 1280 });
+    net.push(Layer::Dense { cin: 1280, cout: 1000 });
+    net
+}
+
+/// Manual-EdgeTPU (paper §3.2.2 / Fig. 1): hand-crafted on the evolved
+/// space — a fixed run of fused-IBN in the early, small-channel stages,
+/// conventional IBN afterwards. `medium` widens + deepens.
+pub fn manual_edgetpu(medium: bool) -> NetworkIr {
+    let name = if medium { "manual-edgetpu-m" } else { "manual-edgetpu-s" };
+    let mut net = NetworkIr::new(name, 224, 224, 3);
+    let wmul = if medium { 1.25 } else { 1.0 };
+    let w = |c: usize| round8(c as f64 * wmul);
+    net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: w(32), stride: 2, groups: 1 });
+    // Early stages: fused-IBN (full convs are cheap while channels are
+    // small and utilization is the bottleneck).
+    let fused: [(usize, usize, usize, usize); 5] = [
+        (3, 4, 16, 1),
+        (3, 8, 32, 2),
+        (3, 4, 32, 1),
+        (5, 8, 48, 2),
+        (3, 4, 48, 1),
+    ];
+    for (k, t, c, s) in fused {
+        net.push_fused_ibn(k, t, w(c), s, 1);
+    }
+    // Late stages: IBN (full convs over wide channels would explode).
+    let ibn: [(usize, usize, usize, usize); 8] = [
+        (3, 6, 96, 2),
+        (3, 6, 96, 1),
+        (3, 6, 96, 1),
+        (5, 6, 160, 1),
+        (5, 6, 160, 1),
+        (3, 6, 192, 2),
+        (3, 6, 192, 1),
+        (3, 6, 320, 1),
+    ];
+    let extra = if medium { 3 } else { 0 };
+    for (i, (k, t, c, s)) in ibn.iter().enumerate() {
+        net.push_ibn(*k, *t, w(*c), *s);
+        if medium && i == 4 {
+            for _ in 0..extra {
+                net.push_ibn(3, 6, w(*c), 1);
+            }
+        }
+    }
+    let c = net.cur_c();
+    net.push(Layer::Conv2d { kh: 1, kw: 1, cin: c, cout: w(1280), stride: 1, groups: 1 });
+    net.push(Layer::GlobalPool { c: w(1280) });
+    net.push(Layer::Dense { cin: w(1280), cout: 1000 });
+    net
+}
+
+/// All Table-3 / Fig-1 / Fig-8 baselines with their display names.
+pub fn all_baselines() -> Vec<(&'static str, NetworkIr)> {
+    vec![
+        ("MobileNetV2", mobilenet_v2(1.0)),
+        ("MobileNetV2-1.4", mobilenet_v2(1.4)),
+        ("EfficientNet-B0 wo SE/Swish", efficientnet(0, false)),
+        ("EfficientNet-B1 wo SE/Swish", efficientnet(1, false)),
+        ("EfficientNet-B3 wo SE/Swish", efficientnet(3, false)),
+        ("MnasNet-B1", mnasnet_b1()),
+        ("MnasNet-D1", mnasnet_d1()),
+        ("ProxylessNAS", proxyless_mobile()),
+        ("MobilenetV3 w SE", mobilenet_v3_se()),
+        ("Manual-EdgeTPU-S", manual_edgetpu(false)),
+        ("Manual-EdgeTPU-M", manual_edgetpu(true)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_v2_macs_match_published() {
+        // Published: ~300M MACs, ~3.4M params at width 1.0.
+        let net = mobilenet_v2(1.0);
+        let m = net.total_macs() as f64;
+        let p = net.total_params() as f64;
+        assert!((250e6..360e6).contains(&m), "macs {m}");
+        assert!((3.0e6..4.5e6).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn efficientnet_b0_macs_match_published() {
+        // Published: ~390M MACs (with SE; ours counts SE separately).
+        let net = efficientnet(0, false);
+        let m = net.total_macs() as f64;
+        assert!((300e6..480e6).contains(&m), "macs {m}");
+    }
+
+    #[test]
+    fn compound_scaling_monotone() {
+        let m0 = efficientnet(0, false).total_macs();
+        let m1 = efficientnet(1, false).total_macs();
+        let m3 = efficientnet(3, false).total_macs();
+        assert!(m0 < m1 && m1 < m3);
+        // B3 is ~4-5x B0 in the published table.
+        let ratio = m3 as f64 / m0 as f64;
+        assert!((2.5..7.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn se_swish_variant_adds_ops_not_many_macs() {
+        let plain = efficientnet(0, false);
+        let se = efficientnet(0, true);
+        assert!(se.layers.len() > plain.layers.len());
+        let extra = se.total_macs() as f64 / plain.total_macs() as f64;
+        assert!(extra < 1.15, "SE/Swish should be cheap in MACs ({extra})");
+    }
+
+    #[test]
+    fn manual_edgetpu_uses_fused_early_ibn_late() {
+        let net = manual_edgetpu(false);
+        let first_dw = net
+            .layers
+            .iter()
+            .position(|l| matches!(l.op, Layer::DwConv { .. }))
+            .unwrap();
+        // No depthwise before layer `first_dw`; at least one 3x3+ full
+        // conv with cout>cin (a fused expansion) before it.
+        let has_fused_early = net.layers[..first_dw].iter().any(|l| match l.op {
+            Layer::Conv2d { kh, cin, cout, .. } => kh >= 3 && cout > cin && cin > 3,
+            _ => false,
+        });
+        assert!(has_fused_early);
+        assert!(net.total_macs() > mobilenet_v2(1.0).total_macs());
+    }
+
+    #[test]
+    fn medium_bigger_than_small() {
+        assert!(
+            manual_edgetpu(true).total_macs() > manual_edgetpu(false).total_macs()
+        );
+    }
+
+    #[test]
+    fn all_baselines_simulate_on_baseline_hw() {
+        use crate::accel::{simulate_network, AcceleratorConfig};
+        for (name, net) in all_baselines() {
+            let r = simulate_network(&AcceleratorConfig::baseline(), &net)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(r.latency_ms > 0.01 && r.latency_ms < 20.0, "{name}: {r:?}");
+        }
+    }
+}

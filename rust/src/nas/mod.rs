@@ -1,0 +1,19 @@
+//! NAS search spaces (paper §3.2).
+//!
+//! * [`spaces`] — S1 (MobileNetV2-based, §3.2.1), S2 (EfficientNet-B0
+//!   based, §3.2.1), S3 (the *evolved* space with switchable Fused-IBN
+//!   layers, filter multipliers and groups, §3.2.2), and the small
+//!   `Proxy` space that maps 1:1 onto the trainable AOT supernet.
+//! * [`baselines`] — the fixed reference models of Table 3 / Fig. 8
+//!   (MobileNetV2, EfficientNet-B0/B1/B3 w/o SE+Swish, MnasNet-like,
+//!   ProxylessNAS-like, MobileNetV3-like, Manual-EdgeTPU-S/M).
+//!
+//! Every space exposes a flat vector of categorical decisions — the
+//! common currency of the controllers in `search::` — and decodes a
+//! decision vector into a [`crate::model::NetworkIr`] the simulator
+//! costs.
+
+pub mod baselines;
+pub mod spaces;
+
+pub use spaces::{DecisionSpec, NasSpace, NasSpaceId, ProxyMasks};

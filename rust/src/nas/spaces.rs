@@ -1,0 +1,450 @@
+//! Search-space definitions and decision-vector decoding.
+
+use crate::model::{Layer, NetworkIr};
+use crate::util::Rng;
+
+/// One categorical decision exposed to the controllers.
+#[derive(Clone, Debug)]
+pub struct DecisionSpec {
+    pub name: String,
+    pub cardinality: usize,
+}
+
+/// Which NAS space (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NasSpaceId {
+    /// S1: MobileNetV2 backbone, 17 IBN blocks, search k + expansion.
+    MobileNetV2,
+    /// S2: EfficientNet-B0 backbone, 16 IBN blocks, search k + expansion.
+    EfficientNet,
+    /// S3: evolved space (§3.2.2): switchable IBN/Fused-IBN + k +
+    /// expansion + filter multiplier + groups.
+    Evolved,
+    /// The 5-block trainable proxy space that maps 1:1 onto the AOT
+    /// supernet artifact (DESIGN.md §Substitutions).
+    Proxy,
+}
+
+pub const KERNEL_SIZES: [usize; 3] = [3, 5, 7];
+pub const EXPANSIONS: [usize; 2] = [3, 6];
+pub const FILTER_MULTS: [f64; 4] = [0.5, 0.75, 1.0, 1.25];
+pub const PROXY_FILTER_MULTS: [f64; 3] = [0.5, 0.75, 1.0];
+pub const GROUPS: [usize; 2] = [1, 2];
+/// Global compound-scaling coefficients of the evolved space (paper
+/// Fig. 4: "NAHAS respects EfficientNet's compound scaling ratios"):
+/// (width mult, depth mult, input resolution) for B0..B3-class scaling.
+pub const COMPOUND_SCALES: [(f64, f64, usize); 4] =
+    [(1.0, 1.0, 224), (1.0, 1.1, 240), (1.1, 1.2, 260), (1.2, 1.4, 300)];
+
+/// A backbone block slot: allocated output width and stride.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockDef {
+    pub cout: usize,
+    pub stride: usize,
+}
+
+/// Proxy supernet constants — MUST mirror python/compile/config.py (the
+/// manifest carries them too; `runtime::Manifest::check_proxy_consts`
+/// asserts agreement at startup).
+pub const PROXY_BLOCKS: usize = 5;
+pub const PROXY_WIDTHS: [usize; 5] = [8, 16, 16, 32, 32];
+pub const PROXY_STRIDES: [usize; 5] = [1, 2, 1, 2, 1];
+pub const PROXY_STEM: usize = 8;
+pub const PROXY_IMG: usize = 8;
+pub const PROXY_CMAX: usize = 32;
+pub const PROXY_CEXP_MAX: usize = 192;
+pub const PROXY_MAX_EXPANSION: usize = 6;
+
+fn mobilenet_v2_blocks() -> Vec<BlockDef> {
+    // (t, c, n, s) table of MobileNetV2, expanded to 17 block slots.
+    let spec: [(usize, usize, usize); 7] = [
+        (16, 1, 1),
+        (24, 2, 2),
+        (32, 3, 2),
+        (64, 4, 2),
+        (96, 3, 1),
+        (160, 3, 2),
+        (320, 1, 1),
+    ];
+    expand_blocks(&spec)
+}
+
+fn efficientnet_b0_blocks() -> Vec<BlockDef> {
+    // EfficientNet-B0 MBConv stages expanded to 16 block slots.
+    let spec: [(usize, usize, usize); 7] = [
+        (16, 1, 1),
+        (24, 2, 2),
+        (40, 2, 2),
+        (80, 3, 2),
+        (112, 3, 1),
+        (192, 4, 2),
+        (320, 1, 1),
+    ];
+    expand_blocks(&spec)
+}
+
+fn expand_blocks(spec: &[(usize, usize, usize)]) -> Vec<BlockDef> {
+    let mut out = Vec::new();
+    for &(c, n, s) in spec {
+        for i in 0..n {
+            out.push(BlockDef { cout: c, stride: if i == 0 { s } else { 1 } });
+        }
+    }
+    out
+}
+
+fn proxy_blocks() -> Vec<BlockDef> {
+    PROXY_WIDTHS
+        .iter()
+        .zip(PROXY_STRIDES.iter())
+        .map(|(&c, &s)| BlockDef { cout: c, stride: s })
+        .collect()
+}
+
+/// A NAS search space: block skeleton + decision layout.
+#[derive(Clone, Debug)]
+pub struct NasSpace {
+    pub id: NasSpaceId,
+    pub blocks: Vec<BlockDef>,
+    specs: Vec<DecisionSpec>,
+    /// Decisions per block (k, exp, [op, filt, groups]).
+    per_block: usize,
+}
+
+impl NasSpace {
+    pub fn new(id: NasSpaceId) -> Self {
+        let blocks = match id {
+            NasSpaceId::MobileNetV2 => mobilenet_v2_blocks(),
+            NasSpaceId::EfficientNet => efficientnet_b0_blocks(),
+            NasSpaceId::Evolved => efficientnet_b0_blocks(),
+            NasSpaceId::Proxy => proxy_blocks(),
+        };
+        let per_block = match id {
+            NasSpaceId::MobileNetV2 | NasSpaceId::EfficientNet => 2,
+            NasSpaceId::Evolved => 5,
+            NasSpaceId::Proxy => 4,
+        };
+        let mut specs = Vec::new();
+        if id == NasSpaceId::Evolved {
+            // Global compound-scaling decision (paper Fig. 4).
+            specs.push(DecisionSpec {
+                name: "global/compound_scale".into(),
+                cardinality: COMPOUND_SCALES.len(),
+            });
+        }
+        for (b, _) in blocks.iter().enumerate() {
+            specs.push(DecisionSpec { name: format!("b{b}/kernel"), cardinality: 3 });
+            specs.push(DecisionSpec { name: format!("b{b}/expansion"), cardinality: 2 });
+            match id {
+                NasSpaceId::Evolved => {
+                    specs.push(DecisionSpec { name: format!("b{b}/op"), cardinality: 2 });
+                    specs.push(DecisionSpec { name: format!("b{b}/filter"), cardinality: 4 });
+                    specs.push(DecisionSpec { name: format!("b{b}/groups"), cardinality: 2 });
+                }
+                NasSpaceId::Proxy => {
+                    specs.push(DecisionSpec { name: format!("b{b}/op"), cardinality: 2 });
+                    specs.push(DecisionSpec { name: format!("b{b}/filter"), cardinality: 3 });
+                }
+                _ => {}
+            }
+        }
+        NasSpace { id, blocks, specs, per_block }
+    }
+
+    pub fn specs(&self) -> &[DecisionSpec] {
+        &self.specs
+    }
+
+    pub fn num_decisions(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// log10 of the space cardinality (paper: S1 ~ 8.4e12, S2 ~ 1.4e12
+    /// after fixing the first block's expansion — we keep every block
+    /// searchable, which is a slightly larger space).
+    pub fn log10_cardinality(&self) -> f64 {
+        self.specs.iter().map(|s| (s.cardinality as f64).log10()).sum()
+    }
+
+    pub fn random(&self, rng: &mut Rng) -> Vec<usize> {
+        self.specs.iter().map(|s| rng.below(s.cardinality)).collect()
+    }
+
+    /// Decisions before the per-block slices (the evolved space's global
+    /// compound-scale knob).
+    fn global_decisions(&self) -> usize {
+        if self.id == NasSpaceId::Evolved {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Per-block decision slice: (k_idx, exp_idx, op_idx, filt_idx, g_idx).
+    fn block_decisions(&self, d: &[usize], b: usize) -> (usize, usize, usize, usize, usize) {
+        let base = self.global_decisions() + b * self.per_block;
+        let k = d[base];
+        let e = d[base + 1];
+        match self.id {
+            NasSpaceId::Evolved => (k, e, d[base + 2], d[base + 3], d[base + 4]),
+            NasSpaceId::Proxy => (k, e, d[base + 2], d[base + 3], 0),
+            _ => (k, e, 0, 2, 0), // IBN, filter x1.0
+        }
+    }
+
+    /// Decode a decision vector into the simulator IR.
+    pub fn decode(&self, d: &[usize]) -> NetworkIr {
+        assert_eq!(d.len(), self.specs.len(), "decision vector length");
+        match self.id {
+            NasSpaceId::Proxy => self.decode_proxy_ir(d),
+            _ => self.decode_imagenet_ir(d),
+        }
+    }
+
+    fn decode_imagenet_ir(&self, d: &[usize]) -> NetworkIr {
+        // Evolved space: global compound scaling (width/depth/resolution).
+        let (wm, dm, res) = if self.global_decisions() == 1 {
+            COMPOUND_SCALES[d[0]]
+        } else {
+            (1.0, 1.0, 224)
+        };
+        let (stem, head_ch, classes) = (scale_ch(32, wm), 1280, 1000);
+        let mut net = NetworkIr::new(self.space_name(), res, res, 3);
+        net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: stem, stride: 2, groups: 1 });
+        // Depth multiplier: round(S * (dm - 1)) extra stride-1 repeats,
+        // assigned to the deepest stride-1 slots (compound-scaling
+        // convention; deepest blocks are spatially cheapest).
+        let s1_slots: Vec<usize> = (1..self.blocks.len())
+            .filter(|&b| self.blocks[b].stride == 1)
+            .collect();
+        let extra = ((s1_slots.len() as f64) * (dm - 1.0)).round() as usize;
+        let deep_extra: &[usize] = &s1_slots[s1_slots.len().saturating_sub(extra)..];
+        for (b, def) in self.blocks.iter().enumerate() {
+            let (ki, ei, op, fi, gi) = self.block_decisions(d, b);
+            let k = KERNEL_SIZES[ki];
+            // First block runs expansion 1 (both backbones).
+            let e = if b == 0 { 1 } else { EXPANSIONS[ei] };
+            let cout = scale_ch(def.cout, FILTER_MULTS[fi] * wm);
+            let reps = if deep_extra.contains(&b) { 2 } else { 1 };
+            for r in 0..reps {
+                let stride = if r == 0 { def.stride } else { 1 };
+                if op == 1 {
+                    net.push_fused_ibn(k, e, cout, stride, GROUPS[gi]);
+                } else {
+                    net.push_ibn(k, e, cout, stride);
+                }
+            }
+        }
+        let c = net.cur_c();
+        net.push(Layer::Conv2d { kh: 1, kw: 1, cin: c, cout: head_ch, stride: 1, groups: 1 });
+        net.push(Layer::GlobalPool { c: head_ch });
+        net.push(Layer::Dense { cin: head_ch, cout: classes });
+        net
+    }
+
+    fn decode_proxy_ir(&self, d: &[usize]) -> NetworkIr {
+        let mut net = NetworkIr::new("proxy", PROXY_IMG, PROXY_IMG, 3);
+        net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: PROXY_STEM, stride: 1, groups: 1 });
+        for (b, def) in self.blocks.iter().enumerate() {
+            let (ki, ei, op, fi, _) = self.block_decisions(d, b);
+            let k = KERNEL_SIZES[ki];
+            let e = EXPANSIONS[ei];
+            let cout = scale_ch(def.cout, PROXY_FILTER_MULTS[fi]);
+            if op == 1 {
+                net.push_fused_ibn(k, e, cout, def.stride, 1);
+            } else {
+                net.push_ibn(k, e, cout, def.stride);
+            }
+        }
+        let c = net.cur_c();
+        net.push(Layer::GlobalPool { c });
+        net.push(Layer::Dense { cin: c, cout: 16 });
+        net
+    }
+
+    fn space_name(&self) -> &'static str {
+        match self.id {
+            NasSpaceId::MobileNetV2 => "s1-mobilenetv2",
+            NasSpaceId::EfficientNet => "s2-efficientnet",
+            NasSpaceId::Evolved => "s3-evolved",
+            NasSpaceId::Proxy => "proxy",
+        }
+    }
+
+    /// Decode a Proxy-space decision vector into the dense masks the AOT
+    /// supernet artifact takes as inputs (layouts must match model.py).
+    pub fn decode_masks(&self, d: &[usize]) -> ProxyMasks {
+        assert_eq!(self.id, NasSpaceId::Proxy, "masks exist only for the proxy space");
+        let nb = PROXY_BLOCKS;
+        let mut m = ProxyMasks {
+            opsel: vec![0.0; nb * 2],
+            ksel: vec![0.0; nb * 3],
+            expmask: vec![0.0; nb * PROXY_CEXP_MAX],
+            outmask: vec![0.0; nb * PROXY_CMAX],
+        };
+        let cins: Vec<usize> =
+            std::iter::once(PROXY_STEM).chain(PROXY_WIDTHS[..nb - 1].iter().copied()).collect();
+        for b in 0..nb {
+            let (ki, ei, op, fi, _) = self.block_decisions(d, b);
+            m.opsel[b * 2 + op] = 1.0;
+            m.ksel[b * 3 + ki] = 1.0;
+            let cexp = cins[b] * EXPANSIONS[ei];
+            for j in 0..cexp {
+                m.expmask[b * PROXY_CEXP_MAX + j] = 1.0;
+            }
+            let cout = scale_ch(PROXY_WIDTHS[b], PROXY_FILTER_MULTS[fi]);
+            for j in 0..cout {
+                m.outmask[b * PROXY_CMAX + j] = 1.0;
+            }
+        }
+        m
+    }
+}
+
+/// Round a scaled channel count to a multiple of 4 (hardware-friendly),
+/// minimum 4.
+pub fn scale_ch(c: usize, mult: f64) -> usize {
+    (((c as f64 * mult / 4.0).round() as usize) * 4).max(4)
+}
+
+/// Dense mask encoding of one proxy-space sample (artifact inputs).
+#[derive(Clone, Debug)]
+pub struct ProxyMasks {
+    pub opsel: Vec<f32>,
+    pub ksel: Vec<f32>,
+    pub expmask: Vec<f32>,
+    pub outmask: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    #[test]
+    fn space_sizes_match_paper() {
+        assert_eq!(NasSpace::new(NasSpaceId::MobileNetV2).blocks.len(), 17);
+        assert_eq!(NasSpace::new(NasSpaceId::EfficientNet).blocks.len(), 16);
+        assert_eq!(NasSpace::new(NasSpaceId::Proxy).blocks.len(), 5);
+        // Paper: |S1| ~ 8.4e12 (with block 0's expansion fixed); ours
+        // keeps all expansion bits so log10 is slightly above.
+        let s1 = NasSpace::new(NasSpaceId::MobileNetV2).log10_cardinality();
+        assert!((12.0..14.5).contains(&s1), "log10|S1| = {s1}");
+        let s3 = NasSpace::new(NasSpaceId::Evolved).log10_cardinality();
+        assert!(s3 > s1, "evolved space must be bigger");
+    }
+
+    #[test]
+    fn decode_mobilenetv2_shape() {
+        let sp = NasSpace::new(NasSpaceId::MobileNetV2);
+        let d = vec![0; sp.num_decisions()];
+        let net = sp.decode(&d);
+        // stem + blocks + head conv + pool + fc
+        assert!(net.layers.len() > 17 * 2);
+        assert_eq!(net.input_h, 224);
+        // k=3, exp=3 everywhere: MACs in the vicinity of MobileNetV2.
+        let m = net.total_macs();
+        assert!((100e6..800e6).contains(&(m as f64)), "macs {m}");
+    }
+
+    #[test]
+    fn bigger_decisions_give_bigger_models() {
+        let sp = NasSpace::new(NasSpaceId::EfficientNet);
+        let small: Vec<usize> = (0..sp.num_decisions()).map(|_| 0).collect();
+        let big: Vec<usize> =
+            sp.specs().iter().map(|s| s.cardinality - 1).collect();
+        assert!(sp.decode(&big).total_macs() > sp.decode(&small).total_macs());
+    }
+
+    #[test]
+    fn evolved_space_emits_fused_blocks() {
+        let sp = NasSpace::new(NasSpaceId::Evolved);
+        let mut d = vec![0; sp.num_decisions()];
+        // All blocks op=Fused (decision 0 is the global compound scale).
+        for b in 0..sp.blocks.len() {
+            d[1 + b * 5 + 2] = 1;
+        }
+        let net = sp.decode(&d);
+        let dw_count = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.op, crate::model::Layer::DwConv { .. }))
+            .count();
+        assert_eq!(dw_count, 0, "fused blocks must not contain depthwise convs");
+    }
+
+    #[test]
+    fn proxy_masks_match_ir() {
+        let sp = NasSpace::new(NasSpaceId::Proxy);
+        let d = sp.random(&mut crate::util::Rng::new(9));
+        let m = sp.decode_masks(&d);
+        assert_eq!(m.opsel.len(), 10);
+        assert_eq!(m.ksel.len(), 15);
+        assert_eq!(m.expmask.len(), 5 * PROXY_CEXP_MAX);
+        assert_eq!(m.outmask.len(), 5 * PROXY_CMAX);
+        // Each block: exactly one op and one kernel selected.
+        for b in 0..5 {
+            assert_eq!(m.opsel[b * 2] + m.opsel[b * 2 + 1], 1.0);
+            assert_eq!(m.ksel[b * 3..b * 3 + 3].iter().sum::<f32>(), 1.0);
+        }
+    }
+
+    #[test]
+    fn prop_decode_random_vectors() {
+        for id in [
+            NasSpaceId::MobileNetV2,
+            NasSpaceId::EfficientNet,
+            NasSpaceId::Evolved,
+            NasSpaceId::Proxy,
+        ] {
+            let sp = NasSpace::new(id);
+            proptest::check(
+                "decode sane",
+                64,
+                |r| sp.random(r),
+                |d| {
+                    let net = sp.decode(d);
+                    if net.total_macs() == 0 {
+                        return Err("zero macs".into());
+                    }
+                    if net.total_params() == 0 {
+                        return Err("zero params".into());
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn prop_expmask_counts_match_expansion() {
+        let sp = NasSpace::new(NasSpaceId::Proxy);
+        proptest::check(
+            "expmask count",
+            64,
+            |r| sp.random(r),
+            |d| {
+                let m = sp.decode_masks(d);
+                let cins = [PROXY_STEM, 8, 16, 16, 32];
+                for b in 0..5 {
+                    let e = EXPANSIONS[d[b * 4 + 1]];
+                    let want = (cins[b] * e) as f32;
+                    let got: f32 =
+                        m.expmask[b * PROXY_CEXP_MAX..(b + 1) * PROXY_CEXP_MAX].iter().sum();
+                    if got != want {
+                        return Err(format!("block {b}: {got} vs {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn scale_ch_rounds_to_multiple_of_4() {
+        assert_eq!(scale_ch(16, 0.5), 8);
+        assert_eq!(scale_ch(24, 0.75), 20); // 18 -> round(4.5)*4 = 20
+        assert_eq!(scale_ch(16, 1.25), 20);
+        assert_eq!(scale_ch(4, 0.5), 4); // floor at 4
+    }
+}

@@ -1,0 +1,152 @@
+//! Pareto-frontier utilities (paper Fig. 2: joint search "extends the
+//! Pareto frontier by joining multiple frontiers").
+//!
+//! Convention: objective 0 is *maximized* (accuracy), objective 1 is
+//! *minimized* (latency / energy).
+
+/// One evaluated sample: (maximize, minimize) + an opaque tag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Point {
+    pub acc: f64,
+    pub cost: f64,
+    pub tag: String,
+}
+
+impl Point {
+    pub fn new(acc: f64, cost: f64, tag: impl Into<String>) -> Self {
+        Point { acc, cost, tag: tag.into() }
+    }
+
+    /// True iff `self` dominates `other` (no worse in both, better in one).
+    pub fn dominates(&self, other: &Point) -> bool {
+        self.acc >= other.acc
+            && self.cost <= other.cost
+            && (self.acc > other.acc || self.cost < other.cost)
+    }
+}
+
+/// Extract the non-dominated subset, sorted by increasing cost.
+pub fn frontier(points: &[Point]) -> Vec<Point> {
+    let mut sorted: Vec<&Point> = points.iter().collect();
+    // Sort by cost asc, acc desc: then a sweep keeping the running max
+    // accuracy yields the frontier in O(n log n).
+    sorted.sort_by(|a, b| {
+        a.cost.partial_cmp(&b.cost).unwrap().then(b.acc.partial_cmp(&a.acc).unwrap())
+    });
+    let mut out: Vec<Point> = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.acc > best_acc {
+            out.push(p.clone());
+            best_acc = p.acc;
+        }
+    }
+    out
+}
+
+/// Hypervolume (area) dominated w.r.t. a reference (acc_ref, cost_ref)
+/// with acc >= acc_ref... standard 2-D: sum over frontier steps of
+/// (acc - acc_ref) x (cost_ref - cost), cost_ref an upper bound.
+pub fn hypervolume(points: &[Point], acc_ref: f64, cost_ref: f64) -> f64 {
+    let front = frontier(points);
+    let mut hv = 0.0;
+    let mut prev_acc = acc_ref;
+    // Walk from cheapest to most expensive; each step adds the rectangle
+    // of its accuracy improvement across the remaining cost span.
+    for p in &front {
+        if p.cost >= cost_ref || p.acc <= prev_acc {
+            continue;
+        }
+        hv += (p.acc - prev_acc) * (cost_ref - p.cost);
+        prev_acc = p.acc;
+    }
+    hv
+}
+
+/// Merge several frontiers (Fig. 2: the joint-search frontier is the
+/// frontier of the union of per-hardware frontiers).
+pub fn union_frontier(frontiers: &[Vec<Point>]) -> Vec<Point> {
+    let all: Vec<Point> = frontiers.iter().flatten().cloned().collect();
+    frontier(&all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::Rng;
+
+    fn p(acc: f64, cost: f64) -> Point {
+        Point::new(acc, cost, "")
+    }
+
+    #[test]
+    fn dominance_basics() {
+        assert!(p(0.8, 1.0).dominates(&p(0.7, 1.0)));
+        assert!(p(0.8, 1.0).dominates(&p(0.8, 2.0)));
+        assert!(!p(0.8, 1.0).dominates(&p(0.8, 1.0)));
+        assert!(!p(0.9, 2.0).dominates(&p(0.8, 1.0)));
+    }
+
+    #[test]
+    fn frontier_filters_dominated() {
+        let pts = vec![p(0.7, 1.0), p(0.8, 2.0), p(0.75, 3.0), p(0.9, 4.0)];
+        let f = frontier(&pts);
+        let tags: Vec<(f64, f64)> = f.iter().map(|q| (q.acc, q.cost)).collect();
+        assert_eq!(tags, vec![(0.7, 1.0), (0.8, 2.0), (0.9, 4.0)]);
+    }
+
+    #[test]
+    fn union_extends_frontier() {
+        // Two hardware configs with different sweet spots (Fig. 2).
+        let hw1 = vec![p(0.70, 0.3), p(0.75, 0.6)];
+        let hw2 = vec![p(0.72, 0.4), p(0.80, 1.0)];
+        let joint = union_frontier(&[hw1.clone(), hw2.clone()]);
+        let hv1 = hypervolume(&hw1, 0.5, 2.0);
+        let hv2 = hypervolume(&hw2, 0.5, 2.0);
+        let hvj = hypervolume(&joint, 0.5, 2.0);
+        assert!(hvj >= hv1.max(hv2));
+        assert_eq!(joint.len(), 4); // all four are mutually non-dominated
+    }
+
+    #[test]
+    fn prop_frontier_is_mutually_nondominated_and_complete() {
+        proptest::check(
+            "frontier invariants",
+            128,
+            |r: &mut Rng| {
+                (0..(2 + r.below(40)))
+                    .map(|i| Point::new(r.f64(), r.f64(), format!("{i}")))
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let f = frontier(pts);
+                for a in &f {
+                    for b in &f {
+                        if a != b && a.dominates(b) {
+                            return Err(format!("{a:?} dominates {b:?} in frontier"));
+                        }
+                    }
+                }
+                // Every input point is dominated by (or equal to) some
+                // frontier point.
+                for q in pts {
+                    let covered =
+                        f.iter().any(|fp| fp.dominates(q) || (fp.acc, fp.cost) == (q.acc, q.cost));
+                    if !covered {
+                        return Err(format!("{q:?} not covered"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn hypervolume_monotone_under_additions() {
+        let mut pts = vec![p(0.7, 1.0)];
+        let hv0 = hypervolume(&pts, 0.0, 2.0);
+        pts.push(p(0.9, 1.5));
+        assert!(hypervolume(&pts, 0.0, 2.0) > hv0);
+    }
+}

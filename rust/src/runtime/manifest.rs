@@ -1,0 +1,186 @@
+//! `artifacts/manifest.json` schema: program signatures + shared config.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::nas::spaces;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub programs: BTreeMap<String, ProgramSpec>,
+    pub supernet_param_count: usize,
+    pub costmodel_param_count: usize,
+    /// Raw config block (python/compile/config.py constants).
+    pub config: BTreeMap<String, Json>,
+}
+
+fn tensor_specs(arr: &Json) -> Result<Vec<TensorSpec>> {
+    arr.as_arr()
+        .ok_or_else(|| anyhow!("specs not an array"))?
+        .iter()
+        .map(|s| {
+            Ok(TensorSpec {
+                name: s
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("spec missing name"))?
+                    .to_string(),
+                dtype: Dtype::parse(
+                    s.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("dtype"))?,
+                )?,
+                shape: s
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("dim")))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let mut programs = BTreeMap::new();
+        for (name, p) in
+            j.get("programs").and_then(Json::as_obj).context("programs block")?
+        {
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    file: p
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .context("program file")?
+                        .to_string(),
+                    inputs: tensor_specs(p.get("inputs").context("inputs")?)?,
+                    outputs: tensor_specs(p.get("outputs").context("outputs")?)?,
+                },
+            );
+        }
+        let m = Manifest {
+            programs,
+            supernet_param_count: j
+                .get("supernet_param_count")
+                .and_then(Json::as_usize)
+                .context("supernet_param_count")?,
+            costmodel_param_count: j
+                .get("costmodel_param_count")
+                .and_then(Json::as_usize)
+                .context("costmodel_param_count")?,
+            config: j.get("config").and_then(Json::as_obj).context("config")?.clone(),
+        };
+        m.check_proxy_consts()?;
+        Ok(m)
+    }
+
+    /// Assert the python-side constants match the rust mirrors — a
+    /// drifted constant would silently mis-map masks onto the supernet.
+    pub fn check_proxy_consts(&self) -> Result<()> {
+        let get = |k: &str| -> Result<usize> {
+            self.config.get(k).and_then(Json::as_usize).with_context(|| format!("config {k}"))
+        };
+        let checks = [
+            ("BLOCKS", spaces::PROXY_BLOCKS),
+            ("IMG", spaces::PROXY_IMG),
+            ("CMAX", spaces::PROXY_CMAX),
+            ("CEXP_MAX", spaces::PROXY_CEXP_MAX),
+            ("STEM_CH", spaces::PROXY_STEM),
+            ("MAX_EXPANSION", spaces::PROXY_MAX_EXPANSION),
+            ("FEATURE_DIM", crate::costmodel::FEATURE_DIM),
+        ];
+        for (key, want) in checks {
+            let got = get(key)?;
+            if got != want {
+                bail!("manifest config {key}={got} but rust expects {want}");
+            }
+        }
+        let widths = self
+            .config
+            .get("WIDTHS")
+            .and_then(Json::as_arr)
+            .context("config WIDTHS")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect::<Vec<_>>();
+        if widths != spaces::PROXY_WIDTHS.to_vec() {
+            bail!("manifest WIDTHS {widths:?} != rust {:?}", spaces::PROXY_WIDTHS);
+        }
+        Ok(())
+    }
+
+    pub fn config_usize(&self, key: &str) -> Result<usize> {
+        self.config.get(key).and_then(Json::as_usize).with_context(|| format!("config {key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest(feature_dim: usize) -> String {
+        format!(
+            r#"{{
+          "config": {{"BLOCKS": 5, "IMG": 8, "CMAX": 32, "CEXP_MAX": 192,
+                     "STEM_CH": 8, "MAX_EXPANSION": 6, "FEATURE_DIM": {feature_dim},
+                     "WIDTHS": [8, 16, 16, 32, 32], "TRAIN_BATCH": 32}},
+          "supernet_param_count": 1000,
+          "costmodel_param_count": 500,
+          "programs": {{
+            "p": {{"file": "p.hlo.txt",
+                   "inputs": [{{"name": "x", "dtype": "f32", "shape": [2, 3]}}],
+                   "outputs": [{{"name": "y", "dtype": "f32", "shape": []}}]}}
+          }}
+        }}"#
+        )
+    }
+
+    #[test]
+    fn parses_and_checks_consts() {
+        let m = Manifest::parse(&mini_manifest(crate::costmodel::FEATURE_DIM)).unwrap();
+        assert_eq!(m.supernet_param_count, 1000);
+        let p = &m.programs["p"];
+        assert_eq!(p.inputs[0].shape, vec![2, 3]);
+        assert_eq!(p.inputs[0].dtype, Dtype::F32);
+        assert_eq!(m.config_usize("TRAIN_BATCH").unwrap(), 32);
+    }
+
+    #[test]
+    fn rejects_drifted_constants() {
+        assert!(Manifest::parse(&mini_manifest(9999)).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! This is the only boundary between L3 and the L2/L1 programs: the
+//! manifest (`artifacts/manifest.json`, written by aot.py) is the single
+//! source of truth for program signatures and shared configuration
+//! constants. Executables are compiled once on first use and cached.
+//!
+//! Interchange is HLO *text* — see aot.py for why serialized protos are
+//! rejected by xla_extension 0.5.1.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{Dtype, Manifest, ProgramSpec, TensorSpec};
+
+/// A loaded artifact directory + PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load `artifacts/` (manifest + lazy HLO compilation).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = Manifest::parse(&text).context("parsing manifest.json")?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, dir, exes: HashMap::new() })
+    }
+
+    /// Default artifact location: `$NAHAS_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("NAHAS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .programs
+            .get(name)
+            .with_context(|| format!("program '{name}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a program by manifest name. Inputs are *borrowed* (no
+    /// literal copies on the hot path — a supernet train step carries
+    /// ~6.6 MB of parameter/optimizer state per call, and cloning it
+    /// dominated the request loop before this signature; see
+    /// EXPERIMENTS.md §Perf). Inputs are validated against the manifest
+    /// signature; the 1-tuple output (return_tuple=True) is unwrapped
+    /// into its elements.
+    pub fn run(&mut self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .programs
+            .get(name)
+            .with_context(|| format!("program '{name}' not in manifest"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        for (lit, ts) in inputs.iter().zip(&spec.inputs) {
+            let n = lit.element_count();
+            let want: usize = ts.shape.iter().product::<usize>().max(1);
+            if n != want {
+                bail!(
+                    "{name}: input '{}' has {} elements, manifest says {:?} ({} elements)",
+                    ts.name,
+                    n,
+                    ts.shape,
+                    want
+                );
+            }
+        }
+        self.ensure_compiled(name)?;
+        let exe = self.exes.get(name).unwrap();
+        let out = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        let elems = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name} result: {e:?}"))?;
+        if elems.len() != spec.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, tuple has {}",
+                spec.outputs.len(),
+                elems.len()
+            );
+        }
+        Ok(elems)
+    }
+
+    /// Number of programs available.
+    pub fn num_programs(&self) -> usize {
+        self.manifest.programs.len()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let want: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != want {
+        bail!("lit_f32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let l = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    l.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let want: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != want {
+        bail!("lit_i32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let l = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    l.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar literals.
+pub fn lit_f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Fetch an f32 literal's contents.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Fetch a scalar f32.
+pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    l.get_first_element::<f32>().map_err(|e| anyhow::anyhow!("scalar: {e:?}"))
+}

@@ -1,0 +1,126 @@
+//! Regularized evolution (Real et al.) as a controller baseline for the
+//! optimization-strategy comparison (§4.4 compares joint/alternating/
+//! nested strategies; evolution and random give non-RL reference points).
+
+use std::collections::VecDeque;
+
+use crate::search::Controller;
+use crate::util::Rng;
+
+struct Member {
+    decisions: Vec<usize>,
+    reward: f64,
+}
+
+pub struct EvolutionController {
+    cards: Vec<usize>,
+    population: VecDeque<Member>,
+    pub population_size: usize,
+    pub tournament: usize,
+    /// Decisions mutated per child.
+    pub mutations: usize,
+    pending: Vec<Vec<usize>>,
+}
+
+impl EvolutionController {
+    pub fn new(cards: Vec<usize>) -> Self {
+        EvolutionController {
+            cards,
+            population: VecDeque::new(),
+            population_size: 64,
+            tournament: 16,
+            mutations: 1,
+            pending: Vec::new(),
+        }
+    }
+
+    fn mutate(&self, parent: &[usize], rng: &mut Rng) -> Vec<usize> {
+        let mut child = parent.to_vec();
+        for _ in 0..self.mutations {
+            let i = rng.below(child.len());
+            child[i] = rng.below(self.cards[i]);
+        }
+        child
+    }
+}
+
+impl Controller for EvolutionController {
+    fn sample(&mut self, rng: &mut Rng) -> Vec<usize> {
+        let d = if self.population.len() < self.population_size {
+            // Seeding phase: random.
+            self.cards.iter().map(|&c| rng.below(c)).collect()
+        } else {
+            // Tournament selection over a random subset, mutate winner.
+            let mut best: Option<&Member> = None;
+            for _ in 0..self.tournament {
+                let m = &self.population[rng.below(self.population.len())];
+                if best.map(|b| m.reward > b.reward).unwrap_or(true) {
+                    best = Some(m);
+                }
+            }
+            self.mutate(&best.unwrap().decisions.clone(), rng)
+        };
+        self.pending.push(d.clone());
+        d
+    }
+
+    fn update(&mut self, batch: &[(Vec<usize>, f64)]) {
+        for (d, r) in batch {
+            self.population.push_back(Member { decisions: d.clone(), reward: *r });
+            // Regularized: kill the OLDEST, not the worst.
+            if self.population.len() > self.population_size {
+                self.population.pop_front();
+            }
+        }
+        self.pending.clear();
+    }
+
+    fn best(&self) -> Vec<usize> {
+        self.population
+            .iter()
+            .max_by(|a, b| a.reward.partial_cmp(&b.reward).unwrap())
+            .map(|m| m.decisions.clone())
+            .unwrap_or_else(|| vec![0; self.cards.len()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evolution_improves_on_onemax() {
+        // Reward = fraction of decisions equal to 1.
+        let cards = vec![2; 20];
+        let mut ctl = EvolutionController::new(cards);
+        let mut rng = Rng::new(9);
+        let fitness = |d: &[usize]| d.iter().filter(|&&x| x == 1).count() as f64 / 20.0;
+        let mut last = 0.0;
+        for gen in 0..40 {
+            let batch: Vec<(Vec<usize>, f64)> = (0..16)
+                .map(|_| {
+                    let d = ctl.sample(&mut rng);
+                    let r = fitness(&d);
+                    (d, r)
+                })
+                .collect();
+            ctl.update(&batch);
+            if gen == 39 {
+                last = fitness(&ctl.best());
+            }
+        }
+        assert!(last > 0.8, "evolution best fitness {last}");
+    }
+
+    #[test]
+    fn population_is_bounded_and_ages_out() {
+        let mut ctl = EvolutionController::new(vec![2; 4]);
+        ctl.population_size = 8;
+        let mut rng = Rng::new(10);
+        for _ in 0..64 {
+            let d = ctl.sample(&mut rng);
+            ctl.update(&[(d, 0.5)]);
+        }
+        assert_eq!(ctl.population.len(), 8);
+    }
+}

@@ -1,0 +1,86 @@
+//! The NAHAS search framework (paper §3.4–§3.5).
+//!
+//! * [`reward`] — the constrained weighted-product objective (Eq. 4–6),
+//!   hard (p=0, q=-1) and soft (p=q=-0.07) variants, latency- or
+//!   energy-driven;
+//! * [`evaluator`] — how a sampled (alpha, h) becomes (accuracy,
+//!   latency, energy, area): surrogate+simulator, real proxy training,
+//!   learned cost model, or the remote simulator service;
+//! * [`ppo`] — the multi-trial controller (paper: PPO over a joint
+//!   categorical space, Adam lr 5e-4, gradients clipped at 1.0);
+//! * [`reinforce`] — the oneshot controller (TuNAS-style REINFORCE with
+//!   absolute reward and warmup);
+//! * [`evolution`] / random — baselines for the controller ablation;
+//! * [`joint`] — multi-trial joint search driver (NAS x HAS, or either
+//!   alone by fixing the other — Eq. 1 reduces to NAS or HAS);
+//! * [`oneshot`] — weight-sharing search over the AOT supernet;
+//! * [`phase`] — the phase-based (HAS-then-NAS) ablation of Fig. 9.
+
+pub mod evaluator;
+pub mod evolution;
+pub mod joint;
+pub mod oneshot;
+pub mod phase;
+pub mod ppo;
+pub mod reinforce;
+pub mod reward;
+
+pub use evaluator::{EvalResult, Evaluator, SurrogateSim, Task};
+pub use joint::{joint_search, Sample, SearchCfg, SearchOutcome};
+pub use reward::{ConstraintMode, CostObjective, RewardCfg};
+
+use crate::util::Rng;
+
+/// A controller proposes decision vectors and learns from rewards.
+pub trait Controller {
+    fn sample(&mut self, rng: &mut Rng) -> Vec<usize>;
+    /// Batch of (decisions, reward) pairs from the evaluator.
+    fn update(&mut self, batch: &[(Vec<usize>, f64)]);
+    /// Greedy argmax decision vector (the controller's current belief).
+    fn best(&self) -> Vec<usize>;
+}
+
+/// Uniform-random controller (search baseline).
+pub struct RandomController {
+    cards: Vec<usize>,
+    best_seen: Vec<usize>,
+    best_reward: f64,
+}
+
+impl RandomController {
+    pub fn new(cards: Vec<usize>) -> Self {
+        let best_seen = vec![0; cards.len()];
+        RandomController { cards, best_seen, best_reward: f64::NEG_INFINITY }
+    }
+}
+
+impl Controller for RandomController {
+    fn sample(&mut self, rng: &mut Rng) -> Vec<usize> {
+        self.cards.iter().map(|&c| rng.below(c)).collect()
+    }
+
+    fn update(&mut self, batch: &[(Vec<usize>, f64)]) {
+        for (d, r) in batch {
+            if *r > self.best_reward {
+                self.best_reward = *r;
+                self.best_seen = d.clone();
+            }
+        }
+    }
+
+    fn best(&self) -> Vec<usize> {
+        self.best_seen.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_controller_tracks_best() {
+        let mut c = RandomController::new(vec![3, 3]);
+        c.update(&[(vec![1, 2], 0.5), (vec![2, 0], 0.9), (vec![0, 0], 0.1)]);
+        assert_eq!(c.best(), vec![2, 0]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Oneshot (weight-sharing) joint search (paper §3.5.2).
+//!
+//! One supernet, trained once: "we use the controller decisions from the
+//! NAS space to construct a super-network ... meanwhile using the
+//! decisions from the HAS space to create a subgraph for computing the
+//! cost. Decision points from both spaces are optimized by a RL
+//! algorithm within the same graph. For each training step, we train the
+//! model weights and the controller decision points in an interleaved
+//! way" — with the TuNAS absolute reward and an RL warmup, and the
+//! learned cost model replacing the simulator in the inner loop.
+
+use anyhow::Result;
+
+use crate::has::{validate, HasSpace};
+use crate::nas::NasSpace;
+use crate::search::joint::JointLayout;
+use crate::search::reinforce::{absolute_reward, ReinforceController};
+use crate::search::Controller;
+use crate::trainer::proxy::lr_at;
+use crate::trainer::{ProxyTrainer, SupernetState};
+use crate::util::Rng;
+
+/// Latency oracle for the oneshot inner loop: either the simulator
+/// directly or the learned cost model (the ablation of Fig. 6 / the
+/// `ablation_costmodel` bench).
+pub trait LatencyOracle {
+    /// (latency_ms, area_mm2), or None if the pairing is invalid.
+    fn cost(&mut self, nas_d: &[usize], has_d: &[usize]) -> Option<(f64, f64)>;
+}
+
+/// Direct-simulator oracle.
+pub struct SimOracle {
+    pub space: NasSpace,
+    pub has: HasSpace,
+}
+
+impl LatencyOracle for SimOracle {
+    fn cost(&mut self, nas_d: &[usize], has_d: &[usize]) -> Option<(f64, f64)> {
+        let cfg = self.has.decode(has_d);
+        validate(&cfg).ok()?;
+        let net = self.space.decode(nas_d);
+        let rep = crate::accel::simulate_network(&cfg, &net).ok()?;
+        Some((rep.latency_ms, rep.area_mm2))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OneshotCfg {
+    /// Weight-only warmup steps (TuNAS: RL warmup).
+    pub warmup_steps: usize,
+    /// Interleaved steps after warmup.
+    pub search_steps: usize,
+    /// Latency target (ms) and area target (mm^2) for the absolute reward.
+    pub t_latency_ms: f64,
+    pub t_area_mm2: f64,
+    /// Absolute-reward slope (TuNAS beta < 0).
+    pub beta: f64,
+    pub lr0: f32,
+    pub seed: u64,
+}
+
+impl Default for OneshotCfg {
+    fn default() -> Self {
+        OneshotCfg {
+            warmup_steps: 60,
+            search_steps: 200,
+            t_latency_ms: 0.02,
+            t_area_mm2: crate::accel::area::baseline_area_mm2(),
+            beta: -0.5,
+            lr0: 0.08,
+            seed: 0,
+        }
+    }
+}
+
+pub struct OneshotOutcome {
+    pub best_nas: Vec<usize>,
+    pub best_has: Vec<usize>,
+    /// Held-out accuracy of the final subnetwork under shared weights.
+    pub final_acc: f32,
+    pub final_latency_ms: f64,
+    pub final_area_mm2: f64,
+    /// (step, reward) trace of controller updates.
+    pub reward_trace: Vec<(usize, f64)>,
+}
+
+/// Run oneshot joint search on the proxy supernet.
+pub fn oneshot_search(
+    trainer: &mut ProxyTrainer,
+    oracle: &mut dyn LatencyOracle,
+    cfg: &OneshotCfg,
+) -> Result<OneshotOutcome> {
+    let space = trainer.space().clone();
+    let has = HasSpace::new();
+    let (cards, layout) = JointLayout::cards(&space, &has);
+    let mut ctl = ReinforceController::new(&cards);
+    let mut rng = Rng::new(cfg.seed);
+    let total = cfg.warmup_steps + cfg.search_steps;
+
+    let mut st: SupernetState = trainer.init_supernet(cfg.seed as i32)?;
+    let mut trace = Vec::new();
+    // Best *valid* sample seen, as the fallback if the controller's
+    // argmax lands on an invalid hardware pairing.
+    let mut best_valid: Option<(Vec<usize>, f64)> = None;
+
+    for step in 0..total {
+        let joint = ctl.sample(&mut rng);
+        let (nas_d, has_d) = layout.split(&joint);
+        let lr = lr_at(step, total, cfg.lr0);
+        // Weight update on the sampled subnetwork (always).
+        let (_loss, train_acc) = trainer.supernet_step(&mut st, nas_d, lr)?;
+        // Controller update only after warmup (TuNAS RL warmup).
+        if step >= cfg.warmup_steps {
+            let reward = match oracle.cost(nas_d, has_d) {
+                None => 0.0,
+                Some((lat, area)) => {
+                    let r = absolute_reward(
+                        train_acc as f64,
+                        lat,
+                        cfg.t_latency_ms,
+                        cfg.beta,
+                    );
+                    // Area enters as a second absolute term.
+                    let r = r + cfg.beta * 0.5 * (area / cfg.t_area_mm2 - 1.0).max(0.0);
+                    if best_valid.as_ref().map(|(_, br)| r > *br).unwrap_or(true) {
+                        best_valid = Some((joint.clone(), r));
+                    }
+                    r
+                }
+            };
+            ctl.update(&[(joint.clone(), reward)]);
+            trace.push((step, ctl_last_reward(reward)));
+        }
+    }
+
+    let mut best_joint = ctl.best();
+    {
+        let (nas_d, has_d) = layout.split(&best_joint);
+        if oracle.cost(nas_d, has_d).is_none() {
+            if let Some((bv, _)) = &best_valid {
+                best_joint = bv.clone();
+            }
+        }
+    }
+    let (nas_d, has_d) = layout.split(&best_joint);
+    let final_acc = trainer.supernet_eval(&st, nas_d)?;
+    let (final_latency_ms, final_area_mm2) =
+        oracle.cost(nas_d, has_d).unwrap_or((f64::NAN, f64::NAN));
+    Ok(OneshotOutcome {
+        best_nas: nas_d.to_vec(),
+        best_has: has_d.to_vec(),
+        final_acc,
+        final_latency_ms,
+        final_area_mm2,
+        reward_trace: trace,
+    })
+}
+
+fn ctl_last_reward(r: f64) -> f64 {
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::NasSpaceId;
+
+    #[test]
+    fn sim_oracle_costs_valid_pairs() {
+        let mut o = SimOracle { space: NasSpace::new(NasSpaceId::Proxy), has: HasSpace::new() };
+        let has = HasSpace::new();
+        let mut rng = Rng::new(3);
+        let nas_d = o.space.random(&mut rng);
+        let c = o.cost(&nas_d, &has.baseline_decisions());
+        let (lat, area) = c.expect("baseline hw valid");
+        assert!(lat > 0.0 && area > 10.0);
+    }
+
+    #[test]
+    fn sim_oracle_rejects_invalid_hw() {
+        let mut o = SimOracle { space: NasSpace::new(NasSpaceId::Proxy), has: HasSpace::new() };
+        let mut rng = Rng::new(4);
+        let nas_d = o.space.random(&mut rng);
+        assert!(o.cost(&nas_d, &[4, 4, 0, 0, 0, 0, 0]).is_none());
+    }
+}

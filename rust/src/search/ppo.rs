@@ -1,0 +1,278 @@
+//! PPO controller over a joint categorical decision space (paper §3.5.1
+//! and §4.1: PPO, Adam lr 5e-4, policy gradients clipped at 1.0, reward
+//! averaged over trials).
+//!
+//! The policy factorizes over decisions: independent learned logits per
+//! decision position (the recurrent controller of the paper reduces to
+//! this for a fixed-length decision sequence; factorized logits are what
+//! TuNAS and most modern RL-NAS implementations use).
+
+use crate::search::Controller;
+use crate::util::Rng;
+
+/// Factorized categorical policy.
+#[derive(Clone, Debug)]
+pub struct Policy {
+    pub logits: Vec<Vec<f32>>,
+}
+
+impl Policy {
+    pub fn new(cards: &[usize]) -> Self {
+        Policy { logits: cards.iter().map(|&c| vec![0.0; c]).collect() }
+    }
+
+    pub fn probs(&self, i: usize) -> Vec<f32> {
+        softmax(&self.logits[i])
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Vec<usize> {
+        self.logits.iter().map(|l| rng.categorical(&softmax(l))).collect()
+    }
+
+    pub fn log_prob(&self, d: &[usize]) -> f64 {
+        d.iter()
+            .enumerate()
+            .map(|(i, &a)| (softmax(&self.logits[i])[a].max(1e-20) as f64).ln())
+            .sum()
+    }
+
+    pub fn argmax(&self) -> Vec<usize> {
+        self.logits
+            .iter()
+            .map(|l| {
+                l.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+            })
+            .collect()
+    }
+
+    pub fn entropy(&self) -> f64 {
+        self.logits
+            .iter()
+            .map(|l| {
+                let p = softmax(l);
+                -p.iter().map(|&x| (x.max(1e-20) as f64) * (x.max(1e-20) as f64).ln()).sum::<f64>()
+            })
+            .sum()
+    }
+}
+
+pub fn softmax(l: &[f32]) -> Vec<f32> {
+    let m = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let e: Vec<f32> = l.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = e.iter().sum();
+    e.iter().map(|&x| x / s).collect()
+}
+
+/// Flat Adam optimizer over the policy logits.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: i32,
+    pub lr: f32,
+}
+
+impl Adam {
+    pub fn new(cards: &[usize], lr: f32) -> Self {
+        Adam {
+            m: cards.iter().map(|&c| vec![0.0; c]).collect(),
+            v: cards.iter().map(|&c| vec![0.0; c]).collect(),
+            t: 0,
+            lr,
+        }
+    }
+
+    /// Ascend `grad` (maximization), with global-norm clipping.
+    pub fn step(&mut self, logits: &mut [Vec<f32>], grad: &mut [Vec<f32>], clip: f32) {
+        let norm: f32 = grad
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|&x| x * x)
+            .sum::<f32>()
+            .sqrt();
+        if norm > clip {
+            let s = clip / norm;
+            for g in grad.iter_mut() {
+                for x in g.iter_mut() {
+                    *x *= s;
+                }
+            }
+        }
+        self.t += 1;
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let bc1 = 1.0 - b1.powi(self.t);
+        let bc2 = 1.0 - b2.powi(self.t);
+        for i in 0..logits.len() {
+            for j in 0..logits[i].len() {
+                let g = grad[i][j];
+                self.m[i][j] = b1 * self.m[i][j] + (1.0 - b1) * g;
+                self.v[i][j] = b2 * self.v[i][j] + (1.0 - b2) * g * g;
+                let mh = self.m[i][j] / bc1;
+                let vh = self.v[i][j] / bc2;
+                logits[i][j] += self.lr * mh / (vh.sqrt() + eps);
+            }
+        }
+    }
+}
+
+/// PPO with clipped surrogate objective + entropy bonus.
+pub struct PpoController {
+    pub policy: Policy,
+    old: Policy,
+    adam: Adam,
+    baseline: f64,
+    baseline_init: bool,
+    /// Clip epsilon (0.2), entropy coefficient, epochs per update.
+    pub clip: f32,
+    pub entropy_coef: f32,
+    pub epochs: usize,
+}
+
+impl PpoController {
+    pub fn new(cards: &[usize]) -> Self {
+        let policy = Policy::new(cards);
+        PpoController {
+            old: policy.clone(),
+            policy,
+            adam: Adam::new(cards, 5e-4 * 10.0), // paper lr 5e-4 per-trial; x10 for batched updates
+            baseline: 0.0,
+            baseline_init: false,
+            clip: 0.2,
+            entropy_coef: 0.01,
+            epochs: 3,
+        }
+    }
+}
+
+impl Controller for PpoController {
+    fn sample(&mut self, rng: &mut Rng) -> Vec<usize> {
+        self.policy.sample(rng)
+    }
+
+    fn update(&mut self, batch: &[(Vec<usize>, f64)]) {
+        if batch.is_empty() {
+            return;
+        }
+        let mean_r: f64 = batch.iter().map(|(_, r)| r).sum::<f64>() / batch.len() as f64;
+        if !self.baseline_init {
+            self.baseline = mean_r;
+            self.baseline_init = true;
+        }
+        self.old = self.policy.clone();
+        let old_logp: Vec<f64> = batch.iter().map(|(d, _)| self.old.log_prob(d)).collect();
+
+        for _ in 0..self.epochs {
+            let mut grad: Vec<Vec<f32>> =
+                self.policy.logits.iter().map(|l| vec![0.0; l.len()]).collect();
+            for ((d, r), &olp) in batch.iter().zip(&old_logp) {
+                let adv = (r - self.baseline) as f32;
+                let ratio = (self.policy.log_prob(d) - olp).exp() as f32;
+                // Clipped surrogate: gradient flows only when the ratio
+                // is inside the trust region (or moving back into it).
+                let use_grad = if adv >= 0.0 {
+                    ratio <= 1.0 + self.clip
+                } else {
+                    ratio >= 1.0 - self.clip
+                };
+                if !use_grad {
+                    continue;
+                }
+                let w = ratio * adv / batch.len() as f32;
+                for (i, &a) in d.iter().enumerate() {
+                    let p = softmax(&self.policy.logits[i]);
+                    for j in 0..p.len() {
+                        let onehot = if j == a { 1.0 } else { 0.0 };
+                        grad[i][j] += w * (onehot - p[j]);
+                    }
+                }
+            }
+            // Entropy bonus: grad of H wrt logits = -p * (log p + H_i).
+            for i in 0..self.policy.logits.len() {
+                let p = softmax(&self.policy.logits[i]);
+                let h: f32 = -p.iter().map(|&x| x.max(1e-20) * x.max(1e-20).ln()).sum::<f32>();
+                for j in 0..p.len() {
+                    grad[i][j] -= self.entropy_coef * p[j] * (p[j].max(1e-20).ln() + h);
+                }
+            }
+            self.adam.step(&mut self.policy.logits, &mut grad, 1.0);
+        }
+        // EMA reward baseline (the paper's value estimate).
+        self.baseline = 0.9 * self.baseline + 0.1 * mean_r;
+    }
+
+    fn best(&self) -> Vec<usize> {
+        self.policy.argmax()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn policy_sample_in_range() {
+        let pol = Policy::new(&[3, 5, 2]);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let d = pol.sample(&mut rng);
+            assert!(d[0] < 3 && d[1] < 5 && d[2] < 2);
+        }
+    }
+
+    #[test]
+    fn ppo_learns_a_planted_optimum() {
+        // Reward 1.0 iff decision == [2, 0, 3], partial credit per match.
+        let cards = vec![3, 2, 4];
+        let target = [2usize, 0, 3];
+        let mut ctl = PpoController::new(&cards);
+        let mut rng = Rng::new(42);
+        for _ in 0..60 {
+            let batch: Vec<(Vec<usize>, f64)> = (0..16)
+                .map(|_| {
+                    let d = ctl.sample(&mut rng);
+                    let r = d.iter().zip(&target).filter(|(a, b)| a == b).count() as f64 / 3.0;
+                    (d, r)
+                })
+                .collect();
+            ctl.update(&batch);
+        }
+        assert_eq!(ctl.best(), target.to_vec(), "PPO should find the planted optimum");
+    }
+
+    #[test]
+    fn entropy_decreases_as_policy_sharpens() {
+        let cards = vec![4, 4];
+        let mut ctl = PpoController::new(&cards);
+        let h0 = ctl.policy.entropy();
+        let mut rng = Rng::new(7);
+        for _ in 0..40 {
+            let batch: Vec<(Vec<usize>, f64)> = (0..8)
+                .map(|_| {
+                    let d = ctl.sample(&mut rng);
+                    let r = if d[0] == 1 { 1.0 } else { 0.0 };
+                    (d, r)
+                })
+                .collect();
+            ctl.update(&batch);
+        }
+        assert!(ctl.policy.entropy() < h0);
+    }
+
+    #[test]
+    fn adam_clips_gradient_norm() {
+        let cards = vec![2];
+        let mut adam = Adam::new(&cards, 0.1);
+        let mut logits = vec![vec![0.0f32, 0.0]];
+        let mut grad = vec![vec![1e6f32, -1e6]];
+        adam.step(&mut logits, &mut grad, 1.0);
+        // Post-clip norm 1.0, Adam first step ~ lr in magnitude.
+        assert!(logits[0][0].abs() <= 0.11);
+    }
+}

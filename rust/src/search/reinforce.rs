@@ -1,0 +1,97 @@
+//! TuNAS-style REINFORCE controller for oneshot search (paper §3.5.2 /
+//! §4.1: "we utilize REINFORCE to optimize the controller following
+//! TuNAS. We use Adam with a learning rate of 0.0048 ... momentum 0.95
+//! for baseline", plus the *absolute reward* function and an RL warmup
+//! during which only shared weights train).
+
+use crate::search::ppo::{softmax, Adam, Policy};
+use crate::search::Controller;
+use crate::util::Rng;
+
+/// TuNAS absolute reward: `quality + beta * |cost/target - 1|` with
+/// `beta < 0` — unlike the soft exponent it does not reward going *under*
+/// the target, which keeps the controller near the constraint boundary.
+pub fn absolute_reward(quality: f64, cost: f64, target: f64, beta: f64) -> f64 {
+    quality + beta * (cost / target - 1.0).abs()
+}
+
+pub struct ReinforceController {
+    pub policy: Policy,
+    adam: Adam,
+    /// EMA baseline with the paper's 0.95 momentum.
+    baseline: f64,
+    baseline_init: bool,
+    pub momentum: f64,
+}
+
+impl ReinforceController {
+    pub fn new(cards: &[usize]) -> Self {
+        ReinforceController {
+            policy: Policy::new(cards),
+            adam: Adam::new(cards, 0.0048),
+            baseline: 0.0,
+            baseline_init: false,
+            momentum: 0.95,
+        }
+    }
+}
+
+impl Controller for ReinforceController {
+    fn sample(&mut self, rng: &mut Rng) -> Vec<usize> {
+        self.policy.sample(rng)
+    }
+
+    fn update(&mut self, batch: &[(Vec<usize>, f64)]) {
+        for (d, r) in batch {
+            if !self.baseline_init {
+                self.baseline = *r;
+                self.baseline_init = true;
+            }
+            let adv = (*r - self.baseline) as f32;
+            let mut grad: Vec<Vec<f32>> =
+                self.policy.logits.iter().map(|l| vec![0.0; l.len()]).collect();
+            for (i, &a) in d.iter().enumerate() {
+                let p = softmax(&self.policy.logits[i]);
+                for j in 0..p.len() {
+                    let onehot = if j == a { 1.0 } else { 0.0 };
+                    grad[i][j] = adv * (onehot - p[j]);
+                }
+            }
+            self.adam.step(&mut self.policy.logits, &mut grad, 1.0);
+            self.baseline = self.momentum * self.baseline + (1.0 - self.momentum) * r;
+        }
+    }
+
+    fn best(&self) -> Vec<usize> {
+        self.policy.argmax()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absolute_reward_peaks_at_target() {
+        let q = 0.8;
+        let at = absolute_reward(q, 1.0, 1.0, -0.5);
+        let under = absolute_reward(q, 0.5, 1.0, -0.5);
+        let over = absolute_reward(q, 1.5, 1.0, -0.5);
+        assert_eq!(at, q);
+        assert!(under < at && over < at);
+        assert!((under - over).abs() < 1e-12); // symmetric
+    }
+
+    #[test]
+    fn reinforce_learns_planted_optimum() {
+        let cards = vec![3, 3];
+        let mut ctl = ReinforceController::new(&cards);
+        let mut rng = Rng::new(5);
+        for _ in 0..800 {
+            let d = ctl.sample(&mut rng);
+            let r = if d == vec![1, 2] { 1.0 } else { 0.2 };
+            ctl.update(&[(d, r)]);
+        }
+        assert_eq!(ctl.best(), vec![1, 2]);
+    }
+}

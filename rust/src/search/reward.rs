@@ -1,0 +1,185 @@
+//! The NAHAS search objective (paper §3.4, Eq. 4–6):
+//!
+//! ```text
+//! maximize  Accuracy(a, h) * (Cost(a, h) / T_cost)^w0 * (Area(h) / T_area)^w1
+//! w0 = p if Cost <= T_cost else q;   w1 = p if Area <= T_area else q
+//! ```
+//!
+//! Hard constraint: p = 0, q = -1 (accuracy-only when feasible, sharp
+//! penalty otherwise). Soft constraint: p = q = -0.07 (MnasNet's
+//! empirically Pareto-fair exponent). The cost metric is latency for the
+//! latency-driven search and energy (power x latency) for the
+//! energy-driven one — "the latency constraint can be easily swapped
+//! with an energy constraint".
+
+use crate::accel::area::baseline_area_mm2;
+use crate::search::evaluator::EvalResult;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConstraintMode {
+    /// p = 0, q = -1.
+    Hard,
+    /// p = q = -0.07.
+    Soft,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostObjective {
+    Latency,
+    Energy,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RewardCfg {
+    /// Target on the cost metric (ms for latency, mJ for energy).
+    pub t_cost: f64,
+    /// Chip-area target, mm^2 (paper: the baseline design's area).
+    pub t_area: f64,
+    pub mode: ConstraintMode,
+    pub objective: CostObjective,
+    /// Reward assigned to invalid (unsimulable / rejected) samples. The
+    /// paper keeps traversing them ("can help converge to more
+    /// pareto-optimal samples"), so this is low but not -inf.
+    pub invalid_reward: f64,
+}
+
+impl RewardCfg {
+    pub fn latency(t_ms: f64) -> Self {
+        RewardCfg {
+            t_cost: t_ms,
+            t_area: baseline_area_mm2(),
+            mode: ConstraintMode::Hard,
+            objective: CostObjective::Latency,
+            invalid_reward: 0.05,
+        }
+    }
+
+    pub fn energy(t_mj: f64) -> Self {
+        RewardCfg { objective: CostObjective::Energy, t_cost: t_mj, ..Self::latency(0.0) }
+    }
+
+    pub fn soft(mut self) -> Self {
+        self.mode = ConstraintMode::Soft;
+        self
+    }
+
+    fn p_q(&self) -> (f64, f64) {
+        match self.mode {
+            ConstraintMode::Hard => (0.0, -1.0),
+            ConstraintMode::Soft => (-0.07, -0.07),
+        }
+    }
+
+    /// Eq. 4 over an evaluation result; accuracy enters as a fraction.
+    pub fn reward(&self, r: &EvalResult) -> f64 {
+        if !r.valid {
+            return self.invalid_reward;
+        }
+        let cost = match self.objective {
+            CostObjective::Latency => r.latency_ms,
+            CostObjective::Energy => r.energy_mj,
+        };
+        let (p, q) = self.p_q();
+        let w0 = if cost <= self.t_cost { p } else { q };
+        let w1 = if r.area_mm2 <= self.t_area { p } else { q };
+        let acc = r.acc; // fraction in [0, 1]
+        acc * (cost / self.t_cost).powf(w0) * (r.area_mm2 / self.t_area).powf(w1)
+    }
+
+    /// True iff the sample meets both constraints.
+    pub fn feasible(&self, r: &EvalResult) -> bool {
+        let cost = match self.objective {
+            CostObjective::Latency => r.latency_ms,
+            CostObjective::Energy => r.energy_mj,
+        };
+        r.valid && cost <= self.t_cost && r.area_mm2 <= self.t_area
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn res(acc: f64, lat: f64, area: f64) -> EvalResult {
+        EvalResult { acc, latency_ms: lat, energy_mj: lat * 2.0, area_mm2: area, valid: true }
+    }
+
+    #[test]
+    fn hard_mode_is_accuracy_when_feasible() {
+        let cfg = RewardCfg::latency(0.5);
+        let a = baseline_area_mm2();
+        assert!((cfg.reward(&res(0.75, 0.4, a)) - 0.75).abs() < 1e-12);
+        assert!((cfg.reward(&res(0.75, 0.5, a)) - 0.75).abs() < 1e-12); // boundary
+    }
+
+    #[test]
+    fn hard_mode_penalizes_violation_sharply() {
+        let cfg = RewardCfg::latency(0.5);
+        let a = baseline_area_mm2();
+        let ok = cfg.reward(&res(0.75, 0.5, a));
+        let bad = cfg.reward(&res(0.75, 1.0, a)); // 2x over: acc * (2)^-1
+        assert!((bad - 0.375).abs() < 1e-12);
+        assert!(bad < ok);
+    }
+
+    #[test]
+    fn soft_mode_trades_smoothly() {
+        let cfg = RewardCfg::latency(0.5).soft();
+        let a = baseline_area_mm2();
+        // MnasNet property: halving latency at equal accuracy changes
+        // reward by 2^0.07 ~ 5%.
+        let r1 = cfg.reward(&res(0.75, 0.5, a));
+        let r2 = cfg.reward(&res(0.75, 0.25, a));
+        assert!(r2 > r1);
+        assert!((r2 / r1 - 2f64.powf(0.07)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_violation_also_penalized() {
+        let cfg = RewardCfg::latency(0.5);
+        let a = baseline_area_mm2();
+        let ok = cfg.reward(&res(0.75, 0.4, a));
+        let big = cfg.reward(&res(0.75, 0.4, a * 1.5));
+        assert!(big < ok);
+        assert!((big - 0.75 / 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_objective_uses_energy() {
+        let cfg = RewardCfg::energy(1.0);
+        let a = baseline_area_mm2();
+        let r = res(0.75, 0.4, a); // energy = 0.8 <= 1.0
+        assert!(cfg.feasible(&r));
+        let r2 = res(0.75, 0.6, a); // energy 1.2 > 1.0
+        assert!(!cfg.feasible(&r2));
+        assert!(cfg.reward(&r) > cfg.reward(&r2));
+    }
+
+    #[test]
+    fn invalid_gets_floor_reward() {
+        let cfg = RewardCfg::latency(0.5);
+        let mut r = res(0.9, 0.1, 10.0);
+        r.valid = false;
+        assert_eq!(cfg.reward(&r), cfg.invalid_reward);
+    }
+
+    #[test]
+    fn prop_reward_monotone_in_accuracy() {
+        let cfg = RewardCfg::latency(0.5);
+        proptest::check(
+            "reward monotone in acc",
+            128,
+            |r| (r.f64(), 0.1 + r.f64(), 40.0 + 80.0 * r.f64()),
+            |&(acc, lat, area)| {
+                let lo = cfg.reward(&res(acc * 0.5, lat, area));
+                let hi = cfg.reward(&res(acc, lat, area));
+                if hi >= lo {
+                    Ok(())
+                } else {
+                    Err(format!("{hi} < {lo}"))
+                }
+            },
+        );
+    }
+}

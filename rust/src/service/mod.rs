@@ -1,0 +1,361 @@
+//! Simulator-as-a-service (paper §4.1: "We deployed both of these
+//! estimators as a service where multiple NAHAS clients can send
+//! parallel requests").
+//!
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! ```text
+//! -> {"space": "efficientnet", "nas": [..], "hw": [..], "task": "cls"}
+//! <- {"valid": true, "latency_ms": 0.41, "energy_mj": 0.9,
+//!     "area_mm2": 79.2, "utilization": 0.21}
+//! ```
+//!
+//! The server is a std-thread TCP accept loop (tokio is not vendored in
+//! this offline build); each connection gets a worker thread, which is
+//! exactly the paper's "parallel requests" scale-out on one box.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::accel::simulate_network;
+use crate::has::{validate, HasSpace};
+use crate::nas::{NasSpace, NasSpaceId};
+use crate::search::evaluator::segmentation_variant;
+use crate::util::json::{obj, Json};
+
+fn space_by_name(name: &str) -> Option<NasSpaceId> {
+    match name {
+        "mobilenetv2" | "s1" => Some(NasSpaceId::MobileNetV2),
+        "efficientnet" | "s2" => Some(NasSpaceId::EfficientNet),
+        "evolved" | "s3" => Some(NasSpaceId::Evolved),
+        "proxy" => Some(NasSpaceId::Proxy),
+        _ => None,
+    }
+}
+
+/// Handle one request object, producing the response object.
+pub fn handle_request(req: &Json) -> Json {
+    let fail = |msg: &str| obj(vec![("valid", false.into()), ("error", msg.into())]);
+    let Some(space_name) = req.get("space").and_then(Json::as_str) else {
+        return fail("missing 'space'");
+    };
+    let Some(id) = space_by_name(space_name) else {
+        return fail("unknown space");
+    };
+    let space = NasSpace::new(id);
+    let to_vec = |key: &str| -> Option<Vec<usize>> {
+        req.get(key)?.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    };
+    let Some(nas_d) = to_vec("nas") else { return fail("missing 'nas'") };
+    let Some(has_d) = to_vec("hw") else { return fail("missing 'hw'") };
+    if nas_d.len() != space.num_decisions() || has_d.len() != 7 {
+        return fail("decision vector length");
+    }
+    if nas_d
+        .iter()
+        .zip(space.specs())
+        .any(|(d, s)| *d >= s.cardinality)
+    {
+        return fail("nas decision out of range");
+    }
+    let has = HasSpace::new();
+    if has_d.iter().zip(has.specs()).any(|(d, s)| *d >= s.cardinality) {
+        return fail("hw decision out of range");
+    }
+    let cfg = has.decode(&has_d);
+    if let Err(e) = validate(&cfg) {
+        return obj(vec![("valid", false.into()), ("error", e.as_str().into())]);
+    }
+    let mut net = space.decode(&nas_d);
+    if req.get("task").and_then(Json::as_str) == Some("seg") {
+        net = segmentation_variant(&net);
+    }
+    match simulate_network(&cfg, &net) {
+        Err(e) => obj(vec![("valid", false.into()), ("error", e.to_string().as_str().into())]),
+        Ok(rep) => obj(vec![
+            ("valid", true.into()),
+            ("latency_ms", rep.latency_ms.into()),
+            ("energy_mj", rep.energy_mj.into()),
+            ("area_mm2", rep.area_mm2.into()),
+            ("utilization", rep.utilization.into()),
+        ]),
+    }
+}
+
+/// Running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    pub requests: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn spawn(addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).context("binding simulator service")?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(AtomicU64::new(0));
+        let (stop2, req2) = (stop.clone(), requests.clone());
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let req3 = req2.clone();
+                        // Detached worker: it exits when the client hangs
+                        // up (joining here would deadlock on clients that
+                        // outlive the server).
+                        std::thread::spawn(move || serve_conn(stream, req3));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server { addr: local, stop, requests, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, requests: Arc<AtomicU64>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line) {
+            Err(e) => obj(vec![("valid", false.into()), ("error", e.as_str().into())]),
+            Ok(req) => handle_request(&req),
+        };
+        requests.fetch_add(1, Ordering::Relaxed);
+        if writeln!(writer, "{}", resp.to_string()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Client for the simulator service.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to simulator service")?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Query one (space, nas, hw) sample; returns the raw response.
+    pub fn query(
+        &mut self,
+        space: &str,
+        nas_d: &[usize],
+        has_d: &[usize],
+        seg: bool,
+    ) -> Result<Json> {
+        let arr = |v: &[usize]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+        let req = obj(vec![
+            ("space", space.into()),
+            ("nas", arr(nas_d)),
+            ("hw", arr(has_d)),
+            ("task", if seg { "seg".into() } else { "cls".into() }),
+        ]);
+        writeln!(self.writer, "{}", req.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn request_roundtrip_over_tcp() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let has = HasSpace::new();
+        let mut rng = Rng::new(2);
+        let nas_d = space.random(&mut rng);
+        let resp = client.query("efficientnet", &nas_d, &has.baseline_decisions(), false).unwrap();
+        assert_eq!(resp.get("valid"), Some(&Json::Bool(true)));
+        assert!(resp.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+        server.stop();
+    }
+
+    #[test]
+    fn parallel_clients_all_served() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let space = NasSpace::new(NasSpaceId::MobileNetV2);
+                let has = HasSpace::new();
+                let mut rng = Rng::new(t);
+                for _ in 0..8 {
+                    let nas_d = space.random(&mut rng);
+                    let resp = client
+                        .query("mobilenetv2", &nas_d, &has.baseline_decisions(), false)
+                        .unwrap();
+                    assert!(resp.get("valid").is_some());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(server.requests.load(Ordering::Relaxed), 32);
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_requests_get_errors_not_crashes() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        writeln!(stream, "this is not json").unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("valid"), Some(&Json::Bool(false)));
+        // Valid JSON, bad payload.
+        writeln!(stream, "{{\"space\": \"nope\"}}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(Json::parse(&line).unwrap().get("valid"), Some(&Json::Bool(false)));
+        server.stop();
+    }
+}
+
+/// Remote evaluator: implements the search-side [`crate::search::Evaluator`]
+/// against a simulator service — the paper's deployment where "multiple
+/// NAHAS clients send parallel requests" to the estimator farm. Accuracy
+/// still comes from the local surrogate (the paper's clients likewise
+/// train locally and query the service only for hardware metrics).
+pub struct RemoteEval {
+    client: Client,
+    space_name: &'static str,
+    space: NasSpace,
+    seed: u64,
+    seg: bool,
+}
+
+impl RemoteEval {
+    pub fn connect(addr: &str, id: NasSpaceId, seed: u64) -> Result<Self> {
+        let space_name = match id {
+            NasSpaceId::MobileNetV2 => "mobilenetv2",
+            NasSpaceId::EfficientNet => "efficientnet",
+            NasSpaceId::Evolved => "evolved",
+            NasSpaceId::Proxy => "proxy",
+        };
+        Ok(RemoteEval {
+            client: Client::connect(addr)?,
+            space_name,
+            space: NasSpace::new(id),
+            seed,
+            seg: false,
+        })
+    }
+}
+
+impl crate::search::Evaluator for RemoteEval {
+    fn evaluate(
+        &mut self,
+        nas_d: &[usize],
+        has_d: &[usize],
+    ) -> crate::search::EvalResult {
+        let Ok(resp) = self.client.query(self.space_name, nas_d, has_d, self.seg) else {
+            return crate::search::EvalResult::invalid();
+        };
+        if resp.get("valid") != Some(&Json::Bool(true)) {
+            return crate::search::EvalResult::invalid();
+        }
+        let f = |k: &str| resp.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let net = self.space.decode(nas_d);
+        let acc = match self.space.id {
+            NasSpaceId::Proxy => crate::trainer::surrogate::proxy_accuracy(&net, self.seed),
+            _ => crate::trainer::surrogate::imagenet_accuracy(&net, self.seed) / 100.0,
+        };
+        crate::search::EvalResult {
+            acc,
+            latency_ms: f("latency_ms"),
+            energy_mj: f("energy_mj"),
+            area_mm2: f("area_mm2"),
+            valid: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod remote_tests {
+    use super::*;
+    use crate::search::joint::JointLayout;
+    use crate::search::ppo::PpoController;
+    use crate::search::{joint_search, Evaluator, RewardCfg, SearchCfg};
+
+    #[test]
+    fn remote_eval_matches_local_simulator() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut remote =
+            RemoteEval::connect(&server.addr.to_string(), NasSpaceId::EfficientNet, 3).unwrap();
+        let mut local =
+            crate::search::SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+        let has = HasSpace::new();
+        let mut rng = crate::util::Rng::new(4);
+        for _ in 0..8 {
+            let nas_d = local.space.random(&mut rng);
+            let r = remote.evaluate(&nas_d, &has.baseline_decisions());
+            let l = local.evaluate(&nas_d, &has.baseline_decisions());
+            assert_eq!(r.valid, l.valid);
+            if r.valid {
+                assert!((r.latency_ms - l.latency_ms).abs() < 1e-9);
+                assert!((r.energy_mj - l.energy_mj).abs() < 1e-9);
+                assert!((r.acc - l.acc).abs() < 1e-12);
+            }
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn whole_search_over_the_wire() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let space = NasSpace::new(NasSpaceId::MobileNetV2);
+        let has = HasSpace::new();
+        let (cards, layout) = JointLayout::cards(&space, &has);
+        let mut remote =
+            RemoteEval::connect(&server.addr.to_string(), NasSpaceId::MobileNetV2, 5).unwrap();
+        let mut ctl = PpoController::new(&cards);
+        let cfg = SearchCfg::new(120, RewardCfg::latency(0.5), 5);
+        let out = joint_search(&mut remote, &mut ctl, &layout, None, None, &cfg);
+        assert!(out.best_feasible.is_some());
+        assert!(server.requests.load(Ordering::Relaxed) >= 120);
+        server.stop();
+    }
+}

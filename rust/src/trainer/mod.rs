@@ -1,0 +1,9 @@
+//! Child-model evaluation: real proxy-task training through the AOT
+//! supernet artifacts ([`proxy`]) and the calibrated analytic accuracy
+//! surrogate ([`surrogate`]) used by the large paper-figure sweeps
+//! (DESIGN.md §Substitutions item 3).
+
+pub mod proxy;
+pub mod surrogate;
+
+pub use proxy::{ProxyTrainer, SupernetState};

@@ -1,0 +1,228 @@
+//! Proxy-task training driven entirely from rust through PJRT.
+//!
+//! One supernet artifact serves both search modes (paper §3.5):
+//!
+//! * **multi-trial** ([`ProxyTrainer::train_child`]): fresh weights per
+//!   sampled child (`supernet_init` with a per-trial seed), a fixed mask,
+//!   N SGD steps with the paper's warmup+cosine schedule, accuracy on a
+//!   held-out batch — the "child program" of MnasNet-style search;
+//! * **oneshot** ([`SupernetState`]): persistent shared weights, masks
+//!   re-sampled per step by the controller, interleaved weight/controller
+//!   updates — the ProxylessNAS/TuNAS regime.
+//!
+//! Python never runs here: batches are generated in rust (`data`),
+//! pushed as literals, and the train-step HLO (which embeds the L1
+//! pallas matmul in its head + its VJP) does the rest.
+
+use anyhow::Result;
+
+use crate::data::{DataGen, CHANNELS, IMG};
+use crate::nas::{NasSpace, NasSpaceId, ProxyMasks};
+use crate::runtime::{lit_f32, lit_f32_scalar, lit_i32, lit_i32_scalar, scalar_f32, Runtime};
+
+/// Learning-rate schedule (the paper's warmup + cosine shape, §4.1,
+/// re-tuned for the proxy's Adam optimizer): linear warmup for the
+/// first 20% of steps, cosine decay to 0 for the rest.
+pub fn lr_at(step: usize, total: usize, lr0: f32) -> f32 {
+    let w = (total / 5).max(1); // 1-of-5 epochs warmup
+    if step < w {
+        lr0 * (step + 1) as f32 / w as f32
+    } else {
+        let t = (step - w) as f32 / (total - w).max(1) as f32;
+        lr0 * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+/// Drives the supernet artifacts for child training / oneshot search.
+pub struct ProxyTrainer {
+    pub rt: Runtime,
+    space: NasSpace,
+    train_batch: usize,
+    eval_batch: usize,
+    datagen: DataGen,
+    eval_x: Vec<f32>,
+    eval_y: Vec<i32>,
+    /// Default proxy-training budget (steps) and peak LR.
+    pub steps: usize,
+    pub lr0: f32,
+}
+
+impl ProxyTrainer {
+    pub fn new(rt: Runtime, seed: u64) -> Result<Self> {
+        let train_batch = rt.manifest.config_usize("TRAIN_BATCH")?;
+        let eval_batch = rt.manifest.config_usize("EVAL_BATCH")?;
+        let datagen = DataGen::new(seed);
+        // Fixed held-out evaluation batch (same for every child).
+        let mut eval_gen = DataGen::new(seed ^ 0xE7A1);
+        let mut eval_x = vec![0.0; eval_batch * IMG * IMG * CHANNELS];
+        let mut eval_y = vec![0; eval_batch];
+        eval_gen.fill_batch(&mut eval_x, &mut eval_y);
+        Ok(ProxyTrainer {
+            rt,
+            space: NasSpace::new(NasSpaceId::Proxy),
+            train_batch,
+            eval_batch,
+            datagen,
+            eval_x,
+            eval_y,
+            steps: 40,
+            lr0: 0.008,
+        })
+    }
+
+    pub fn space(&self) -> &NasSpace {
+        &self.space
+    }
+
+    fn mask_literals(&self, m: &ProxyMasks) -> Result<[xla::Literal; 4]> {
+        let nb = crate::nas::spaces::PROXY_BLOCKS;
+        Ok([
+            lit_f32(&m.opsel, &[nb, 2])?,
+            lit_f32(&m.ksel, &[nb, 3])?,
+            lit_f32(&m.expmask, &[nb, crate::nas::spaces::PROXY_CEXP_MAX])?,
+            lit_f32(&m.outmask, &[nb, crate::nas::spaces::PROXY_CMAX])?,
+        ])
+    }
+
+    /// Multi-trial fidelity: train a fresh child with this decision
+    /// vector for `self.steps` steps; return held-out accuracy.
+    pub fn train_child(&mut self, decisions: &[usize], seed: i32) -> Result<f32> {
+        let masks = self.space.decode_masks(decisions);
+        let ml = self.mask_literals(&masks)?;
+        let init = self.rt.run("supernet_init", &[&lit_i32_scalar(seed)])?;
+        let mut it = init.into_iter();
+        let mut params = it.next().unwrap();
+        let mut m = it.next().unwrap();
+        let mut v = it.next().unwrap();
+
+        let mut x = vec![0.0f32; self.train_batch * IMG * IMG * CHANNELS];
+        let mut y = vec![0i32; self.train_batch];
+        for step in 0..self.steps {
+            self.datagen.fill_batch(&mut x, &mut y);
+            let lr = lr_at(step, self.steps, self.lr0);
+            let xb = lit_f32(&x, &[self.train_batch, IMG, IMG, CHANNELS])?;
+            let yb = lit_i32(&y, &[self.train_batch])?;
+            let out = self.rt.run(
+                "supernet_train",
+                &[
+                    &params,
+                    &m,
+                    &v,
+                    &lit_i32_scalar(step as i32),
+                    &xb,
+                    &yb,
+                    &ml[0],
+                    &ml[1],
+                    &ml[2],
+                    &ml[3],
+                    &lit_f32_scalar(lr),
+                ],
+            )?;
+            let mut it = out.into_iter();
+            params = it.next().unwrap();
+            m = it.next().unwrap();
+            v = it.next().unwrap();
+        }
+        self.eval_params(&params, &ml)
+    }
+
+    fn eval_params(&mut self, params: &xla::Literal, ml: &[xla::Literal; 4]) -> Result<f32> {
+        // (borrowed-literal path: no parameter copies)
+        let xb = lit_f32(&self.eval_x, &[self.eval_batch, IMG, IMG, CHANNELS])?;
+        let yb = lit_i32(&self.eval_y, &[self.eval_batch])?;
+        let out = self.rt.run(
+            "supernet_eval",
+            &[params, &xb, &yb, &ml[0], &ml[1], &ml[2], &ml[3]],
+        )?;
+        scalar_f32(&out[1])
+    }
+
+    /// Start a persistent shared-weight supernet (oneshot mode).
+    pub fn init_supernet(&mut self, seed: i32) -> Result<SupernetState> {
+        let init = self.rt.run("supernet_init", &[&lit_i32_scalar(seed)])?;
+        let mut it = init.into_iter();
+        Ok(SupernetState {
+            params: it.next().unwrap(),
+            m: it.next().unwrap(),
+            v: it.next().unwrap(),
+            steps_done: 0,
+        })
+    }
+
+    /// One shared-weight training step under the given masks. Returns
+    /// (train loss, train accuracy) of the sampled subnetwork.
+    pub fn supernet_step(
+        &mut self,
+        st: &mut SupernetState,
+        decisions: &[usize],
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let masks = self.space.decode_masks(decisions);
+        let ml = self.mask_literals(&masks)?;
+        let mut x = vec![0.0f32; self.train_batch * IMG * IMG * CHANNELS];
+        let mut y = vec![0i32; self.train_batch];
+        self.datagen.fill_batch(&mut x, &mut y);
+        let xb = lit_f32(&x, &[self.train_batch, IMG, IMG, CHANNELS])?;
+        let yb = lit_i32(&y, &[self.train_batch])?;
+        let out = self.rt.run(
+            "supernet_train",
+            &[
+                &st.params,
+                &st.m,
+                &st.v,
+                &lit_i32_scalar(st.steps_done as i32),
+                &xb,
+                &yb,
+                &ml[0],
+                &ml[1],
+                &ml[2],
+                &ml[3],
+                &lit_f32_scalar(lr),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        st.params = it.next().unwrap();
+        st.m = it.next().unwrap();
+        st.v = it.next().unwrap();
+        st.steps_done += 1;
+        let loss = scalar_f32(&it.next().unwrap())?;
+        let acc = scalar_f32(&it.next().unwrap())?;
+        Ok((loss, acc))
+    }
+
+    /// Held-out accuracy of one subnetwork under shared weights.
+    pub fn supernet_eval(&mut self, st: &SupernetState, decisions: &[usize]) -> Result<f32> {
+        let masks = self.space.decode_masks(decisions);
+        let ml = self.mask_literals(&masks)?;
+        self.eval_params(&st.params, &ml)
+    }
+}
+
+/// Persistent shared weights of the oneshot supernet.
+pub struct SupernetState {
+    params: xla::Literal,
+    m: xla::Literal,
+    v: xla::Literal,
+    pub steps_done: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_warms_up_then_decays() {
+        let total = 30;
+        assert!(lr_at(0, total, 0.1) < 0.04);
+        let peak = lr_at(total / 5, total, 0.1);
+        assert!(peak > 0.09, "peak {peak}");
+        assert!(lr_at(total - 1, total, 0.1) < 0.01);
+        // Monotone up then down.
+        for s in 1..(total / 5) {
+            assert!(lr_at(s, total, 0.1) >= lr_at(s - 1, total, 0.1));
+        }
+        for s in (total / 5 + 1)..total {
+            assert!(lr_at(s, total, 0.1) <= lr_at(s - 1, total, 0.1));
+        }
+    }
+}

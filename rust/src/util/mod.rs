@@ -1,0 +1,11 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline with only the `xla` dependency tree
+//! vendored, so the PRNG, JSON handling and property-testing helpers that
+//! would normally come from `rand` / `serde_json` / `proptest` live here.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use rng::Rng;

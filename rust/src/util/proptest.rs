@@ -1,0 +1,51 @@
+//! Lightweight property-testing harness (offline build: the `proptest`
+//! crate is not vendored, so coordinator invariants are checked with this
+//! seeded-random driver instead — same spirit: many random cases, a
+//! deterministic failure seed printed on the first counterexample).
+
+use super::rng::Rng;
+
+/// Default number of random cases per property.
+pub const CASES: usize = 256;
+
+/// Run `prop` on `cases` seeded random inputs produced by `gen`.
+/// On failure, panics with the reproducing seed and a debug dump.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (seed {seed:#x}, case {case}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("abs-nonneg", 64, |r| r.normal(), |x| {
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_counterexample() {
+        check("always-fails", 4, |r| r.below(10), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,133 @@
+//! Integration over the AOT artifacts + PJRT runtime (the L3-L2-L1
+//! seam). Skipped gracefully when `artifacts/` has not been built.
+
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::runtime::{lit_f32, to_vec_f32, Runtime};
+use nahas::trainer::ProxyTrainer;
+use nahas::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn quickstart_matmul_matches_host() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let a: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+    let out = rt
+        .run(
+            "quickstart_matmul",
+            &[&lit_f32(&a, &[16, 16]).unwrap(), &lit_f32(&b, &[16, 16]).unwrap()],
+        )
+        .unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+    for i in 0..16 {
+        for j in 0..16 {
+            let mut want = 0.0f32;
+            for k in 0..16 {
+                want += a[i * 16 + k] * b[k * 16 + j];
+            }
+            assert!(
+                (got[i * 16 + j] - want).abs() < 1e-3,
+                "pallas [{i},{j}] {} vs host {want}",
+                got[i * 16 + j]
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_signature_validation_rejects_bad_inputs() {
+    let Some(mut rt) = runtime() else { return };
+    // Wrong arity.
+    assert!(rt.run("quickstart_matmul", &[]).is_err());
+    // Wrong shape.
+    let bad = lit_f32(&vec![0.0; 4], &[2, 2]).unwrap();
+    let ok = lit_f32(&vec![0.0; 256], &[16, 16]).unwrap();
+    assert!(rt.run("quickstart_matmul", &[&bad, &ok]).is_err());
+    // Unknown program.
+    let a = lit_f32(&vec![0.0; 256], &[16, 16]).unwrap();
+    let b = lit_f32(&vec![0.0; 256], &[16, 16]).unwrap();
+    assert!(rt.run("nonexistent", &[&a, &b]).is_err());
+}
+
+#[test]
+fn no_artifact_contains_elided_constants() {
+    // The silent-zero failure mode of the HLO-text interchange (see
+    // model.py kernel_mask): guard every shipped artifact.
+    let dir = Runtime::default_dir();
+    if !dir.exists() {
+        return;
+    }
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "txt").unwrap_or(false) {
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert!(
+                !text.contains("constant({...})"),
+                "{path:?} contains an elided constant (would execute as zeros)"
+            );
+        }
+    }
+}
+
+#[test]
+fn child_training_learns_above_chance() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer = ProxyTrainer::new(rt, 5).unwrap();
+    trainer.steps = 40;
+    let space = NasSpace::new(NasSpaceId::Proxy);
+    // A mid-size child: IBN, k=5, exp=6, filter 1.0 everywhere.
+    let d: Vec<usize> = (0..space.blocks.len()).flat_map(|_| [1usize, 1, 0, 2]).collect();
+    let acc = trainer.train_child(&d, 11).unwrap();
+    // Chance is 1/16 = 0.0625 on the 16-class proxy task.
+    assert!(acc > 0.15, "trained child accuracy {acc} not above chance");
+}
+
+#[test]
+fn supernet_oneshot_step_and_eval_consistent() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer = ProxyTrainer::new(rt, 6).unwrap();
+    let mut st = trainer.init_supernet(1).unwrap();
+    let space = NasSpace::new(NasSpaceId::Proxy);
+    let mut rng = Rng::new(8);
+    let d = space.random(&mut rng);
+    for _ in 0..3 {
+        let (loss, acc) = trainer.supernet_step(&mut st, &d, 0.005).unwrap();
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+    }
+    let e1 = trainer.supernet_eval(&st, &d).unwrap();
+    let e2 = trainer.supernet_eval(&st, &d).unwrap();
+    assert_eq!(e1, e2, "eval must be deterministic for fixed weights+masks");
+}
+
+#[test]
+fn costmodel_roundtrip_learns() {
+    let Some(mut rt) = runtime() else { return };
+    use nahas::costmodel::{generate_dataset, CostModel};
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let mut rng = Rng::new(9);
+    let (data, norm) = generate_dataset(&space, 512, &mut rng);
+    let mut cm = CostModel::init(&mut rt, norm, 1).unwrap();
+    let losses = cm.train(&mut rt, &data, 120, &mut rng).unwrap();
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.5),
+        "cost model loss {} -> {}",
+        losses[0],
+        losses.last().unwrap()
+    );
+    // Predictions in a sane physical range.
+    let feats: Vec<Vec<f32>> = data[..16].iter().map(|s| s.features.clone()).collect();
+    let preds = cm.predict(&mut rt, &feats).unwrap();
+    for (lat, area) in preds {
+        assert!(lat > 1e-3 && lat < 100.0, "latency {lat}");
+        assert!(area > 5.0 && area < 1000.0, "area {area}");
+    }
+}

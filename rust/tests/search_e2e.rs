@@ -1,0 +1,133 @@
+//! End-to-end search integration: every driver x space x objective
+//! combination produces sane outcomes, and the paper's qualitative
+//! claims hold at test-sized budgets.
+
+use nahas::has::{validate, HasSpace};
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::evolution::EvolutionController;
+use nahas::search::joint::JointLayout;
+use nahas::search::phase::phase_search;
+use nahas::search::ppo::PpoController;
+use nahas::search::reinforce::ReinforceController;
+use nahas::search::{
+    joint_search, Controller, RandomController, RewardCfg, SearchCfg, SurrogateSim,
+};
+
+fn run_search(
+    id: NasSpaceId,
+    reward: RewardCfg,
+    controller: &str,
+    samples: usize,
+    seed: u64,
+) -> nahas::search::SearchOutcome {
+    let space = NasSpace::new(id);
+    let has = HasSpace::new();
+    let (cards, layout) = JointLayout::cards(&space, &has);
+    let mut ctl: Box<dyn Controller> = match controller {
+        "ppo" => Box::new(PpoController::new(&cards)),
+        "reinforce" => Box::new(ReinforceController::new(&cards)),
+        "evolution" => Box::new(EvolutionController::new(cards)),
+        _ => Box::new(RandomController::new(cards)),
+    };
+    let mut ev = SurrogateSim::new(space, seed);
+    let cfg = SearchCfg::new(samples, reward, seed);
+    joint_search(&mut ev, ctl.as_mut(), &layout, None, None, &cfg)
+}
+
+#[test]
+fn every_controller_finds_feasible_points_in_every_space() {
+    for id in [NasSpaceId::MobileNetV2, NasSpaceId::EfficientNet, NasSpaceId::Evolved] {
+        for controller in ["ppo", "reinforce", "evolution", "random"] {
+            let out = run_search(id, RewardCfg::latency(0.8), controller, 300, 5);
+            let best = out
+                .best_feasible
+                .unwrap_or_else(|| panic!("{controller} on {id:?}: no feasible sample"));
+            assert!(best.result.latency_ms <= 0.8);
+            assert!(best.result.acc > 0.5);
+            // The winning hardware is statically valid.
+            let has = HasSpace::new();
+            assert!(validate(&has.decode(&best.has_d)).is_ok());
+        }
+    }
+}
+
+#[test]
+fn energy_driven_search_meets_energy_target() {
+    let out = run_search(NasSpaceId::Evolved, RewardCfg::energy(1.0), "ppo", 600, 6);
+    let best = out.best_feasible.expect("feasible");
+    assert!(best.result.energy_mj <= 1.0, "{:?}", best.result);
+}
+
+#[test]
+fn tighter_target_forces_smaller_models() {
+    let loose = run_search(NasSpaceId::EfficientNet, RewardCfg::latency(1.0), "ppo", 600, 7);
+    let tight = run_search(NasSpaceId::EfficientNet, RewardCfg::latency(0.3), "ppo", 600, 7);
+    let l = loose.best_feasible.unwrap();
+    let t = tight.best_feasible.unwrap();
+    assert!(t.result.latency_ms < l.result.latency_ms);
+    assert!(t.result.acc <= l.result.acc + 0.001, "loose target must not lose accuracy");
+}
+
+#[test]
+fn phase_search_end_to_end() {
+    let space = NasSpace::new(NasSpaceId::Evolved);
+    let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::Evolved), 8);
+    // A realistic (B0-like) initial architecture: scale B1, k=3, exp=6,
+    // IBN, filter 1.0 — phase 1 sizes the accelerator for THIS network.
+    let mut initial = vec![0usize; space.num_decisions()];
+    initial[0] = 1; // compound scale
+    for b in 0..space.blocks.len() {
+        initial[1 + b * 5 + 1] = 1; // expansion 6
+        initial[1 + b * 5 + 3] = 2; // filter x1.0
+    }
+    let cfg = SearchCfg::new(800, RewardCfg::latency(1.0), 8);
+    let out = phase_search(&mut ev, &space, &initial, &cfg);
+    assert_eq!(out.selected_hw.len(), 7);
+    assert!(out.has_phase.best.is_some());
+    assert!(out.nas_phase.best_feasible.is_some());
+}
+
+#[test]
+fn phase_search_with_degenerate_initial_arch_collapses() {
+    // The paper's Fig. 9 finding — "the initial neural architecture
+    // creates a large variance in search quality" — at its extreme: a
+    // minimal initial arch makes phase 1 pick a tiny chip that phase 2
+    // cannot then fit real models onto.
+    let space = NasSpace::new(NasSpaceId::Evolved);
+    let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::Evolved), 8);
+    let initial = vec![0; space.num_decisions()];
+    let cfg = SearchCfg::new(800, RewardCfg::latency(1.0), 8);
+    let out = phase_search(&mut ev, &space, &initial, &cfg);
+    let feasible_acc =
+        out.nas_phase.best_feasible.map(|b| b.result.acc).unwrap_or(0.0);
+    assert!(
+        feasible_acc < 0.76,
+        "degenerate initial arch should cap phase-search quality (got {feasible_acc})"
+    );
+}
+
+#[test]
+fn history_replay_is_deterministic() {
+    let a = run_search(NasSpaceId::EfficientNet, RewardCfg::latency(0.5), "ppo", 200, 123);
+    let b = run_search(NasSpaceId::EfficientNet, RewardCfg::latency(0.5), "ppo", 200, 123);
+    assert_eq!(a.history.len(), b.history.len());
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(x.nas_d, y.nas_d);
+        assert_eq!(x.has_d, y.has_d);
+        assert_eq!(x.reward, y.reward);
+    }
+}
+
+#[test]
+fn segmentation_objective_search() {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let (cards, layout) = JointLayout::cards(&space, &has);
+    let mut ev = SurrogateSim::new(space, 9).segmentation();
+    let mut ctl = PpoController::new(&cards);
+    let cfg = SearchCfg::new(400, RewardCfg::latency(3.5), 9);
+    let out = joint_search(&mut ev, &mut ctl, &layout, None, None, &cfg);
+    let best = out.best_feasible.expect("feasible seg design");
+    assert!((0.5..0.85).contains(&best.result.acc), "mIOU fraction {:?}", best.result.acc);
+    assert!(best.result.latency_ms <= 3.5);
+}
