@@ -1,0 +1,110 @@
+//! §Perf — batched evaluation throughput: worker scaling of
+//! [`ParallelSim`] over the `SurrogateSim` sweep, memo-cache hit
+//! throughput, end-to-end batched `joint_search`, and the parallel
+//! service clients. The headline number is the 8-worker speedup over
+//! the serial evaluator on one fixed 512-sample batch (target: >= 2x
+//! on a machine with >= 4 cores; see ISSUE acceptance).
+
+use std::time::Instant;
+
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::joint::JointLayout;
+use nahas::search::ppo::PpoController;
+use nahas::search::{
+    joint_search, Evaluator, ParallelSim, RewardCfg, SearchCfg, SurrogateSim,
+};
+use nahas::service::{Server, ServiceEvaluator};
+use nahas::util::Rng;
+
+const BATCH: usize = 512;
+
+fn s2() -> NasSpace {
+    NasSpace::new(NasSpaceId::EfficientNet)
+}
+
+fn fixed_batch() -> Vec<(Vec<usize>, Vec<usize>)> {
+    let space = s2();
+    let has = HasSpace::new();
+    let mut rng = Rng::new(3);
+    (0..BATCH).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect()
+}
+
+fn time_batch(ev: &mut dyn Evaluator, batch: &[(Vec<usize>, Vec<usize>)]) -> (f64, usize) {
+    let t0 = Instant::now();
+    let results = ev.evaluate_batch(batch);
+    let dt = t0.elapsed().as_secs_f64();
+    (batch.len() as f64 / dt, results.iter().filter(|r| r.valid).count())
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("batched evaluation sweep: {BATCH} samples, {cores} cores available\n");
+    let batch = fixed_batch();
+
+    // Serial baseline (the trait's default evaluate_batch loop).
+    let mut serial = SurrogateSim::new(s2(), 3);
+    let (serial_tput, serial_valid) = time_batch(&mut serial, &batch);
+    println!("  SurrogateSim serial      {serial_tput:>8.0} samples/s  (1.00x)");
+
+    // Worker scaling (fresh evaluator per row: cold cache each time).
+    for workers in [2usize, 4, 8] {
+        let mut par = ParallelSim::new(s2(), 3, workers);
+        let (tput, valid) = time_batch(&mut par, &batch);
+        assert_eq!(valid, serial_valid, "parallel result set diverged from serial");
+        println!(
+            "  ParallelSim workers={workers}    {tput:>8.0} samples/s  ({:.2}x)",
+            tput / serial_tput
+        );
+        if workers == 8 && cores >= 4 && tput / serial_tput < 2.0 {
+            println!("    !! expected >= 2x at 8 workers on a >= 4-core machine");
+        }
+    }
+
+    // Memo-cache throughput: replay the identical batch on a warm cache.
+    let mut warm = ParallelSim::new(s2(), 3, 8);
+    let _ = warm.evaluate_batch(&batch);
+    let (hit_tput, _) = time_batch(&mut warm, &batch);
+    let st = warm.stats();
+    println!(
+        "  memo-cache replay        {hit_tput:>8.0} samples/s  ({:.2}x, {} hits / {} reqs)\n",
+        hit_tput / serial_tput,
+        st.cache_hits,
+        st.requests
+    );
+
+    // End-to-end: the batch-structured joint_search driver, serial vs
+    // 8 workers (PPO resamples as it converges, so the cache also
+    // contributes here).
+    let has = HasSpace::new();
+    let (cards, layout) = JointLayout::cards(&s2(), &has);
+    let cfg = SearchCfg::new(600, RewardCfg::latency(0.4), 7);
+
+    let mut ev = SurrogateSim::new(s2(), 7);
+    let mut ctl = PpoController::new(&cards);
+    let out = joint_search(&mut ev, &mut ctl, &layout, None, None, &cfg);
+    let base = out.samples_per_s();
+    println!("  joint_search serial      {base:>8.0} samples/s  (1.00x)");
+
+    let mut ev = ParallelSim::new(s2(), 7, 8);
+    let mut ctl = PpoController::new(&cards);
+    let out = joint_search(&mut ev, &mut ctl, &layout, None, None, &cfg);
+    println!(
+        "  joint_search workers=8   {:>8.0} samples/s  ({:.2}x, {:.0}% cache hits)\n",
+        out.samples_per_s(),
+        out.samples_per_s() / base,
+        out.eval_stats.hit_rate() * 100.0
+    );
+
+    // Parallel service clients (paper §4.1) against an in-process server.
+    let server = Server::spawn("127.0.0.1:0").expect("spawn simulator service");
+    for workers in [1usize, 8] {
+        let mut remote =
+            ServiceEvaluator::connect(&server.addr.to_string(), NasSpaceId::EfficientNet, 3, workers)
+                .expect("connect service clients");
+        let (tput, valid) = time_batch(&mut remote, &batch);
+        assert_eq!(valid, serial_valid, "service result set diverged from local");
+        println!("  ServiceEvaluator x{workers:<2}      {tput:>8.0} samples/s");
+    }
+    server.stop();
+}

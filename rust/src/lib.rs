@@ -17,6 +17,35 @@
 //!
 //! Python never runs on the search path: the L3 binary loads the HLO
 //! artifacts through PJRT (`runtime`) and owns every loop.
+//!
+//! # Evaluation architecture
+//!
+//! Search throughput is bounded by evaluation (paper §4.1 deploys the
+//! estimators "as a service where multiple NAHAS clients can send
+//! parallel requests"), so every search driver is batch-structured: a
+//! full controller batch is sampled up front, evaluated in one
+//! [`search::Evaluator::evaluate_batch`] call, and rewarded/applied in
+//! sample order — **bit-identical to the serial path for the same
+//! seed**, whatever the evaluator. Three fan-out tiers implement the
+//! trait:
+//!
+//! * **local** — [`search::SurrogateSim`] (also `TrainedEval`,
+//!   `CostModelEval`): the trait's default serial loop;
+//! * **parallel** — [`search::ParallelSim`]: a joint-decision memo
+//!   cache ([`search::MemoCache`], dedups the controller's repeat
+//!   samples) in front of `std::thread::scope` workers;
+//! * **service** — [`service::ServiceEvaluator`]: one TCP connection
+//!   per worker against a `nahas serve` simulator farm — the paper's
+//!   parallel clients made literal.
+//!
+//! CLI: `--evaluator local|parallel|service --workers N` on `search` /
+//! `phase` (workers default to the machine's parallelism; `--remote
+//! ADDR` selects the service tier). Pick `parallel` on one box — the
+//! evaluation is compute-bound and scales with cores until the batch
+//! size (`SearchCfg::batch`) caps it; pick `service` to share one
+//! simulator farm between searches, sized so `workers` is at most the
+//! farm's thread budget. Cache-hit and throughput counters come back
+//! in `SearchOutcome::eval_stats`.
 
 pub mod accel;
 pub mod bench;

@@ -29,10 +29,10 @@ use nahas::search::phase::phase_search;
 use nahas::search::ppo::PpoController;
 use nahas::search::reinforce::ReinforceController;
 use nahas::search::{
-    evolution::EvolutionController, joint_search, Controller, RandomController, RewardCfg,
-    SearchCfg, SurrogateSim,
+    evolution::EvolutionController, joint_search, Controller, Evaluator, ParallelSim,
+    RandomController, RewardCfg, SearchCfg, SurrogateSim,
 };
-use nahas::service::{RemoteEval, Server};
+use nahas::service::{Server, ServiceEvaluator};
 use nahas::trainer::ProxyTrainer;
 use nahas::util::Rng;
 
@@ -96,6 +96,78 @@ fn space_arg(flags: &Flags) -> Result<NasSpace> {
     Ok(NasSpace::new(id))
 }
 
+/// `--workers N`: evaluation fan-out (defaults to the machine's
+/// available parallelism).
+fn workers_arg(flags: &Flags) -> Result<usize> {
+    let default = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    Ok(flags.usize("workers", default)?.max(1))
+}
+
+/// `--evaluator local|parallel|service` (+ `--workers`, `--seg`,
+/// `--remote ADDR`). `--remote` without `--evaluator` implies the
+/// batched service client, preserving the old flag's meaning.
+/// `batch` is the controller batch size — the most samples one
+/// `evaluate_batch` call can carry, so service connections beyond it
+/// could never be used.
+fn evaluator_arg(
+    flags: &Flags,
+    space: NasSpace,
+    seed: u64,
+    batch: usize,
+) -> Result<Box<dyn Evaluator>> {
+    let workers = workers_arg(flags)?;
+    let seg = flags.bool("seg");
+    let kind = flags
+        .get("evaluator")
+        .unwrap_or(if flags.get("remote").is_some() { "service" } else { "local" });
+    if kind != "service" && flags.get("remote").is_some() {
+        bail!("--remote is only used by the service tier; drop it or pass --evaluator service");
+    }
+    Ok(match kind {
+        "local" => {
+            let mut ev = SurrogateSim::new(space, seed);
+            if seg {
+                ev = ev.segmentation();
+            }
+            Box::new(ev)
+        }
+        "parallel" => {
+            let mut ev = ParallelSim::new(space, seed, workers);
+            if seg {
+                ev = ev.segmentation();
+            }
+            Box::new(ev)
+        }
+        "service" => {
+            let addr = flags
+                .get("remote")
+                .ok_or_else(|| anyhow!("--evaluator service requires --remote ADDR"))?;
+            let conns = workers.min(batch.max(1));
+            let mut ev = ServiceEvaluator::connect(addr, space.id, seed, conns)?;
+            if seg {
+                ev = ev.segmentation();
+            }
+            Box::new(ev)
+        }
+        other => bail!("unknown evaluator '{other}' (local|parallel|service)"),
+    })
+}
+
+fn print_eval_stats(out: &nahas::search::SearchOutcome) {
+    let st = out.eval_stats;
+    // Only interesting for caching evaluators; the local tier's
+    // requests == evals and the samples/s already printed say it all.
+    if st.cache_hits > 0 {
+        println!(
+            "evaluator: {} requests -> {} evals, {} cache hits ({:.0}% hit rate)",
+            st.requests,
+            st.evals,
+            st.cache_hits,
+            st.hit_rate() * 100.0,
+        );
+    }
+}
+
 fn reward_arg(flags: &Flags) -> Result<RewardCfg> {
     let mut r = if let Some(e) = flags.get("target-mj") {
         RewardCfg::energy(e.parse().context("--target-mj")?)
@@ -140,8 +212,10 @@ fn print_usage() {
          \x20 search       [--space s2 --samples 500 --target-ms 0.5 | --target-mj 1.0]\n\
          \x20              [--controller ppo|random|evolution|reinforce --fixed-hw]\n\
          \x20              [--mode hard|soft --seg --seed S --out results/search.csv]\n\
+         \x20              [--evaluator local|parallel|service --workers N --batch 16]\n\
 \x20              [--remote ADDR   use a `nahas serve` simulator service]\n\
          \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
+         \x20              [--evaluator local|parallel --workers N --batch 16]\n\
          \x20 oneshot      [--warmup 60 --steps 200 --target-ms 0.02 --seed S]\n\
          \x20 train-child  [--steps 30 --seed S]\n\
          \x20 costmodel    [--data 2000 --train-steps 600 --eval 256 --space s2]\n\
@@ -229,7 +303,8 @@ fn cmd_search(flags: &Flags) -> Result<()> {
     let (cards, layout) = JointLayout::cards(&space, &has);
     let reward = reward_arg(flags)?;
     let seed = flags.u64("seed", 0)?;
-    let cfg = SearchCfg::new(flags.usize("samples", 500)?, reward, seed);
+    let mut cfg = SearchCfg::new(flags.usize("samples", 500)?, reward, seed);
+    cfg.batch = flags.usize("batch", cfg.batch)?.max(1);
     let fixed_hw = flags.bool("fixed-hw").then(|| has.baseline_decisions());
     let free_cards = if fixed_hw.is_some() { cards[..layout.nas_len].to_vec() } else { cards };
 
@@ -240,26 +315,17 @@ fn cmd_search(flags: &Flags) -> Result<()> {
         "reinforce" => Box::new(ReinforceController::new(&free_cards)),
         other => bail!("unknown controller '{other}'"),
     };
-    let t0 = std::time::Instant::now();
-    let out = if let Some(addr) = flags.get("remote") {
-        // Hardware metrics served by a remote `nahas serve` simulator.
-        let mut ev = RemoteEval::connect(addr, space.id, seed)?;
-        joint_search(&mut ev, controller.as_mut(), &layout, fixed_hw.as_deref(), None, &cfg)
-    } else {
-        let mut ev = SurrogateSim::new(space, seed);
-        if flags.bool("seg") {
-            ev = ev.segmentation();
-        }
-        joint_search(&mut ev, controller.as_mut(), &layout, fixed_hw.as_deref(), None, &cfg)
-    };
-    let dt = t0.elapsed().as_secs_f64();
+    let mut ev = evaluator_arg(flags, space, seed, cfg.batch)?;
+    let out =
+        joint_search(ev.as_mut(), controller.as_mut(), &layout, fixed_hw.as_deref(), None, &cfg);
     println!(
         "search done: {} samples in {:.2}s ({:.0} samples/s), {} invalid",
         cfg.samples,
-        dt,
-        cfg.samples as f64 / dt,
+        out.elapsed_s,
+        out.samples_per_s(),
         out.num_invalid
     );
+    print_eval_stats(&out);
     if let Some(b) = &out.best_feasible {
         println!(
             "best feasible: acc {:.2}% lat {:.3}ms energy {:.3}mJ area {:.1}mm2",
@@ -283,10 +349,11 @@ fn cmd_search(flags: &Flags) -> Result<()> {
 fn cmd_phase(flags: &Flags) -> Result<()> {
     let space = space_arg(flags)?;
     let seed = flags.u64("seed", 0)?;
-    let cfg = SearchCfg::new(flags.usize("samples", 500)?, reward_arg(flags)?, seed);
-    let mut ev = SurrogateSim::new(space.clone(), seed);
+    let mut cfg = SearchCfg::new(flags.usize("samples", 500)?, reward_arg(flags)?, seed);
+    cfg.batch = flags.usize("batch", cfg.batch)?.max(1);
+    let mut ev = evaluator_arg(flags, space.clone(), seed, cfg.batch)?;
     let initial = vec![0; space.num_decisions()];
-    let out = phase_search(&mut ev, &space, &initial, &cfg);
+    let out = phase_search(ev.as_mut(), &space, &initial, &cfg);
     println!("phase 1 selected hw: {:?}", out.selected_hw);
     match &out.nas_phase.best_feasible {
         Some(b) => println!(
@@ -296,6 +363,7 @@ fn cmd_phase(flags: &Flags) -> Result<()> {
         ),
         None => println!("phase 2 found no feasible sample"),
     }
+    print_eval_stats(&out.nas_phase);
     Ok(())
 }
 
@@ -322,6 +390,12 @@ fn cmd_oneshot(flags: &Flags) -> Result<()> {
     );
     println!("  nas = {:?}", out.best_nas);
     println!("  hw  = {:?}", out.best_has);
+    println!(
+        "  oracle: {} queries -> {} evals ({} memo hits)",
+        out.oracle_requests,
+        out.oracle_evals,
+        out.oracle_requests - out.oracle_evals
+    );
     Ok(())
 }
 

@@ -46,8 +46,84 @@ pub enum Task {
     Segmentation,
 }
 
+/// Throughput counters an evaluator can expose (reported in
+/// `SearchOutcome` and by the CLI). `requests` counts samples asked
+/// for, `evals` the evaluations actually performed — the gap is
+/// `cache_hits` (deduped repeat samples from the controller).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    pub requests: usize,
+    pub evals: usize,
+    pub cache_hits: usize,
+    pub invalid: usize,
+}
+
+impl EvalStats {
+    /// Fraction of requests served from the memo cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.requests as f64
+        }
+    }
+
+    /// Counter delta `self - earlier`. [`Evaluator::stats`] counters
+    /// are cumulative since construction, so per-search reporting over
+    /// a shared evaluator (e.g. the two phases of
+    /// [`crate::search::phase::phase_search`]) subtracts a snapshot
+    /// taken when the search started.
+    pub fn since(&self, earlier: &EvalStats) -> EvalStats {
+        EvalStats {
+            requests: self.requests.saturating_sub(earlier.requests),
+            evals: self.evals.saturating_sub(earlier.evals),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            invalid: self.invalid.saturating_sub(earlier.invalid),
+        }
+    }
+}
+
+/// Shared request/eval/invalid bookkeeping for the caching evaluators
+/// ([`crate::search::ParallelSim`], [`crate::service::ServiceEvaluator`]);
+/// `cache_hits` is derived, keeping the two tiers' accounting identical
+/// by construction.
+#[derive(Debug, Default)]
+pub(crate) struct EvalCounters {
+    pub(crate) requests: usize,
+    pub(crate) evals: usize,
+    pub(crate) invalid: usize,
+}
+
+impl EvalCounters {
+    pub(crate) fn stats(&self) -> EvalStats {
+        EvalStats {
+            requests: self.requests,
+            evals: self.evals,
+            cache_hits: self.requests - self.evals,
+            invalid: self.invalid,
+        }
+    }
+}
+
 pub trait Evaluator {
     fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult;
+
+    /// Evaluate a whole controller batch. The default is the serial
+    /// loop (result order == batch order); implementations like
+    /// [`crate::search::ParallelSim`] and
+    /// [`crate::service::ServiceEvaluator`] fan the batch out over
+    /// worker threads / parallel service requests. Every
+    /// implementation must return results **bit-identical** to the
+    /// serial path: the search drivers rely on that for seed-stable
+    /// replays.
+    fn evaluate_batch(&mut self, batch: &[(Vec<usize>, Vec<usize>)]) -> Vec<EvalResult> {
+        batch.iter().map(|(nas_d, has_d)| self.evaluate(nas_d, has_d)).collect()
+    }
+
+    /// Counters for throughput/cache reporting (zeroes by default).
+    fn stats(&self) -> EvalStats {
+        EvalStats::default()
+    }
 }
 
 /// Simulator + surrogate-accuracy evaluator.
@@ -93,22 +169,29 @@ impl SurrogateSim {
             _ => surrogate::imagenet_accuracy(net, self.seed) / 100.0,
         }
     }
-}
 
-impl Evaluator for SurrogateSim {
-    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
-        self.eval_count += 1;
+    /// The accuracy half of an evaluation (decode + task dispatch,
+    /// including the segmentation variant). The remote tiers get
+    /// hardware metrics from the simulator service but fill accuracy
+    /// through this exact method, so local and remote accuracy can
+    /// never diverge.
+    pub fn accuracy_of(&self, nas_d: &[usize]) -> f64 {
+        self.accuracy(&self.network(nas_d))
+    }
+
+    /// The pure (`&self`, counter-free) evaluation: everything here is
+    /// a deterministic function of (space, task, seed, nas_d, has_d),
+    /// which is what lets [`crate::search::ParallelSim`] call it from
+    /// scoped worker threads and still match the serial path bit for
+    /// bit.
+    pub fn evaluate_pure(&self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
         let cfg = self.has.decode(has_d);
         if validate(&cfg).is_err() {
-            self.invalid_count += 1;
             return EvalResult::invalid();
         }
         let net = self.network(nas_d);
         match simulate_network(&cfg, &net) {
-            Err(_) => {
-                self.invalid_count += 1;
-                EvalResult::invalid()
-            }
+            Err(_) => EvalResult::invalid(),
             Ok(rep) => EvalResult {
                 acc: self.accuracy(&net),
                 latency_ms: rep.latency_ms,
@@ -116,6 +199,26 @@ impl Evaluator for SurrogateSim {
                 area_mm2: rep.area_mm2,
                 valid: true,
             },
+        }
+    }
+}
+
+impl Evaluator for SurrogateSim {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        self.eval_count += 1;
+        let r = self.evaluate_pure(nas_d, has_d);
+        if !r.valid {
+            self.invalid_count += 1;
+        }
+        r
+    }
+
+    fn stats(&self) -> EvalStats {
+        EvalStats {
+            requests: self.eval_count,
+            evals: self.eval_count,
+            cache_hits: 0,
+            invalid: self.invalid_count,
         }
     }
 }

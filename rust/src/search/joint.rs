@@ -47,9 +47,22 @@ pub struct SearchOutcome {
     /// Best among *feasible* samples (meeting both constraints).
     pub best_feasible: Option<Sample>,
     pub num_invalid: usize,
+    /// Evaluator-side counters (cache hits, actual evaluations).
+    pub eval_stats: crate::search::evaluator::EvalStats,
+    /// Wall-clock of the search loop, for throughput reporting.
+    pub elapsed_s: f64,
 }
 
 impl SearchOutcome {
+    /// End-to-end sample throughput of the finished search.
+    pub fn samples_per_s(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.history.len().max(self.eval_stats.requests) as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
     fn consider(&mut self, s: &Sample, reward_cfg: &RewardCfg) {
         if !s.result.valid {
             self.num_invalid += 1;
@@ -91,6 +104,15 @@ impl JointLayout {
 /// Run a multi-trial search. `has_fixed` pins the hardware (platform-
 /// aware NAS); `nas_fixed` pins the architecture (pure HAS). The
 /// controller must be sized for the *free* decisions only.
+///
+/// The loop is batch-structured: a full PPO batch (`cfg.batch`) is
+/// sampled up front, evaluated in one [`Evaluator::evaluate_batch`]
+/// call (which parallel/remote evaluators fan out), and then rewarded
+/// and applied **in sample order**. Because all `cfg.batch` samples
+/// were always drawn from the same policy before any update (the
+/// serial loop only updated once a batch filled), this produces
+/// bit-identical trajectories to the historical one-at-a-time driver
+/// for the same seed.
 pub fn joint_search(
     evaluator: &mut dyn Evaluator,
     controller: &mut dyn Controller,
@@ -99,37 +121,54 @@ pub fn joint_search(
     nas_fixed: Option<&[usize]>,
     cfg: &SearchCfg,
 ) -> SearchOutcome {
+    let t0 = std::time::Instant::now();
     let mut rng = Rng::new(cfg.seed);
     let mut outcome = SearchOutcome::default();
-    let mut batch: Vec<(Vec<usize>, f64)> = Vec::with_capacity(cfg.batch);
+    let batch_size = cfg.batch.max(1);
+    // Evaluator counters are cumulative; report this search's delta.
+    let stats_at_start = evaluator.stats();
 
-    for index in 0..cfg.samples {
-        let free = controller.sample(&mut rng);
-        let (nas_d, has_d): (Vec<usize>, Vec<usize>) = match (has_fixed, nas_fixed) {
-            (Some(h), None) => (free.clone(), h.to_vec()),
-            (None, Some(n)) => (n.to_vec(), free.clone()),
-            (None, None) => {
-                let (n, h) = layout.split(&free);
-                (n.to_vec(), h.to_vec())
+    let mut index = 0;
+    while index < cfg.samples {
+        let n = batch_size.min(cfg.samples - index);
+        // 1. Sample the whole batch from the current policy.
+        let mut frees: Vec<Vec<usize>> = Vec::with_capacity(n);
+        let mut pairs: Vec<(Vec<usize>, Vec<usize>)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let free = controller.sample(&mut rng);
+            let (nas_d, has_d): (Vec<usize>, Vec<usize>) = match (has_fixed, nas_fixed) {
+                (Some(h), None) => (free.clone(), h.to_vec()),
+                (None, Some(n)) => (n.to_vec(), free.clone()),
+                (None, None) => {
+                    let (n, h) = layout.split(&free);
+                    (n.to_vec(), h.to_vec())
+                }
+                (Some(_), Some(_)) => panic!("cannot fix both halves"),
+            };
+            frees.push(free);
+            pairs.push((nas_d, has_d));
+        }
+        // 2. Evaluate it in one call (parallel evaluators fan out here).
+        let results = evaluator.evaluate_batch(&pairs);
+        // Hard assert: a short result vector would silently drop the
+        // tail samples from rewards/history in a zip.
+        assert_eq!(results.len(), n, "evaluate_batch must preserve batch length");
+        // 3. Reward + record in sample order, then one controller update.
+        let mut batch: Vec<(Vec<usize>, f64)> = Vec::with_capacity(n);
+        for (i, ((nas_d, has_d), result)) in pairs.into_iter().zip(results).enumerate() {
+            let reward = cfg.reward.reward(&result);
+            let sample = Sample { index: index + i, nas_d, has_d, result, reward };
+            outcome.consider(&sample, &cfg.reward);
+            if cfg.keep_history {
+                outcome.history.push(sample);
             }
-            (Some(_), Some(_)) => panic!("cannot fix both halves"),
-        };
-        let result = evaluator.evaluate(&nas_d, &has_d);
-        let reward = cfg.reward.reward(&result);
-        let sample = Sample { index, nas_d, has_d, result, reward };
-        outcome.consider(&sample, &cfg.reward);
-        if cfg.keep_history {
-            outcome.history.push(sample);
+            batch.push((std::mem::take(&mut frees[i]), reward));
         }
-        batch.push((free, reward));
-        if batch.len() >= cfg.batch {
-            controller.update(&batch);
-            batch.clear();
-        }
-    }
-    if !batch.is_empty() {
         controller.update(&batch);
+        index += n;
     }
+    outcome.eval_stats = evaluator.stats().since(&stats_at_start);
+    outcome.elapsed_s = t0.elapsed().as_secs_f64();
     outcome
 }
 

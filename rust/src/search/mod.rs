@@ -13,6 +13,9 @@
 //! * [`evolution`] / random — baselines for the controller ablation;
 //! * [`joint`] — multi-trial joint search driver (NAS x HAS, or either
 //!   alone by fixing the other — Eq. 1 reduces to NAS or HAS);
+//! * [`parallel`] — batched evaluation: the joint-decision memo cache
+//!   and the multi-threaded [`ParallelSim`] evaluator (paper §4.1's
+//!   "parallel requests", in-process);
 //! * [`oneshot`] — weight-sharing search over the AOT supernet;
 //! * [`phase`] — the phase-based (HAS-then-NAS) ablation of Fig. 9.
 
@@ -20,13 +23,15 @@ pub mod evaluator;
 pub mod evolution;
 pub mod joint;
 pub mod oneshot;
+pub mod parallel;
 pub mod phase;
 pub mod ppo;
 pub mod reinforce;
 pub mod reward;
 
-pub use evaluator::{EvalResult, Evaluator, SurrogateSim, Task};
+pub use evaluator::{EvalResult, EvalStats, Evaluator, SurrogateSim, Task};
 pub use joint::{joint_search, Sample, SearchCfg, SearchOutcome};
+pub use parallel::{joint_key, MemoCache, ParallelSim};
 pub use reward::{ConstraintMode, CostObjective, RewardCfg};
 
 use crate::util::Rng;

@@ -13,7 +13,9 @@ use anyhow::Result;
 
 use crate::has::{validate, HasSpace};
 use crate::nas::NasSpace;
+use crate::search::evaluator::EvalResult;
 use crate::search::joint::JointLayout;
+use crate::search::parallel::{joint_key, MemoCache};
 use crate::search::reinforce::{absolute_reward, ReinforceController};
 use crate::search::Controller;
 use crate::trainer::proxy::lr_at;
@@ -41,6 +43,51 @@ impl LatencyOracle for SimOracle {
         let net = self.space.decode(nas_d);
         let rep = crate::accel::simulate_network(&cfg, &net).ok()?;
         Some((rep.latency_ms, rep.area_mm2))
+    }
+}
+
+/// Memoizing wrapper over a [`LatencyOracle`].
+///
+/// The oneshot inner loop cannot pre-batch its cost queries — every
+/// controller sample depends on the preceding interleaved update — but
+/// as the policy sharpens it resamples the same joint vector over and
+/// over, and each repeat used to hit the simulator again (the very
+/// bottleneck the paper's learned cost model exists to relieve,
+/// §3.5.2). Deterministic oracles (simulator, trained cost model) make
+/// the cached result bit-identical to a fresh query.
+pub struct CachedOracle<'a> {
+    inner: &'a mut dyn LatencyOracle,
+    cache: MemoCache,
+    /// Total queries vs queries that reached the inner oracle.
+    pub requests: usize,
+    pub evals: usize,
+}
+
+impl<'a> CachedOracle<'a> {
+    pub fn new(inner: &'a mut dyn LatencyOracle) -> Self {
+        CachedOracle { inner, cache: MemoCache::new(16 * 1024), requests: 0, evals: 0 }
+    }
+}
+
+impl LatencyOracle for CachedOracle<'_> {
+    fn cost(&mut self, nas_d: &[usize], has_d: &[usize]) -> Option<(f64, f64)> {
+        self.requests += 1;
+        let key = joint_key(nas_d, has_d);
+        if let Some(r) = self.cache.get(&key) {
+            return r.valid.then_some((r.latency_ms, r.area_mm2));
+        }
+        self.evals += 1;
+        let cost = self.inner.cost(nas_d, has_d);
+        // Invalid pairings are cached too (valid = false): repeatedly
+        // sampling an unsimulable design must not re-run validation.
+        let r = match cost {
+            Some((lat, area)) => {
+                EvalResult { latency_ms: lat, area_mm2: area, valid: true, ..Default::default() }
+            }
+            None => EvalResult::invalid(),
+        };
+        self.cache.insert(key, r);
+        cost
     }
 }
 
@@ -82,6 +129,10 @@ pub struct OneshotOutcome {
     pub final_area_mm2: f64,
     /// (step, reward) trace of controller updates.
     pub reward_trace: Vec<(usize, f64)>,
+    /// Cost-oracle traffic: total queries vs queries that missed the
+    /// memo cache and reached the simulator / cost model.
+    pub oracle_requests: usize,
+    pub oracle_evals: usize,
 }
 
 /// Run oneshot joint search on the proxy supernet.
@@ -96,6 +147,9 @@ pub fn oneshot_search(
     let mut ctl = ReinforceController::new(&cards);
     let mut rng = Rng::new(cfg.seed);
     let total = cfg.warmup_steps + cfg.search_steps;
+    // Memoize the oracle: repeat samples of a sharpened policy become
+    // cache hits instead of fresh simulator / cost-model queries.
+    let mut oracle = CachedOracle::new(oracle);
 
     let mut st: SupernetState = trainer.init_supernet(cfg.seed as i32)?;
     let mut trace = Vec::new();
@@ -153,6 +207,8 @@ pub fn oneshot_search(
         final_latency_ms,
         final_area_mm2,
         reward_trace: trace,
+        oracle_requests: oracle.requests,
+        oracle_evals: oracle.evals,
     })
 }
 
@@ -182,5 +238,26 @@ mod tests {
         let mut rng = Rng::new(4);
         let nas_d = o.space.random(&mut rng);
         assert!(o.cost(&nas_d, &[4, 4, 0, 0, 0, 0, 0]).is_none());
+    }
+
+    #[test]
+    fn cached_oracle_is_transparent_and_dedups() {
+        let mut fresh =
+            SimOracle { space: NasSpace::new(NasSpaceId::Proxy), has: HasSpace::new() };
+        let mut backing =
+            SimOracle { space: NasSpace::new(NasSpaceId::Proxy), has: HasSpace::new() };
+        let space = NasSpace::new(NasSpaceId::Proxy);
+        let has = HasSpace::new();
+        let mut cached = CachedOracle::new(&mut backing);
+        let mut rng = Rng::new(6);
+        let pairs: Vec<(Vec<usize>, Vec<usize>)> =
+            (0..12).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect();
+        for _round in 0..2 {
+            for (nas_d, has_d) in &pairs {
+                assert_eq!(cached.cost(nas_d, has_d), fresh.cost(nas_d, has_d));
+            }
+        }
+        assert_eq!(cached.requests, 24);
+        assert_eq!(cached.evals, 12, "second round must be all cache hits");
     }
 }

@@ -1,0 +1,333 @@
+//! Batched, multi-threaded evaluation (paper §4.1).
+//!
+//! The paper deploys its estimators "as a service where multiple NAHAS
+//! clients can send parallel requests" because per-sample evaluation
+//! cost dominates joint search. This module is the local half of that
+//! design:
+//!
+//! * [`MemoCache`] — a bounded memo cache keyed on the joint decision
+//!   vector. RL controllers resample the same decisions constantly as
+//!   the policy sharpens, so late-search batches are mostly hits;
+//! * [`ParallelSim`] — a [`SurrogateSim`]-backed [`Evaluator`] whose
+//!   `evaluate_batch` dedups the batch through the cache and fans the
+//!   misses out over `std::thread::scope` workers (std-only build: no
+//!   rayon/tokio).
+//!
+//! Both are **bit-identical** to the serial path for the same seed:
+//! the underlying evaluation ([`SurrogateSim::evaluate_pure`]) is a
+//! deterministic function of (space, task, seed, decisions), so
+//! caching and thread placement cannot change any result — only how
+//! fast and how often it is computed. `tests/parallel_equivalence.rs`
+//! pins this down across seeds and worker counts.
+
+use std::collections::HashMap;
+
+use crate::nas::NasSpace;
+use crate::search::evaluator::{EvalCounters, EvalResult, EvalStats, Evaluator, SurrogateSim};
+
+/// Bounded memo cache over joint `nas ++ has` decision vectors.
+///
+/// Eviction is segmented-LRU: entries live in a *current* generation;
+/// when it fills, it becomes the *previous* generation and a fresh one
+/// starts. Hits in the previous generation promote back into the
+/// current one, so anything touched within the last `capacity` unique
+/// inserts survives — classic two-generation approximation of LRU with
+/// O(1) operations and at most `2 * capacity` resident entries.
+#[derive(Debug)]
+pub struct MemoCache {
+    capacity: usize,
+    cur: HashMap<Vec<usize>, EvalResult>,
+    prev: HashMap<Vec<usize>, EvalResult>,
+}
+
+impl MemoCache {
+    pub fn new(capacity: usize) -> Self {
+        MemoCache { capacity: capacity.max(1), cur: HashMap::new(), prev: HashMap::new() }
+    }
+
+    pub fn get(&mut self, key: &[usize]) -> Option<EvalResult> {
+        if let Some(&r) = self.cur.get(key) {
+            return Some(r);
+        }
+        if let Some(r) = self.prev.remove(key) {
+            self.insert_rotating(key.to_vec(), r);
+            return Some(r);
+        }
+        None
+    }
+
+    pub fn insert(&mut self, key: Vec<usize>, result: EvalResult) {
+        self.insert_rotating(key, result);
+    }
+
+    fn insert_rotating(&mut self, key: Vec<usize>, result: EvalResult) {
+        if self.cur.len() >= self.capacity {
+            self.prev = std::mem::take(&mut self.cur);
+        }
+        self.cur.insert(key, result);
+    }
+
+    pub fn len(&self) -> usize {
+        self.cur.len() + self.prev.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Concatenated memo key for one sample.
+pub fn joint_key(nas_d: &[usize], has_d: &[usize]) -> Vec<usize> {
+    let mut k = Vec::with_capacity(nas_d.len() + has_d.len());
+    k.extend_from_slice(nas_d);
+    k.extend_from_slice(has_d);
+    k
+}
+
+/// Cache-aware batch execution plan, shared by the parallel tiers
+/// ([`ParallelSim`], [`crate::service::ServiceEvaluator`]): `build`
+/// resolves cache hits and dedups the misses preserving first-seen
+/// order; the caller evaluates `pending()` however it fans out; then
+/// `finish` reassembles everything in batch order, memoizing only the
+/// results marked cacheable (a transport failure must not poison the
+/// cache — the next resample has to retry the evaluation).
+pub(crate) struct BatchPlan {
+    results: Vec<Option<EvalResult>>,
+    pending: Vec<Vec<usize>>,
+    waiting: HashMap<Vec<usize>, Vec<usize>>,
+}
+
+impl BatchPlan {
+    pub(crate) fn build(cache: &mut MemoCache, batch: &[(Vec<usize>, Vec<usize>)]) -> Self {
+        let mut results: Vec<Option<EvalResult>> = vec![None; batch.len()];
+        let mut pending: Vec<Vec<usize>> = Vec::new();
+        let mut waiting: HashMap<Vec<usize>, Vec<usize>> = HashMap::new();
+        for (i, (nas_d, has_d)) in batch.iter().enumerate() {
+            let key = joint_key(nas_d, has_d);
+            if let Some(r) = cache.get(&key) {
+                results[i] = Some(r);
+            } else {
+                let slots = waiting.entry(key.clone()).or_default();
+                if slots.is_empty() {
+                    pending.push(key);
+                }
+                slots.push(i);
+            }
+        }
+        BatchPlan { results, pending, waiting }
+    }
+
+    /// Deduped cache misses, in first-seen batch order.
+    pub(crate) fn pending(&self) -> &[Vec<usize>] {
+        &self.pending
+    }
+
+    /// `fresh[i]` pairs with `pending()[i]`: the result and whether it
+    /// may be memoized.
+    pub(crate) fn finish(
+        self,
+        cache: &mut MemoCache,
+        fresh: Vec<(EvalResult, bool)>,
+    ) -> Vec<EvalResult> {
+        assert_eq!(fresh.len(), self.pending.len(), "one result per deduped key");
+        let BatchPlan { mut results, pending, waiting } = self;
+        for (key, (r, cacheable)) in pending.into_iter().zip(fresh) {
+            for &i in &waiting[&key] {
+                results[i] = Some(r);
+            }
+            if cacheable {
+                cache.insert(key, r);
+            }
+        }
+        results.into_iter().map(|r| r.expect("all batch slots resolved")).collect()
+    }
+}
+
+/// Parallel batched surrogate+simulator evaluator: memo cache in
+/// front, scoped worker threads behind.
+pub struct ParallelSim {
+    /// The shared evaluation core (config + pure evaluation).
+    pub sim: SurrogateSim,
+    /// Worker threads for a batch (1 = in-thread serial).
+    pub workers: usize,
+    cache: MemoCache,
+    counters: EvalCounters,
+}
+
+const DEFAULT_CACHE_CAPACITY: usize = 16 * 1024;
+
+impl ParallelSim {
+    pub fn new(space: NasSpace, seed: u64, workers: usize) -> Self {
+        ParallelSim {
+            sim: SurrogateSim::new(space, seed),
+            workers: workers.max(1),
+            cache: MemoCache::new(DEFAULT_CACHE_CAPACITY),
+            counters: EvalCounters::default(),
+        }
+    }
+
+    pub fn segmentation(mut self) -> Self {
+        self.sim = self.sim.segmentation();
+        self
+    }
+
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
+        self.cache = MemoCache::new(capacity);
+        self
+    }
+
+    /// Evaluate deduped keys, in order, across up to `self.workers`
+    /// scoped threads. Results are reassembled in key order, so the
+    /// caller sees exactly what a serial loop would have produced.
+    fn run_workers(&self, keys: &[Vec<usize>], nas_len: usize) -> Vec<EvalResult> {
+        let workers = self.workers.min(keys.len()).max(1);
+        if workers == 1 {
+            return keys
+                .iter()
+                .map(|k| self.sim.evaluate_pure(&k[..nas_len], &k[nas_len..]))
+                .collect();
+        }
+        let sim = &self.sim;
+        let chunk = (keys.len() + workers - 1) / workers;
+        let mut out = Vec::with_capacity(keys.len());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = keys
+                .chunks(chunk)
+                .map(|ck| {
+                    s.spawn(move || {
+                        ck.iter()
+                            .map(|k| sim.evaluate_pure(&k[..nas_len], &k[nas_len..]))
+                            .collect::<Vec<EvalResult>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.extend(h.join().expect("evaluation worker panicked"));
+            }
+        });
+        out
+    }
+}
+
+impl Evaluator for ParallelSim {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        self.counters.requests += 1;
+        let key = joint_key(nas_d, has_d);
+        let r = match self.cache.get(&key) {
+            Some(r) => r,
+            None => {
+                let r = self.sim.evaluate_pure(nas_d, has_d);
+                self.counters.evals += 1;
+                self.cache.insert(key, r);
+                r
+            }
+        };
+        if !r.valid {
+            self.counters.invalid += 1;
+        }
+        r
+    }
+
+    fn evaluate_batch(&mut self, batch: &[(Vec<usize>, Vec<usize>)]) -> Vec<EvalResult> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        self.counters.requests += batch.len();
+        let nas_len = batch[0].0.len();
+        assert!(
+            batch.iter().all(|(nas_d, _)| nas_d.len() == nas_len),
+            "mixed decision lengths in one batch"
+        );
+        let plan = BatchPlan::build(&mut self.cache, batch);
+        let fresh = self.run_workers(plan.pending(), nas_len);
+        self.counters.evals += fresh.len();
+        // Local simulation cannot fail transiently: always cacheable.
+        let out = plan.finish(&mut self.cache, fresh.into_iter().map(|r| (r, true)).collect());
+        self.counters.invalid += out.iter().filter(|r| !r.valid).count();
+        out
+    }
+
+    fn stats(&self) -> EvalStats {
+        self.counters.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::has::HasSpace;
+    use crate::nas::NasSpaceId;
+    use crate::util::Rng;
+
+    fn random_batch(n: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let has = HasSpace::new();
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect()
+    }
+
+    #[test]
+    fn batch_matches_serial_for_any_worker_count() {
+        let batch = random_batch(24, 11);
+        let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+        let want: Vec<EvalResult> =
+            batch.iter().map(|(n, h)| serial.evaluate(n, h)).collect();
+        for workers in [1, 3, 8] {
+            let mut par = ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3, workers);
+            let got = par.evaluate_batch(&batch);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.valid, w.valid);
+                assert_eq!(g.acc.to_bits(), w.acc.to_bits(), "workers {workers}");
+                assert_eq!(g.latency_ms.to_bits(), w.latency_ms.to_bits());
+                assert_eq!(g.energy_mj.to_bits(), w.energy_mj.to_bits());
+                assert_eq!(g.area_mm2.to_bits(), w.area_mm2.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn cache_dedups_repeats_within_and_across_batches() {
+        let mut batch = random_batch(8, 5);
+        let dup = batch[0].clone();
+        batch.push(dup);
+        let mut par = ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3, 4);
+        let first = par.evaluate_batch(&batch);
+        assert_eq!(first.len(), 9);
+        let s = par.stats();
+        assert_eq!(s.requests, 9);
+        assert_eq!(s.evals, 8, "in-batch duplicate must be evaluated once");
+        let second = par.evaluate_batch(&batch);
+        let s = par.stats();
+        assert_eq!(s.requests, 18);
+        assert_eq!(s.evals, 8, "second pass must be all cache hits");
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+        }
+    }
+
+    #[test]
+    fn memo_cache_evicts_but_stays_bounded() {
+        let mut c = MemoCache::new(4);
+        for i in 0..100usize {
+            c.insert(vec![i], EvalResult { acc: i as f64, valid: true, ..Default::default() });
+            assert!(c.len() <= 8, "2x capacity bound violated: {}", c.len());
+        }
+        // The most recent insert always survives.
+        assert_eq!(c.get(&[99]).map(|r| r.acc), Some(99.0));
+        // Something ancient is gone.
+        assert!(c.get(&[0]).is_none());
+    }
+
+    #[test]
+    fn memo_cache_promotes_recent_across_rotation() {
+        let mut c = MemoCache::new(2);
+        c.insert(vec![1], EvalResult { acc: 1.0, valid: true, ..Default::default() });
+        c.insert(vec![2], EvalResult { acc: 2.0, valid: true, ..Default::default() });
+        // Rotation: cur -> prev.
+        c.insert(vec![3], EvalResult { acc: 3.0, valid: true, ..Default::default() });
+        // Hit in prev promotes 1 into cur.
+        assert_eq!(c.get(&[1]).map(|r| r.acc), Some(1.0));
+        assert_eq!(c.get(&[1]).map(|r| r.acc), Some(1.0));
+    }
+}

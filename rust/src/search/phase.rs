@@ -25,6 +25,12 @@ pub struct PhaseOutcome {
 /// `initial_nas` is the fixed architecture of phase 1 (the paper tries
 /// MobileNetV2 / EfficientNet-B1 / EfficientNet-B2 and observes high
 /// variance in the final quality).
+///
+/// Both phases run through the batch-structured [`joint_search`]
+/// driver, so handing this a batched evaluator (e.g.
+/// [`crate::search::ParallelSim`]) parallelizes each phase's
+/// evaluations; per-phase cache/throughput stats land in the two
+/// [`SearchOutcome`]s.
 pub fn phase_search(
     evaluator: &mut dyn Evaluator,
     space: &NasSpace,

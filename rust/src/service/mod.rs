@@ -254,80 +254,279 @@ mod tests {
     }
 }
 
-/// Remote evaluator: implements the search-side [`crate::search::Evaluator`]
-/// against a simulator service — the paper's deployment where "multiple
-/// NAHAS clients send parallel requests" to the estimator farm. Accuracy
-/// still comes from the local surrogate (the paper's clients likewise
-/// train locally and query the service only for hardware metrics).
-pub struct RemoteEval {
-    client: Client,
-    space_name: &'static str,
-    space: NasSpace,
-    seed: u64,
-    seg: bool,
-}
-
-impl RemoteEval {
-    pub fn connect(addr: &str, id: NasSpaceId, seed: u64) -> Result<Self> {
-        let space_name = match id {
-            NasSpaceId::MobileNetV2 => "mobilenetv2",
-            NasSpaceId::EfficientNet => "efficientnet",
-            NasSpaceId::Evolved => "evolved",
-            NasSpaceId::Proxy => "proxy",
-        };
-        Ok(RemoteEval {
-            client: Client::connect(addr)?,
-            space_name,
-            space: NasSpace::new(id),
-            seed,
-            seg: false,
-        })
+/// Decode one service response into an [`crate::search::EvalResult`],
+/// filling in the locally computed surrogate accuracy (the paper's
+/// clients likewise query the service only for hardware metrics).
+/// Accuracy goes through [`SurrogateSim::accuracy_of`] — the same
+/// decode + task dispatch as the local tiers — so local and remote
+/// accuracy cannot diverge.
+fn remote_result(
+    resp: &Json,
+    sim: &crate::search::SurrogateSim,
+    nas_d: &[usize],
+) -> crate::search::EvalResult {
+    if resp.get("valid") != Some(&Json::Bool(true)) {
+        return crate::search::EvalResult::invalid();
+    }
+    let f = |k: &str| resp.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    crate::search::EvalResult {
+        acc: sim.accuracy_of(nas_d),
+        latency_ms: f("latency_ms"),
+        energy_mj: f("energy_mj"),
+        area_mm2: f("area_mm2"),
+        valid: true,
     }
 }
 
-impl crate::search::Evaluator for RemoteEval {
-    fn evaluate(
+fn service_space_name(id: NasSpaceId) -> &'static str {
+    match id {
+        NasSpaceId::MobileNetV2 => "mobilenetv2",
+        NasSpaceId::EfficientNet => "efficientnet",
+        NasSpaceId::Evolved => "evolved",
+        NasSpaceId::Proxy => "proxy",
+    }
+}
+
+/// Batched remote evaluator: the paper's "multiple NAHAS clients can
+/// send parallel requests" made literal. Holds one TCP connection per
+/// worker; `evaluate_batch` dedups the batch through a joint-decision
+/// memo cache and fans the misses out over `std::thread::scope`
+/// workers, each driving its own connection (the server gives every
+/// connection a thread, so requests overlap end to end). Results are
+/// reassembled in batch order and — because the simulator and the
+/// local surrogate accuracy are deterministic — are bit-identical to
+/// the local [`crate::search::SurrogateSim`] path for the same seed
+/// (`workers: 1` gives the serial single-connection client).
+pub struct ServiceEvaluator {
+    conns: Vec<Client>,
+    /// Kept for transparent one-shot reconnects on transport failure.
+    addr: String,
+    space_name: &'static str,
+    /// Local accuracy half (decode + task dispatch) — hardware metrics
+    /// come from the service, accuracy from the same code as the local
+    /// tiers.
+    sim: crate::search::SurrogateSim,
+    seg: bool,
+    cache: crate::search::MemoCache,
+    counters: crate::search::evaluator::EvalCounters,
+}
+
+impl ServiceEvaluator {
+    /// Connect `workers` parallel clients to a `nahas serve` instance.
+    pub fn connect(addr: &str, id: NasSpaceId, seed: u64, workers: usize) -> Result<Self> {
+        let conns = (0..workers.max(1))
+            .map(|_| Client::connect(addr))
+            .collect::<Result<Vec<Client>>>()?;
+        Ok(ServiceEvaluator {
+            conns,
+            addr: addr.to_string(),
+            space_name: service_space_name(id),
+            sim: crate::search::SurrogateSim::new(NasSpace::new(id), seed),
+            seg: false,
+            cache: crate::search::MemoCache::new(16 * 1024),
+            counters: crate::search::evaluator::EvalCounters::default(),
+        })
+    }
+
+    pub fn segmentation(mut self) -> Self {
+        self.seg = true;
+        self.sim = self.sim.segmentation();
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// One service roundtrip. The bool is "cacheable": an in-protocol
+    /// response (even `valid: false`) is deterministic and memoizable;
+    /// a transport failure is not — caching it would poison the memo
+    /// cache and starve later resamples of a retry. On a transport
+    /// failure (dropped socket, server restart) the worker reconnects
+    /// once and retries, replacing its pooled connection on success, so
+    /// a restarted server costs one failed roundtrip per connection
+    /// instead of corrupting the rest of the search.
+    fn query_one(
+        client: &mut Client,
+        addr: &str,
+        space_name: &str,
+        sim: &crate::search::SurrogateSim,
+        seg: bool,
+        key: &[usize],
+        nas_len: usize,
+    ) -> (crate::search::EvalResult, bool) {
+        let (nas_d, has_d) = (&key[..nas_len], &key[nas_len..]);
+        if let Ok(resp) = client.query(space_name, nas_d, has_d, seg) {
+            return (remote_result(&resp, sim, nas_d), true);
+        }
+        if let Ok(mut reconnected) = Client::connect(addr) {
+            if let Ok(resp) = reconnected.query(space_name, nas_d, has_d, seg) {
+                *client = reconnected;
+                return (remote_result(&resp, sim, nas_d), true);
+            }
+        }
+        eprintln!("service evaluator: transport failure to {addr}; sample scored invalid");
+        (crate::search::EvalResult::invalid(), false)
+    }
+
+    /// Evaluate deduped keys across the connection pool, in key order.
+    fn query_pending(
         &mut self,
-        nas_d: &[usize],
-        has_d: &[usize],
-    ) -> crate::search::EvalResult {
-        let Ok(resp) = self.client.query(self.space_name, nas_d, has_d, self.seg) else {
-            return crate::search::EvalResult::invalid();
-        };
-        if resp.get("valid") != Some(&Json::Bool(true)) {
-            return crate::search::EvalResult::invalid();
+        pending: &[Vec<usize>],
+        nas_len: usize,
+    ) -> Vec<(crate::search::EvalResult, bool)> {
+        use crate::search::EvalResult;
+        if pending.is_empty() {
+            return Vec::new();
         }
-        let f = |k: &str| resp.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
-        let net = self.space.decode(nas_d);
-        let acc = match self.space.id {
-            NasSpaceId::Proxy => crate::trainer::surrogate::proxy_accuracy(&net, self.seed),
-            _ => crate::trainer::surrogate::imagenet_accuracy(&net, self.seed) / 100.0,
-        };
-        crate::search::EvalResult {
-            acc,
-            latency_ms: f("latency_ms"),
-            energy_mj: f("energy_mj"),
-            area_mm2: f("area_mm2"),
-            valid: true,
+        let (sim, space_name, seg) = (&self.sim, self.space_name, self.seg);
+        let addr = self.addr.as_str();
+        let nconn = self.conns.len().min(pending.len());
+        let chunk = (pending.len() + nconn - 1) / nconn;
+        let mut fresh = Vec::with_capacity(pending.len());
+        if nconn == 1 {
+            let client = &mut self.conns[0];
+            for key in pending {
+                fresh.push(Self::query_one(
+                    client, addr, space_name, sim, seg, key, nas_len,
+                ));
+            }
+        } else {
+            // One worker thread per connection; each drives its
+            // contiguous slice of the deduped keys, so concatenated
+            // join output restores key order.
+            std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .conns
+                    .iter_mut()
+                    .zip(pending.chunks(chunk))
+                    .map(|(client, keys)| {
+                        s.spawn(move || {
+                            keys.iter()
+                                .map(|k| {
+                                    Self::query_one(
+                                        client, addr, space_name, sim, seg, k, nas_len,
+                                    )
+                                })
+                                .collect::<Vec<(EvalResult, bool)>>()
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    fresh.extend(h.join().expect("service client worker panicked"));
+                }
+            });
         }
+        fresh
+    }
+}
+
+impl crate::search::Evaluator for ServiceEvaluator {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> crate::search::EvalResult {
+        self.counters.requests += 1;
+        let key = crate::search::joint_key(nas_d, has_d);
+        let r = match self.cache.get(&key) {
+            Some(r) => r,
+            None => {
+                self.counters.evals += 1;
+                let (conns, addr) = (&mut self.conns, self.addr.as_str());
+                let (r, cacheable) = Self::query_one(
+                    &mut conns[0],
+                    addr,
+                    self.space_name,
+                    &self.sim,
+                    self.seg,
+                    &key,
+                    nas_d.len(),
+                );
+                if cacheable {
+                    self.cache.insert(key, r);
+                }
+                r
+            }
+        };
+        if !r.valid {
+            self.counters.invalid += 1;
+        }
+        r
+    }
+
+    fn evaluate_batch(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<crate::search::EvalResult> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        self.counters.requests += batch.len();
+        let nas_len = batch[0].0.len();
+        assert!(
+            batch.iter().all(|(nas_d, _)| nas_d.len() == nas_len),
+            "mixed decision lengths in one batch"
+        );
+        let plan = crate::search::parallel::BatchPlan::build(&mut self.cache, batch);
+        let fresh = self.query_pending(plan.pending(), nas_len);
+        self.counters.evals += fresh.len();
+        let out = plan.finish(&mut self.cache, fresh);
+        self.counters.invalid += out.iter().filter(|r| !r.valid).count();
+        out
+    }
+
+    fn stats(&self) -> crate::search::EvalStats {
+        self.counters.stats()
     }
 }
 
 #[cfg(test)]
-mod remote_tests {
+mod service_eval_tests {
     use super::*;
     use crate::search::joint::JointLayout;
     use crate::search::ppo::PpoController;
-    use crate::search::{joint_search, Evaluator, RewardCfg, SearchCfg};
+    use crate::search::{joint_search, Evaluator, RewardCfg, SearchCfg, SurrogateSim};
 
     #[test]
-    fn remote_eval_matches_local_simulator() {
+    fn batched_service_eval_matches_local_simulator() {
         let server = Server::spawn("127.0.0.1:0").unwrap();
         let mut remote =
-            RemoteEval::connect(&server.addr.to_string(), NasSpaceId::EfficientNet, 3).unwrap();
+            ServiceEvaluator::connect(&server.addr.to_string(), NasSpaceId::EfficientNet, 3, 4)
+                .unwrap();
         let mut local =
-            crate::search::SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
-        let has = HasSpace::new();
+            SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+        let has = crate::has::HasSpace::new();
+        let mut rng = crate::util::Rng::new(9);
+        let batch: Vec<(Vec<usize>, Vec<usize>)> = (0..16)
+            .map(|_| (local.space.random(&mut rng), has.random(&mut rng)))
+            .collect();
+        let rs = remote.evaluate_batch(&batch);
+        let ls = local.evaluate_batch(&batch);
+        for (r, l) in rs.iter().zip(&ls) {
+            assert_eq!(r.valid, l.valid);
+            if r.valid {
+                assert!((r.latency_ms - l.latency_ms).abs() < 1e-9);
+                assert!((r.energy_mj - l.energy_mj).abs() < 1e-9);
+                assert!((r.acc - l.acc).abs() < 1e-12);
+            }
+        }
+        // Second pass: everything is a memo-cache hit, no new requests.
+        let before = server.requests.load(Ordering::Relaxed);
+        let again = remote.evaluate_batch(&batch);
+        assert_eq!(server.requests.load(Ordering::Relaxed), before);
+        for (a, b) in rs.iter().zip(&again) {
+            assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn single_connection_eval_matches_local_simulator() {
+        // workers = 1: the serial single-client path (covers the
+        // nconn == 1 branch and per-call `evaluate`).
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut remote =
+            ServiceEvaluator::connect(&server.addr.to_string(), NasSpaceId::EfficientNet, 3, 1)
+                .unwrap();
+        let mut local = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+        let has = crate::has::HasSpace::new();
         let mut rng = crate::util::Rng::new(4);
         for _ in 0..8 {
             let nas_d = local.space.random(&mut rng);
@@ -344,18 +543,52 @@ mod remote_tests {
     }
 
     #[test]
-    fn whole_search_over_the_wire() {
+    fn segmentation_accuracy_matches_local_evaluator() {
+        // The service returns hardware metrics for the segmentation
+        // variant; the client-side accuracy must be the segmentation
+        // mIOU too (not classification top-1).
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut remote =
+            ServiceEvaluator::connect(&server.addr.to_string(), NasSpaceId::EfficientNet, 3, 2)
+                .unwrap()
+                .segmentation();
+        let mut local =
+            SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3).segmentation();
+        let has = crate::has::HasSpace::new();
+        let mut rng = crate::util::Rng::new(6);
+        let batch: Vec<(Vec<usize>, Vec<usize>)> = (0..6)
+            .map(|_| (local.space.random(&mut rng), has.baseline_decisions()))
+            .collect();
+        let rs = remote.evaluate_batch(&batch);
+        let ls = local.evaluate_batch(&batch);
+        for (r, l) in rs.iter().zip(&ls) {
+            assert_eq!(r.valid, l.valid);
+            if r.valid {
+                assert_eq!(r.acc.to_bits(), l.acc.to_bits(), "seg accuracy must match local");
+                assert!((r.latency_ms - l.latency_ms).abs() < 1e-9);
+            }
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn whole_search_through_parallel_service_clients() {
         let server = Server::spawn("127.0.0.1:0").unwrap();
         let space = NasSpace::new(NasSpaceId::MobileNetV2);
-        let has = HasSpace::new();
+        let has = crate::has::HasSpace::new();
         let (cards, layout) = JointLayout::cards(&space, &has);
         let mut remote =
-            RemoteEval::connect(&server.addr.to_string(), NasSpaceId::MobileNetV2, 5).unwrap();
+            ServiceEvaluator::connect(&server.addr.to_string(), NasSpaceId::MobileNetV2, 5, 4)
+                .unwrap();
         let mut ctl = PpoController::new(&cards);
         let cfg = SearchCfg::new(120, RewardCfg::latency(0.5), 5);
         let out = joint_search(&mut remote, &mut ctl, &layout, None, None, &cfg);
         assert!(out.best_feasible.is_some());
-        assert!(server.requests.load(Ordering::Relaxed) >= 120);
+        assert_eq!(out.eval_stats.requests, 120);
+        assert_eq!(
+            out.eval_stats.evals + out.eval_stats.cache_hits,
+            out.eval_stats.requests
+        );
         server.stop();
     }
 }

@@ -1,0 +1,104 @@
+//! Serial/parallel equivalence: for every seed and worker count, a
+//! joint search evaluated through [`ParallelSim`] must replay the
+//! serial [`SurrogateSim`] trajectory **bit for bit** — same sampled
+//! decisions, same rewards, same `best_feasible`. This is the contract
+//! that makes `--workers N` a pure throughput knob: parallelism and
+//! memoization may change how often and where a sample is computed,
+//! never what it computes.
+
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::joint::JointLayout;
+use nahas::search::ppo::PpoController;
+use nahas::search::{
+    joint_search, Evaluator, ParallelSim, RewardCfg, SearchCfg, SearchOutcome, SurrogateSim,
+};
+
+const SAMPLES: usize = 160;
+
+fn run(ev: &mut dyn Evaluator, seed: u64) -> SearchOutcome {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let (cards, layout) = JointLayout::cards(&space, &has);
+    let mut ctl = PpoController::new(&cards);
+    let cfg = SearchCfg::new(SAMPLES, RewardCfg::latency(0.4), seed);
+    joint_search(ev, &mut ctl, &layout, None, None, &cfg)
+}
+
+fn assert_identical(want: &SearchOutcome, got: &SearchOutcome, seed: u64, workers: usize) {
+    let ctx = format!("seed {seed}, workers {workers}");
+    assert_eq!(want.history.len(), got.history.len(), "{ctx}: history length");
+    for (w, g) in want.history.iter().zip(&got.history) {
+        assert_eq!(w.index, g.index, "{ctx}");
+        assert_eq!(w.nas_d, g.nas_d, "{ctx}: sample {} nas decisions", w.index);
+        assert_eq!(w.has_d, g.has_d, "{ctx}: sample {} has decisions", w.index);
+        assert_eq!(w.result.valid, g.result.valid, "{ctx}: sample {}", w.index);
+        assert_eq!(
+            w.reward.to_bits(),
+            g.reward.to_bits(),
+            "{ctx}: sample {} reward {} vs {}",
+            w.index,
+            w.reward,
+            g.reward
+        );
+        assert_eq!(w.result.acc.to_bits(), g.result.acc.to_bits(), "{ctx}");
+        assert_eq!(w.result.latency_ms.to_bits(), g.result.latency_ms.to_bits(), "{ctx}");
+        assert_eq!(w.result.energy_mj.to_bits(), g.result.energy_mj.to_bits(), "{ctx}");
+        assert_eq!(w.result.area_mm2.to_bits(), g.result.area_mm2.to_bits(), "{ctx}");
+    }
+    assert_eq!(want.num_invalid, got.num_invalid, "{ctx}: invalid count");
+    match (&want.best_feasible, &got.best_feasible) {
+        (None, None) => {}
+        (Some(w), Some(g)) => {
+            assert_eq!(w.index, g.index, "{ctx}: best_feasible index");
+            assert_eq!(w.nas_d, g.nas_d, "{ctx}: best_feasible nas");
+            assert_eq!(w.has_d, g.has_d, "{ctx}: best_feasible hw");
+            assert_eq!(w.reward.to_bits(), g.reward.to_bits(), "{ctx}: best_feasible reward");
+        }
+        (w, g) => panic!("{ctx}: best_feasible {:?} vs {:?}", w.is_some(), g.is_some()),
+    }
+}
+
+#[test]
+fn parallel_matches_serial_across_seeds_and_workers() {
+    for seed in [1u64, 7, 42] {
+        let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+        let want = run(&mut serial, seed);
+        assert_eq!(want.history.len(), SAMPLES);
+        for workers in [1usize, 4, 8] {
+            let mut par =
+                ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed, workers);
+            let got = run(&mut par, seed);
+            assert_identical(&want, &got, seed, workers);
+            // Stats bookkeeping must balance exactly.
+            let st = got.eval_stats;
+            assert_eq!(st.requests, SAMPLES, "workers {workers}");
+            assert_eq!(st.evals + st.cache_hits, st.requests, "workers {workers}");
+            assert_eq!(st.invalid, got.num_invalid, "workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn parallel_matches_serial_with_fixed_hardware() {
+    // Platform-aware NAS (fixed accelerator): the free vector is only
+    // the NAS half, exercising the fixed-half key layout.
+    let seed = 7u64;
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let (cards, layout) = JointLayout::cards(&space, &has);
+    let nas_cards = cards[..layout.nas_len].to_vec();
+    let baseline = has.baseline_decisions();
+    let cfg = SearchCfg::new(96, RewardCfg::latency(0.3), seed);
+
+    let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+    let mut ctl = PpoController::new(&nas_cards);
+    let want = joint_search(&mut serial, &mut ctl, &layout, Some(&baseline), None, &cfg);
+
+    for workers in [2usize, 8] {
+        let mut par = ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed, workers);
+        let mut ctl = PpoController::new(&nas_cards);
+        let got = joint_search(&mut par, &mut ctl, &layout, Some(&baseline), None, &cfg);
+        assert_identical(&want, &got, seed, workers);
+    }
+}

@@ -1,0 +1,97 @@
+//! Coordinator invariants under the in-crate property harness
+//! (`nahas::util::proptest`): decode totality over every search space,
+//! validator totality over the HAS space, and memo-cache transparency.
+
+use nahas::has::{validate, HasSpace};
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{EvalResult, Evaluator, ParallelSim, SurrogateSim};
+use nahas::util::proptest;
+
+const ALL_SPACES: [NasSpaceId; 4] = [
+    NasSpaceId::MobileNetV2,
+    NasSpaceId::EfficientNet,
+    NasSpaceId::Evolved,
+    NasSpaceId::Proxy,
+];
+
+#[test]
+fn prop_random_nas_decisions_decode_in_range_for_all_spaces() {
+    for id in ALL_SPACES {
+        let sp = NasSpace::new(id);
+        proptest::check(
+            "nas random in-range + decode total",
+            proptest::CASES,
+            |r| sp.random(r),
+            |d| {
+                if d.len() != sp.num_decisions() {
+                    return Err(format!("length {} != {}", d.len(), sp.num_decisions()));
+                }
+                for (i, (x, s)) in d.iter().zip(sp.specs()).enumerate() {
+                    if *x >= s.cardinality {
+                        return Err(format!("decision {i} = {x} >= {}", s.cardinality));
+                    }
+                }
+                // Decode must be total over in-range vectors: no panic,
+                // and a structurally sane network.
+                let net = sp.decode(d);
+                if net.total_macs() == 0 || net.total_params() == 0 {
+                    return Err("degenerate network".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_has_decode_and_validate_never_panic() {
+    let has = HasSpace::new();
+    proptest::check(
+        "has decode/validate total",
+        proptest::CASES,
+        |r| has.random(r),
+        |d| {
+            let cfg = has.decode(d);
+            // Both outcomes are legal; the property is totality (the
+            // starvation/capacity rules reject, they must not panic).
+            let _ = validate(&cfg);
+            Ok(())
+        },
+    );
+}
+
+fn bits_equal(a: &EvalResult, b: &EvalResult) -> bool {
+    a.valid == b.valid
+        && a.acc.to_bits() == b.acc.to_bits()
+        && a.latency_ms.to_bits() == b.latency_ms.to_bits()
+        && a.energy_mj.to_bits() == b.energy_mj.to_bits()
+        && a.area_mm2.to_bits() == b.area_mm2.to_bits()
+}
+
+#[test]
+fn prop_memo_cache_returns_same_result_as_fresh_evaluation() {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let fresh = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 5);
+    let mut cached = ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), 5, 2);
+    proptest::check(
+        "memo cache transparent",
+        128,
+        |r| (space.random(r), has.random(r)),
+        |(nas_d, has_d)| {
+            let want = fresh.evaluate_pure(nas_d, has_d);
+            let miss = cached.evaluate(nas_d, has_d);
+            let hit = cached.evaluate(nas_d, has_d);
+            if !bits_equal(&want, &miss) {
+                return Err(format!("first evaluation diverged: {want:?} vs {miss:?}"));
+            }
+            if !bits_equal(&want, &hit) {
+                return Err(format!("cached evaluation diverged: {want:?} vs {hit:?}"));
+            }
+            Ok(())
+        },
+    );
+    let st = cached.stats();
+    assert_eq!(st.requests, 256);
+    assert_eq!(st.evals, 128, "every second request must be a memo hit");
+}

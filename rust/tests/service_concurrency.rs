@@ -1,0 +1,119 @@
+//! Service concurrency hammer: 8 client threads x 50 interleaved
+//! requests each — valid queries, in-protocol invalid ones (out-of-
+//! range hardware), and malformed JSON — against one ephemeral-port
+//! server. Every line must come back as parseable JSON with a `valid`
+//! field, counts must match exactly, and the server must survive to
+//! serve the next client (the paper's multi-client deployment, §4.1).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::service::Server;
+use nahas::util::json::Json;
+use nahas::util::Rng;
+
+const THREADS: usize = 8;
+const REQUESTS_PER_THREAD: usize = 50;
+
+fn json_arr(v: &[usize]) -> String {
+    let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+#[test]
+fn eight_threads_fifty_mixed_requests_each() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let mut joins = Vec::new();
+    for t in 0..THREADS as u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let space = NasSpace::new(NasSpaceId::EfficientNet);
+            let has = HasSpace::new();
+            let baseline = has.baseline_decisions();
+            let mut rng = Rng::new(0xC0DE + t);
+            let stream = TcpStream::connect(&addr).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let (mut accepted, mut rejected) = (0usize, 0usize);
+            for i in 0..REQUESTS_PER_THREAD {
+                match i % 3 {
+                    0 => {
+                        // Valid: random in-space nas on the (always
+                        // simulable) baseline accelerator.
+                        let nas = space.random(&mut rng);
+                        writeln!(
+                            writer,
+                            "{{\"space\":\"efficientnet\",\"nas\":{},\"hw\":{},\"task\":\"cls\"}}",
+                            json_arr(&nas),
+                            json_arr(&baseline)
+                        )
+                        .unwrap();
+                    }
+                    1 => {
+                        // In-protocol invalid: hw decision out of range.
+                        let nas = space.random(&mut rng);
+                        writeln!(
+                            writer,
+                            "{{\"space\":\"efficientnet\",\"nas\":{},\"hw\":[9,9,9,9,9,9,9]}}",
+                            json_arr(&nas)
+                        )
+                        .unwrap();
+                    }
+                    _ => {
+                        // Malformed JSON line.
+                        writeln!(writer, "{{this is not json, thread {t} request {i}").unwrap();
+                    }
+                }
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let j = Json::parse(&line)
+                    .unwrap_or_else(|e| panic!("unparseable response '{line}': {e}"));
+                match j.get("valid") {
+                    Some(&Json::Bool(true)) => accepted += 1,
+                    Some(&Json::Bool(false)) => rejected += 1,
+                    other => panic!("response without boolean 'valid': {other:?} in {line}"),
+                }
+            }
+            (accepted, rejected)
+        }));
+    }
+    let (mut accepted, mut rejected) = (0usize, 0usize);
+    for j in joins {
+        let (a, r) = j.join().unwrap();
+        accepted += a;
+        rejected += r;
+    }
+    // Per thread: i % 3 == 0 on 17 of 50 requests; the rest must be
+    // rejected (bad hw index or parse error) — never dropped.
+    assert_eq!(accepted, THREADS * 17, "valid-request count");
+    assert_eq!(rejected, THREADS * 33, "rejected-request count");
+    assert_eq!(
+        server.requests.load(Ordering::Relaxed),
+        (THREADS * REQUESTS_PER_THREAD) as u64,
+        "every line must be answered exactly once"
+    );
+
+    // The server is still healthy after the hammer: one more clean query.
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(1);
+    let nas = space.random(&mut rng);
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(
+        writer,
+        "{{\"space\":\"efficientnet\",\"nas\":{},\"hw\":{}}}",
+        json_arr(&nas),
+        json_arr(&has.baseline_decisions())
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(&line).unwrap().get("valid"), Some(&Json::Bool(true)));
+    server.stop();
+}

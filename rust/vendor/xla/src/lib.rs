@@ -1,0 +1,240 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real `xla` crate wraps the XLA/PJRT C++ libraries, which cannot
+//! be built in this offline environment. This stub keeps the crate
+//! graph compiling with the same API surface the repo uses:
+//!
+//! * [`Literal`] is a **fully functional** host-side tensor (f32/i32 +
+//!   shape + tuples) — construction, reshape and readback all work, so
+//!   everything up to program execution behaves normally;
+//! * [`PjRtClient::compile`] and [`PjRtLoadedExecutable::execute`]
+//!   return a clear "PJRT unavailable in this offline build" error, so
+//!   code paths that need the AOT artifacts fail gracefully at runtime
+//!   (the artifact-driven tests already skip when `artifacts/` is
+//!   absent).
+//!
+//! Swapping this path dependency for the real bindings in Cargo.toml
+//! restores full execution with no source changes.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT is unavailable in this offline build (vendor/xla is a host-only \
+         stub; point Cargo.toml at the real xla bindings to execute AOT artifacts)"
+    ))
+}
+
+#[derive(Clone, Debug)]
+enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor literal: flat typed storage + dimensions.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+/// Element types the stub supports (the repo moves f32/i32 only).
+pub trait NativeType: Copy {
+    const NAME: &'static str;
+    fn store(data: Vec<Self>) -> Storage;
+    fn slice(storage: &Storage) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    const NAME: &'static str = "f32";
+
+    fn store(data: Vec<f32>) -> Storage {
+        Storage::F32(data)
+    }
+
+    fn slice(storage: &Storage) -> Option<&[f32]> {
+        match storage {
+            Storage::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const NAME: &'static str = "i32";
+
+    fn store(data: Vec<i32>) -> Storage {
+        Storage::I32(data)
+    }
+
+    fn slice(storage: &Storage) -> Option<&[i32]> {
+        match storage {
+            Storage::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { storage: T::store(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { storage: T::store(vec![v]), dims: vec![] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Same storage under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want.max(1) as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements do not fit {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.storage)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error(format!("to_vec: literal is not {}", T::NAME)))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::slice(&self.storage)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error(format!("get_first_element: empty or not {}", T::NAME)))
+    }
+
+    /// Build a tuple literal (what executables return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        let n = elems.len() as i64;
+        Literal { storage: Storage::Tuple(elems), dims: vec![n] }
+    }
+
+    /// Unpack a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(v) => Ok(v),
+            _ => Err(Error("to_tuple: literal is not a tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (text is carried but never compiled here).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub PJRT client: constructible, but compilation is unavailable.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+        let t = Literal::tuple(vec![s, Literal::scalar(1.5f32)]);
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert_eq!(elems[1].get_first_element::<f32>().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn execution_is_unavailable_but_typed() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto { text: String::new() });
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err:?}").contains("offline"));
+    }
+}
