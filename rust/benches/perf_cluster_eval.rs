@@ -1,0 +1,96 @@
+//! §Perf — sharded cluster evaluation throughput: one fixed batch
+//! driven through [`ShardedEvaluator`] pools of 1/2/3 in-process
+//! `nahas serve` instances vs the serial evaluator and the single-host
+//! service tier, plus the warm-cache replay and the per-host routing
+//! split (rendezvous hashing should spread the key space roughly
+//! evenly).
+
+use std::time::Instant;
+
+use nahas::cluster::ShardedEvaluator;
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{Evaluator, SurrogateSim};
+use nahas::service::{Server, ServiceEvaluator};
+use nahas::util::Rng;
+
+const BATCH: usize = 384;
+const CONNS_PER_HOST: usize = 4;
+
+fn s2() -> NasSpace {
+    NasSpace::new(NasSpaceId::EfficientNet)
+}
+
+fn fixed_batch() -> Vec<(Vec<usize>, Vec<usize>)> {
+    let space = s2();
+    let has = HasSpace::new();
+    let mut rng = Rng::new(3);
+    (0..BATCH).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect()
+}
+
+fn time_batch(ev: &mut dyn Evaluator, batch: &[(Vec<usize>, Vec<usize>)]) -> (f64, usize) {
+    let t0 = Instant::now();
+    let results = ev.evaluate_batch(batch);
+    let dt = t0.elapsed().as_secs_f64();
+    (batch.len() as f64 / dt, results.iter().filter(|r| r.valid).count())
+}
+
+fn main() {
+    println!("cluster evaluation sweep: {BATCH} samples, {CONNS_PER_HOST} conns/host\n");
+    let batch = fixed_batch();
+
+    let mut serial = SurrogateSim::new(s2(), 3);
+    let (serial_tput, serial_valid) = time_batch(&mut serial, &batch);
+    println!("  SurrogateSim serial      {serial_tput:>8.0} samples/s  (1.00x)");
+
+    let single = Server::spawn("127.0.0.1:0").expect("spawn server");
+    let mut remote = ServiceEvaluator::connect(
+        &single.addr.to_string(),
+        NasSpaceId::EfficientNet,
+        3,
+        CONNS_PER_HOST,
+    )
+    .expect("connect service evaluator");
+    let (tput, valid) = time_batch(&mut remote, &batch);
+    assert_eq!(valid, serial_valid, "service results diverged");
+    println!(
+        "  ServiceEvaluator 1 host  {tput:>8.0} samples/s  ({:.2}x)",
+        tput / serial_tput
+    );
+    single.stop();
+
+    for n_hosts in [1usize, 2, 3] {
+        let servers: Vec<Server> =
+            (0..n_hosts).map(|_| Server::spawn("127.0.0.1:0").expect("spawn server")).collect();
+        let hosts: Vec<String> = servers.iter().map(|s| s.addr.to_string()).collect();
+        let mut cluster =
+            ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, 3, CONNS_PER_HOST)
+                .expect("connect cluster");
+        let (tput, valid) = time_batch(&mut cluster, &batch);
+        assert_eq!(valid, serial_valid, "cluster results diverged from serial");
+        let split: Vec<String> = cluster
+            .host_snapshots()
+            .iter()
+            .map(|s| format!("{:.0}%", 100.0 * s.evals as f64 / BATCH as f64))
+            .collect();
+        println!(
+            "  ShardedEvaluator x{n_hosts}     {tput:>8.0} samples/s  ({:.2}x)  split {}",
+            tput / serial_tput,
+            split.join("/")
+        );
+        if n_hosts == 3 {
+            // Warm-cache replay: pure memo hits, zero service traffic.
+            let evals: usize = cluster.host_snapshots().iter().map(|s| s.evals).sum();
+            let (hit_tput, _) = time_batch(&mut cluster, &batch);
+            let evals2: usize = cluster.host_snapshots().iter().map(|s| s.evals).sum();
+            assert_eq!(evals, evals2, "replay must not touch the hosts");
+            println!(
+                "  memo-cache replay        {hit_tput:>8.0} samples/s  ({:.2}x)",
+                hit_tput / serial_tput
+            );
+        }
+        for s in servers {
+            s.stop();
+        }
+    }
+}

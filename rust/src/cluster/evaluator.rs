@@ -1,0 +1,428 @@
+//! [`ShardedEvaluator`] — `Evaluator::evaluate_batch` over a pool of
+//! `nahas serve` hosts.
+//!
+//! One batch flows through the same [`BatchPlan`] memo-cache front as
+//! the single-host tiers, then the deduped misses are routed by
+//! rendezvous hash of the joint key ([`super::HashRing`]) to their
+//! owning host and fanned out over that host's connection sub-pool.
+//! Because every evaluation is a deterministic function of (space,
+//! task, seed, decisions) — hardware metrics from the simulator
+//! service, accuracy from the local [`SurrogateSim`] — *where* a
+//! sample is computed can never change *what* it computes: results are
+//! bit-identical to the serial and single-host paths for the same
+//! seed, with or without failover (`tests/parallel_equivalence.rs`,
+//! `tests/cluster_failover.rs`).
+//!
+//! Failover is deterministic re-routing: a host that fails a roundtrip
+//! twice (once on the pooled connection, once on a fresh one) is
+//! marked down; its pending keys — and, by rendezvous hashing, exactly
+//! its key range — move to the surviving hosts, and the batch retries
+//! until everything resolves or no host is up (those samples score
+//! invalid and are *not* memoized, so a later resample retries).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::health::HealthMonitor;
+use super::pool::{HostPool, HostSnapshot, HostState, IO_TIMEOUT};
+use super::ring::HashRing;
+use crate::nas::{NasSpace, NasSpaceId};
+use crate::search::evaluator::{EvalCounters, EvalResult, EvalStats, Evaluator, HostEvalStats};
+use crate::search::parallel::BatchPlan;
+use crate::search::{joint_key, MemoCache, SurrogateSim};
+use crate::service::{query_with_reconnect, remote_result, service_space_name, Client};
+
+/// Shared read-only query context for shard worker threads.
+struct ShardCtx<'a> {
+    sim: &'a SurrogateSim,
+    space_name: &'static str,
+    seg: bool,
+    nas_len: usize,
+}
+
+/// Sharded multi-host remote evaluator (the cluster tier).
+pub struct ShardedEvaluator {
+    pool: HostPool,
+    ring: HashRing,
+    /// Local accuracy half (decode + task dispatch), exactly as in the
+    /// other tiers, so cluster accuracy can never diverge.
+    sim: SurrogateSim,
+    space_name: &'static str,
+    seg: bool,
+    cache: MemoCache,
+    counters: EvalCounters,
+    monitor: Option<HealthMonitor>,
+}
+
+impl ShardedEvaluator {
+    /// Connect `conns_per_host` clients to every host. Hosts that are
+    /// unreachable start down (their key ranges go to the survivors);
+    /// only an entirely unreachable pool is an error.
+    pub fn connect<S: AsRef<str>>(
+        hosts: &[S],
+        id: NasSpaceId,
+        seed: u64,
+        conns_per_host: usize,
+    ) -> Result<Self> {
+        let pool = HostPool::connect(hosts, conns_per_host)?;
+        Ok(ShardedEvaluator {
+            ring: HashRing::new(hosts),
+            pool,
+            sim: SurrogateSim::new(NasSpace::new(id), seed),
+            space_name: service_space_name(id),
+            seg: false,
+            cache: MemoCache::new(16 * 1024),
+            counters: EvalCounters::default(),
+            monitor: None,
+        })
+    }
+
+    pub fn segmentation(mut self) -> Self {
+        self.seg = true;
+        self.sim = self.sim.segmentation();
+        self
+    }
+
+    /// Start background health probes every `interval` (the CLI does;
+    /// tests mostly leave routing to the query-failure path so runs
+    /// stay deterministic).
+    pub fn with_health_probes(mut self, interval: Duration) -> Self {
+        let timeout = interval.min(Duration::from_millis(500));
+        self.monitor = Some(HealthMonitor::start(self.pool.shared_hosts(), interval, timeout));
+        self
+    }
+
+    /// Whether a background [`HealthMonitor`] is running.
+    pub fn health_probes_active(&self) -> bool {
+        self.monitor.is_some()
+    }
+
+    pub fn hosts(&self) -> usize {
+        self.pool.len()
+    }
+
+    pub fn hosts_up(&self) -> usize {
+        self.pool.hosts_up()
+    }
+
+    pub fn host_snapshots(&self) -> Vec<HostSnapshot> {
+        self.pool.snapshot()
+    }
+
+    /// One roundtrip through the shared
+    /// [`query_with_reconnect`] ladder (same policy as the single-host
+    /// tier). `Err(())` means the host failed both attempts; the
+    /// caller marks it down and re-routes.
+    fn query_via(
+        client: &mut Client,
+        state: &HostState,
+        ctx: &ShardCtx<'_>,
+        key: &[usize],
+    ) -> Result<EvalResult, ()> {
+        let (addr, nas_len) = (state.addr(), ctx.nas_len);
+        match query_with_reconnect(client, addr, ctx.space_name, ctx.seg, key, nas_len) {
+            Ok(resp) => Ok(remote_result(&resp, ctx.sim, &key[..nas_len])),
+            Err(_) => Err(()),
+        }
+    }
+
+    /// Worker body: evaluate `keys` (indices into `pending`) against
+    /// one connection of one host. On double transport failure the
+    /// host is marked down and the unfinished keys are returned for
+    /// re-routing.
+    fn shard_task(
+        mut client: Option<&mut Client>,
+        state: &HostState,
+        ctx: &ShardCtx<'_>,
+        keys: &[usize],
+        pending: &[Vec<usize>],
+    ) -> (Vec<(usize, EvalResult)>, Vec<usize>) {
+        // A host that is up but was unreachable at connect time gets an
+        // ephemeral connection for this round.
+        let mut ephemeral;
+        let client: &mut Client = match client.take() {
+            Some(c) => c,
+            None => match Client::connect_with_io_timeout(state.addr(), IO_TIMEOUT) {
+                Ok(c) => {
+                    ephemeral = c;
+                    &mut ephemeral
+                }
+                Err(_) => {
+                    state.set_up(false);
+                    return (Vec::new(), keys.to_vec());
+                }
+            },
+        };
+        let mut done = Vec::with_capacity(keys.len());
+        for (pos, &ki) in keys.iter().enumerate() {
+            match Self::query_via(client, state, ctx, &pending[ki]) {
+                Ok(r) => {
+                    state.evals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    done.push((ki, r));
+                }
+                Err(()) => {
+                    state.set_up(false);
+                    eprintln!(
+                        "cluster: host {} failed twice; re-routing {} sample(s)",
+                        state.addr(),
+                        keys.len() - pos
+                    );
+                    return (done, keys[pos..].to_vec());
+                }
+            }
+        }
+        (done, Vec::new())
+    }
+
+    /// One fan-out round: route `todo` over the up hosts, drive each
+    /// host's share through its connection sub-pool on scoped threads,
+    /// and return the keys that need re-routing (their host died).
+    fn query_round(
+        &mut self,
+        pending: &[Vec<usize>],
+        nas_len: usize,
+        todo: &[usize],
+        fresh: &mut [Option<(EvalResult, bool)>],
+        served: &mut [Option<usize>],
+    ) -> Vec<usize> {
+        let up = self.pool.up_flags();
+        let mut by_host: Vec<Vec<usize>> = vec![Vec::new(); self.pool.len()];
+        for &ki in todo {
+            match self.ring.route(&pending[ki], &up) {
+                Some(h) => by_host[h].push(ki),
+                // No host up: score invalid but do NOT memoize, so the
+                // next resample retries a possibly-recovered pool.
+                None => fresh[ki] = Some((EvalResult::invalid(), false)),
+            }
+        }
+        // A host that routes traffic but has no pooled connections
+        // (unreachable at startup, recovered since) gets its sub-pool
+        // topped up so it fans out like everyone else.
+        for (h, keys) in by_host.iter().enumerate() {
+            if !keys.is_empty() && self.pool.conns_empty(h) {
+                self.pool.refill(h);
+            }
+        }
+        let ctx =
+            ShardCtx { sim: &self.sim, space_name: self.space_name, seg: self.seg, nas_len };
+        let mut failed: Vec<usize> = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (h, (state, conns)) in self.pool.shards().enumerate() {
+                let keys = &by_host[h];
+                if keys.is_empty() {
+                    continue;
+                }
+                let ctx = &ctx;
+                if conns.is_empty() {
+                    let task = move || (h, Self::shard_task(None, state, ctx, keys, pending));
+                    handles.push(s.spawn(task));
+                    continue;
+                }
+                let tasks = conns.len().min(keys.len());
+                let chunk = keys.len().div_ceil(tasks);
+                for (client, ck) in conns.iter_mut().zip(keys.chunks(chunk)) {
+                    let t = move || {
+                        (h, Self::shard_task(Some(client), state, ctx, ck, pending))
+                    };
+                    handles.push(s.spawn(t));
+                }
+            }
+            for handle in handles {
+                let (h, (ok, fail)) = handle.join().expect("cluster shard worker panicked");
+                for (ki, r) in ok {
+                    fresh[ki] = Some((r, true));
+                    served[ki] = Some(h);
+                }
+                failed.extend(fail);
+            }
+        });
+        // Deterministic retry order (thread join order is not).
+        failed.sort_unstable();
+        failed
+    }
+
+    /// Evaluate all deduped keys, re-routing around dead hosts until
+    /// everything resolves (bounded by the pool size: each extra round
+    /// requires at least one more host to have died). Also reports
+    /// which host served each key, for per-host attribution.
+    fn query_pending(
+        &mut self,
+        pending: &[Vec<usize>],
+        nas_len: usize,
+    ) -> (Vec<(EvalResult, bool)>, Vec<Option<usize>>) {
+        let mut fresh: Vec<Option<(EvalResult, bool)>> = vec![None; pending.len()];
+        let mut served: Vec<Option<usize>> = vec![None; pending.len()];
+        let mut todo: Vec<usize> = (0..pending.len()).collect();
+        for _ in 0..=self.pool.len() {
+            if todo.is_empty() {
+                break;
+            }
+            todo = self.query_round(pending, nas_len, &todo, &mut fresh, &mut served);
+        }
+        // Only reachable if hosts flap up/down mid-batch faster than
+        // the round bound: fail those samples without memoizing them.
+        for ki in todo {
+            fresh[ki] = Some((EvalResult::invalid(), false));
+        }
+        let out = fresh.into_iter().map(|r| r.expect("all pending slots resolved")).collect();
+        (out, served)
+    }
+
+    /// Attribute each sample of the batch to a host: misses go to the
+    /// host that actually served their key this batch (failover moves
+    /// the attribution with the eval, so a dead host never collects
+    /// phantom traffic), cache hits to the host their key routes to
+    /// right now (affinity: that host answered the original miss).
+    fn attribute_requests(
+        &self,
+        keys: &[Vec<usize>],
+        pending: &[Vec<usize>],
+        served: &[Option<usize>],
+    ) {
+        let by_key: HashMap<&[usize], usize> = pending
+            .iter()
+            .zip(served)
+            .filter_map(|(k, s)| s.map(|h| (k.as_slice(), h)))
+            .collect();
+        let up = self.pool.up_flags();
+        for key in keys {
+            let host =
+                by_key.get(key.as_slice()).copied().or_else(|| self.ring.route(key, &up));
+            if let Some(h) = host {
+                self.pool.host(h).requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Evaluator for ShardedEvaluator {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        self.evaluate_batch(&[(nas_d.to_vec(), has_d.to_vec())])[0]
+    }
+
+    fn evaluate_batch(&mut self, batch: &[(Vec<usize>, Vec<usize>)]) -> Vec<EvalResult> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        self.counters.requests += batch.len();
+        let nas_len = batch[0].0.len();
+        assert!(
+            batch.iter().all(|(nas_d, _)| nas_d.len() == nas_len),
+            "mixed decision lengths in one batch"
+        );
+        let keys: Vec<Vec<usize>> = batch.iter().map(|(n, h)| joint_key(n, h)).collect();
+        let plan = BatchPlan::build(&mut self.cache, batch);
+        let (fresh, served) = self.query_pending(plan.pending(), nas_len);
+        self.counters.evals += fresh.len();
+        self.attribute_requests(&keys, plan.pending(), &served);
+        let out = plan.finish(&mut self.cache, fresh);
+        self.counters.invalid += out.iter().filter(|r| !r.valid).count();
+        out
+    }
+
+    fn stats(&self) -> EvalStats {
+        let mut st = self.counters.stats();
+        let snaps = self.pool.snapshot();
+        st.hosts_down = snaps.iter().filter(|s| !s.up).count();
+        st.per_host = snaps
+            .into_iter()
+            .map(|s| HostEvalStats {
+                host: s.addr,
+                requests: s.requests,
+                evals: s.evals,
+                down: !s.up,
+            })
+            .collect();
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::has::HasSpace;
+    use crate::service::Server;
+    use crate::util::Rng;
+
+    fn spawn_cluster(n: usize) -> (Vec<Server>, Vec<String>) {
+        let servers: Vec<Server> =
+            (0..n).map(|_| Server::spawn("127.0.0.1:0").unwrap()).collect();
+        let hosts = servers.iter().map(|s| s.addr.to_string()).collect();
+        (servers, hosts)
+    }
+
+    #[test]
+    fn sharded_batch_matches_local_simulator() {
+        let (servers, hosts) = spawn_cluster(3);
+        let mut cluster =
+            ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, 3, 2).unwrap();
+        let mut local = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+        let has = HasSpace::new();
+        let mut rng = Rng::new(9);
+        let batch: Vec<(Vec<usize>, Vec<usize>)> = (0..24)
+            .map(|_| (local.space.random(&mut rng), has.random(&mut rng)))
+            .collect();
+        let cs = cluster.evaluate_batch(&batch);
+        let ls = local.evaluate_batch(&batch);
+        for (c, l) in cs.iter().zip(&ls) {
+            assert_eq!(c.valid, l.valid);
+            if c.valid {
+                assert_eq!(c.acc.to_bits(), l.acc.to_bits());
+                assert_eq!(c.latency_ms.to_bits(), l.latency_ms.to_bits());
+                assert_eq!(c.energy_mj.to_bits(), l.energy_mj.to_bits());
+                assert_eq!(c.area_mm2.to_bits(), l.area_mm2.to_bits());
+            }
+        }
+        // Replay: all memo-cache hits, no new service traffic.
+        let evals_before: usize = cluster.host_snapshots().iter().map(|s| s.evals).sum();
+        let again = cluster.evaluate_batch(&batch);
+        let evals_after: usize = cluster.host_snapshots().iter().map(|s| s.evals).sum();
+        assert_eq!(evals_before, evals_after, "replay must be pure cache hits");
+        for (a, b) in cs.iter().zip(&again) {
+            assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+        }
+        let st = cluster.stats();
+        assert_eq!(st.requests, 48);
+        assert_eq!(st.evals + st.cache_hits, st.requests);
+        assert_eq!(st.hosts_down, 0);
+        assert_eq!(st.per_host.len(), 3);
+        assert_eq!(st.per_host.iter().map(|h| h.requests).sum::<usize>(), 48);
+        for s in servers {
+            s.stop();
+        }
+    }
+
+    #[test]
+    fn repeat_samples_keep_host_affinity() {
+        let (servers, hosts) = spawn_cluster(3);
+        let mut cluster =
+            ShardedEvaluator::connect(&hosts, NasSpaceId::MobileNetV2, 1, 1).unwrap();
+        let space = NasSpace::new(NasSpaceId::MobileNetV2);
+        let has = HasSpace::new();
+        let mut rng = Rng::new(2);
+        let nas_d = space.random(&mut rng);
+        let sample = vec![(nas_d, has.baseline_decisions())];
+        cluster.evaluate_batch(&sample);
+        let one: Vec<usize> = cluster.host_snapshots().iter().map(|s| s.evals).collect();
+        assert_eq!(one.iter().sum::<usize>(), 1, "exactly one host evaluated the sample");
+        // Ten repeats: all requests route to the same host, zero new evals.
+        for _ in 0..10 {
+            cluster.evaluate_batch(&sample);
+        }
+        let snaps = cluster.host_snapshots();
+        let owner = one.iter().position(|&e| e == 1).unwrap();
+        assert_eq!(snaps[owner].requests, 11);
+        assert_eq!(snaps[owner].evals, 1);
+        for (i, s) in snaps.iter().enumerate() {
+            if i != owner {
+                assert_eq!((s.requests, s.evals), (0, 0), "host {i} saw foreign traffic");
+            }
+        }
+        for s in servers {
+            s.stop();
+        }
+    }
+}

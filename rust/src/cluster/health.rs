@@ -1,0 +1,163 @@
+//! Host health probing: a one-shot protocol probe (used by `nahas
+//! cluster-status`) and the background monitor thread that keeps a
+//! pool's up/down flags fresh between batches.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::pool::HostState;
+use crate::util::json::Json;
+
+/// Result of probing one host.
+#[derive(Clone, Debug)]
+pub struct HostProbe {
+    pub addr: String,
+    pub up: bool,
+    /// Connect + request/response roundtrip time.
+    pub rtt_ms: f64,
+    /// "ok" or the failure reason.
+    pub detail: String,
+}
+
+impl HostProbe {
+    fn down(addr: &str, t0: Instant, detail: String) -> HostProbe {
+        HostProbe { addr: addr.to_string(), up: false, rtt_ms: rtt(t0), detail }
+    }
+}
+
+fn rtt(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+/// Probe one `nahas serve` host: TCP connect, then one intentionally
+/// unknown-space request. Any well-formed JSON reply — the server
+/// answers `{"valid": false, "error": "unknown space"}` — proves the
+/// whole serve loop (accept, parse, dispatch, respond) is alive
+/// without costing a simulation.
+pub fn probe_host(addr: &str, timeout: Duration) -> HostProbe {
+    let t0 = Instant::now();
+    let sock = match addr.to_socket_addrs().ok().and_then(|mut a| a.next()) {
+        Some(s) => s,
+        None => return HostProbe::down(addr, t0, "unresolvable address".to_string()),
+    };
+    let stream = match TcpStream::connect_timeout(&sock, timeout) {
+        Ok(s) => s,
+        Err(e) => return HostProbe::down(addr, t0, format!("connect: {e}")),
+    };
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => return HostProbe::down(addr, t0, format!("clone: {e}")),
+    };
+    if let Err(e) = writeln!(writer, "{{\"space\": \"__probe__\"}}") {
+        return HostProbe::down(addr, t0, format!("write: {e}"));
+    }
+    let mut line = String::new();
+    if let Err(e) = BufReader::new(stream).read_line(&mut line) {
+        return HostProbe::down(addr, t0, format!("read: {e}"));
+    }
+    match Json::parse(line.trim()) {
+        Ok(_) => HostProbe {
+            addr: addr.to_string(),
+            up: true,
+            rtt_ms: rtt(t0),
+            detail: "ok".to_string(),
+        },
+        Err(e) => HostProbe::down(addr, t0, format!("bad response: {e}")),
+    }
+}
+
+/// Background health monitor: probes every host each `interval` and
+/// writes the verdict into the shared [`HostState`] up flags, so a
+/// crashed host stops receiving new routes between batches and a
+/// recovered one rejoins the ring. Stops (and joins) on drop.
+pub struct HealthMonitor {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HealthMonitor {
+    pub fn start(
+        hosts: Arc<Vec<HostState>>,
+        interval: Duration,
+        timeout: Duration,
+    ) -> HealthMonitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let tick = Duration::from_millis(20);
+            loop {
+                for h in hosts.iter() {
+                    if stop2.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    h.set_up(probe_host(h.addr(), timeout).up);
+                }
+                let mut slept = Duration::ZERO;
+                while slept < interval {
+                    if stop2.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(tick);
+                    slept += tick;
+                }
+            }
+        });
+        HealthMonitor { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for HealthMonitor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::Server;
+
+    #[test]
+    fn probes_live_host_up_and_dead_host_down() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let p = probe_host(&server.addr.to_string(), Duration::from_millis(500));
+        assert!(p.up, "{p:?}");
+        assert_eq!(p.detail, "ok");
+        assert!(p.rtt_ms >= 0.0);
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let p = probe_host(&dead, Duration::from_millis(500));
+        assert!(!p.up, "{p:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn monitor_flips_flags_as_hosts_die() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let pool = super::super::pool::HostPool::connect(&[addr], 1).unwrap();
+        let shared = pool.shared_hosts();
+        let (ivl, tmo) = (Duration::from_millis(30), Duration::from_millis(200));
+        let mon = HealthMonitor::start(shared.clone(), ivl, tmo);
+        assert!(shared[0].is_up());
+        server.stop();
+        // The listener is gone; within a few probe rounds the monitor
+        // must mark the host down.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while shared[0].is_up() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(!shared[0].is_up(), "monitor never marked the dead host down");
+        drop(mon);
+    }
+}

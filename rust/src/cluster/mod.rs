@@ -1,0 +1,34 @@
+//! Sharded multi-host evaluation (the cluster tier).
+//!
+//! PR 1's service tier parallelized one search against *one* `nahas
+//! serve` host; this subsystem shards a search across a pool of them —
+//! the paper's "multiple NAHAS clients can send parallel requests"
+//! scaled past a single box. Four parts:
+//!
+//! * [`ring`] — rendezvous hashing of the joint decision key, so
+//!   repeat samples of the same (alpha, h) always land on the same
+//!   host while it is up (cache affinity), and a dead host's key range
+//!   re-routes to the survivors without touching anyone else's;
+//! * [`pool`] — the host pool: shared up/down flags + routing counters
+//!   and a per-host connection sub-pool over the service [`Client`];
+//! * [`health`] — one-shot protocol probes (`nahas cluster-status`)
+//!   and the background [`HealthMonitor`] thread;
+//! * [`evaluator`] — [`ShardedEvaluator`], the `Evaluator` that ties
+//!   them together behind the same memo-cache front as the other
+//!   tiers. Bit-identical to the serial path for the same seed, with
+//!   or without failover.
+//!
+//! CLI: `nahas search --evaluator cluster --hosts a:7878,b:7878` and
+//! `nahas cluster-status --hosts ...`.
+//!
+//! [`Client`]: crate::service::Client
+
+pub mod evaluator;
+pub mod health;
+pub mod pool;
+pub mod ring;
+
+pub use evaluator::ShardedEvaluator;
+pub use health::{probe_host, HealthMonitor, HostProbe};
+pub use pool::{HostPool, HostSnapshot, HostState};
+pub use ring::HashRing;

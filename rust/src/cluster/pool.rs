@@ -1,0 +1,195 @@
+//! Health-checked host pool: per-host connection sub-pools over the
+//! PR 1 service [`Client`], plus the shared up/down + routing counters
+//! that the ring, the failover path and the background health monitor
+//! all read and write.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::service::Client;
+
+/// Socket read/write timeout for every cluster connection: a stalled
+/// host must surface as a transport failure (and fail over) rather
+/// than hang a shard worker — and with it the whole batch — forever.
+pub(crate) const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Shared per-host state. The up flag and the counters are atomics so
+/// shard worker threads, the health-probe thread and the coordinator
+/// can all touch them without a lock.
+#[derive(Debug)]
+pub struct HostState {
+    addr: String,
+    up: AtomicBool,
+    /// Samples routed to this host (cache hits included).
+    pub requests: AtomicUsize,
+    /// Service roundtrips this host answered.
+    pub evals: AtomicUsize,
+}
+
+impl HostState {
+    fn new(addr: &str, up: bool) -> Self {
+        HostState {
+            addr: addr.to_string(),
+            up: AtomicBool::new(up),
+            requests: AtomicUsize::new(0),
+            evals: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.up.load(Ordering::Relaxed)
+    }
+
+    pub fn set_up(&self, up: bool) {
+        self.up.store(up, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of one host's state, for reporting.
+#[derive(Clone, Debug)]
+pub struct HostSnapshot {
+    pub addr: String,
+    pub up: bool,
+    pub requests: usize,
+    pub evals: usize,
+}
+
+/// The host pool: shared states (also held by the health monitor) and
+/// this evaluator's private connection sub-pools, one per host.
+pub struct HostPool {
+    hosts: Arc<Vec<HostState>>,
+    conns: Vec<Vec<Client>>,
+    /// Target sub-pool size, for refilling after a host recovers.
+    per_host: usize,
+}
+
+impl HostPool {
+    /// Open `conns_per_host` connections to every host. A host with at
+    /// least one live connection is up (a transiently refused extra
+    /// connection just shrinks its sub-pool); a host with none starts
+    /// *down* (the health monitor or a later batch may find it again).
+    /// Only a pool with zero reachable hosts is an error.
+    pub fn connect<S: AsRef<str>>(addrs: &[S], conns_per_host: usize) -> Result<HostPool> {
+        let per_host = conns_per_host.max(1);
+        let mut hosts = Vec::with_capacity(addrs.len());
+        let mut conns = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let addr = addr.as_ref();
+            let pool: Vec<Client> = (0..per_host)
+                .filter_map(|_| Client::connect_with_io_timeout(addr, IO_TIMEOUT).ok())
+                .collect();
+            if pool.is_empty() {
+                eprintln!("cluster: host {addr} unreachable at connect; starting it as down");
+            } else if pool.len() < per_host {
+                eprintln!("cluster: host {addr} opened {}/{per_host} connections", pool.len());
+            }
+            hosts.push(HostState::new(addr, !pool.is_empty()));
+            conns.push(pool);
+        }
+        let pool = HostPool { hosts: Arc::new(hosts), conns, per_host };
+        if pool.hosts_up() == 0 {
+            bail!("no cluster host reachable (tried {} hosts)", addrs.len());
+        }
+        Ok(pool)
+    }
+
+    pub fn len(&self) -> usize {
+        self.hosts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hosts.is_empty()
+    }
+
+    pub fn hosts_up(&self) -> usize {
+        self.hosts.iter().filter(|h| h.is_up()).count()
+    }
+
+    /// Shared states, for handing to a [`super::HealthMonitor`].
+    pub fn shared_hosts(&self) -> Arc<Vec<HostState>> {
+        self.hosts.clone()
+    }
+
+    pub fn host(&self, i: usize) -> &HostState {
+        &self.hosts[i]
+    }
+
+    /// Current up flags, index-aligned with the ring.
+    pub fn up_flags(&self) -> Vec<bool> {
+        self.hosts.iter().map(|h| h.is_up()).collect()
+    }
+
+    /// Per-host `(state, connection sub-pool)`, for fan-out.
+    pub(crate) fn shards(&mut self) -> impl Iterator<Item = (&HostState, &mut Vec<Client>)> {
+        self.hosts.iter().zip(self.conns.iter_mut())
+    }
+
+    pub(crate) fn conns_empty(&self, i: usize) -> bool {
+        self.conns[i].is_empty()
+    }
+
+    /// Top up host `i`'s connection sub-pool (it was unreachable at
+    /// connect time, or died and recovered). Stops at the first
+    /// failure — a still-dead host costs one bounded connect attempt
+    /// and falls back to the ephemeral-connection path.
+    pub(crate) fn refill(&mut self, i: usize) {
+        let addr = self.hosts[i].addr().to_string();
+        let conns = &mut self.conns[i];
+        while conns.len() < self.per_host {
+            match Client::connect_with_io_timeout(&addr, IO_TIMEOUT) {
+                Ok(c) => conns.push(c),
+                Err(_) => break,
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<HostSnapshot> {
+        self.hosts
+            .iter()
+            .map(|h| HostSnapshot {
+                addr: h.addr.clone(),
+                up: h.is_up(),
+                requests: h.requests.load(Ordering::Relaxed),
+                evals: h.evals.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::Server;
+
+    #[test]
+    fn connects_reachable_hosts_and_marks_dead_ones_down() {
+        let live = Server::spawn("127.0.0.1:0").unwrap();
+        // A dead address: bind, read the port, drop the listener.
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let pool = HostPool::connect(&[live.addr.to_string(), dead.clone()], 2).unwrap();
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.hosts_up(), 1);
+        assert_eq!(pool.up_flags(), vec![true, false]);
+        assert_eq!(pool.host(1).addr(), dead);
+        live.stop();
+    }
+
+    #[test]
+    fn all_hosts_dead_is_an_error() {
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(HostPool::connect(&[dead], 1).is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Rendezvous (highest-random-weight) hashing of joint decision keys
+//! over a host pool.
+//!
+//! Every (key, host) pair gets a deterministic score; a key routes to
+//! the up host with the highest score. Two properties make this the
+//! right router for a sharded evaluator:
+//!
+//! * **affinity** — repeat samples of the same joint decision always
+//!   score the hosts identically, so they land on the same host while
+//!   it is up, preserving that host's cache locality;
+//! * **minimal disruption** — when a host goes down, only the keys it
+//!   owned move (each to its second-ranked host); every other key's
+//!   argmax is unchanged. No ring segments to rebalance, no state.
+
+/// 64-bit FNV-1a over `bytes`, folded into a running hash `h`.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Rendezvous router over an ordered host list. Host order is part of
+/// the identity (index `i` here must match index `i` of the pool), but
+/// scores depend only on the host *address*, so the same address list
+/// in any order routes every key to the same address.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// Per-host seed: FNV-1a of the host address.
+    seeds: Vec<u64>,
+}
+
+impl HashRing {
+    pub fn new<S: AsRef<str>>(hosts: &[S]) -> Self {
+        HashRing {
+            seeds: hosts.iter().map(|h| fnv1a(FNV_OFFSET, h.as_ref().as_bytes())).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seeds.is_empty()
+    }
+
+    /// Rendezvous score of `key` on host `i`.
+    fn score(&self, i: usize, key: &[usize]) -> u64 {
+        let mut h = self.seeds[i];
+        for &w in key {
+            h = fnv1a(h, &(w as u64).to_le_bytes());
+        }
+        h
+    }
+
+    /// Route `key` to the highest-scoring host with `up[i]` set. Ties
+    /// break toward the lower index (deterministic). `None` iff no
+    /// host is up.
+    pub fn route(&self, key: &[usize], up: &[bool]) -> Option<usize> {
+        debug_assert_eq!(up.len(), self.seeds.len());
+        let mut best: Option<(u64, usize)> = None;
+        for (i, &is_up) in up.iter().enumerate().take(self.seeds.len()) {
+            if !is_up {
+                continue;
+            }
+            let s = self.score(i, key);
+            if best.map(|(bs, _)| s > bs).unwrap_or(true) {
+                best = Some((s, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// The host that owns `key` when every host is up.
+    pub fn owner(&self, key: &[usize]) -> Option<usize> {
+        self.route(key, &vec![true; self.seeds.len()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Rng};
+
+    fn hosts(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7878")).collect()
+    }
+
+    fn random_key(r: &mut Rng) -> Vec<usize> {
+        (0..(1 + r.below(30))).map(|_| r.below(8)).collect()
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_covers_all_hosts() {
+        let ring = HashRing::new(&hosts(3));
+        let mut rng = Rng::new(1);
+        let mut seen = [0usize; 3];
+        for _ in 0..600 {
+            let key = random_key(&mut rng);
+            let a = ring.owner(&key).unwrap();
+            let b = ring.owner(&key).unwrap();
+            assert_eq!(a, b);
+            seen[a] += 1;
+        }
+        // Rendezvous hashing balances within a small constant factor.
+        for (i, &n) in seen.iter().enumerate() {
+            assert!(n > 600 / 3 / 3, "host {i} got only {n}/600 keys");
+        }
+    }
+
+    #[test]
+    fn prop_down_host_moves_only_its_own_keys() {
+        let ring = HashRing::new(&hosts(4));
+        proptest::check(
+            "rendezvous minimal disruption",
+            proptest::CASES,
+            |r: &mut Rng| (random_key(r), r.below(4)),
+            |(key, down)| {
+                let all = ring.owner(key).unwrap();
+                let mut up = vec![true; 4];
+                up[*down] = false;
+                let survivor = ring.route(key, &up).unwrap();
+                if all != *down && survivor != all {
+                    return Err(format!(
+                        "key owned by {all} moved to {survivor} when {down} went down"
+                    ));
+                }
+                if survivor == *down {
+                    return Err(format!("routed to the down host {down}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn all_hosts_down_routes_nowhere() {
+        let ring = HashRing::new(&hosts(2));
+        assert_eq!(ring.route(&[1, 2, 3], &[false, false]), None);
+        assert_eq!(ring.route(&[1, 2, 3], &[false, true]), Some(1));
+    }
+}

@@ -36,19 +36,26 @@
 //!   samples) in front of `std::thread::scope` workers;
 //! * **service** — [`service::ServiceEvaluator`]: one TCP connection
 //!   per worker against a `nahas serve` simulator farm — the paper's
-//!   parallel clients made literal.
+//!   parallel clients made literal;
+//! * **cluster** — [`cluster::ShardedEvaluator`]: rendezvous-hash
+//!   sharding of the joint key over a health-checked pool of `nahas
+//!   serve` hosts, with deterministic failover when a host dies.
 //!
-//! CLI: `--evaluator local|parallel|service --workers N` on `search` /
-//! `phase` (workers default to the machine's parallelism; `--remote
-//! ADDR` selects the service tier). Pick `parallel` on one box — the
-//! evaluation is compute-bound and scales with cores until the batch
-//! size (`SearchCfg::batch`) caps it; pick `service` to share one
-//! simulator farm between searches, sized so `workers` is at most the
-//! farm's thread budget. Cache-hit and throughput counters come back
-//! in `SearchOutcome::eval_stats`.
+//! CLI: `--evaluator local|parallel|service|cluster --workers N` on
+//! `search` / `phase` (workers default to the machine's parallelism;
+//! `--remote ADDR` selects the service tier, `--hosts a:7878,b:7878`
+//! the cluster tier). Pick `parallel` on one box — the evaluation is
+//! compute-bound and scales with cores until the batch size
+//! (`SearchCfg::batch`) caps it; pick `service` to share one simulator
+//! farm between searches, sized so `workers` is at most the farm's
+//! thread budget; pick `cluster` to spread one search over several
+//! farms (`nahas cluster-status` probes pool health). Cache-hit,
+//! throughput and per-host counters come back in
+//! `SearchOutcome::eval_stats`.
 
 pub mod accel;
 pub mod bench;
+pub mod cluster;
 pub mod costmodel;
 pub mod data;
 pub mod has;

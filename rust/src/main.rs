@@ -1,13 +1,14 @@
 //! `nahas` — the NAHAS coordinator CLI (leader entrypoint).
 //!
 //! Subcommands:
-//!   simulate    cost every Table-3 baseline (or random samples) on a hw config
-//!   search      multi-trial joint / platform-aware / HAS-only search
-//!   phase       phase-based (HAS-then-NAS) search (Fig. 9 ablation)
-//!   oneshot     weight-sharing search on the AOT proxy supernet
-//!   train-child train one proxy child end-to-end through PJRT
-//!   costmodel   generate simulator-labelled data, train + evaluate the MLP
-//!   serve       run the simulator service (newline-JSON over TCP)
+//!   simulate       cost every Table-3 baseline (or random samples) on a hw config
+//!   search         multi-trial joint / platform-aware / HAS-only search
+//!   phase          phase-based (HAS-then-NAS) search (Fig. 9 ablation)
+//!   oneshot        weight-sharing search on the AOT proxy supernet
+//!   train-child    train one proxy child end-to-end through PJRT
+//!   costmodel      generate simulator-labelled data, train + evaluate the MLP
+//!   serve          run the simulator service (newline-JSON over TCP)
+//!   cluster-status probe the health of a `--hosts` service pool
 //!
 //! Run `nahas help` for flags. clap is not vendored in this offline
 //! build; flags are simple `--key value` pairs.
@@ -18,6 +19,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use nahas::accel::{simulate_network, AcceleratorConfig};
 use nahas::bench::Table;
+use nahas::cluster::{probe_host, ShardedEvaluator};
 use nahas::costmodel::{self, CostModel};
 use nahas::has::HasSpace;
 use nahas::metrics;
@@ -103,9 +105,27 @@ fn workers_arg(flags: &Flags) -> Result<usize> {
     Ok(flags.usize("workers", default)?.max(1))
 }
 
-/// `--evaluator local|parallel|service` (+ `--workers`, `--seg`,
-/// `--remote ADDR`). `--remote` without `--evaluator` implies the
-/// batched service client, preserving the old flag's meaning.
+/// `--hosts a:7878,b:7878,...`: the cluster tier's service pool.
+/// Duplicates are dropped — a repeated address would get two ring
+/// entries with identical scores (one of them permanently idle) and
+/// corrupt the by-address per-host stats matching.
+fn hosts_arg(raw: &str) -> Result<Vec<String>> {
+    let mut hosts: Vec<String> = Vec::new();
+    for h in raw.split(',').map(str::trim).filter(|h| !h.is_empty()) {
+        if !hosts.iter().any(|e| e == h) {
+            hosts.push(h.to_string());
+        }
+    }
+    if hosts.is_empty() {
+        bail!("--hosts needs at least one ADDR:PORT");
+    }
+    Ok(hosts)
+}
+
+/// `--evaluator local|parallel|service|cluster` (+ `--workers`,
+/// `--seg`, `--remote ADDR`, `--hosts A,B,...`). `--remote` without
+/// `--evaluator` implies the batched service client, preserving the
+/// old flag's meaning; `--hosts` likewise implies the cluster tier.
 /// `batch` is the controller batch size — the most samples one
 /// `evaluate_batch` call can carry, so service connections beyond it
 /// could never be used.
@@ -117,11 +137,18 @@ fn evaluator_arg(
 ) -> Result<Box<dyn Evaluator>> {
     let workers = workers_arg(flags)?;
     let seg = flags.bool("seg");
-    let kind = flags
-        .get("evaluator")
-        .unwrap_or(if flags.get("remote").is_some() { "service" } else { "local" });
+    let kind = flags.get("evaluator").unwrap_or(if flags.get("remote").is_some() {
+        "service"
+    } else if flags.get("hosts").is_some() {
+        "cluster"
+    } else {
+        "local"
+    });
     if kind != "service" && flags.get("remote").is_some() {
         bail!("--remote is only used by the service tier; drop it or pass --evaluator service");
+    }
+    if kind != "cluster" && flags.get("hosts").is_some() {
+        bail!("--hosts is only used by the cluster tier; drop it or pass --evaluator cluster");
     }
     Ok(match kind {
         "local" => {
@@ -149,12 +176,27 @@ fn evaluator_arg(
             }
             Box::new(ev)
         }
-        other => bail!("unknown evaluator '{other}' (local|parallel|service)"),
+        "cluster" => {
+            let raw = flags
+                .get("hosts")
+                .ok_or_else(|| anyhow!("--evaluator cluster requires --hosts A,B,..."))?;
+            let hosts = hosts_arg(raw)?;
+            // Split the worker budget over the pool, but keep at least
+            // one connection per host and never more than the batch.
+            let per_host = (workers / hosts.len()).clamp(1, batch.max(1));
+            let mut ev = ShardedEvaluator::connect(&hosts, space.id, seed, per_host)?
+                .with_health_probes(std::time::Duration::from_millis(500));
+            if seg {
+                ev = ev.segmentation();
+            }
+            println!("cluster: {}/{} hosts up", ev.hosts_up(), ev.hosts());
+            Box::new(ev)
+        }
+        other => bail!("unknown evaluator '{other}' (local|parallel|service|cluster)"),
     })
 }
 
-fn print_eval_stats(out: &nahas::search::SearchOutcome) {
-    let st = out.eval_stats;
+fn print_eval_stats(st: &nahas::search::EvalStats) {
     // Only interesting for caching evaluators; the local tier's
     // requests == evals and the samples/s already printed say it all.
     if st.cache_hits > 0 {
@@ -165,6 +207,19 @@ fn print_eval_stats(out: &nahas::search::SearchOutcome) {
             st.cache_hits,
             st.hit_rate() * 100.0,
         );
+    }
+    for h in &st.per_host {
+        println!(
+            "  host {}: {} routed, {} evals, {} hits{}",
+            h.host,
+            h.requests,
+            h.evals,
+            h.cache_hits(),
+            if h.down { "  [DOWN]" } else { "" }
+        );
+    }
+    if st.hosts_down > 0 {
+        println!("  {} host(s) down during this run", st.hosts_down);
     }
 }
 
@@ -195,6 +250,7 @@ fn main() -> Result<()> {
         "train-child" => cmd_train_child(&flags),
         "costmodel" => cmd_costmodel(&flags),
         "serve" => cmd_serve(&flags),
+        "cluster-status" => cmd_cluster_status(&flags),
         "help" | "--help" => {
             print_usage();
             Ok(())
@@ -212,14 +268,16 @@ fn print_usage() {
          \x20 search       [--space s2 --samples 500 --target-ms 0.5 | --target-mj 1.0]\n\
          \x20              [--controller ppo|random|evolution|reinforce --fixed-hw]\n\
          \x20              [--mode hard|soft --seg --seed S --out results/search.csv]\n\
-         \x20              [--evaluator local|parallel|service --workers N --batch 16]\n\
-\x20              [--remote ADDR   use a `nahas serve` simulator service]\n\
+         \x20              [--evaluator local|parallel|service|cluster --workers N --batch 16]\n\
+         \x20              [--remote ADDR   use a `nahas serve` simulator service]\n\
+         \x20              [--hosts A,B,..  shard over a pool of `nahas serve` hosts]\n\
          \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
-         \x20              [--evaluator local|parallel --workers N --batch 16]\n\
+         \x20              [--evaluator local|parallel|service|cluster --workers N --batch 16]\n\
          \x20 oneshot      [--warmup 60 --steps 200 --target-ms 0.02 --seed S]\n\
          \x20 train-child  [--steps 30 --seed S]\n\
          \x20 costmodel    [--data 2000 --train-steps 600 --eval 256 --space s2]\n\
-         \x20 serve        [--addr 127.0.0.1:7878]"
+         \x20 serve        [--addr 127.0.0.1:7878]\n\
+         \x20 cluster-status [--hosts a:7878,b:7878 --timeout-ms 1000]"
     );
 }
 
@@ -325,7 +383,7 @@ fn cmd_search(flags: &Flags) -> Result<()> {
         out.samples_per_s(),
         out.num_invalid
     );
-    print_eval_stats(&out);
+    print_eval_stats(&out.eval_stats);
     if let Some(b) = &out.best_feasible {
         println!(
             "best feasible: acc {:.2}% lat {:.3}ms energy {:.3}mJ area {:.1}mm2",
@@ -363,7 +421,9 @@ fn cmd_phase(flags: &Flags) -> Result<()> {
         ),
         None => println!("phase 2 found no feasible sample"),
     }
-    print_eval_stats(&out.nas_phase);
+    // Whole-run stats: the HAS and NAS phases share one evaluator, so
+    // cache-hit reporting covers both (not just the NAS half).
+    print_eval_stats(&out.eval_stats);
     Ok(())
 }
 
@@ -453,4 +513,32 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Probe every `--hosts` entry with one protocol roundtrip and print
+/// the pool's health (the operator view of the cluster tier).
+fn cmd_cluster_status(flags: &Flags) -> Result<()> {
+    let raw = flags
+        .get("hosts")
+        .ok_or_else(|| anyhow!("cluster-status requires --hosts A,B,..."))?;
+    let hosts = hosts_arg(raw)?;
+    let timeout = std::time::Duration::from_millis(flags.u64("timeout-ms", 1000)?);
+    let mut table = Table::new(&["Host", "Status", "RTT(ms)", "Detail"]);
+    let mut up = 0;
+    for host in &hosts {
+        let p = probe_host(host, timeout);
+        up += p.up as usize;
+        table.row(vec![
+            p.addr,
+            if p.up { "up" } else { "DOWN" }.to_string(),
+            format!("{:.2}", p.rtt_ms),
+            p.detail,
+        ]);
+    }
+    table.print();
+    println!("{up}/{} hosts up", hosts.len());
+    if up == 0 {
+        bail!("no cluster host reachable");
+    }
+    Ok(())
 }

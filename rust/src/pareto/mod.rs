@@ -149,4 +149,60 @@ mod tests {
         pts.push(p(0.9, 1.5));
         assert!(hypervolume(&pts, 0.0, 2.0) > hv0);
     }
+
+    #[test]
+    fn hypervolume_of_empty_input_is_zero() {
+        assert_eq!(hypervolume(&[], 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn hypervolume_ignores_points_outside_the_reference_box() {
+        // Too expensive (cost >= cost_ref) or no better than the
+        // accuracy reference: zero dominated area.
+        let outside = vec![p(0.9, 2.0), p(0.95, 3.5), p(0.3, 0.5), p(0.5, 0.2)];
+        assert_eq!(hypervolume(&outside, 0.5, 2.0), 0.0);
+        // One point inside the box contributes exactly its rectangle,
+        // regardless of the outside points.
+        let mut pts = outside;
+        pts.push(p(0.8, 1.0));
+        let hv = hypervolume(&pts, 0.5, 2.0);
+        assert!((hv - (0.8 - 0.5) * (2.0 - 1.0)).abs() < 1e-12, "hv {hv}");
+    }
+
+    #[test]
+    fn hypervolume_counts_duplicate_cost_points_once() {
+        // Three candidates at the same cost: only the best-accuracy
+        // one is on the frontier, so the area must not double-count.
+        let dup = vec![p(0.6, 1.0), p(0.8, 1.0), p(0.7, 1.0)];
+        let hv = hypervolume(&dup, 0.5, 2.0);
+        assert!((hv - (0.8 - 0.5) * (2.0 - 1.0)).abs() < 1e-12, "hv {hv}");
+        // Exact duplicates of the best point change nothing either.
+        let twice = vec![p(0.8, 1.0), p(0.8, 1.0)];
+        assert_eq!(hypervolume(&twice, 0.5, 2.0), hv);
+    }
+
+    #[test]
+    fn prop_union_frontier_is_idempotent() {
+        proptest::check(
+            "union_frontier idempotent",
+            128,
+            |r: &mut Rng| {
+                (0..(1 + r.below(4)))
+                    .map(|fi| {
+                        (0..r.below(16))
+                            .map(|i| Point::new(r.f64(), r.f64(), format!("{fi}.{i}")))
+                            .collect::<Vec<_>>()
+                    })
+                    .collect::<Vec<Vec<Point>>>()
+            },
+            |fronts| {
+                let once = union_frontier(fronts);
+                let twice = union_frontier(&[once.clone()]);
+                if once != twice {
+                    return Err(format!("not idempotent: {once:?} vs {twice:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
 }

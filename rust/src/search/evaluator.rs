@@ -46,16 +46,44 @@ pub enum Task {
     Segmentation,
 }
 
+/// Per-host routing counters of the cluster tier
+/// ([`crate::cluster::ShardedEvaluator`]): how many samples this host
+/// served (`requests` — evaluated misses plus the cache-hit repeats
+/// its key range absorbs) and how many service roundtrips it actually
+/// answered (`evals`); the gap is traffic the memo cache kept off the
+/// wire thanks to affinity routing.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HostEvalStats {
+    pub host: String,
+    pub requests: usize,
+    pub evals: usize,
+    /// Host is currently marked down (failed probe or transport).
+    pub down: bool,
+}
+
+impl HostEvalStats {
+    /// Routed samples served without a roundtrip to this host.
+    pub fn cache_hits(&self) -> usize {
+        self.requests.saturating_sub(self.evals)
+    }
+}
+
 /// Throughput counters an evaluator can expose (reported in
 /// `SearchOutcome` and by the CLI). `requests` counts samples asked
 /// for, `evals` the evaluations actually performed — the gap is
-/// `cache_hits` (deduped repeat samples from the controller).
-#[derive(Clone, Copy, Debug, Default)]
+/// `cache_hits` (deduped repeat samples from the controller). The
+/// cluster tier additionally reports its host pool: `hosts_down` and
+/// one [`HostEvalStats`] per configured host.
+#[derive(Clone, Debug, Default)]
 pub struct EvalStats {
     pub requests: usize,
     pub evals: usize,
     pub cache_hits: usize,
     pub invalid: usize,
+    /// Hosts currently marked down (cluster tier only; 0 elsewhere).
+    pub hosts_down: usize,
+    /// Per-host counters (cluster tier only; empty elsewhere).
+    pub per_host: Vec<HostEvalStats>,
 }
 
 impl EvalStats {
@@ -72,13 +100,62 @@ impl EvalStats {
     /// are cumulative since construction, so per-search reporting over
     /// a shared evaluator (e.g. the two phases of
     /// [`crate::search::phase::phase_search`]) subtracts a snapshot
-    /// taken when the search started.
+    /// taken when the search started. Host up/down state is not a
+    /// counter: the later snapshot's state is carried through.
     pub fn since(&self, earlier: &EvalStats) -> EvalStats {
+        let per_host = self
+            .per_host
+            .iter()
+            .map(|h| {
+                let e = earlier.per_host.iter().find(|p| p.host == h.host);
+                HostEvalStats {
+                    host: h.host.clone(),
+                    requests: h.requests.saturating_sub(e.map_or(0, |p| p.requests)),
+                    evals: h.evals.saturating_sub(e.map_or(0, |p| p.evals)),
+                    down: h.down,
+                }
+            })
+            .collect();
         EvalStats {
             requests: self.requests.saturating_sub(earlier.requests),
             evals: self.evals.saturating_sub(earlier.evals),
             cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
             invalid: self.invalid.saturating_sub(earlier.invalid),
+            hosts_down: self.hosts_down,
+            per_host,
+        }
+    }
+
+    /// Counter sum `self + other`, for aggregating deltas of searches
+    /// that shared one evaluator (e.g. the HAS and NAS phases of a
+    /// phase-based run). Per-host counters merge by host address; a
+    /// host down in either snapshot is down in the merge, and
+    /// `hosts_down` is re-derived from the merged flags so the two can
+    /// never disagree.
+    pub fn merged(&self, other: &EvalStats) -> EvalStats {
+        let mut per_host = self.per_host.clone();
+        for h in &other.per_host {
+            match per_host.iter_mut().find(|p| p.host == h.host) {
+                Some(p) => {
+                    p.requests += h.requests;
+                    p.evals += h.evals;
+                    p.down |= h.down;
+                }
+                None => per_host.push(h.clone()),
+            }
+        }
+        let hosts_down = if per_host.is_empty() {
+            self.hosts_down.max(other.hosts_down)
+        } else {
+            per_host.iter().filter(|h| h.down).count()
+        };
+        EvalStats {
+            requests: self.requests + other.requests,
+            evals: self.evals + other.evals,
+            cache_hits: self.cache_hits + other.cache_hits,
+            invalid: self.invalid + other.invalid,
+            hosts_down,
+            per_host,
         }
     }
 }
@@ -101,6 +178,7 @@ impl EvalCounters {
             evals: self.evals,
             cache_hits: self.requests - self.evals,
             invalid: self.invalid,
+            ..Default::default()
         }
     }
 }
@@ -217,8 +295,8 @@ impl Evaluator for SurrogateSim {
         EvalStats {
             requests: self.eval_count,
             evals: self.eval_count,
-            cache_hits: 0,
             invalid: self.invalid_count,
+            ..Default::default()
         }
     }
 }

@@ -15,7 +15,9 @@
 //!   alone by fixing the other — Eq. 1 reduces to NAS or HAS);
 //! * [`parallel`] — batched evaluation: the joint-decision memo cache
 //!   and the multi-threaded [`ParallelSim`] evaluator (paper §4.1's
-//!   "parallel requests", in-process);
+//!   "parallel requests", in-process; the remote tiers are
+//!   [`crate::service::ServiceEvaluator`] and
+//!   [`crate::cluster::ShardedEvaluator`]);
 //! * [`oneshot`] — weight-sharing search over the AOT supernet;
 //! * [`phase`] — the phase-based (HAS-then-NAS) ablation of Fig. 9.
 
@@ -29,7 +31,7 @@ pub mod ppo;
 pub mod reinforce;
 pub mod reward;
 
-pub use evaluator::{EvalResult, EvalStats, Evaluator, SurrogateSim, Task};
+pub use evaluator::{EvalResult, EvalStats, Evaluator, HostEvalStats, SurrogateSim, Task};
 pub use joint::{joint_search, Sample, SearchCfg, SearchOutcome};
 pub use parallel::{joint_key, MemoCache, ParallelSim};
 pub use reward::{ConstraintMode, CostObjective, RewardCfg};

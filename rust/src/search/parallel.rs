@@ -85,8 +85,9 @@ pub fn joint_key(nas_d: &[usize], has_d: &[usize]) -> Vec<usize> {
 }
 
 /// Cache-aware batch execution plan, shared by the parallel tiers
-/// ([`ParallelSim`], [`crate::service::ServiceEvaluator`]): `build`
-/// resolves cache hits and dedups the misses preserving first-seen
+/// ([`ParallelSim`], [`crate::service::ServiceEvaluator`],
+/// [`crate::cluster::ShardedEvaluator`]): `build` resolves cache hits
+/// and dedups the misses preserving first-seen
 /// order; the caller evaluates `pending()` however it fans out; then
 /// `finish` reassembles everything in batch order, memoizing only the
 /// results marked cacheable (a transport failure must not poison the
@@ -188,7 +189,7 @@ impl ParallelSim {
                 .collect();
         }
         let sim = &self.sim;
-        let chunk = (keys.len() + workers - 1) / workers;
+        let chunk = keys.len().div_ceil(workers);
         let mut out = Vec::with_capacity(keys.len());
         std::thread::scope(|s| {
             let handles: Vec<_> = keys

@@ -9,7 +9,7 @@
 
 use crate::has::HasSpace;
 use crate::nas::NasSpace;
-use crate::search::evaluator::Evaluator;
+use crate::search::evaluator::{EvalStats, Evaluator};
 use crate::search::joint::{joint_search, JointLayout, SearchCfg, SearchOutcome};
 use crate::search::ppo::PpoController;
 
@@ -18,6 +18,10 @@ pub struct PhaseOutcome {
     pub nas_phase: SearchOutcome,
     /// The accelerator selected by phase 1.
     pub selected_hw: Vec<usize>,
+    /// Evaluator counters summed over both phases — the whole run's
+    /// cache-hit/throughput picture (each phase also keeps its own in
+    /// its `SearchOutcome`).
+    pub eval_stats: EvalStats,
 }
 
 /// Run HAS-then-NAS with the total budget split evenly.
@@ -63,7 +67,8 @@ pub fn phase_search(
     let nas_phase =
         joint_search(evaluator, &mut nas_ctl, &layout, Some(&selected_hw), None, &p2_cfg);
 
-    PhaseOutcome { has_phase, nas_phase, selected_hw }
+    let eval_stats = has_phase.eval_stats.merged(&nas_phase.eval_stats);
+    PhaseOutcome { has_phase, nas_phase, selected_hw, eval_stats }
 }
 
 #[cfg(test)]
@@ -82,6 +87,14 @@ mod tests {
         let out = phase_search(&mut ev, &space, &initial, &cfg);
         assert_eq!(out.selected_hw.len(), 7);
         assert!(out.nas_phase.best_feasible.is_some());
+        // The aggregated stats cover BOTH phases of the run: each
+        // phase reports its own delta of the shared evaluator, and the
+        // whole-run view is their sum.
+        let (h, n) = (&out.has_phase.eval_stats, &out.nas_phase.eval_stats);
+        assert_eq!(out.eval_stats.requests, h.requests + n.requests);
+        assert_eq!(out.eval_stats.requests, 200);
+        assert_eq!(out.eval_stats.evals, h.evals + n.evals);
+        assert_eq!(out.eval_stats.invalid, h.invalid + n.invalid);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! exactly the paper's "parallel requests" scale-out on one box.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -147,7 +147,7 @@ fn serve_conn(stream: TcpStream, requests: Arc<AtomicU64>) {
             Ok(req) => handle_request(&req),
         };
         requests.fetch_add(1, Ordering::Relaxed);
-        if writeln!(writer, "{}", resp.to_string()).is_err() {
+        if writeln!(writer, "{resp}").is_err() {
             break;
         }
     }
@@ -157,13 +157,43 @@ fn serve_conn(stream: TcpStream, requests: Arc<AtomicU64>) {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Socket read/write timeout this client was opened with; carried
+    /// so transparent reconnects preserve the policy.
+    io_timeout: Option<std::time::Duration>,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr).context("connecting to simulator service")?;
+        Self::connect_opts(addr, None)
+    }
+
+    /// Connect with socket read/write timeouts: a stalled host then
+    /// surfaces as a transport error (and, in the cluster tier, a
+    /// failover) instead of blocking the caller forever.
+    pub fn connect_with_io_timeout(addr: &str, timeout: std::time::Duration) -> Result<Client> {
+        Self::connect_opts(addr, Some(timeout))
+    }
+
+    fn connect_opts(addr: &str, io_timeout: Option<std::time::Duration>) -> Result<Client> {
+        // With a timeout policy, the connect itself is bounded too: a
+        // black-holed host (dropped packets, unroutable IP) must not
+        // stall the caller for the OS default of a minute or more.
+        let stream = match io_timeout {
+            None => TcpStream::connect(addr).context("connecting to simulator service")?,
+            Some(t) => {
+                let sock = addr
+                    .to_socket_addrs()
+                    .context("resolving simulator service address")?
+                    .next()
+                    .ok_or_else(|| anyhow!("unresolvable address {addr}"))?;
+                TcpStream::connect_timeout(&sock, t)
+                    .context("connecting to simulator service")?
+            }
+        };
+        stream.set_read_timeout(io_timeout)?;
+        stream.set_write_timeout(io_timeout)?;
         let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        Ok(Client { reader: BufReader::new(stream), writer, io_timeout })
     }
 
     /// Query one (space, nas, hw) sample; returns the raw response.
@@ -181,7 +211,7 @@ impl Client {
             ("hw", arr(has_d)),
             ("task", if seg { "seg".into() } else { "cls".into() }),
         ]);
-        writeln!(self.writer, "{}", req.to_string())?;
+        writeln!(self.writer, "{req}")?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))
@@ -260,7 +290,7 @@ mod tests {
 /// Accuracy goes through [`SurrogateSim::accuracy_of`] — the same
 /// decode + task dispatch as the local tiers — so local and remote
 /// accuracy cannot diverge.
-fn remote_result(
+pub(crate) fn remote_result(
     resp: &Json,
     sim: &crate::search::SurrogateSim,
     nas_d: &[usize],
@@ -278,13 +308,37 @@ fn remote_result(
     }
 }
 
-fn service_space_name(id: NasSpaceId) -> &'static str {
+pub(crate) fn service_space_name(id: NasSpaceId) -> &'static str {
     match id {
         NasSpaceId::MobileNetV2 => "mobilenetv2",
         NasSpaceId::EfficientNet => "efficientnet",
         NasSpaceId::Evolved => "evolved",
         NasSpaceId::Proxy => "proxy",
     }
+}
+
+/// One service roundtrip with a single transparent reconnect; the
+/// replacement connection inherits the pooled client's timeout policy
+/// and takes over its slot on success. Shared by both remote tiers
+/// ([`ServiceEvaluator`], [`crate::cluster::ShardedEvaluator`]) so the
+/// transport-failure ladder cannot diverge between them; an `Err`
+/// means the host failed two attempts in a row.
+pub(crate) fn query_with_reconnect(
+    client: &mut Client,
+    addr: &str,
+    space_name: &str,
+    seg: bool,
+    key: &[usize],
+    nas_len: usize,
+) -> Result<Json> {
+    let (nas_d, has_d) = key.split_at(nas_len);
+    if let Ok(resp) = client.query(space_name, nas_d, has_d, seg) {
+        return Ok(resp);
+    }
+    let mut fresh = Client::connect_opts(addr, client.io_timeout)?;
+    let resp = fresh.query(space_name, nas_d, has_d, seg)?;
+    *client = fresh;
+    Ok(resp)
 }
 
 /// Batched remote evaluator: the paper's "multiple NAHAS clients can
@@ -338,14 +392,13 @@ impl ServiceEvaluator {
         self.conns.len()
     }
 
-    /// One service roundtrip. The bool is "cacheable": an in-protocol
-    /// response (even `valid: false`) is deterministic and memoizable;
-    /// a transport failure is not — caching it would poison the memo
-    /// cache and starve later resamples of a retry. On a transport
-    /// failure (dropped socket, server restart) the worker reconnects
-    /// once and retries, replacing its pooled connection on success, so
-    /// a restarted server costs one failed roundtrip per connection
-    /// instead of corrupting the rest of the search.
+    /// One service roundtrip through [`query_with_reconnect`]. The
+    /// bool is "cacheable": an in-protocol response (even `valid:
+    /// false`) is deterministic and memoizable; a transport failure is
+    /// not — caching it would poison the memo cache and starve later
+    /// resamples of a retry. A restarted server therefore costs one
+    /// failed roundtrip per connection instead of corrupting the rest
+    /// of the search.
     fn query_one(
         client: &mut Client,
         addr: &str,
@@ -355,18 +408,13 @@ impl ServiceEvaluator {
         key: &[usize],
         nas_len: usize,
     ) -> (crate::search::EvalResult, bool) {
-        let (nas_d, has_d) = (&key[..nas_len], &key[nas_len..]);
-        if let Ok(resp) = client.query(space_name, nas_d, has_d, seg) {
-            return (remote_result(&resp, sim, nas_d), true);
-        }
-        if let Ok(mut reconnected) = Client::connect(addr) {
-            if let Ok(resp) = reconnected.query(space_name, nas_d, has_d, seg) {
-                *client = reconnected;
-                return (remote_result(&resp, sim, nas_d), true);
+        match query_with_reconnect(client, addr, space_name, seg, key, nas_len) {
+            Ok(resp) => (remote_result(&resp, sim, &key[..nas_len]), true),
+            Err(_) => {
+                eprintln!("service evaluator: transport failure to {addr}; sample invalid");
+                (crate::search::EvalResult::invalid(), false)
             }
         }
-        eprintln!("service evaluator: transport failure to {addr}; sample scored invalid");
-        (crate::search::EvalResult::invalid(), false)
     }
 
     /// Evaluate deduped keys across the connection pool, in key order.
@@ -382,7 +430,7 @@ impl ServiceEvaluator {
         let (sim, space_name, seg) = (&self.sim, self.space_name, self.seg);
         let addr = self.addr.as_str();
         let nconn = self.conns.len().min(pending.len());
-        let chunk = (pending.len() + nconn - 1) / nconn;
+        let chunk = pending.len().div_ceil(nconn);
         let mut fresh = Vec::with_capacity(pending.len());
         if nconn == 1 {
             let client = &mut self.conns[0];

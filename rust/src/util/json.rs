@@ -69,12 +69,6 @@ impl Json {
         }
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -126,6 +120,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact single-line serialization (the wire format; `to_string`
+/// comes with it through the blanket `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -1,0 +1,159 @@
+//! Cluster failover: a search sharded over a host pool must survive a
+//! dead host — at connect time or mid-flight — with **bit-identical**
+//! results to the serial path (the dead host's key range re-routes to
+//! the survivors; values never depend on where they were computed) and
+//! an honest down-host count in `EvalStats`.
+
+use std::io::ErrorKind;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use nahas::cluster::ShardedEvaluator;
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::joint::JointLayout;
+use nahas::search::ppo::PpoController;
+use nahas::search::{joint_search, Evaluator, RewardCfg, SearchCfg, SearchOutcome, SurrogateSim};
+use nahas::service::Server;
+
+const SAMPLES: usize = 96;
+
+fn run(ev: &mut dyn Evaluator, seed: u64) -> SearchOutcome {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let (cards, layout) = JointLayout::cards(&space, &has);
+    let mut ctl = PpoController::new(&cards);
+    let cfg = SearchCfg::new(SAMPLES, RewardCfg::latency(0.4), seed);
+    joint_search(ev, &mut ctl, &layout, None, None, &cfg)
+}
+
+fn assert_same_trajectory(want: &SearchOutcome, got: &SearchOutcome) {
+    assert_eq!(want.history.len(), got.history.len());
+    for (w, g) in want.history.iter().zip(&got.history) {
+        assert_eq!(w.nas_d, g.nas_d, "sample {}", w.index);
+        assert_eq!(w.has_d, g.has_d, "sample {}", w.index);
+        assert_eq!(w.reward.to_bits(), g.reward.to_bits(), "sample {}", w.index);
+        assert_eq!(w.result.acc.to_bits(), g.result.acc.to_bits(), "sample {}", w.index);
+        assert_eq!(
+            w.result.latency_ms.to_bits(),
+            g.result.latency_ms.to_bits(),
+            "sample {}",
+            w.index
+        );
+    }
+    assert_eq!(want.num_invalid, got.num_invalid);
+}
+
+/// A host that accepts TCP connections and immediately drops them:
+/// `connect` succeeds, every roundtrip fails. This is the worst kind
+/// of dead host — it looks alive to the pool until queried.
+fn black_hole() -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    listener.set_nonblocking(true).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        while !stop2.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => drop(stream),
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    (addr, stop, handle)
+}
+
+#[test]
+fn search_survives_black_hole_host_mid_flight() {
+    let seed = 7u64;
+    let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+    let want = run(&mut serial, seed);
+
+    let s1 = Server::spawn("127.0.0.1:0").unwrap();
+    let s2 = Server::spawn("127.0.0.1:0").unwrap();
+    let (bh_addr, bh_stop, bh_handle) = black_hole();
+    let hosts = vec![s1.addr.to_string(), bh_addr.clone(), s2.addr.to_string()];
+    let mut cluster = ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, seed, 2)
+        .expect("black hole accepts connects, so the pool starts 3/3 up");
+    assert_eq!(cluster.hosts_up(), 3);
+
+    let got = run(&mut cluster, seed);
+    assert_same_trajectory(&want, &got);
+
+    // The first batch that routed a key to the black hole marked it
+    // down; its range moved to the survivors and stayed there.
+    let st = &got.eval_stats;
+    assert_eq!(st.hosts_down, 1, "exactly the black hole is down: {st:?}");
+    assert_eq!(st.requests, SAMPLES);
+    assert_eq!(st.evals + st.cache_hits, st.requests);
+    let bh = st.per_host.iter().find(|h| h.host == bh_addr).unwrap();
+    assert!(bh.down, "black hole not marked down");
+    assert_eq!(bh.evals, 0, "black hole cannot have answered anything");
+    let survivor_evals: usize = st.per_host.iter().filter(|h| !h.down).map(|h| h.evals).sum();
+    assert!(survivor_evals > 0);
+
+    bh_stop.store(true, Ordering::Relaxed);
+    bh_handle.join().unwrap();
+    s1.stop();
+    s2.stop();
+}
+
+#[test]
+fn host_dead_at_connect_starts_down_and_is_skipped() {
+    let seed = 3u64;
+    let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+    let want = run(&mut serial, seed);
+
+    let live = Server::spawn("127.0.0.1:0").unwrap();
+    // A port with nothing listening: bind, read, drop.
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let hosts = vec![live.addr.to_string(), dead.clone()];
+    let mut cluster =
+        ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, seed, 2).unwrap();
+    assert_eq!(cluster.hosts_up(), 1);
+
+    let got = run(&mut cluster, seed);
+    assert_same_trajectory(&want, &got);
+    let st = &got.eval_stats;
+    assert_eq!(st.hosts_down, 1);
+    let d = st.per_host.iter().find(|h| h.host == dead).unwrap();
+    assert!(d.down);
+    assert_eq!((d.requests, d.evals), (0, 0), "down host must receive no routes");
+    live.stop();
+}
+
+#[test]
+fn entirely_dead_pool_refuses_to_connect() {
+    let dead: Vec<String> = (0..2)
+        .map(|_| {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        })
+        .collect();
+    assert!(ShardedEvaluator::connect(&dead, NasSpaceId::EfficientNet, 0, 1).is_err());
+}
+
+#[test]
+fn single_host_cluster_equals_plain_service_path() {
+    // Degenerate pool: one host. The cluster tier must still replay
+    // the serial trajectory (routing is the identity).
+    let seed = 42u64;
+    let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+    let want = run(&mut serial, seed);
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let hosts = vec![server.addr.to_string()];
+    let mut cluster =
+        ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, seed, 4).unwrap();
+    let got = run(&mut cluster, seed);
+    assert_same_trajectory(&want, &got);
+    assert_eq!(got.eval_stats.per_host[0].requests, SAMPLES);
+    server.stop();
+}

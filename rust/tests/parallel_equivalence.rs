@@ -1,11 +1,13 @@
 //! Serial/parallel equivalence: for every seed and worker count, a
-//! joint search evaluated through [`ParallelSim`] must replay the
+//! joint search evaluated through [`ParallelSim`] — or sharded over a
+//! multi-host cluster through [`ShardedEvaluator`] — must replay the
 //! serial [`SurrogateSim`] trajectory **bit for bit** — same sampled
 //! decisions, same rewards, same `best_feasible`. This is the contract
-//! that makes `--workers N` a pure throughput knob: parallelism and
-//! memoization may change how often and where a sample is computed,
-//! never what it computes.
+//! that makes `--workers N` / `--hosts A,B,...` pure throughput knobs:
+//! parallelism, memoization and routing may change how often and where
+//! a sample is computed, never what it computes.
 
+use nahas::cluster::ShardedEvaluator;
 use nahas::has::HasSpace;
 use nahas::nas::{NasSpace, NasSpaceId};
 use nahas::search::joint::JointLayout;
@@ -13,6 +15,7 @@ use nahas::search::ppo::PpoController;
 use nahas::search::{
     joint_search, Evaluator, ParallelSim, RewardCfg, SearchCfg, SearchOutcome, SurrogateSim,
 };
+use nahas::service::Server;
 
 const SAMPLES: usize = 160;
 
@@ -71,10 +74,46 @@ fn parallel_matches_serial_across_seeds_and_workers() {
             let got = run(&mut par, seed);
             assert_identical(&want, &got, seed, workers);
             // Stats bookkeeping must balance exactly.
-            let st = got.eval_stats;
+            let st = &got.eval_stats;
             assert_eq!(st.requests, SAMPLES, "workers {workers}");
             assert_eq!(st.evals + st.cache_hits, st.requests, "workers {workers}");
             assert_eq!(st.invalid, got.num_invalid, "workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn cluster_matches_serial_over_two_and_three_hosts() {
+    // ISSUE 2 acceptance: `ShardedEvaluator` over N in-process servers
+    // is bit-identical to the serial path for the same seed, N ∈ {2, 3}.
+    for n_hosts in [2usize, 3] {
+        let servers: Vec<Server> =
+            (0..n_hosts).map(|_| Server::spawn("127.0.0.1:0").unwrap()).collect();
+        let hosts: Vec<String> = servers.iter().map(|s| s.addr.to_string()).collect();
+        for seed in [1u64, 7] {
+            let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+            let want = run(&mut serial, seed);
+            let mut cluster =
+                ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, seed, 2).unwrap();
+            let got = run(&mut cluster, seed);
+            assert_identical(&want, &got, seed, n_hosts);
+            let st = &got.eval_stats;
+            assert_eq!(st.requests, SAMPLES, "{n_hosts} hosts");
+            assert_eq!(st.evals + st.cache_hits, st.requests, "{n_hosts} hosts");
+            assert_eq!(st.invalid, got.num_invalid, "{n_hosts} hosts");
+            assert_eq!(st.hosts_down, 0, "{n_hosts} hosts");
+            assert_eq!(st.per_host.len(), n_hosts);
+            // Rendezvous routing accounts for every request, and with a
+            // healthy pool every host carries part of the key space.
+            let routed: usize = st.per_host.iter().map(|h| h.requests).sum();
+            assert_eq!(routed, SAMPLES, "{n_hosts} hosts");
+            for h in &st.per_host {
+                assert!(h.requests > 0, "host {} routed nothing", h.host);
+                assert!(!h.down, "host {} wrongly down", h.host);
+            }
+        }
+        for s in servers {
+            s.stop();
         }
     }
 }
