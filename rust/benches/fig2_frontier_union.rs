@@ -3,18 +3,21 @@
 //! effectively extends the Pareto frontier by joining multiple
 //! frontiers."
 //!
-//! Regenerates the schematic with real data: a NAS sweep per fixed
-//! accelerator configuration gives one frontier each; their union
-//! (computed by `pareto::union_frontier`) dominates every individual
-//! one. Writes results/fig2_frontier_union.csv.
+//! Regenerates the schematic with real data, driven by the sweep
+//! orchestrator: one platform-aware-NAS scenario per fixed accelerator
+//! configuration (random controller, shared controller seed — so
+//! every scenario samples the *same* model sequence and the frontiers
+//! differ only by hardware), all running concurrently over ONE shared
+//! `EvalBroker`. The union frontier (`pareto::union_frontier`, merged
+//! by the sweep) dominates every individual one.
+//! Writes results/fig2_frontier_union.csv.
 
 use nahas::bench::Table;
 use nahas::has::HasSpace;
 use nahas::metrics;
 use nahas::nas::{NasSpace, NasSpaceId};
-use nahas::pareto::{frontier, hypervolume, union_frontier, Point};
-use nahas::search::{Evaluator, SurrogateSim};
-use nahas::util::Rng;
+use nahas::pareto::hypervolume;
+use nahas::search::{run_sweep, ControllerKind, EvalBroker, ParallelSim, RewardCfg, Scenario};
 
 fn main() {
     let has = HasSpace::new();
@@ -27,50 +30,62 @@ fn main() {
         ("io-starved (4x4, 5GB/s)", vec![2, 2, 2, 2, 2, 2, 0]),
     ];
 
-    let mut per_hw: Vec<Vec<Point>> = Vec::new();
+    let scenarios: Vec<Scenario> = configs
+        .iter()
+        .map(|(name, hw)| {
+            Scenario::new(*name, NasSpaceId::EfficientNet, RewardCfg::latency(2.0), 2)
+                .samples(800)
+                .batch(32)
+                .controller(ControllerKind::Random)
+                .fixed_hw(hw.clone())
+        })
+        .collect();
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let backend = ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), 2, workers);
+    let broker = EvalBroker::new(Box::new(backend));
+    let sweep = run_sweep(&broker, &scenarios);
+
     let mut rows = Vec::new();
     let mut table = Table::new(&["Accelerator", "Frontier size", "Hypervolume"]);
-    let space = NasSpace::new(NasSpaceId::EfficientNet);
-    let mut rng = Rng::new(2);
-    // One shared model sample set so frontiers differ only by hardware.
-    let samples: Vec<Vec<usize>> = (0..800).map(|_| space.random(&mut rng)).collect();
-
-    for (name, hw) in &configs {
-        let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 2);
-        let pts: Vec<Point> = samples
-            .iter()
-            .filter_map(|nas_d| {
-                let r = ev.evaluate(nas_d, hw);
-                r.valid.then(|| Point::new(r.acc * 100.0, r.latency_ms, name.to_string()))
-            })
-            .collect();
-        let f = frontier(&pts);
-        let hv = hypervolume(&pts, 70.0, 2.0);
-        table.row(vec![name.to_string(), format!("{}", f.len()), format!("{hv:.3}")]);
-        for p in &f {
-            rows.push(vec![name.to_string(), format!("{:.3}", p.acc), format!("{:.4}", p.cost)]);
+    let mut hv_best_single = 0.0f64;
+    for o in &sweep.outcomes {
+        let hv = hypervolume(&o.frontier, 70.0, 2.0);
+        hv_best_single = hv_best_single.max(hv);
+        table.row(vec![
+            o.scenario.name.clone(),
+            format!("{}", o.frontier.len()),
+            format!("{hv:.3}"),
+        ]);
+        for p in &o.frontier {
+            rows.push(vec![
+                o.scenario.name.clone(),
+                format!("{:.3}", p.acc),
+                format!("{:.4}", p.cost),
+            ]);
         }
-        per_hw.push(pts);
     }
 
-    let frontiers: Vec<Vec<Point>> = per_hw.iter().map(|p| frontier(p)).collect();
-    let joint = union_frontier(&frontiers);
-    let hv_joint = hypervolume(&joint, 70.0, 2.0);
-    let hv_best_single = per_hw
-        .iter()
-        .map(|p| hypervolume(p, 70.0, 2.0))
-        .fold(0.0f64, f64::max);
+    let joint = &sweep.union[0].1;
+    let hv_joint = hypervolume(joint, 70.0, 2.0);
     table.row(vec![
         "UNION (joint search reach)".into(),
         format!("{}", joint.len()),
         format!("{hv_joint:.3}"),
     ]);
-    for p in &joint {
+    for p in joint {
         rows.push(vec!["union".into(), format!("{:.3}", p.acc), format!("{:.4}", p.cost)]);
     }
 
     println!("Fig. 2 — per-accelerator Pareto frontiers vs their union:");
     table.print();
+    let st = &sweep.eval_stats;
+    println!(
+        "sweep: {} concurrent scenarios in {:.2}s, {} requests -> {} evals",
+        sweep.outcomes.len(),
+        sweep.elapsed_s,
+        st.requests,
+        st.evals
+    );
     println!(
         "\nunion hypervolume {hv_joint:.3} >= best single {hv_best_single:.3}: {}",
         hv_joint >= hv_best_single

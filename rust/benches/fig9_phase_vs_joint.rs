@@ -14,7 +14,7 @@ use nahas::nas::{NasSpace, NasSpaceId};
 use nahas::search::joint::JointLayout;
 use nahas::search::phase::phase_search;
 use nahas::search::ppo::PpoController;
-use nahas::search::{joint_search, RewardCfg, SearchCfg, SurrogateSim};
+use nahas::search::{joint_search, EvalBroker, RewardCfg, SearchCfg, SurrogateSim};
 
 fn main() {
     let samples = 1200;
@@ -48,9 +48,10 @@ fn main() {
 
         for (iname, init) in &initials {
             for (mult, bucket) in [(1usize, &mut phase1_accs), (2usize, &mut phase2_accs)] {
-                let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+                let sim = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+                let broker = EvalBroker::new(Box::new(sim));
                 let cfg = SearchCfg::new(samples * mult, target, seed);
-                let out = phase_search(&mut ev, &space, init, &cfg);
+                let out = phase_search(&broker, &space, init, &cfg);
                 let acc =
                     out.nas_phase.best_feasible.map(|b| b.result.acc * 100.0).unwrap_or(0.0);
                 table.row(vec![

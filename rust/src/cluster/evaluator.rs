@@ -57,18 +57,36 @@ pub struct ShardedEvaluator {
 }
 
 impl ShardedEvaluator {
-    /// Connect `conns_per_host` clients to every host. Hosts that are
-    /// unreachable start down (their key ranges go to the survivors);
-    /// only an entirely unreachable pool is an error.
+    /// Connect `conns_per_host` clients to every host (all hosts
+    /// weighted equally). Hosts that are unreachable start down (their
+    /// key ranges go to the survivors); only an entirely unreachable
+    /// pool is an error.
     pub fn connect<S: AsRef<str>>(
         hosts: &[S],
         id: NasSpaceId,
         seed: u64,
         conns_per_host: usize,
     ) -> Result<Self> {
-        let pool = HostPool::connect(hosts, conns_per_host)?;
+        let weighted: Vec<(String, f64)> =
+            hosts.iter().map(|h| (h.as_ref().to_string(), 1.0)).collect();
+        Self::connect_weighted(&weighted, id, seed, conns_per_host)
+    }
+
+    /// [`ShardedEvaluator::connect`] with per-host weights (`--hosts
+    /// A=2,B=1`): a host's expected share of the key space is
+    /// proportional to its weight, so heterogeneous pools shard in
+    /// proportion to capacity. Weights change routing only — health,
+    /// failover and connection sub-pools are weight-blind.
+    pub fn connect_weighted(
+        hosts: &[(String, f64)],
+        id: NasSpaceId,
+        seed: u64,
+        conns_per_host: usize,
+    ) -> Result<Self> {
+        let addrs: Vec<&str> = hosts.iter().map(|(a, _)| a.as_str()).collect();
+        let pool = HostPool::connect(&addrs, conns_per_host)?;
         Ok(ShardedEvaluator {
-            ring: HashRing::new(hosts),
+            ring: HashRing::weighted(hosts),
             pool,
             sim: SurrogateSim::new(NasSpace::new(id), seed),
             space_name: service_space_name(id),
@@ -304,6 +322,13 @@ impl Evaluator for ShardedEvaluator {
     }
 
     fn evaluate_batch(&mut self, batch: &[(Vec<usize>, Vec<usize>)]) -> Vec<EvalResult> {
+        self.evaluate_batch_tagged(batch).into_iter().map(|(r, _)| r).collect()
+    }
+
+    fn evaluate_batch_tagged(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<(EvalResult, bool)> {
         if batch.is_empty() {
             return Vec::new();
         }
@@ -318,8 +343,10 @@ impl Evaluator for ShardedEvaluator {
         let (fresh, served) = self.query_pending(plan.pending(), nas_len);
         self.counters.evals += fresh.len();
         self.attribute_requests(&keys, plan.pending(), &served);
-        let out = plan.finish(&mut self.cache, fresh);
-        self.counters.invalid += out.iter().filter(|r| !r.valid).count();
+        // The per-slot markers survive into the tagged result, so an
+        // all-hosts-down invalid is never memoized upstream either.
+        let out = plan.finish_tagged(&mut self.cache, fresh);
+        self.counters.invalid += out.iter().filter(|(r, _)| !r.valid).count();
         out
     }
 

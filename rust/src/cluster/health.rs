@@ -71,6 +71,38 @@ pub fn probe_host(addr: &str, timeout: Duration) -> HostProbe {
     }
 }
 
+/// One host's server-side counters, as reported by the `{"stats":
+/// true}` protocol request (see `service::serve_conn`).
+#[derive(Clone, Debug)]
+pub struct HostServeStats {
+    /// Request lines served, of any kind.
+    pub requests: u64,
+    /// Simulate requests answered from the server-side result cache.
+    pub cache_hits: u64,
+    /// Simulate requests actually simulated.
+    pub sim_evals: u64,
+}
+
+/// One stats roundtrip against a `nahas serve` host. `None` if the
+/// host is unreachable or does not answer the stats protocol.
+pub fn query_host_stats(addr: &str, timeout: Duration) -> Option<HostServeStats> {
+    let sock = addr.to_socket_addrs().ok().and_then(|mut a| a.next())?;
+    let stream = TcpStream::connect_timeout(&sock, timeout).ok()?;
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    let mut writer = stream.try_clone().ok()?;
+    writeln!(writer, "{{\"stats\": true}}").ok()?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).ok()?;
+    let j = Json::parse(line.trim()).ok()?;
+    let field = |k: &str| j.get(k).and_then(Json::as_f64).map(|n| n as u64);
+    Some(HostServeStats {
+        requests: field("requests")?,
+        cache_hits: field("cache_hits")?,
+        sim_evals: field("sim_evals")?,
+    })
+}
+
 /// Background health monitor: probes every host each `interval` and
 /// writes the verdict into the shared [`HostState`] up flags, so a
 /// crashed host stops receiving new routes between batches and a
@@ -138,6 +170,21 @@ mod tests {
         };
         let p = probe_host(&dead, Duration::from_millis(500));
         assert!(!p.up, "{p:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn stats_query_roundtrips_counters() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let st =
+            query_host_stats(&server.addr.to_string(), Duration::from_millis(500)).unwrap();
+        assert_eq!(st.cache_hits, 0);
+        assert_eq!(st.sim_evals, 0);
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(query_host_stats(&dead, Duration::from_millis(300)).is_none());
         server.stop();
     }
 

@@ -5,10 +5,12 @@
 //! the paper's "multiple NAHAS clients can send parallel requests"
 //! scaled past a single box. Four parts:
 //!
-//! * [`ring`] — rendezvous hashing of the joint decision key, so
-//!   repeat samples of the same (alpha, h) always land on the same
-//!   host while it is up (cache affinity), and a dead host's key range
-//!   re-routes to the survivors without touching anyone else's;
+//! * [`ring`] — rendezvous hashing of the joint decision key (with
+//!   optional per-host weights for heterogeneous pools: `--hosts
+//!   A=2,B=1`), so repeat samples of the same (alpha, h) always land
+//!   on the same host while it is up (cache affinity), and a dead
+//!   host's key range re-routes to the survivors without touching
+//!   anyone else's;
 //! * [`pool`] — the host pool: shared up/down flags + routing counters
 //!   and a per-host connection sub-pool over the service [`Client`];
 //! * [`health`] — one-shot protocol probes (`nahas cluster-status`)
@@ -29,6 +31,6 @@ pub mod pool;
 pub mod ring;
 
 pub use evaluator::ShardedEvaluator;
-pub use health::{probe_host, HealthMonitor, HostProbe};
+pub use health::{probe_host, query_host_stats, HealthMonitor, HostProbe, HostServeStats};
 pub use pool::{HostPool, HostSnapshot, HostState};
 pub use ring::HashRing;

@@ -1,8 +1,8 @@
 //! Rendezvous (highest-random-weight) hashing of joint decision keys
-//! over a host pool.
+//! over a host pool, with optional per-host weights.
 //!
 //! Every (key, host) pair gets a deterministic score; a key routes to
-//! the up host with the highest score. Two properties make this the
+//! the up host with the highest score. Three properties make this the
 //! right router for a sharded evaluator:
 //!
 //! * **affinity** — repeat samples of the same joint decision always
@@ -10,7 +10,13 @@
 //!   it is up, preserving that host's cache locality;
 //! * **minimal disruption** — when a host goes down, only the keys it
 //!   owned move (each to its second-ranked host); every other key's
-//!   argmax is unchanged. No ring segments to rebalance, no state.
+//!   argmax is unchanged. No ring segments to rebalance, no state;
+//! * **proportional sharding** — with weights (`--hosts A=2,B=1`), a
+//!   host's expected key share is proportional to its weight (the
+//!   classic `-w / ln(u)` weighted-rendezvous score), so heterogeneous
+//!   pools load in proportion to capacity. Reweighting one host moves
+//!   keys only to or from that host — everyone else's pairwise scores
+//!   are untouched (property-tested below).
 
 /// 64-bit FNV-1a over `bytes`, folded into a running hash `h`.
 fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
@@ -26,18 +32,39 @@ const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 
 /// Rendezvous router over an ordered host list. Host order is part of
 /// the identity (index `i` here must match index `i` of the pool), but
-/// scores depend only on the host *address*, so the same address list
-/// in any order routes every key to the same address.
+/// scores depend only on the host *address* (and weight), so the same
+/// weighted address list in any order routes every key to the same
+/// address.
 #[derive(Clone, Debug)]
 pub struct HashRing {
     /// Per-host seed: FNV-1a of the host address.
     seeds: Vec<u64>,
+    /// Per-host weight (1.0 = unweighted).
+    weights: Vec<f64>,
 }
 
 impl HashRing {
     pub fn new<S: AsRef<str>>(hosts: &[S]) -> Self {
         HashRing {
             seeds: hosts.iter().map(|h| fnv1a(FNV_OFFSET, h.as_ref().as_bytes())).collect(),
+            weights: vec![1.0; hosts.len()],
+        }
+    }
+
+    /// Weighted ring: host `i` receives an expected `w_i / sum(w)`
+    /// share of the key space. Non-positive / non-finite weights are
+    /// clamped to a tiny positive value (the host still serves as a
+    /// failover target but attracts essentially no primary traffic).
+    pub fn weighted<S: AsRef<str>>(hosts: &[(S, f64)]) -> Self {
+        HashRing {
+            seeds: hosts
+                .iter()
+                .map(|(h, _)| fnv1a(FNV_OFFSET, h.as_ref().as_bytes()))
+                .collect(),
+            weights: hosts
+                .iter()
+                .map(|(_, w)| if w.is_finite() && *w > 0.0 { *w } else { f64::MIN_POSITIVE })
+                .collect(),
         }
     }
 
@@ -49,13 +76,20 @@ impl HashRing {
         self.seeds.is_empty()
     }
 
-    /// Rendezvous score of `key` on host `i`.
-    fn score(&self, i: usize, key: &[usize]) -> u64 {
+    /// Rendezvous score of `key` on host `i`: `-w_i / ln(u)` with `u`
+    /// a uniform (0, 1) draw derived from hash(host, key). Strictly
+    /// increasing in the hash, so with equal weights the argmax is the
+    /// same host the unweighted u64-comparison ring picked — weights
+    /// scale each host's share without reshuffling anyone else.
+    fn score(&self, i: usize, key: &[usize]) -> f64 {
         let mut h = self.seeds[i];
         for &w in key {
             h = fnv1a(h, &(w as u64).to_le_bytes());
         }
-        h
+        // Top 53 bits -> u in (0, 1): the +0.5 keeps u off both ends,
+        // so ln(u) is finite and negative.
+        let u = ((h >> 11) as f64 + 0.5) / (1u64 << 53) as f64;
+        self.weights[i] / -u.ln()
     }
 
     /// Route `key` to the highest-scoring host with `up[i]` set. Ties
@@ -63,7 +97,7 @@ impl HashRing {
     /// host is up.
     pub fn route(&self, key: &[usize], up: &[bool]) -> Option<usize> {
         debug_assert_eq!(up.len(), self.seeds.len());
-        let mut best: Option<(u64, usize)> = None;
+        let mut best: Option<(f64, usize)> = None;
         for (i, &is_up) in up.iter().enumerate().take(self.seeds.len()) {
             if !is_up {
                 continue;
@@ -114,6 +148,35 @@ mod tests {
     }
 
     #[test]
+    fn unit_weights_route_like_the_unweighted_ring() {
+        let named = hosts(4);
+        let unweighted = HashRing::new(&named);
+        let weighted: Vec<(String, f64)> = named.iter().map(|h| (h.clone(), 1.0)).collect();
+        let weighted = HashRing::weighted(&weighted);
+        let mut rng = Rng::new(4);
+        for _ in 0..400 {
+            let key = random_key(&mut rng);
+            assert_eq!(unweighted.owner(&key), weighted.owner(&key));
+        }
+    }
+
+    #[test]
+    fn weights_shard_proportionally() {
+        // A 3:1 weight split should give the heavy host roughly three
+        // times the keys (rendezvous sharding is exact in expectation;
+        // allow generous sampling noise).
+        let named = hosts(2);
+        let ring = HashRing::weighted(&[(named[0].clone(), 3.0), (named[1].clone(), 1.0)]);
+        let mut rng = Rng::new(7);
+        let mut seen = [0usize; 2];
+        for _ in 0..4000 {
+            seen[ring.owner(&random_key(&mut rng)).unwrap()] += 1;
+        }
+        let ratio = seen[0] as f64 / seen[1] as f64;
+        assert!((2.2..4.0).contains(&ratio), "3:1 weights sharded {seen:?} (ratio {ratio:.2})");
+    }
+
+    #[test]
     fn prop_down_host_moves_only_its_own_keys() {
         let ring = HashRing::new(&hosts(4));
         proptest::check(
@@ -132,6 +195,43 @@ mod tests {
                 }
                 if survivor == *down {
                     return Err(format!("routed to the down host {down}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_reweighting_moves_keys_only_to_or_from_the_changed_host() {
+        // Changing one host's weight must not shuffle keys between the
+        // *other* hosts: a key that neither ring assigns to the changed
+        // host keeps its owner. (Scores are per-(host, key); only the
+        // changed host's score moved, so every other pairwise argmax is
+        // untouched.)
+        let named = hosts(4);
+        let base: Vec<(String, f64)> =
+            named.iter().zip([1.0, 2.0, 1.5, 1.0]).map(|(h, w)| (h.clone(), w)).collect();
+        let ring_a = HashRing::weighted(&base);
+        proptest::check(
+            "weighted rendezvous reweighting isolation",
+            proptest::CASES,
+            |r: &mut Rng| {
+                let key = random_key(r);
+                let host = r.below(4);
+                // Both directions: grow or shrink the host's weight.
+                let factor = if r.below(2) == 0 { 4.0 } else { 0.25 };
+                (key, host, factor)
+            },
+            |(key, host, factor)| {
+                let mut rew = base.clone();
+                rew[*host].1 *= factor;
+                let ring_b = HashRing::weighted(&rew);
+                let a = ring_a.owner(key).unwrap();
+                let b = ring_b.owner(key).unwrap();
+                if a != *host && b != *host && a != b {
+                    return Err(format!(
+                        "reweighting host {host} x{factor} moved a key from {a} to {b}"
+                    ));
                 }
                 Ok(())
             },

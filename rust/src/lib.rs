@@ -41,16 +41,27 @@
 //!   sharding of the joint key over a health-checked pool of `nahas
 //!   serve` hosts, with deterministic failover when a host dies.
 //!
+//! Above the tiers sits the shared seam: [`search::EvalBroker`] wraps
+//! any backend behind an `Arc` handle layer and multiplexes any number
+//! of concurrent search sessions onto it, with a cross-search memo
+//! cache (a joint decision evaluated by one search is never
+//! re-evaluated by another) and per-session stats deltas. The
+//! [`search::sweep`] orchestrator (`nahas sweep`) runs whole scenario
+//! grids — latency targets x objectives x joint/phase drivers — as
+//! concurrent sessions over one broker and merges the winners into a
+//! union Pareto frontier per objective.
+//!
 //! CLI: `--evaluator local|parallel|service|cluster --workers N` on
-//! `search` / `phase` (workers default to the machine's parallelism;
-//! `--remote ADDR` selects the service tier, `--hosts a:7878,b:7878`
-//! the cluster tier). Pick `parallel` on one box — the evaluation is
-//! compute-bound and scales with cores until the batch size
-//! (`SearchCfg::batch`) caps it; pick `service` to share one simulator
-//! farm between searches, sized so `workers` is at most the farm's
-//! thread budget; pick `cluster` to spread one search over several
-//! farms (`nahas cluster-status` probes pool health). Cache-hit,
-//! throughput and per-host counters come back in
+//! `search` / `sweep` / `phase` (workers default to the machine's
+//! parallelism; `--remote ADDR` selects the service tier, `--hosts
+//! a:7878,b:7878=2` the cluster tier, with optional per-host weights).
+//! Pick `parallel` on one box — the evaluation is compute-bound and
+//! scales with cores until the batch size (`SearchCfg::batch`) caps
+//! it; pick `service` to share one simulator farm between searches,
+//! sized so `workers` is at most the farm's thread budget; pick
+//! `cluster` to spread the run over several farms (`nahas
+//! cluster-status` probes pool health and server-side cache hits).
+//! Cache-hit, throughput and per-host counters come back in
 //! `SearchOutcome::eval_stats`.
 
 pub mod accel;

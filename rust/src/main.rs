@@ -3,12 +3,13 @@
 //! Subcommands:
 //!   simulate       cost every Table-3 baseline (or random samples) on a hw config
 //!   search         multi-trial joint / platform-aware / HAS-only search
+//!   sweep          concurrent multi-scenario sweep over one shared eval broker
 //!   phase          phase-based (HAS-then-NAS) search (Fig. 9 ablation)
 //!   oneshot        weight-sharing search on the AOT proxy supernet
 //!   train-child    train one proxy child end-to-end through PJRT
 //!   costmodel      generate simulator-labelled data, train + evaluate the MLP
 //!   serve          run the simulator service (newline-JSON over TCP)
-//!   cluster-status probe the health of a `--hosts` service pool
+//!   cluster-status probe health + cache hit counts of a `--hosts` pool
 //!
 //! Run `nahas help` for flags. clap is not vendored in this offline
 //! build; flags are simple `--key value` pairs.
@@ -19,7 +20,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use nahas::accel::{simulate_network, AcceleratorConfig};
 use nahas::bench::Table;
-use nahas::cluster::{probe_host, ShardedEvaluator};
+use nahas::cluster::{probe_host, query_host_stats, ShardedEvaluator};
 use nahas::costmodel::{self, CostModel};
 use nahas::has::HasSpace;
 use nahas::metrics;
@@ -31,8 +32,9 @@ use nahas::search::phase::phase_search;
 use nahas::search::ppo::PpoController;
 use nahas::search::reinforce::ReinforceController;
 use nahas::search::{
-    evolution::EvolutionController, joint_search, Controller, Evaluator, ParallelSim,
-    RandomController, RewardCfg, SearchCfg, SurrogateSim,
+    evolution::EvolutionController, joint_search, run_sweep, scenario_grid, Controller,
+    CostObjective, EvalBroker, Evaluator, ParallelSim, RandomController, RewardCfg, SearchCfg,
+    SurrogateSim, SweepDriver,
 };
 use nahas::service::{Server, ServiceEvaluator};
 use nahas::trainer::ProxyTrainer;
@@ -105,36 +107,60 @@ fn workers_arg(flags: &Flags) -> Result<usize> {
     Ok(flags.usize("workers", default)?.max(1))
 }
 
-/// `--hosts a:7878,b:7878,...`: the cluster tier's service pool.
-/// Duplicates are dropped — a repeated address would get two ring
-/// entries with identical scores (one of them permanently idle) and
-/// corrupt the by-address per-host stats matching.
-fn hosts_arg(raw: &str) -> Result<Vec<String>> {
-    let mut hosts: Vec<String> = Vec::new();
+/// `--hosts a:7878,b:7878=2,...`: the cluster tier's service pool,
+/// with an optional `=WEIGHT` per host (default 1; heterogeneous pools
+/// shard proportionally to weight). Duplicate addresses are dropped —
+/// a repeated address would get two ring entries with identical scores
+/// (one of them permanently idle) and corrupt the by-address per-host
+/// stats matching.
+fn hosts_arg(raw: &str) -> Result<Vec<(String, f64)>> {
+    let mut hosts: Vec<(String, f64)> = Vec::new();
     for h in raw.split(',').map(str::trim).filter(|h| !h.is_empty()) {
-        if !hosts.iter().any(|e| e == h) {
-            hosts.push(h.to_string());
+        let (addr, weight) = match h.split_once('=') {
+            Some((a, w)) => {
+                let weight: f64 = w
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("--hosts: bad weight '{w}' for {a}"))?;
+                if !weight.is_finite() || weight <= 0.0 {
+                    bail!("--hosts: weight for {a} must be a positive number");
+                }
+                (a.trim(), weight)
+            }
+            None => (h, 1.0),
+        };
+        // An exactly redundant entry is dropped; a conflicting
+        // re-weight is an operator error, not a tiebreak.
+        match hosts.iter().position(|(e, _)| e == addr) {
+            Some(i) if hosts[i].1 != weight => {
+                let w = hosts[i].1;
+                bail!("--hosts lists {addr} twice with different weights ({w} vs {weight})")
+            }
+            Some(_) => {}
+            None => hosts.push((addr.to_string(), weight)),
         }
     }
     if hosts.is_empty() {
-        bail!("--hosts needs at least one ADDR:PORT");
+        bail!("--hosts needs at least one ADDR:PORT[=WEIGHT]");
     }
     Ok(hosts)
 }
 
 /// `--evaluator local|parallel|service|cluster` (+ `--workers`,
-/// `--seg`, `--remote ADDR`, `--hosts A,B,...`). `--remote` without
+/// `--seg`, `--remote ADDR`, `--hosts A,B=2,...`). `--remote` without
 /// `--evaluator` implies the batched service client, preserving the
 /// old flag's meaning; `--hosts` likewise implies the cluster tier.
 /// `batch` is the controller batch size — the most samples one
 /// `evaluate_batch` call can carry, so service connections beyond it
-/// could never be used.
+/// could never be used. The chosen backend comes back wrapped in an
+/// [`EvalBroker`]: single searches run through one broker session,
+/// `nahas sweep` runs many concurrently over the same broker.
 fn evaluator_arg(
     flags: &Flags,
     space: NasSpace,
     seed: u64,
     batch: usize,
-) -> Result<Box<dyn Evaluator>> {
+) -> Result<EvalBroker> {
     let workers = workers_arg(flags)?;
     let seg = flags.bool("seg");
     let kind = flags.get("evaluator").unwrap_or(if flags.get("remote").is_some() {
@@ -150,7 +176,7 @@ fn evaluator_arg(
     if kind != "cluster" && flags.get("hosts").is_some() {
         bail!("--hosts is only used by the cluster tier; drop it or pass --evaluator cluster");
     }
-    Ok(match kind {
+    let backend: Box<dyn Evaluator + Send> = match kind {
         "local" => {
             let mut ev = SurrogateSim::new(space, seed);
             if seg {
@@ -184,7 +210,7 @@ fn evaluator_arg(
             // Split the worker budget over the pool, but keep at least
             // one connection per host and never more than the batch.
             let per_host = (workers / hosts.len()).clamp(1, batch.max(1));
-            let mut ev = ShardedEvaluator::connect(&hosts, space.id, seed, per_host)?
+            let mut ev = ShardedEvaluator::connect_weighted(&hosts, space.id, seed, per_host)?
                 .with_health_probes(std::time::Duration::from_millis(500));
             if seg {
                 ev = ev.segmentation();
@@ -193,7 +219,8 @@ fn evaluator_arg(
             Box::new(ev)
         }
         other => bail!("unknown evaluator '{other}' (local|parallel|service|cluster)"),
-    })
+    };
+    Ok(EvalBroker::new(backend))
 }
 
 fn print_eval_stats(st: &nahas::search::EvalStats) {
@@ -206,6 +233,12 @@ fn print_eval_stats(st: &nahas::search::EvalStats) {
             st.evals,
             st.cache_hits,
             st.hit_rate() * 100.0,
+        );
+    }
+    if st.cross_session_hits > 0 {
+        println!(
+            "  {} cross-session hits (keys first evaluated by another search session)",
+            st.cross_session_hits
         );
     }
     for h in &st.per_host {
@@ -245,6 +278,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "simulate" => cmd_simulate(&flags),
         "search" => cmd_search(&flags),
+        "sweep" => cmd_sweep(&flags),
         "phase" => cmd_phase(&flags),
         "oneshot" => cmd_oneshot(&flags),
         "train-child" => cmd_train_child(&flags),
@@ -270,14 +304,19 @@ fn print_usage() {
          \x20              [--mode hard|soft --seg --seed S --out results/search.csv]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N --batch 16]\n\
          \x20              [--remote ADDR   use a `nahas serve` simulator service]\n\
-         \x20              [--hosts A,B,..  shard over a pool of `nahas serve` hosts]\n\
+         \x20              [--hosts A,B=2,..  shard over weighted `nahas serve` hosts]\n\
+         \x20 sweep        [--targets 0.3,0.5,0.7 --objectives latency,energy]\n\
+         \x20              [--drivers joint,phase --samples 500 --batch 16 --seed S]\n\
+         \x20              [--space s2 --out results/sweep.csv]\n\
+         \x20              [--evaluator local|parallel|service|cluster --workers N]\n\
+         \x20              runs all scenarios concurrently over one shared broker\n\
          \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N --batch 16]\n\
          \x20 oneshot      [--warmup 60 --steps 200 --target-ms 0.02 --seed S]\n\
          \x20 train-child  [--steps 30 --seed S]\n\
          \x20 costmodel    [--data 2000 --train-steps 600 --eval 256 --space s2]\n\
          \x20 serve        [--addr 127.0.0.1:7878]\n\
-         \x20 cluster-status [--hosts a:7878,b:7878 --timeout-ms 1000]"
+         \x20 cluster-status [--hosts a:7878,b:7878=2 --timeout-ms 1000]"
     );
 }
 
@@ -373,9 +412,16 @@ fn cmd_search(flags: &Flags) -> Result<()> {
         "reinforce" => Box::new(ReinforceController::new(&free_cards)),
         other => bail!("unknown controller '{other}'"),
     };
-    let mut ev = evaluator_arg(flags, space, seed, cfg.batch)?;
-    let out =
-        joint_search(ev.as_mut(), controller.as_mut(), &layout, fixed_hw.as_deref(), None, &cfg);
+    let broker = evaluator_arg(flags, space, seed, cfg.batch)?;
+    let mut session = broker.session();
+    let out = joint_search(
+        &mut session,
+        controller.as_mut(),
+        &layout,
+        fixed_hw.as_deref(),
+        None,
+        &cfg,
+    );
     println!(
         "search done: {} samples in {:.2}s ({:.0} samples/s), {} invalid",
         cfg.samples,
@@ -383,7 +429,9 @@ fn cmd_search(flags: &Flags) -> Result<()> {
         out.samples_per_s(),
         out.num_invalid
     );
-    print_eval_stats(&out.eval_stats);
+    // Whole-broker view: session counters plus the backend's per-host
+    // attribution when the cluster tier is behind the broker.
+    print_eval_stats(&broker.stats());
     if let Some(b) = &out.best_feasible {
         println!(
             "best feasible: acc {:.2}% lat {:.3}ms energy {:.3}mJ area {:.1}mm2",
@@ -409,9 +457,9 @@ fn cmd_phase(flags: &Flags) -> Result<()> {
     let seed = flags.u64("seed", 0)?;
     let mut cfg = SearchCfg::new(flags.usize("samples", 500)?, reward_arg(flags)?, seed);
     cfg.batch = flags.usize("batch", cfg.batch)?.max(1);
-    let mut ev = evaluator_arg(flags, space.clone(), seed, cfg.batch)?;
+    let broker = evaluator_arg(flags, space.clone(), seed, cfg.batch)?;
     let initial = vec![0; space.num_decisions()];
-    let out = phase_search(ev.as_mut(), &space, &initial, &cfg);
+    let out = phase_search(&broker, &space, &initial, &cfg);
     println!("phase 1 selected hw: {:?}", out.selected_hw);
     match &out.nas_phase.best_feasible {
         Some(b) => println!(
@@ -421,9 +469,139 @@ fn cmd_phase(flags: &Flags) -> Result<()> {
         ),
         None => println!("phase 2 found no feasible sample"),
     }
-    // Whole-run stats: the HAS and NAS phases share one evaluator, so
-    // cache-hit reporting covers both (not just the NAS half).
-    print_eval_stats(&out.eval_stats);
+    // Whole-run stats: the HAS and NAS phases share one broker, so
+    // cache-hit reporting covers both (not just the NAS half), and the
+    // broker view keeps per-host attribution on the cluster tier.
+    print_eval_stats(&broker.stats());
+    Ok(())
+}
+
+/// Parse a comma-separated list of numbers.
+fn csv_f64(raw: &str, flag: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for tok in raw.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        out.push(tok.parse().with_context(|| format!("--{flag}: bad number '{tok}'"))?);
+    }
+    if out.is_empty() {
+        bail!("--{flag} needs at least one value");
+    }
+    Ok(out)
+}
+
+/// Drop repeated values, keeping first occurrences — a duplicated
+/// target/objective/driver would silently run the same scenario twice.
+fn dedup_keep_order<T: PartialEq + Copy>(v: &mut Vec<T>) {
+    let mut seen: Vec<T> = Vec::new();
+    v.retain(|x| {
+        if seen.contains(x) {
+            false
+        } else {
+            seen.push(*x);
+            true
+        }
+    });
+}
+
+/// `nahas sweep` — the concurrent multi-scenario orchestrator: a grid
+/// of scenarios (targets x objectives x drivers) runs as concurrent
+/// search sessions over ONE shared evaluation broker, so the whole
+/// sweep shares the backend's worker/service/cluster capacity and one
+/// cross-search memo cache; the per-scenario winners merge into a
+/// union Pareto frontier per objective.
+fn cmd_sweep(flags: &Flags) -> Result<()> {
+    let space = space_arg(flags)?;
+    let seed = flags.u64("seed", 0)?;
+    let samples = flags.usize("samples", 500)?;
+    let batch = flags.usize("batch", 16)?.max(1);
+    let targets = csv_f64(flags.get("targets").unwrap_or("0.3,0.5,0.7"), "targets")?;
+    let mut objectives = Vec::new();
+    let objective_toks = flags.get("objectives").unwrap_or("latency");
+    for tok in objective_toks.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        objectives.push(match tok {
+            "latency" | "lat" => CostObjective::Latency,
+            "energy" => CostObjective::Energy,
+            other => bail!("unknown objective '{other}' (latency|energy)"),
+        });
+    }
+    let mut drivers = Vec::new();
+    let driver_toks = flags.get("drivers").unwrap_or("joint");
+    for tok in driver_toks.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        drivers.push(match tok {
+            "joint" => SweepDriver::Joint,
+            "phase" => SweepDriver::Phase,
+            other => bail!("unknown driver '{other}' (joint|phase)"),
+        });
+    }
+    if objectives.is_empty() {
+        bail!("--objectives needs at least one of latency|energy");
+    }
+    if drivers.is_empty() {
+        bail!("--drivers needs at least one of joint|phase");
+    }
+    let mut targets = targets;
+    dedup_keep_order(&mut targets);
+    dedup_keep_order(&mut objectives);
+    dedup_keep_order(&mut drivers);
+    let scenarios =
+        scenario_grid(&targets, &objectives, &drivers, space.id, samples, batch, seed);
+    let broker = evaluator_arg(flags, space, seed, batch)?;
+    println!(
+        "sweep: {} scenarios x {} samples, concurrent over one shared evaluation broker",
+        scenarios.len(),
+        samples
+    );
+    let out = run_sweep(&broker, &scenarios);
+
+    let mut table = Table::new(&[
+        "Scenario", "Best acc(%)", "Latency(ms)", "Energy(mJ)", "Feasible", "Evals", "Hits",
+    ]);
+    for o in &out.outcomes {
+        let b = o.search.best_feasible.as_ref();
+        let cell = |v: Option<String>| v.unwrap_or_else(|| "-".to_string());
+        table.row(vec![
+            o.scenario.name.clone(),
+            cell(b.map(|s| format!("{:.2}", s.result.acc * 100.0))),
+            cell(b.map(|s| format!("{:.3}", s.result.latency_ms))),
+            cell(b.map(|s| format!("{:.3}", s.result.energy_mj))),
+            if b.is_some() { "yes" } else { "NO" }.to_string(),
+            format!("{}", o.eval_stats.evals),
+            format!("{}", o.eval_stats.cache_hits),
+        ]);
+    }
+    table.print();
+
+    let m = &out.eval_stats;
+    println!(
+        "sweep done in {:.2}s: {} requests -> {} evals, {} cache hits \
+         ({} cross-scenario)",
+        out.elapsed_s, m.requests, m.evals, m.cache_hits, m.cross_session_hits
+    );
+    print_eval_stats(&broker.stats());
+
+    let mut rows = Vec::new();
+    for (objective, front) in &out.union {
+        let unit = match objective {
+            CostObjective::Latency => "ms",
+            CostObjective::Energy => "mJ",
+        };
+        println!("\nunion Pareto frontier ({unit} objective, {} points):", front.len());
+        let cost_col = format!("Cost({unit})");
+        let mut ftable = Table::new(&["Acc(%)", cost_col.as_str(), "Scenario"]);
+        for p in front {
+            ftable.row(vec![format!("{:.2}", p.acc), format!("{:.4}", p.cost), p.tag.clone()]);
+            rows.push(vec![
+                unit.to_string(),
+                format!("{:.3}", p.acc),
+                format!("{:.4}", p.cost),
+                p.tag.clone(),
+            ]);
+        }
+        ftable.print();
+    }
+    if let Some(path) = flags.get("out") {
+        metrics::write_csv(path, &["objective", "acc", "cost", "scenario"], &rows)?;
+        println!("union frontier written to {path}");
+    }
     Ok(())
 }
 
@@ -516,22 +694,33 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
 }
 
 /// Probe every `--hosts` entry with one protocol roundtrip and print
-/// the pool's health (the operator view of the cluster tier).
+/// the pool's health plus each host's server-side cache counters (the
+/// operator view of the cluster tier).
 fn cmd_cluster_status(flags: &Flags) -> Result<()> {
     let raw = flags
         .get("hosts")
         .ok_or_else(|| anyhow!("cluster-status requires --hosts A,B,..."))?;
     let hosts = hosts_arg(raw)?;
     let timeout = std::time::Duration::from_millis(flags.u64("timeout-ms", 1000)?);
-    let mut table = Table::new(&["Host", "Status", "RTT(ms)", "Detail"]);
+    let mut table =
+        Table::new(&["Host", "Weight", "Status", "RTT(ms)", "Served", "SimHits", "Detail"]);
     let mut up = 0;
-    for host in &hosts {
+    for (host, weight) in &hosts {
         let p = probe_host(host, timeout);
         up += p.up as usize;
+        // Hit counts from the server-side result cache, when the host
+        // answers the stats protocol.
+        let stats = if p.up { query_host_stats(host, timeout) } else { None };
+        let (served, hits) = stats
+            .map(|s| (format!("{}", s.requests), format!("{}", s.cache_hits)))
+            .unwrap_or_else(|| ("-".to_string(), "-".to_string()));
         table.row(vec![
             p.addr,
+            format!("{weight}"),
             if p.up { "up" } else { "DOWN" }.to_string(),
             format!("{:.2}", p.rtt_ms),
+            served,
+            hits,
             p.detail,
         ]);
     }

@@ -1,0 +1,406 @@
+//! [`EvalBroker`] — the shared, concurrency-safe evaluation seam.
+//!
+//! PR 1/PR 2 built four evaluator tiers (local, parallel, service,
+//! cluster), but every search driver *exclusively borrowed* its
+//! evaluator (`&mut dyn Evaluator`), so a multi-target sweep — the
+//! paper's headline figures are built from sweeps of searches — ran
+//! serially and could not share the worker pool, service farm, or memo
+//! cache between scenarios. The broker removes that restriction:
+//!
+//! * [`EvalBroker`] wraps **one** backend (`Box<dyn Evaluator + Send>`)
+//!   behind an `Arc<Mutex<..>>` and hands out any number of
+//!   [`BrokerSession`] handles;
+//! * each session implements [`Evaluator`], so every existing driver
+//!   ([`crate::search::joint_search`],
+//!   [`crate::search::phase::phase_search`]) runs unchanged on its own
+//!   thread — N concurrent searches multiplex onto the one backend;
+//! * a **cross-search memo cache** keyed on the joint decision vector
+//!   sits in front of the backend: a (alpha, h) point discovered by one
+//!   scenario is evaluated once, ever — later scenarios hit the cache
+//!   (counted as [`EvalStats::cross_session_hits`]);
+//! * sessions keep **per-session counter deltas**, and the broker keeps
+//!   the global sum, so a sweep can report both per-scenario and
+//!   whole-run throughput without double counting (the invariant
+//!   "session deltas sum to the broker, broker misses equal backend
+//!   requests" is pinned by tests below).
+//!
+//! Concurrency model: one mutex guards the backend + cache + global
+//! counters, and a session's whole `evaluate_batch` (cache resolve →
+//! backend fan-out → cache fill) runs under it. Batches from
+//! concurrent sessions therefore *interleave* rather than overlap —
+//! which is deliberate: the parallelism lives inside the backend's own
+//! `evaluate_batch` fan-out (worker threads, service connections,
+//! cluster shards), and admitting one batch at a time is what makes
+//! "every unique key is evaluated exactly once" a hard guarantee
+//! instead of a race. Because every backend evaluation is a
+//! deterministic function of (space, task, seed, decisions), sharing a
+//! broker can never change *what* a scenario computes — each scenario
+//! stays bit-identical to its standalone run for the same controller
+//! seed (`tests/sweep_equivalence.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::search::evaluator::{EvalResult, EvalStats, Evaluator};
+use crate::search::parallel::{joint_key, MemoCache};
+
+/// Default capacity of the cross-search cache: sized for a whole sweep
+/// (several searches of a few thousand samples each), not one search.
+///
+/// The caching backends (`ParallelSim`, `ServiceEvaluator`,
+/// `ShardedEvaluator`) keep their own memo cache behind this one; under
+/// a broker it sees only deduped misses and stays mostly cold. That
+/// redundancy is deliberate: the backends are also used standalone
+/// (tests, benches, library callers), the duplicated residency is
+/// bounded, and the cluster tier still needs its own front to keep
+/// failover results out of *its* cache independently of the broker.
+const BROKER_CACHE_CAPACITY: usize = 64 * 1024;
+
+/// Everything the broker mutex guards: the backend, the cross-search
+/// cache (values carry the id of the session that paid for them, so
+/// cross-session hits can be told apart from a session re-hitting its
+/// own keys), and the global counters.
+struct BrokerCore {
+    backend: Box<dyn Evaluator + Send>,
+    cache: MemoCache<(EvalResult, u64)>,
+    requests: usize,
+    evals: usize,
+    invalid: usize,
+    cross_session_hits: usize,
+}
+
+/// What one admitted batch did, for the session's own bookkeeping.
+struct BatchReceipt {
+    results: Vec<EvalResult>,
+    evals: usize,
+    invalid: usize,
+    cross_session_hits: usize,
+}
+
+impl BrokerCore {
+    /// Admit one session batch: resolve cross-search cache hits, dedup
+    /// the misses (first-seen order, exactly like the per-evaluator
+    /// `BatchPlan`), evaluate them in one backend call, memoize the
+    /// cacheable results, and reassemble in batch order.
+    fn run(&mut self, session: u64, batch: &[(Vec<usize>, Vec<usize>)]) -> BatchReceipt {
+        self.requests += batch.len();
+        let mut results: Vec<Option<EvalResult>> = vec![None; batch.len()];
+        let mut cross = 0usize;
+        // Deduped misses: (first batch slot, joint key), first-seen order.
+        let mut pending: Vec<(usize, Vec<usize>)> = Vec::new();
+        let mut waiting: HashMap<Vec<usize>, Vec<usize>> = HashMap::new();
+        for (i, (nas_d, has_d)) in batch.iter().enumerate() {
+            let key = joint_key(nas_d, has_d);
+            if let Some((r, owner)) = self.cache.get(&key) {
+                if owner != session {
+                    cross += 1;
+                }
+                results[i] = Some(r);
+            } else {
+                let slots = waiting.entry(key.clone()).or_default();
+                if slots.is_empty() {
+                    pending.push((i, key));
+                }
+                slots.push(i);
+            }
+        }
+        let evals = pending.len();
+        if evals > 0 {
+            let misses: Vec<(Vec<usize>, Vec<usize>)> =
+                pending.iter().map(|(i, _)| batch[*i].clone()).collect();
+            let fresh = self.backend.evaluate_batch_tagged(&misses);
+            assert_eq!(fresh.len(), evals, "backend must preserve batch length");
+            for ((_, key), (r, cacheable)) in pending.into_iter().zip(fresh) {
+                for &slot in &waiting[&key] {
+                    results[slot] = Some(r);
+                }
+                // A transient transport failure must not be memoized:
+                // a later resample (from any session) has to retry it.
+                if cacheable {
+                    self.cache.insert(key, (r, session));
+                }
+            }
+        }
+        let results: Vec<EvalResult> =
+            results.into_iter().map(|r| r.expect("all batch slots resolved")).collect();
+        let invalid = results.iter().filter(|r| !r.valid).count();
+        self.evals += evals;
+        self.invalid += invalid;
+        self.cross_session_hits += cross;
+        BatchReceipt { results, evals, invalid, cross_session_hits: cross }
+    }
+
+    fn stats(&self) -> EvalStats {
+        let backend = self.backend.stats();
+        EvalStats {
+            requests: self.requests,
+            evals: self.evals,
+            cache_hits: self.requests - self.evals,
+            invalid: self.invalid,
+            cross_session_hits: self.cross_session_hits,
+            hosts_down: backend.hosts_down,
+            per_host: backend.per_host,
+        }
+    }
+}
+
+/// Shared handle to one evaluation backend. Cheap to clone; create one
+/// [`BrokerSession`] per concurrent search with [`EvalBroker::session`].
+#[derive(Clone)]
+pub struct EvalBroker {
+    core: Arc<Mutex<BrokerCore>>,
+    next_session: Arc<AtomicU64>,
+}
+
+impl EvalBroker {
+    /// Wrap a backend. Any [`Evaluator`] tier works — `SurrogateSim`
+    /// (local), `ParallelSim`, `ServiceEvaluator`, `ShardedEvaluator` —
+    /// as long as it evaluates a sample as a pure function of its
+    /// decisions, which is the contract every tier already pins in
+    /// `tests/parallel_equivalence.rs`.
+    pub fn new(backend: Box<dyn Evaluator + Send>) -> Self {
+        EvalBroker {
+            core: Arc::new(Mutex::new(BrokerCore {
+                backend,
+                cache: MemoCache::new(BROKER_CACHE_CAPACITY),
+                requests: 0,
+                evals: 0,
+                invalid: 0,
+                cross_session_hits: 0,
+            })),
+            next_session: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Open a new search session. Sessions are independent
+    /// [`Evaluator`]s with their own zero-based counters; hand each
+    /// concurrent search (or search phase) its own.
+    pub fn session(&self) -> BrokerSession {
+        BrokerSession {
+            core: self.core.clone(),
+            id: self.next_session.fetch_add(1, Ordering::Relaxed),
+            requests: 0,
+            evals: 0,
+            invalid: 0,
+            cross_session_hits: 0,
+        }
+    }
+
+    /// Whole-broker counters (the sum of every session's delta), plus
+    /// the backend's pool view (`hosts_down`, `per_host`) so operators
+    /// keep per-host attribution when the backend is the cluster tier.
+    pub fn stats(&self) -> EvalStats {
+        self.lock().stats()
+    }
+
+    /// The backend's own counters. `backend_stats().requests` equals
+    /// `stats().evals`: the backend sees exactly the broker's deduped
+    /// misses, nothing else.
+    pub fn backend_stats(&self) -> EvalStats {
+        self.lock().backend.stats()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BrokerCore> {
+        // A poisoned lock means a backend panicked mid-batch; there is
+        // no sane way to continue the sweep, so propagate.
+        self.core.lock().expect("evaluation broker poisoned by a panicked backend")
+    }
+}
+
+/// One search's handle onto a shared [`EvalBroker`]. Implements
+/// [`Evaluator`], so the batch-structured drivers use it like any
+/// other tier; `stats()` reports this session's delta only.
+pub struct BrokerSession {
+    core: Arc<Mutex<BrokerCore>>,
+    id: u64,
+    requests: usize,
+    evals: usize,
+    invalid: usize,
+    cross_session_hits: usize,
+}
+
+impl Evaluator for BrokerSession {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        self.evaluate_batch(&[(nas_d.to_vec(), has_d.to_vec())])[0]
+    }
+
+    fn evaluate_batch(&mut self, batch: &[(Vec<usize>, Vec<usize>)]) -> Vec<EvalResult> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let receipt = self
+            .core
+            .lock()
+            .expect("evaluation broker poisoned by a panicked backend")
+            .run(self.id, batch);
+        self.requests += batch.len();
+        self.evals += receipt.evals;
+        self.invalid += receipt.invalid;
+        self.cross_session_hits += receipt.cross_session_hits;
+        receipt.results
+    }
+
+    fn stats(&self) -> EvalStats {
+        EvalStats {
+            requests: self.requests,
+            evals: self.evals,
+            cache_hits: self.requests - self.evals,
+            invalid: self.invalid,
+            cross_session_hits: self.cross_session_hits,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::has::HasSpace;
+    use crate::nas::{NasSpace, NasSpaceId};
+    use crate::search::{ParallelSim, SurrogateSim};
+    use crate::util::Rng;
+
+    fn random_batch(n: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let has = HasSpace::new();
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect()
+    }
+
+    fn sim_backend() -> Box<dyn Evaluator + Send> {
+        Box::new(SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3))
+    }
+
+    #[test]
+    fn sessions_share_the_cross_search_cache() {
+        let batch = random_batch(12, 5);
+        let broker = EvalBroker::new(sim_backend());
+        let mut a = broker.session();
+        let mut b = broker.session();
+        let ra = a.evaluate_batch(&batch);
+        let rb = b.evaluate_batch(&batch);
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.acc.to_bits(), y.acc.to_bits());
+            assert_eq!(x.latency_ms.to_bits(), y.latency_ms.to_bits());
+        }
+        // Session A paid for every key; B rode its cache entries.
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa.evals, 12);
+        assert_eq!(sa.cross_session_hits, 0);
+        assert_eq!(sb.evals, 0);
+        assert_eq!(sb.cache_hits, 12);
+        assert_eq!(sb.cross_session_hits, 12);
+        // Against a serial reference: broker values are bit-identical.
+        let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+        for ((n, h), r) in batch.iter().zip(&ra) {
+            let w = serial.evaluate(n, h);
+            assert_eq!(w.acc.to_bits(), r.acc.to_bits());
+            assert_eq!(w.latency_ms.to_bits(), r.latency_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn session_deltas_sum_to_broker_and_backend_counters() {
+        // The stats double-counting guard: per-session deltas, merged
+        // with `EvalStats::merged`, must equal the broker's global
+        // counters, and the broker's misses must equal the backend's
+        // requests — one eval is counted exactly once at every layer.
+        let backend = ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3, 2);
+        let broker = EvalBroker::new(Box::new(backend));
+        let mut a = broker.session();
+        let mut b = broker.session();
+        let shared = random_batch(10, 1);
+        let only_b = random_batch(6, 2);
+        a.evaluate_batch(&shared);
+        b.evaluate_batch(&shared); // all cross-session hits
+        b.evaluate_batch(&only_b);
+        b.evaluate_batch(&only_b); // all own-session hits
+
+        let merged = a.stats().merged(&b.stats());
+        let global = broker.stats();
+        assert_eq!(merged.requests, 32);
+        assert_eq!(merged.requests, global.requests);
+        assert_eq!(merged.evals, global.evals);
+        assert_eq!(merged.cache_hits, global.cache_hits);
+        assert_eq!(merged.invalid, global.invalid);
+        assert_eq!(merged.cross_session_hits, global.cross_session_hits);
+        assert_eq!(merged.evals, 16, "10 + 6 unique keys");
+        assert_eq!(merged.cross_session_hits, 10, "only B's replay of A's keys is cross");
+        // The backend saw exactly the broker's deduped misses.
+        assert_eq!(broker.backend_stats().requests, global.evals);
+    }
+
+    #[test]
+    fn concurrent_sessions_evaluate_each_unique_key_once() {
+        let batch = random_batch(16, 9);
+        let broker = EvalBroker::new(sim_backend());
+        let results: Vec<Vec<EvalResult>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let mut session = broker.session();
+                    let batch = &batch;
+                    s.spawn(move || session.evaluate_batch(batch))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("session thread panicked")).collect()
+        });
+        for r in &results[1..] {
+            for (x, y) in results[0].iter().zip(r) {
+                assert_eq!(x.acc.to_bits(), y.acc.to_bits());
+            }
+        }
+        let g = broker.stats();
+        assert_eq!(g.requests, 64);
+        assert_eq!(g.evals, 16, "each unique key evaluated exactly once");
+        // Whichever session won the race paid; the other three hit.
+        assert_eq!(g.cross_session_hits, 48);
+        assert_eq!(broker.backend_stats().requests, 16);
+    }
+
+    /// Backend that fails the first call to every key (uncacheable
+    /// invalid), succeeding afterwards — a restartable transport.
+    struct Flaky {
+        seen: std::collections::HashSet<Vec<usize>>,
+    }
+
+    impl Evaluator for Flaky {
+        fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+            if self.seen.insert(joint_key(nas_d, has_d)) {
+                EvalResult::invalid()
+            } else {
+                EvalResult { acc: 0.7, valid: true, ..Default::default() }
+            }
+        }
+
+        fn evaluate_batch_tagged(
+            &mut self,
+            batch: &[(Vec<usize>, Vec<usize>)],
+        ) -> Vec<(EvalResult, bool)> {
+            batch
+                .iter()
+                .map(|(n, h)| {
+                    let r = self.evaluate(n, h);
+                    (r, r.valid)
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn transport_failures_are_not_memoized_across_sessions() {
+        let broker =
+            EvalBroker::new(Box::new(Flaky { seen: std::collections::HashSet::new() }));
+        let mut a = broker.session();
+        let mut b = broker.session();
+        let batch = vec![(vec![1, 2], vec![3, 4])];
+        assert!(!a.evaluate_batch(&batch)[0].valid, "first attempt fails");
+        // The failure was not cached: B's request retries the backend
+        // and succeeds; only now is the key memoized.
+        assert!(b.evaluate_batch(&batch)[0].valid, "retry reaches the backend");
+        assert!(a.evaluate_batch(&batch)[0].valid, "success is memoized");
+        let g = broker.stats();
+        assert_eq!(g.evals, 2, "failed attempt + retry; third request was a hit");
+        assert_eq!(g.cross_session_hits, 1, "A re-read B's memoized success");
+    }
+}

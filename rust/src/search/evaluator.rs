@@ -72,14 +72,20 @@ impl HostEvalStats {
 /// `SearchOutcome` and by the CLI). `requests` counts samples asked
 /// for, `evals` the evaluations actually performed — the gap is
 /// `cache_hits` (deduped repeat samples from the controller). The
-/// cluster tier additionally reports its host pool: `hosts_down` and
-/// one [`HostEvalStats`] per configured host.
+/// broker tier ([`crate::search::EvalBroker`]) splits out
+/// `cross_session_hits`: hits on keys first evaluated by a *different*
+/// search session — the work a concurrent sweep saved by sharing one
+/// broker. The cluster tier additionally reports its host pool:
+/// `hosts_down` and one [`HostEvalStats`] per configured host.
 #[derive(Clone, Debug, Default)]
 pub struct EvalStats {
     pub requests: usize,
     pub evals: usize,
     pub cache_hits: usize,
     pub invalid: usize,
+    /// Of `cache_hits`, hits on keys another session evaluated first
+    /// (broker tier only; 0 elsewhere).
+    pub cross_session_hits: usize,
     /// Hosts currently marked down (cluster tier only; 0 elsewhere).
     pub hosts_down: usize,
     /// Per-host counters (cluster tier only; empty elsewhere).
@@ -121,6 +127,9 @@ impl EvalStats {
             evals: self.evals.saturating_sub(earlier.evals),
             cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
             invalid: self.invalid.saturating_sub(earlier.invalid),
+            cross_session_hits: self
+                .cross_session_hits
+                .saturating_sub(earlier.cross_session_hits),
             hosts_down: self.hosts_down,
             per_host,
         }
@@ -154,6 +163,7 @@ impl EvalStats {
             evals: self.evals + other.evals,
             cache_hits: self.cache_hits + other.cache_hits,
             invalid: self.invalid + other.invalid,
+            cross_session_hits: self.cross_session_hits + other.cross_session_hits,
             hosts_down,
             per_host,
         }
@@ -196,6 +206,24 @@ pub trait Evaluator {
     /// replays.
     fn evaluate_batch(&mut self, batch: &[(Vec<usize>, Vec<usize>)]) -> Vec<EvalResult> {
         batch.iter().map(|(nas_d, has_d)| self.evaluate(nas_d, has_d)).collect()
+    }
+
+    /// Like [`Evaluator::evaluate_batch`], but every result carries a
+    /// *cacheable* marker: `true` for a deterministic outcome that may
+    /// be memoized forever (including deterministic `valid: false`
+    /// rejections), `false` for a transient transport failure whose
+    /// invalid result must not be memoized — the next resample has to
+    /// retry it. The default wraps `evaluate_batch` (purely local
+    /// evaluation cannot fail transiently); the remote tiers override
+    /// it to propagate their per-sample transport verdicts. The shared
+    /// [`crate::search::EvalBroker`] calls this instead of
+    /// `evaluate_batch` so its cross-search cache cannot be poisoned
+    /// by a flaky transport, whatever the backend.
+    fn evaluate_batch_tagged(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<(EvalResult, bool)> {
+        self.evaluate_batch(batch).into_iter().map(|r| (r, true)).collect()
     }
 
     /// Counters for throughput/cache reporting (zeroes by default).
@@ -442,6 +470,32 @@ mod tests {
         // Paper Table 4: ~3.3 ms vs 0.35 ms classification (~10x).
         let ratio = rs.latency_ms / rc.latency_ms;
         assert!((3.5..25.0).contains(&ratio), "seg/cls latency ratio {ratio}");
+    }
+
+    #[test]
+    fn merged_and_since_carry_cross_session_hits() {
+        let a = EvalStats {
+            requests: 10,
+            evals: 6,
+            cache_hits: 4,
+            invalid: 1,
+            cross_session_hits: 3,
+            ..Default::default()
+        };
+        let b = EvalStats {
+            requests: 5,
+            evals: 5,
+            cache_hits: 0,
+            invalid: 0,
+            cross_session_hits: 0,
+            ..Default::default()
+        };
+        let m = a.merged(&b);
+        assert_eq!(m.requests, 15);
+        assert_eq!(m.cross_session_hits, 3);
+        let d = m.since(&b);
+        assert_eq!(d.requests, 10);
+        assert_eq!(d.cross_session_hits, 3);
     }
 
     #[test]

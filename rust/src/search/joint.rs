@@ -5,6 +5,13 @@
 //! rewarded by Eq. 4, and fed back in PPO batches. Fixing the HAS half
 //! (`has_fixed`) reduces the problem to platform-aware NAS — the paper's
 //! "fixed accelerator" rows; fixing the NAS half gives pure HAS.
+//!
+//! This is the *leaf* driver under the shared evaluation seam: it
+//! borrows one [`Evaluator`] for the duration of one search. Callers
+//! that share an evaluation substrate between searches (the `phase`
+//! driver's two phases, every `nahas sweep` scenario, the CLI itself)
+//! hand it a [`crate::search::BrokerSession`] — each session is an
+//! `Evaluator` view onto the shared [`crate::search::EvalBroker`].
 
 use crate::nas::NasSpace;
 use crate::search::evaluator::{EvalResult, Evaluator};

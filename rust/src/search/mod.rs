@@ -18,9 +18,16 @@
 //!   "parallel requests", in-process; the remote tiers are
 //!   [`crate::service::ServiceEvaluator`] and
 //!   [`crate::cluster::ShardedEvaluator`]);
+//! * [`broker`] — the shared evaluation seam: [`EvalBroker`]
+//!   multiplexes any number of concurrent search sessions onto one
+//!   backend tier behind a cross-search memo cache;
+//! * [`sweep`] — the concurrent multi-scenario orchestrator (latency
+//!   targets x objectives x drivers over one broker, merged into a
+//!   union Pareto frontier — the paper's headline figures are sweeps);
 //! * [`oneshot`] — weight-sharing search over the AOT supernet;
 //! * [`phase`] — the phase-based (HAS-then-NAS) ablation of Fig. 9.
 
+pub mod broker;
 pub mod evaluator;
 pub mod evolution;
 pub mod joint;
@@ -30,11 +37,17 @@ pub mod phase;
 pub mod ppo;
 pub mod reinforce;
 pub mod reward;
+pub mod sweep;
 
+pub use broker::{BrokerSession, EvalBroker};
 pub use evaluator::{EvalResult, EvalStats, Evaluator, HostEvalStats, SurrogateSim, Task};
 pub use joint::{joint_search, Sample, SearchCfg, SearchOutcome};
 pub use parallel::{joint_key, MemoCache, ParallelSim};
 pub use reward::{ConstraintMode, CostObjective, RewardCfg};
+pub use sweep::{
+    run_scenario, run_sweep, scenario_grid, ControllerKind, Scenario, ScenarioOutcome,
+    SweepDriver, SweepOutcome,
+};
 
 use crate::util::Rng;
 

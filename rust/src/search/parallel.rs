@@ -33,34 +33,40 @@ use crate::search::evaluator::{EvalCounters, EvalResult, EvalStats, Evaluator, S
 /// current one, so anything touched within the last `capacity` unique
 /// inserts survives — classic two-generation approximation of LRU with
 /// O(1) operations and at most `2 * capacity` resident entries.
+///
+/// Generic over the memoized value so the same eviction policy serves
+/// every cache tier: [`EvalResult`] in the evaluators (the default),
+/// `(EvalResult, session)` in the cross-search
+/// [`crate::search::EvalBroker`], and serialized response lines in the
+/// `nahas serve` server-side cache.
 #[derive(Debug)]
-pub struct MemoCache {
+pub struct MemoCache<V: Clone = EvalResult> {
     capacity: usize,
-    cur: HashMap<Vec<usize>, EvalResult>,
-    prev: HashMap<Vec<usize>, EvalResult>,
+    cur: HashMap<Vec<usize>, V>,
+    prev: HashMap<Vec<usize>, V>,
 }
 
-impl MemoCache {
+impl<V: Clone> MemoCache<V> {
     pub fn new(capacity: usize) -> Self {
         MemoCache { capacity: capacity.max(1), cur: HashMap::new(), prev: HashMap::new() }
     }
 
-    pub fn get(&mut self, key: &[usize]) -> Option<EvalResult> {
-        if let Some(&r) = self.cur.get(key) {
-            return Some(r);
+    pub fn get(&mut self, key: &[usize]) -> Option<V> {
+        if let Some(r) = self.cur.get(key) {
+            return Some(r.clone());
         }
         if let Some(r) = self.prev.remove(key) {
-            self.insert_rotating(key.to_vec(), r);
+            self.insert_rotating(key.to_vec(), r.clone());
             return Some(r);
         }
         None
     }
 
-    pub fn insert(&mut self, key: Vec<usize>, result: EvalResult) {
+    pub fn insert(&mut self, key: Vec<usize>, result: V) {
         self.insert_rotating(key, result);
     }
 
-    fn insert_rotating(&mut self, key: Vec<usize>, result: EvalResult) {
+    fn insert_rotating(&mut self, key: Vec<usize>, result: V) {
         if self.cur.len() >= self.capacity {
             self.prev = std::mem::take(&mut self.cur);
         }
@@ -93,20 +99,21 @@ pub fn joint_key(nas_d: &[usize], has_d: &[usize]) -> Vec<usize> {
 /// results marked cacheable (a transport failure must not poison the
 /// cache — the next resample has to retry the evaluation).
 pub(crate) struct BatchPlan {
-    results: Vec<Option<EvalResult>>,
+    results: Vec<Option<(EvalResult, bool)>>,
     pending: Vec<Vec<usize>>,
     waiting: HashMap<Vec<usize>, Vec<usize>>,
 }
 
 impl BatchPlan {
     pub(crate) fn build(cache: &mut MemoCache, batch: &[(Vec<usize>, Vec<usize>)]) -> Self {
-        let mut results: Vec<Option<EvalResult>> = vec![None; batch.len()];
+        let mut results: Vec<Option<(EvalResult, bool)>> = vec![None; batch.len()];
         let mut pending: Vec<Vec<usize>> = Vec::new();
         let mut waiting: HashMap<Vec<usize>, Vec<usize>> = HashMap::new();
         for (i, (nas_d, has_d)) in batch.iter().enumerate() {
             let key = joint_key(nas_d, has_d);
             if let Some(r) = cache.get(&key) {
-                results[i] = Some(r);
+                // A memoized result was cacheable by definition.
+                results[i] = Some((r, true));
             } else {
                 let slots = waiting.entry(key.clone()).or_default();
                 if slots.is_empty() {
@@ -130,11 +137,23 @@ impl BatchPlan {
         cache: &mut MemoCache,
         fresh: Vec<(EvalResult, bool)>,
     ) -> Vec<EvalResult> {
+        self.finish_tagged(cache, fresh).into_iter().map(|(r, _)| r).collect()
+    }
+
+    /// [`BatchPlan::finish`], but keeping each slot's cacheable marker
+    /// (cache hits are `true` by construction) so callers implementing
+    /// [`Evaluator::evaluate_batch_tagged`] can pass the verdicts up
+    /// the stack.
+    pub(crate) fn finish_tagged(
+        self,
+        cache: &mut MemoCache,
+        fresh: Vec<(EvalResult, bool)>,
+    ) -> Vec<(EvalResult, bool)> {
         assert_eq!(fresh.len(), self.pending.len(), "one result per deduped key");
         let BatchPlan { mut results, pending, waiting } = self;
         for (key, (r, cacheable)) in pending.into_iter().zip(fresh) {
             for &i in &waiting[&key] {
-                results[i] = Some(r);
+                results[i] = Some((r, cacheable));
             }
             if cacheable {
                 cache.insert(key, r);

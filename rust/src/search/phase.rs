@@ -9,7 +9,8 @@
 
 use crate::has::HasSpace;
 use crate::nas::NasSpace;
-use crate::search::evaluator::{EvalStats, Evaluator};
+use crate::search::broker::EvalBroker;
+use crate::search::evaluator::EvalStats;
 use crate::search::joint::{joint_search, JointLayout, SearchCfg, SearchOutcome};
 use crate::search::ppo::PpoController;
 
@@ -30,13 +31,16 @@ pub struct PhaseOutcome {
 /// MobileNetV2 / EfficientNet-B1 / EfficientNet-B2 and observes high
 /// variance in the final quality).
 ///
-/// Both phases run through the batch-structured [`joint_search`]
-/// driver, so handing this a batched evaluator (e.g.
-/// [`crate::search::ParallelSim`]) parallelizes each phase's
-/// evaluations; per-phase cache/throughput stats land in the two
-/// [`SearchOutcome`]s.
+/// The driver runs over the shared [`EvalBroker`] seam: each phase
+/// opens its own broker session (so the two phases report separate
+/// counter deltas), while both share the broker's cross-search memo
+/// cache — and, inside a sweep, share it with every *other* scenario
+/// running concurrently on the same broker. Both phases go through the
+/// batch-structured [`joint_search`] driver, so whatever backend the
+/// broker wraps (parallel workers, service farm, cluster pool)
+/// parallelizes each phase's evaluations.
 pub fn phase_search(
-    evaluator: &mut dyn Evaluator,
+    broker: &EvalBroker,
     space: &NasSpace,
     initial_nas: &[usize],
     cfg: &SearchCfg,
@@ -51,8 +55,9 @@ pub fn phase_search(
     p1_cfg.samples = cfg.samples / 2;
     p1_cfg.reward = cfg.reward.soft();
     let mut has_ctl = PpoController::new(&has_cards);
+    let mut p1_session = broker.session();
     let has_phase =
-        joint_search(evaluator, &mut has_ctl, &layout, None, Some(initial_nas), &p1_cfg);
+        joint_search(&mut p1_session, &mut has_ctl, &layout, None, Some(initial_nas), &p1_cfg);
     let selected_hw = has_phase
         .best
         .as_ref()
@@ -64,8 +69,9 @@ pub fn phase_search(
     p2_cfg.samples = cfg.samples - p1_cfg.samples;
     p2_cfg.seed = cfg.seed ^ 0xF2;
     let mut nas_ctl = PpoController::new(&nas_cards);
+    let mut p2_session = broker.session();
     let nas_phase =
-        joint_search(evaluator, &mut nas_ctl, &layout, Some(&selected_hw), None, &p2_cfg);
+        joint_search(&mut p2_session, &mut nas_ctl, &layout, Some(&selected_hw), None, &p2_cfg);
 
     let eval_stats = has_phase.eval_stats.merged(&nas_phase.eval_stats);
     PhaseOutcome { has_phase, nas_phase, selected_hw, eval_stats }
@@ -81,20 +87,31 @@ mod tests {
     #[test]
     fn phase_search_runs_and_selects_hw() {
         let space = NasSpace::new(NasSpaceId::EfficientNet);
-        let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 5);
+        let sim = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 5);
+        let broker = EvalBroker::new(Box::new(sim));
         let initial = vec![0; space.num_decisions()];
         let cfg = SearchCfg::new(200, RewardCfg::latency(0.5), 5);
-        let out = phase_search(&mut ev, &space, &initial, &cfg);
+        let out = phase_search(&broker, &space, &initial, &cfg);
         assert_eq!(out.selected_hw.len(), 7);
         assert!(out.nas_phase.best_feasible.is_some());
         // The aggregated stats cover BOTH phases of the run: each
-        // phase reports its own delta of the shared evaluator, and the
+        // phase reports its own broker-session delta, and the
         // whole-run view is their sum.
         let (h, n) = (&out.has_phase.eval_stats, &out.nas_phase.eval_stats);
         assert_eq!(out.eval_stats.requests, h.requests + n.requests);
         assert_eq!(out.eval_stats.requests, 200);
         assert_eq!(out.eval_stats.evals, h.evals + n.evals);
         assert_eq!(out.eval_stats.invalid, h.invalid + n.invalid);
+        // No double counting across the broker seam: the two session
+        // deltas sum to the broker's global counters, and the backend
+        // saw exactly the broker's deduped misses.
+        let g = broker.stats();
+        assert_eq!(g.requests, out.eval_stats.requests);
+        assert_eq!(g.evals, out.eval_stats.evals);
+        assert_eq!(g.cache_hits, out.eval_stats.cache_hits);
+        assert_eq!(g.invalid, out.eval_stats.invalid);
+        assert_eq!(g.cross_session_hits, out.eval_stats.cross_session_hits);
+        assert_eq!(broker.backend_stats().requests, g.evals);
     }
 
     #[test]
@@ -106,9 +123,10 @@ mod tests {
             let space = NasSpace::new(NasSpaceId::EfficientNet);
             let cfg = SearchCfg::new(300, RewardCfg::latency(0.5), seed);
 
-            let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+            let sim = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+            let broker = EvalBroker::new(Box::new(sim));
             let initial = vec![0; space.num_decisions()];
-            let phase = phase_search(&mut ev, &space, &initial, &cfg);
+            let phase = phase_search(&broker, &space, &initial, &cfg);
             let phase_acc =
                 phase.nas_phase.best_feasible.as_ref().map(|s| s.result.acc).unwrap_or(0.0);
 

@@ -1,0 +1,392 @@
+//! Concurrent multi-scenario sweep orchestrator.
+//!
+//! The paper's third observation is that different *use cases* —
+//! latency targets, latency- vs energy-driven objectives, joint vs
+//! phase-based search — lead to very different search outcomes, and
+//! its headline results (Fig. 2, Fig. 8) are built from sweeps of
+//! searches, each the same machinery under a different constraint.
+//! This module runs such a sweep as N concurrent search sessions over
+//! one shared [`EvalBroker`]:
+//!
+//! * every [`Scenario`] runs on its own thread with its own controller
+//!   and broker session, so the scenarios *interleave* their
+//!   evaluation batches on the shared backend instead of queueing
+//!   whole searches behind each other;
+//! * the broker's cross-search memo cache means a joint decision
+//!   discovered by one scenario is never re-evaluated by another —
+//!   sweeps over a common seed (common random numbers, the controlled-
+//!   comparison default of [`scenario_grid`]) share their entire
+//!   opening batches;
+//! * each scenario is **bit-identical** to the same scenario run
+//!   standalone with the same seed (`tests/sweep_equivalence.rs`):
+//!   evaluation is a pure function of the decisions, so sharing the
+//!   substrate can change how often a point is computed, never what a
+//!   search sees;
+//! * the per-scenario winners merge into a union Pareto frontier
+//!   ([`crate::pareto::union_frontier`]) — Fig. 2's "joint search
+//!   extends the Pareto frontier by joining multiple frontiers", here
+//!   across *use cases* rather than accelerators.
+//!
+//! CLI: `nahas sweep --targets 0.3,0.5,0.7 --objectives latency,energy
+//! --drivers joint,phase --evaluator parallel|cluster ...`.
+
+use std::time::Instant;
+
+use crate::has::HasSpace;
+use crate::nas::{NasSpace, NasSpaceId};
+use crate::pareto::{frontier, union_frontier, Point};
+use crate::search::broker::EvalBroker;
+use crate::search::evaluator::EvalStats;
+use crate::search::evolution::EvolutionController;
+use crate::search::joint::{joint_search, JointLayout, SearchCfg, SearchOutcome};
+use crate::search::phase::phase_search;
+use crate::search::ppo::PpoController;
+use crate::search::reinforce::ReinforceController;
+use crate::search::reward::{CostObjective, RewardCfg};
+use crate::search::{Controller, RandomController};
+
+/// Which search driver a scenario runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepDriver {
+    /// Multi-trial joint NAS x HAS ([`joint_search`]).
+    Joint,
+    /// HAS-then-NAS ([`phase_search`], the Fig. 9 ablation).
+    Phase,
+}
+
+/// Which controller proposes decisions for a scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ControllerKind {
+    Ppo,
+    Random,
+    Evolution,
+    Reinforce,
+}
+
+/// One search configuration inside a sweep — a "use case" in the
+/// paper's sense. `space` must match the broker backend's search
+/// space: the backend decodes the same decision vectors this scenario
+/// samples (the CLI builds both from `--space`, so they cannot
+/// diverge there).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub space: NasSpaceId,
+    pub driver: SweepDriver,
+    pub controller: ControllerKind,
+    pub reward: RewardCfg,
+    /// Pin the hardware half: a platform-aware-NAS scenario (Fig. 2's
+    /// per-accelerator frontiers). `Joint` driver only.
+    pub fixed_hw: Option<Vec<usize>>,
+    pub samples: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Scenario {
+    pub fn new(
+        name: impl Into<String>,
+        space: NasSpaceId,
+        reward: RewardCfg,
+        seed: u64,
+    ) -> Self {
+        Scenario {
+            name: name.into(),
+            space,
+            driver: SweepDriver::Joint,
+            controller: ControllerKind::Ppo,
+            reward,
+            fixed_hw: None,
+            samples: 500,
+            batch: 16,
+            seed,
+        }
+    }
+
+    pub fn samples(mut self, samples: usize) -> Self {
+        self.samples = samples;
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
+        self
+    }
+
+    pub fn driver(mut self, driver: SweepDriver) -> Self {
+        self.driver = driver;
+        self
+    }
+
+    pub fn controller(mut self, controller: ControllerKind) -> Self {
+        self.controller = controller;
+        self
+    }
+
+    pub fn fixed_hw(mut self, hw: Vec<usize>) -> Self {
+        self.fixed_hw = Some(hw);
+        self
+    }
+
+    /// The cost axis of this scenario's Pareto points (ms or mJ).
+    fn cost_of(&self, r: &crate::search::EvalResult) -> f64 {
+        match self.reward.objective {
+            CostObjective::Latency => r.latency_ms,
+            CostObjective::Energy => r.energy_mj,
+        }
+    }
+}
+
+/// Build the full grid: targets x objectives x drivers, every scenario
+/// on the same controller seed. Sharing the seed is deliberate: it is
+/// the common-random-numbers design for comparing use cases, and it
+/// maximizes cross-scenario cache hits (all same-shape scenarios draw
+/// identical opening batches from identical initial policies). The
+/// target value is interpreted in the objective's unit — ms for
+/// latency, mJ for energy.
+pub fn scenario_grid(
+    targets: &[f64],
+    objectives: &[CostObjective],
+    drivers: &[SweepDriver],
+    space: NasSpaceId,
+    samples: usize,
+    batch: usize,
+    seed: u64,
+) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    for &driver in drivers {
+        for &objective in objectives {
+            for &target in targets {
+                let (reward, tag) = match objective {
+                    CostObjective::Latency => {
+                        (RewardCfg::latency(target), format!("lat{target}ms"))
+                    }
+                    CostObjective::Energy => {
+                        (RewardCfg::energy(target), format!("energy{target}mJ"))
+                    }
+                };
+                let dname = match driver {
+                    SweepDriver::Joint => "joint",
+                    SweepDriver::Phase => "phase",
+                };
+                out.push(
+                    Scenario::new(format!("{tag}-{dname}"), space, reward, seed)
+                        .samples(samples)
+                        .batch(batch)
+                        .driver(driver),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// One finished scenario.
+#[derive(Debug)]
+pub struct ScenarioOutcome {
+    pub scenario: Scenario,
+    /// The (final, for `Phase`) search phase's outcome.
+    pub search: SearchOutcome,
+    /// The accelerator phase 1 selected (`Phase` driver only).
+    pub selected_hw: Option<Vec<usize>>,
+    /// This scenario's broker-session delta (both phases for `Phase`).
+    pub eval_stats: EvalStats,
+    /// Non-dominated (accuracy%, cost) points from the search history.
+    pub frontier: Vec<Point>,
+    pub elapsed_s: f64,
+}
+
+/// A finished sweep: per-scenario outcomes (input order), one union
+/// Pareto frontier per cost objective (latency and energy are
+/// different axes — unioning across them would compare ms to mJ), and
+/// the merged evaluation stats (whose `cross_session_hits` is the work
+/// sharing the broker saved).
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub outcomes: Vec<ScenarioOutcome>,
+    pub union: Vec<(CostObjective, Vec<Point>)>,
+    pub eval_stats: EvalStats,
+    pub elapsed_s: f64,
+}
+
+/// Run one scenario over (a new session of) the shared broker. This is
+/// also the standalone entry: a scenario run here with a fresh broker
+/// is the reference its in-sweep run must replay bit for bit.
+pub fn run_scenario(broker: &EvalBroker, sc: &Scenario) -> ScenarioOutcome {
+    let t0 = Instant::now();
+    let space = NasSpace::new(sc.space);
+    let has = HasSpace::new();
+    let mut cfg = SearchCfg::new(sc.samples, sc.reward, sc.seed);
+    cfg.batch = sc.batch.max(1);
+    let (search, selected_hw, eval_stats) = match sc.driver {
+        SweepDriver::Joint => {
+            let (cards, layout) = JointLayout::cards(&space, &has);
+            let free_cards =
+                if sc.fixed_hw.is_some() { cards[..layout.nas_len].to_vec() } else { cards };
+            let mut ctl: Box<dyn Controller> = match sc.controller {
+                ControllerKind::Ppo => Box::new(PpoController::new(&free_cards)),
+                ControllerKind::Random => Box::new(RandomController::new(free_cards)),
+                ControllerKind::Evolution => Box::new(EvolutionController::new(free_cards)),
+                ControllerKind::Reinforce => Box::new(ReinforceController::new(&free_cards)),
+            };
+            let mut session = broker.session();
+            let out = joint_search(
+                &mut session,
+                ctl.as_mut(),
+                &layout,
+                sc.fixed_hw.as_deref(),
+                None,
+                &cfg,
+            );
+            let stats = out.eval_stats.clone();
+            (out, None, stats)
+        }
+        SweepDriver::Phase => {
+            // The phase driver has no knobs for these: surface the
+            // misconfiguration instead of silently ignoring it.
+            assert!(
+                sc.fixed_hw.is_none(),
+                "scenario {}: fixed_hw is Joint-driver only (phase 1 searches the hardware)",
+                sc.name
+            );
+            assert!(
+                sc.controller == ControllerKind::Ppo,
+                "scenario {}: the phase driver always runs PPO in both phases",
+                sc.name
+            );
+            // Fixed initial architecture for phase 1, as in `nahas
+            // phase` (the minimal point of the space).
+            let initial = vec![0; space.num_decisions()];
+            let out = phase_search(broker, &space, &initial, &cfg);
+            let stats = out.eval_stats.clone();
+            (out.nas_phase, Some(out.selected_hw), stats)
+        }
+    };
+    let points: Vec<Point> = search
+        .history
+        .iter()
+        .filter(|s| s.result.valid)
+        .map(|s| Point::new(s.result.acc * 100.0, sc.cost_of(&s.result), sc.name.clone()))
+        .collect();
+    ScenarioOutcome {
+        scenario: sc.clone(),
+        frontier: frontier(&points),
+        search,
+        selected_hw,
+        eval_stats,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Run every scenario concurrently over the shared broker (one thread
+/// and one broker session each) and merge the results. Outcomes come
+/// back in input order whatever the interleaving.
+pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
+    let t0 = Instant::now();
+    // One broker backend decodes one search space; scenarios from a
+    // different space would get silently wrong metrics memoized into
+    // the shared cache. (Sweep several spaces with one broker each, as
+    // the fig8 bench does.)
+    assert!(
+        scenarios.iter().all(|s| s.space == scenarios[0].space),
+        "all scenarios of one sweep must share the broker backend's search space"
+    );
+    let outcomes: Vec<ScenarioOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> =
+            scenarios.iter().map(|sc| s.spawn(move || run_scenario(broker, sc))).collect();
+        handles.into_iter().map(|h| h.join().expect("sweep scenario thread panicked")).collect()
+    });
+    let eval_stats =
+        outcomes.iter().fold(EvalStats::default(), |acc, o| acc.merged(&o.eval_stats));
+    let mut union = Vec::new();
+    for objective in [CostObjective::Latency, CostObjective::Energy] {
+        let fronts: Vec<Vec<Point>> = outcomes
+            .iter()
+            .filter(|o| o.scenario.reward.objective == objective)
+            .map(|o| o.frontier.clone())
+            .collect();
+        if !fronts.is_empty() {
+            union.push((objective, union_frontier(&fronts)));
+        }
+    }
+    SweepOutcome { outcomes, union, eval_stats, elapsed_s: t0.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pareto::hypervolume;
+    use crate::search::SurrogateSim;
+
+    fn local_broker(seed: u64) -> EvalBroker {
+        let sim = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+        EvalBroker::new(Box::new(sim))
+    }
+
+    #[test]
+    fn grid_crosses_targets_objectives_and_drivers() {
+        let g = scenario_grid(
+            &[0.3, 0.5],
+            &[CostObjective::Latency, CostObjective::Energy],
+            &[SweepDriver::Joint, SweepDriver::Phase],
+            NasSpaceId::EfficientNet,
+            100,
+            16,
+            7,
+        );
+        assert_eq!(g.len(), 8);
+        let mut names: Vec<&str> = g.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 8, "scenario names must be unique");
+        assert!(g.iter().all(|s| s.seed == 7 && s.samples == 100));
+    }
+
+    #[test]
+    fn sweep_merges_union_frontier_that_dominates_each_scenario() {
+        // Two platform-aware-NAS scenarios on contrasting accelerators
+        // (the Fig. 2 construction): the union frontier's hypervolume
+        // must cover each per-scenario frontier's.
+        let has = HasSpace::new();
+        let mk = |name: &str, hw: Vec<usize>| {
+            Scenario::new(name, NasSpaceId::EfficientNet, RewardCfg::latency(2.0), 2)
+                .samples(120)
+                .batch(24)
+                .controller(ControllerKind::Random)
+                .fixed_hw(hw)
+        };
+        let scenarios = vec![
+            mk("baseline-hw", has.baseline_decisions()),
+            mk("io-starved-hw", vec![2, 2, 2, 2, 2, 2, 0]),
+        ];
+        let broker = local_broker(2);
+        let out = run_sweep(&broker, &scenarios);
+        assert_eq!(out.outcomes.len(), 2);
+        assert_eq!(out.union.len(), 1, "one union frontier per objective");
+        assert_eq!(out.union[0].0, CostObjective::Latency);
+        let hv_union = hypervolume(&out.union[0].1, 70.0, 2.0);
+        for o in &out.outcomes {
+            assert_eq!(o.search.history.len(), 120);
+            let hv = hypervolume(&o.frontier, 70.0, 2.0);
+            assert!(hv_union >= hv, "{}: union {hv_union} < scenario {hv}", o.scenario.name);
+        }
+        // Bookkeeping balances across the merged sessions.
+        let m = &out.eval_stats;
+        assert_eq!(m.requests, 240);
+        assert_eq!(m.evals + m.cache_hits, m.requests);
+    }
+
+    #[test]
+    fn phase_scenario_reports_selected_hw_and_both_phase_stats() {
+        let reward = RewardCfg::latency(0.5);
+        let sc = Scenario::new("phase-0.5ms", NasSpaceId::EfficientNet, reward, 5)
+            .samples(120)
+            .driver(SweepDriver::Phase);
+        let broker = local_broker(5);
+        let out = run_scenario(&broker, &sc);
+        assert_eq!(out.selected_hw.as_ref().map(Vec::len), Some(7));
+        // The scenario delta covers BOTH phases, not just the final one.
+        assert_eq!(out.eval_stats.requests, 120);
+        assert_eq!(out.search.history.len(), 60, "final phase gets half the budget");
+    }
+}

@@ -17,7 +17,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -25,6 +25,7 @@ use crate::accel::simulate_network;
 use crate::has::{validate, HasSpace};
 use crate::nas::{NasSpace, NasSpaceId};
 use crate::search::evaluator::segmentation_variant;
+use crate::search::MemoCache;
 use crate::util::json::{obj, Json};
 
 fn space_by_name(name: &str) -> Option<NasSpaceId> {
@@ -86,11 +87,87 @@ pub fn handle_request(req: &Json) -> Json {
     }
 }
 
+/// Server-side simulator result cache, shared by every connection
+/// thread: responses are memoized on the (space, task, nas, hw) key,
+/// so repeat queries — which the cluster tier's affinity routing makes
+/// the common case, and which independent sweep runs re-issue — cost a
+/// map lookup instead of a simulation. Everything the server computes
+/// is a deterministic function of the key (the server never does
+/// accuracy, only hardware metrics), so entries never expire; the
+/// two-generation [`MemoCache`] bounds residency.
+pub struct ServeCache {
+    cache: Mutex<MemoCache<String>>,
+    /// Simulate requests answered from the cache.
+    pub hits: AtomicU64,
+    /// Simulate requests actually simulated (cacheable misses).
+    pub sim_evals: AtomicU64,
+}
+
+const SERVE_CACHE_CAPACITY: usize = 64 * 1024;
+
+impl Default for ServeCache {
+    fn default() -> Self {
+        ServeCache {
+            cache: Mutex::new(MemoCache::new(SERVE_CACHE_CAPACITY)),
+            hits: AtomicU64::new(0),
+            sim_evals: AtomicU64::new(0),
+        }
+    }
+}
+
+impl ServeCache {
+    /// Answer `req` (whose derived cache key is `key`) from the cache,
+    /// simulating on a miss. The lock covers only the map operations —
+    /// two connections racing on the same fresh key may both simulate
+    /// it (deterministic, so harmless), but neither ever blocks behind
+    /// another's simulation.
+    fn get_or_compute(&self, key: Vec<usize>, req: &Json) -> String {
+        if let Some(resp) = self.lock().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return resp;
+        }
+        let resp = handle_request(req).to_string();
+        self.sim_evals.fetch_add(1, Ordering::Relaxed);
+        self.lock().insert(key, resp.clone());
+        resp
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, MemoCache<String>> {
+        self.cache.lock().expect("serve cache poisoned")
+    }
+}
+
+/// Derive the memo key of a simulate request: space id, task, and the
+/// two decision vectors (nas length included, so the concatenation is
+/// unambiguous). `None` for anything that is not a well-formed
+/// simulate request — probes, stats queries and malformed payloads go
+/// straight to [`handle_request`], uncached.
+fn serve_cache_key(req: &Json) -> Option<Vec<usize>> {
+    let id = space_by_name(req.get("space")?.as_str()?)?;
+    let seg = req.get("task").and_then(Json::as_str) == Some("seg");
+    let nas = req.get("nas")?.as_arr()?;
+    let hw = req.get("hw")?.as_arr()?;
+    let mut key = Vec::with_capacity(3 + nas.len() + hw.len());
+    key.push(id as usize);
+    key.push(seg as usize);
+    key.push(nas.len());
+    for v in nas.iter().chain(hw) {
+        // Same numeric interpretation as handle_request's decoding, so
+        // the key cannot alias two requests the handler would tell
+        // apart.
+        key.push(v.as_usize()?);
+    }
+    Some(key)
+}
+
 /// Running server handle.
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    /// Request lines served, of any kind (simulate, probe, stats).
     pub requests: Arc<AtomicU64>,
+    /// The shared simulate-result cache and its hit/eval counters.
+    pub cache: Arc<ServeCache>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -102,16 +179,18 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let requests = Arc::new(AtomicU64::new(0));
-        let (stop2, req2) = (stop.clone(), requests.clone());
+        let cache = Arc::new(ServeCache::default());
+        let (stop2, req2, cache2) = (stop.clone(), requests.clone(), cache.clone());
         let handle = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let req3 = req2.clone();
+                        let cache3 = cache2.clone();
                         // Detached worker: it exits when the client hangs
                         // up (joining here would deadlock on clients that
                         // outlive the server).
-                        std::thread::spawn(move || serve_conn(stream, req3));
+                        std::thread::spawn(move || serve_conn(stream, req3, cache3));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -120,7 +199,7 @@ impl Server {
                 }
             }
         });
-        Ok(Server { addr: local, stop, requests, handle: Some(handle) })
+        Ok(Server { addr: local, stop, requests, cache, handle: Some(handle) })
     }
 
     pub fn stop(mut self) {
@@ -131,7 +210,7 @@ impl Server {
     }
 }
 
-fn serve_conn(stream: TcpStream, requests: Arc<AtomicU64>) {
+fn serve_conn(stream: TcpStream, requests: Arc<AtomicU64>, cache: Arc<ServeCache>) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -142,9 +221,22 @@ fn serve_conn(stream: TcpStream, requests: Arc<AtomicU64>) {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match Json::parse(&line) {
-            Err(e) => obj(vec![("valid", false.into()), ("error", e.as_str().into())]),
-            Ok(req) => handle_request(&req),
+        let resp: String = match Json::parse(&line) {
+            Err(e) => {
+                obj(vec![("valid", false.into()), ("error", e.as_str().into())]).to_string()
+            }
+            // `{"stats": true}`: report this server's counters (used by
+            // `nahas cluster-status` to surface cache effectiveness).
+            Ok(req) if req.get("stats").is_some() => obj(vec![
+                ("requests", (requests.load(Ordering::Relaxed) as f64).into()),
+                ("cache_hits", (cache.hits.load(Ordering::Relaxed) as f64).into()),
+                ("sim_evals", (cache.sim_evals.load(Ordering::Relaxed) as f64).into()),
+            ])
+            .to_string(),
+            Ok(req) => match serve_cache_key(&req) {
+                Some(key) => cache.get_or_compute(key, &req),
+                None => handle_request(&req).to_string(),
+            },
         };
         requests.fetch_add(1, Ordering::Relaxed);
         if writeln!(writer, "{resp}").is_err() {
@@ -262,6 +354,35 @@ mod tests {
             j.join().unwrap();
         }
         assert_eq!(server.requests.load(Ordering::Relaxed), 32);
+        server.stop();
+    }
+
+    #[test]
+    fn server_memoizes_repeat_simulations_and_reports_stats() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let has = HasSpace::new();
+        let mut rng = Rng::new(8);
+        let nas_d = space.random(&mut rng);
+        let hw = has.baseline_decisions();
+        let r1 = client.query("efficientnet", &nas_d, &hw, false).unwrap();
+        let r2 = client.query("efficientnet", &nas_d, &hw, false).unwrap();
+        assert_eq!(r1, r2, "cached response must be byte-identical");
+        assert_eq!(server.cache.sim_evals.load(Ordering::Relaxed), 1);
+        assert_eq!(server.cache.hits.load(Ordering::Relaxed), 1);
+        // A different task decodes differently: it must not alias.
+        let r3 = client.query("efficientnet", &nas_d, &hw, true).unwrap();
+        assert_ne!(r1, r3);
+        assert_eq!(server.cache.sim_evals.load(Ordering::Relaxed), 2);
+        // The stats protocol reports the counters over the same socket.
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        writeln!(stream, "{{\"stats\": true}}").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        let st = Json::parse(line.trim()).unwrap();
+        assert_eq!(st.get("cache_hits").and_then(Json::as_usize), Some(1));
+        assert_eq!(st.get("sim_evals").and_then(Json::as_usize), Some(2));
         server.stop();
     }
 
@@ -503,6 +624,13 @@ impl crate::search::Evaluator for ServiceEvaluator {
         &mut self,
         batch: &[(Vec<usize>, Vec<usize>)],
     ) -> Vec<crate::search::EvalResult> {
+        self.evaluate_batch_tagged(batch).into_iter().map(|(r, _)| r).collect()
+    }
+
+    fn evaluate_batch_tagged(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<(crate::search::EvalResult, bool)> {
         if batch.is_empty() {
             return Vec::new();
         }
@@ -515,8 +643,11 @@ impl crate::search::Evaluator for ServiceEvaluator {
         let plan = crate::search::parallel::BatchPlan::build(&mut self.cache, batch);
         let fresh = self.query_pending(plan.pending(), nas_len);
         self.counters.evals += fresh.len();
-        let out = plan.finish(&mut self.cache, fresh);
-        self.counters.invalid += out.iter().filter(|r| !r.valid).count();
+        // Keep the per-slot transport verdicts: an upstream cache
+        // (e.g. the shared `EvalBroker`) must not memoize a transport
+        // failure any more than the local cache here does.
+        let out = plan.finish_tagged(&mut self.cache, fresh);
+        self.counters.invalid += out.iter().filter(|(r, _)| !r.valid).count();
         out
     }
 

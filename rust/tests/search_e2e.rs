@@ -10,7 +10,7 @@ use nahas::search::phase::phase_search;
 use nahas::search::ppo::PpoController;
 use nahas::search::reinforce::ReinforceController;
 use nahas::search::{
-    joint_search, Controller, RandomController, RewardCfg, SearchCfg, SurrogateSim,
+    joint_search, Controller, EvalBroker, RandomController, RewardCfg, SearchCfg, SurrogateSim,
 };
 
 fn run_search(
@@ -71,7 +71,8 @@ fn tighter_target_forces_smaller_models() {
 #[test]
 fn phase_search_end_to_end() {
     let space = NasSpace::new(NasSpaceId::Evolved);
-    let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::Evolved), 8);
+    let sim = SurrogateSim::new(NasSpace::new(NasSpaceId::Evolved), 8);
+    let broker = EvalBroker::new(Box::new(sim));
     // A realistic (B0-like) initial architecture: scale B1, k=3, exp=6,
     // IBN, filter 1.0 — phase 1 sizes the accelerator for THIS network.
     let mut initial = vec![0usize; space.num_decisions()];
@@ -81,7 +82,7 @@ fn phase_search_end_to_end() {
         initial[1 + b * 5 + 3] = 2; // filter x1.0
     }
     let cfg = SearchCfg::new(800, RewardCfg::latency(1.0), 8);
-    let out = phase_search(&mut ev, &space, &initial, &cfg);
+    let out = phase_search(&broker, &space, &initial, &cfg);
     assert_eq!(out.selected_hw.len(), 7);
     assert!(out.has_phase.best.is_some());
     assert!(out.nas_phase.best_feasible.is_some());
@@ -94,10 +95,11 @@ fn phase_search_with_degenerate_initial_arch_collapses() {
     // minimal initial arch makes phase 1 pick a tiny chip that phase 2
     // cannot then fit real models onto.
     let space = NasSpace::new(NasSpaceId::Evolved);
-    let mut ev = SurrogateSim::new(NasSpace::new(NasSpaceId::Evolved), 8);
+    let sim = SurrogateSim::new(NasSpace::new(NasSpaceId::Evolved), 8);
+    let broker = EvalBroker::new(Box::new(sim));
     let initial = vec![0; space.num_decisions()];
     let cfg = SearchCfg::new(800, RewardCfg::latency(1.0), 8);
-    let out = phase_search(&mut ev, &space, &initial, &cfg);
+    let out = phase_search(&broker, &space, &initial, &cfg);
     let feasible_acc =
         out.nas_phase.best_feasible.map(|b| b.result.acc).unwrap_or(0.0);
     assert!(

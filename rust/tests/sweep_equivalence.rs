@@ -1,0 +1,162 @@
+//! Sweep determinism: every scenario inside a *concurrent* sweep over
+//! a shared [`EvalBroker`] must be bit-identical to the same scenario
+//! run standalone with the same seed — same sampled decisions, same
+//! rewards, same `best_feasible`, same frontier. Sharing the broker
+//! (its backend and its cross-search memo cache) may change how often
+//! and where a joint decision is computed, never what any search sees.
+//! Pinned for seeds {1, 7, 42} across the `local` and `parallel`
+//! backends, and over a two-host `cluster` backend.
+
+use nahas::cluster::ShardedEvaluator;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{
+    run_scenario, run_sweep, scenario_grid, CostObjective, EvalBroker, Evaluator, ParallelSim,
+    Scenario, ScenarioOutcome, SurrogateSim, SweepDriver,
+};
+use nahas::service::Server;
+
+const SAMPLES: usize = 96;
+
+/// The sweep under test: latency x energy targets as joint scenarios
+/// (all on one controller seed — the controlled-comparison default,
+/// which also guarantees cross-scenario cache traffic), plus one
+/// phase-driver scenario.
+fn scenarios(seed: u64) -> Vec<Scenario> {
+    let mut out = scenario_grid(
+        &[0.35, 0.5],
+        &[CostObjective::Latency, CostObjective::Energy],
+        &[SweepDriver::Joint],
+        NasSpaceId::EfficientNet,
+        SAMPLES,
+        16,
+        seed,
+    );
+    out.push(
+        Scenario::new(
+            "lat0.5ms-phase",
+            NasSpaceId::EfficientNet,
+            nahas::search::RewardCfg::latency(0.5),
+            seed,
+        )
+        .samples(SAMPLES)
+        .driver(SweepDriver::Phase),
+    );
+    out
+}
+
+fn backend(kind: &str, eval_seed: u64) -> Box<dyn Evaluator + Send> {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    match kind {
+        "local" => Box::new(SurrogateSim::new(space, eval_seed)),
+        "parallel" => Box::new(ParallelSim::new(space, eval_seed, 4)),
+        other => panic!("unknown backend kind {other}"),
+    }
+}
+
+fn assert_scenario_identical(want: &ScenarioOutcome, got: &ScenarioOutcome, ctx: &str) {
+    assert_eq!(want.search.history.len(), got.search.history.len(), "{ctx}: history length");
+    for (w, g) in want.search.history.iter().zip(&got.search.history) {
+        assert_eq!(w.index, g.index, "{ctx}");
+        assert_eq!(w.nas_d, g.nas_d, "{ctx}: sample {} nas decisions", w.index);
+        assert_eq!(w.has_d, g.has_d, "{ctx}: sample {} has decisions", w.index);
+        assert_eq!(w.result.valid, g.result.valid, "{ctx}: sample {}", w.index);
+        assert_eq!(w.reward.to_bits(), g.reward.to_bits(), "{ctx}: sample {}", w.index);
+        assert_eq!(w.result.acc.to_bits(), g.result.acc.to_bits(), "{ctx}");
+        assert_eq!(w.result.latency_ms.to_bits(), g.result.latency_ms.to_bits(), "{ctx}");
+        assert_eq!(w.result.energy_mj.to_bits(), g.result.energy_mj.to_bits(), "{ctx}");
+        assert_eq!(w.result.area_mm2.to_bits(), g.result.area_mm2.to_bits(), "{ctx}");
+    }
+    assert_eq!(want.search.num_invalid, got.search.num_invalid, "{ctx}: invalid count");
+    assert_eq!(want.selected_hw, got.selected_hw, "{ctx}: selected hw");
+    assert_eq!(want.frontier, got.frontier, "{ctx}: frontier");
+    match (&want.search.best_feasible, &got.search.best_feasible) {
+        (None, None) => {}
+        (Some(w), Some(g)) => {
+            assert_eq!(w.index, g.index, "{ctx}: best_feasible index");
+            assert_eq!(w.nas_d, g.nas_d, "{ctx}: best_feasible nas");
+            assert_eq!(w.has_d, g.has_d, "{ctx}: best_feasible hw");
+        }
+        (w, g) => panic!("{ctx}: best_feasible {:?} vs {:?}", w.is_some(), g.is_some()),
+    }
+}
+
+fn check_sweep_against_standalone(
+    scs: &[Scenario],
+    sweep_broker: EvalBroker,
+    solo: impl Fn() -> EvalBroker,
+    ctx_prefix: &str,
+) {
+    let sweep = run_sweep(&sweep_broker, scs);
+    assert_eq!(sweep.outcomes.len(), scs.len());
+    // Bookkeeping balances across the merged per-scenario deltas, the
+    // broker's global view agrees, and concurrency paid off: scenarios
+    // share a controller seed, so their identical opening batches MUST
+    // produce cross-scenario cache hits.
+    let m = &sweep.eval_stats;
+    assert_eq!(m.requests, scs.iter().map(|s| s.samples).sum::<usize>(), "{ctx_prefix}");
+    assert_eq!(m.evals + m.cache_hits, m.requests, "{ctx_prefix}");
+    assert!(m.cross_session_hits > 0, "{ctx_prefix}: no cross-scenario cache hits");
+    let g = sweep_broker.stats();
+    assert_eq!(g.requests, m.requests, "{ctx_prefix}: broker vs merged requests");
+    assert_eq!(g.evals, m.evals, "{ctx_prefix}: broker vs merged evals");
+    assert_eq!(g.invalid, m.invalid, "{ctx_prefix}: broker vs merged invalid");
+    assert_eq!(
+        g.cross_session_hits, m.cross_session_hits,
+        "{ctx_prefix}: broker vs merged cross hits"
+    );
+    // A union frontier exists for every objective the sweep ran.
+    assert!(!sweep.union.is_empty(), "{ctx_prefix}: no union frontier");
+    for (_, front) in &sweep.union {
+        assert!(!front.is_empty(), "{ctx_prefix}: empty union frontier");
+    }
+    for (sc, got) in scs.iter().zip(&sweep.outcomes) {
+        let want = run_scenario(&solo(), sc);
+        assert_scenario_identical(&want, got, &format!("{ctx_prefix}, scenario {}", sc.name));
+    }
+}
+
+#[test]
+fn sweep_scenarios_bit_identical_to_standalone_local_and_parallel() {
+    for kind in ["local", "parallel"] {
+        for seed in [1u64, 7, 42] {
+            let scs = scenarios(seed);
+            check_sweep_against_standalone(
+                &scs,
+                EvalBroker::new(backend(kind, seed)),
+                || EvalBroker::new(backend(kind, seed)),
+                &format!("backend {kind}, seed {seed}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_over_cluster_backend_matches_standalone_local_runs() {
+    // ISSUE 3 acceptance: >= 4 scenarios concurrently over one shared
+    // broker whose backend is the two-host cluster tier, each
+    // bit-identical to its standalone run (standalone reference: the
+    // plain local simulator — remote hardware metrics and local
+    // accuracy must agree bit for bit across the whole stack).
+    let servers: Vec<Server> =
+        (0..2).map(|_| Server::spawn("127.0.0.1:0").unwrap()).collect();
+    let hosts: Vec<String> = servers.iter().map(|s| s.addr.to_string()).collect();
+    let seed = 7u64;
+    let scs = scenarios(seed);
+    assert!(scs.len() >= 4, "acceptance demands at least four concurrent scenarios");
+    let cluster =
+        ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, seed, 2).unwrap();
+    check_sweep_against_standalone(
+        &scs,
+        EvalBroker::new(Box::new(cluster)),
+        || EvalBroker::new(backend("local", seed)),
+        "backend cluster(2 hosts), seed 7",
+    );
+    // The servers actually simulated on behalf of the sweep.
+    use std::sync::atomic::Ordering;
+    let sim_evals: u64 =
+        servers.iter().map(|s| s.cache.sim_evals.load(Ordering::Relaxed)).sum();
+    assert!(sim_evals > 0);
+    for s in servers {
+        s.stop();
+    }
+}
