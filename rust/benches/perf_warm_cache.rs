@@ -1,0 +1,88 @@
+//! §Perf — cross-run warm start: the same sweep run cold (fresh
+//! `--cache-dir`) and then warm (reopening the spilled cache file).
+//! The warm pass must perform **zero** backend evaluations and be
+//! markedly faster end to end; the bench also reports the store's
+//! load/append costs, which bound the overhead persistence adds to a
+//! cold run.
+
+use std::time::Instant;
+
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::store::eval_fingerprint;
+use nahas::search::{
+    run_sweep, scenario_grid, CacheStore, CostObjective, EvalBroker, ParallelSim, SweepDriver,
+    Task,
+};
+
+const SAMPLES: usize = 200;
+const SEED: u64 = 7;
+
+fn broker(store: Option<CacheStore>) -> EvalBroker {
+    let backend = Box::new(ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), SEED, 4));
+    match store {
+        Some(s) => EvalBroker::with_store(backend, s),
+        None => EvalBroker::new(backend),
+    }
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("nahas-warm-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("evals.cache");
+    let fp = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, SEED);
+    let scenarios = scenario_grid(
+        &[0.35, 0.5, 0.7],
+        &[CostObjective::Latency],
+        &[SweepDriver::Joint],
+        NasSpaceId::EfficientNet,
+        SAMPLES,
+        20,
+        SEED,
+    );
+    println!(
+        "warm-start sweep: {} scenarios x {SAMPLES} samples, cache file {}\n",
+        scenarios.len(),
+        path.display()
+    );
+
+    // Cold pass: pays the full simulator bill, spills every entry.
+    let store = CacheStore::open(&path, &fp).expect("open cache store");
+    let cold_broker = broker(Some(store));
+    let t0 = Instant::now();
+    let cold = run_sweep(&cold_broker, &scenarios);
+    let cold_s = t0.elapsed().as_secs_f64();
+    let cold_backend = cold_broker.backend_stats().requests;
+    drop(cold_broker); // Flush the spill file.
+    println!(
+        "  cold: {cold_s:>6.2}s  {} evals, {} backend requests, {} persisted hits",
+        cold.eval_stats.evals, cold_backend, cold.eval_stats.persisted_hits
+    );
+
+    // Warm pass: fresh process state, same file.
+    let t0 = Instant::now();
+    let store = CacheStore::open(&path, &fp).expect("reopen cache store");
+    let load_s = t0.elapsed().as_secs_f64();
+    let loaded = store.loaded_len();
+    let warm_broker = broker(Some(store));
+    let t0 = Instant::now();
+    let warm = run_sweep(&warm_broker, &scenarios);
+    let warm_s = t0.elapsed().as_secs_f64();
+    let warm_backend = warm_broker.backend_stats().requests;
+    println!(
+        "  warm: {warm_s:>6.2}s  {} evals, {} backend requests, {} persisted hits \
+         ({loaded} entries loaded in {:.1}ms)",
+        warm.eval_stats.evals,
+        warm_backend,
+        warm.eval_stats.persisted_hits,
+        load_s * 1e3
+    );
+
+    assert_eq!(warm_backend, 0, "fully-warm sweep must not touch the backend");
+    assert!(warm.eval_stats.persisted_hits > 0);
+    // Frontier equivalence: warm replay is the same sweep.
+    for ((_, a), (_, b)) in cold.union.iter().zip(&warm.union) {
+        assert_eq!(a.len(), b.len(), "warm union frontier diverged");
+    }
+    println!("\n  speedup: {:.1}x (cold/warm wall clock)", cold_s / warm_s.max(1e-9));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -19,6 +19,17 @@
 //! its key range — move to the surviving hosts, and the batch retries
 //! until everything resolves or no host is up (those samples score
 //! invalid and are *not* memoized, so a later resample retries).
+//!
+//! Cross-run persistence composes with the cluster tier at both ends,
+//! and the per-host caches stay coherent without any protocol, because
+//! every cache key is the full joint decision vector: a broker-side
+//! `--cache-dir` spill replays identically whichever host (or tier)
+//! originally computed an entry, and each host's own `nahas serve
+//! --cache-dir` file can be copied between hosts or survive a
+//! re-shard — rendezvous routing only decides *where* a key is
+//! evaluated, never *what* the key means. The non-cacheable markers
+//! that failover produces are dropped before any cache, so they can
+//! never be spilled either (`tests/cluster_failover.rs`).
 
 use std::collections::HashMap;
 use std::time::Duration;

@@ -81,6 +81,9 @@ pub struct HostServeStats {
     pub cache_hits: u64,
     /// Simulate requests actually simulated.
     pub sim_evals: u64,
+    /// Resident entries in the server-side result cache (0 when the
+    /// host predates the field).
+    pub cache_size: u64,
 }
 
 /// One stats roundtrip against a `nahas serve` host. `None` if the
@@ -100,6 +103,7 @@ pub fn query_host_stats(addr: &str, timeout: Duration) -> Option<HostServeStats>
         requests: field("requests")?,
         cache_hits: field("cache_hits")?,
         sim_evals: field("sim_evals")?,
+        cache_size: field("cache_size").unwrap_or(0),
     })
 }
 
@@ -180,6 +184,7 @@ mod tests {
             query_host_stats(&server.addr.to_string(), Duration::from_millis(500)).unwrap();
         assert_eq!(st.cache_hits, 0);
         assert_eq!(st.sim_evals, 0);
+        assert_eq!(st.cache_size, 0);
         let dead = {
             let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap().to_string()

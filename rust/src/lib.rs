@@ -49,7 +49,11 @@
 //! [`search::sweep`] orchestrator (`nahas sweep`) runs whole scenario
 //! grids — latency targets x objectives x joint/phase drivers — as
 //! concurrent sessions over one broker and merges the winners into a
-//! union Pareto frontier per objective.
+//! union Pareto frontier per objective. With `--cache-dir`, the broker
+//! cache also persists *across* processes ([`search::store`]): a
+//! versioned append-only cache file with fingerprint-based staleness
+//! rejection, so repeated runs and sweeps warm-start at zero backend
+//! cost for every joint decision any earlier run already evaluated.
 //!
 //! CLI: `--evaluator local|parallel|service|cluster --workers N` on
 //! `search` / `sweep` / `phase` (workers default to the machine's

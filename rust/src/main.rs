@@ -15,6 +15,7 @@
 //! build; flags are simple `--key value` pairs.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -31,12 +32,13 @@ use nahas::search::oneshot::{oneshot_search, OneshotCfg, SimOracle};
 use nahas::search::phase::phase_search;
 use nahas::search::ppo::PpoController;
 use nahas::search::reinforce::ReinforceController;
+use nahas::search::store::{eval_cache_file, eval_fingerprint, serve_fingerprint};
 use nahas::search::{
-    evolution::EvolutionController, joint_search, run_sweep, scenario_grid, Controller,
-    CostObjective, EvalBroker, Evaluator, ParallelSim, RandomController, RewardCfg, SearchCfg,
-    SurrogateSim, SweepDriver,
+    evolution::EvolutionController, joint_search, run_sweep, scenario_grid, CacheStore,
+    CacheValue, Controller, CostObjective, EvalBroker, Evaluator, ParallelSim, RandomController,
+    RewardCfg, SearchCfg, SurrogateSim, SweepDriver, Task,
 };
-use nahas::service::{Server, ServiceEvaluator};
+use nahas::service::{ServeCache, Server, ServiceEvaluator};
 use nahas::trainer::ProxyTrainer;
 use nahas::util::Rng;
 
@@ -146,6 +148,44 @@ fn hosts_arg(raw: &str) -> Result<Vec<(String, f64)>> {
     Ok(hosts)
 }
 
+/// `--cache-dir DIR`: open (or create) the persistent cross-run
+/// evaluation cache for this run's evaluation context. One file per
+/// (space, task, seed) fingerprint, so differently-configured runs
+/// coexist in one directory; a stale or damaged file is discarded with
+/// a notice and the run proceeds cold.
+fn cache_store_arg(
+    flags: &Flags,
+    space: NasSpaceId,
+    seg: bool,
+    seed: u64,
+) -> Result<Option<CacheStore>> {
+    let Some(dir) = flags.get("cache-dir") else {
+        return Ok(None);
+    };
+    let task = if seg { Task::Segmentation } else { Task::Classification };
+    let path = eval_cache_file(Path::new(dir), space, task, seed);
+    let store = CacheStore::open(&path, &eval_fingerprint(space, task, seed))?;
+    report_cache_store(&store);
+    Ok(Some(store))
+}
+
+/// One-line warm-start / discard report for a freshly opened cache
+/// store (shared by the search-side `--cache-dir` and `nahas serve
+/// --cache-dir`).
+fn report_cache_store<V: CacheValue>(store: &CacheStore<V>) {
+    match store.discarded() {
+        Some(why) => println!(
+            "persistent cache {}: stale contents discarded ({why}); cold start",
+            store.path().display()
+        ),
+        None => println!(
+            "persistent cache {}: {} entries loaded",
+            store.path().display(),
+            store.loaded_len()
+        ),
+    }
+}
+
 /// `--evaluator local|parallel|service|cluster` (+ `--workers`,
 /// `--seg`, `--remote ADDR`, `--hosts A,B=2,...`). `--remote` without
 /// `--evaluator` implies the batched service client, preserving the
@@ -154,7 +194,9 @@ fn hosts_arg(raw: &str) -> Result<Vec<(String, f64)>> {
 /// `evaluate_batch` call can carry, so service connections beyond it
 /// could never be used. The chosen backend comes back wrapped in an
 /// [`EvalBroker`]: single searches run through one broker session,
-/// `nahas sweep` runs many concurrently over the same broker.
+/// `nahas sweep` runs many concurrently over the same broker — and
+/// with `--cache-dir`, the broker warm-starts from (and spills back
+/// to) a persistent cache shared across runs and backend tiers.
 fn evaluator_arg(
     flags: &Flags,
     space: NasSpace,
@@ -163,6 +205,7 @@ fn evaluator_arg(
 ) -> Result<EvalBroker> {
     let workers = workers_arg(flags)?;
     let seg = flags.bool("seg");
+    let space_id = space.id;
     let kind = flags.get("evaluator").unwrap_or(if flags.get("remote").is_some() {
         "service"
     } else if flags.get("hosts").is_some() {
@@ -220,7 +263,10 @@ fn evaluator_arg(
         }
         other => bail!("unknown evaluator '{other}' (local|parallel|service|cluster)"),
     };
-    Ok(EvalBroker::new(backend))
+    Ok(match cache_store_arg(flags, space_id, seg, seed)? {
+        Some(store) => EvalBroker::with_store(backend, store),
+        None => EvalBroker::new(backend),
+    })
 }
 
 fn print_eval_stats(st: &nahas::search::EvalStats) {
@@ -239,6 +285,12 @@ fn print_eval_stats(st: &nahas::search::EvalStats) {
         println!(
             "  {} cross-session hits (keys first evaluated by another search session)",
             st.cross_session_hits
+        );
+    }
+    if st.persisted_hits > 0 {
+        println!(
+            "  {} persisted warm-start hits (keys loaded from --cache-dir)",
+            st.persisted_hits
         );
     }
     for h in &st.per_host {
@@ -305,17 +357,20 @@ fn print_usage() {
          \x20              [--evaluator local|parallel|service|cluster --workers N --batch 16]\n\
          \x20              [--remote ADDR   use a `nahas serve` simulator service]\n\
          \x20              [--hosts A,B=2,..  shard over weighted `nahas serve` hosts]\n\
+         \x20              [--cache-dir DIR  persist evaluations across runs (warm start)]\n\
          \x20 sweep        [--targets 0.3,0.5,0.7 --objectives latency,energy]\n\
          \x20              [--drivers joint,phase --samples 500 --batch 16 --seed S]\n\
          \x20              [--space s2 --out results/sweep.csv]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N]\n\
+         \x20              [--cache-dir DIR  warm-start repeated sweeps from disk]\n\
          \x20              runs all scenarios concurrently over one shared broker\n\
          \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N --batch 16]\n\
+         \x20              [--cache-dir DIR]\n\
          \x20 oneshot      [--warmup 60 --steps 200 --target-ms 0.02 --seed S]\n\
          \x20 train-child  [--steps 30 --seed S]\n\
          \x20 costmodel    [--data 2000 --train-steps 600 --eval 256 --space s2]\n\
-         \x20 serve        [--addr 127.0.0.1:7878]\n\
+         \x20 serve        [--addr 127.0.0.1:7878 --cache-dir DIR]\n\
          \x20 cluster-status [--hosts a:7878,b:7878=2 --timeout-ms 1000]"
     );
 }
@@ -576,6 +631,9 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
          ({} cross-scenario)",
         out.elapsed_s, m.requests, m.evals, m.cache_hits, m.cross_session_hits
     );
+    // Warm-start accounting: a fully-warm re-sweep from a populated
+    // --cache-dir reports zero backend evals (the CI smoke greps this).
+    println!("backend evals this run: {}", broker.backend_stats().requests);
     print_eval_stats(&broker.stats());
 
     let mut rows = Vec::new();
@@ -686,7 +744,16 @@ fn cmd_costmodel(flags: &Flags) -> Result<()> {
 
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let addr = flags.get("addr").unwrap_or("127.0.0.1:7878");
-    let server = Server::spawn(addr)?;
+    let cache = match flags.get("cache-dir") {
+        Some(dir) => {
+            let path = Path::new(dir).join("serve.cache");
+            let store: CacheStore<String> = CacheStore::open(&path, &serve_fingerprint())?;
+            report_cache_store(&store);
+            ServeCache::with_store(store)
+        }
+        None => ServeCache::default(),
+    };
+    let server = Server::spawn_with_cache(addr, cache)?;
     println!("simulator service on {}; Ctrl-C to stop", server.addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -702,18 +769,25 @@ fn cmd_cluster_status(flags: &Flags) -> Result<()> {
         .ok_or_else(|| anyhow!("cluster-status requires --hosts A,B,..."))?;
     let hosts = hosts_arg(raw)?;
     let timeout = std::time::Duration::from_millis(flags.u64("timeout-ms", 1000)?);
-    let mut table =
-        Table::new(&["Host", "Weight", "Status", "RTT(ms)", "Served", "SimHits", "Detail"]);
+    let mut table = Table::new(&[
+        "Host", "Weight", "Status", "RTT(ms)", "Served", "SimHits", "Cache", "Detail",
+    ]);
     let mut up = 0;
     for (host, weight) in &hosts {
         let p = probe_host(host, timeout);
         up += p.up as usize;
-        // Hit counts from the server-side result cache, when the host
-        // answers the stats protocol.
+        // Hit counts and resident size of the server-side result
+        // cache, when the host answers the stats protocol.
         let stats = if p.up { query_host_stats(host, timeout) } else { None };
-        let (served, hits) = stats
-            .map(|s| (format!("{}", s.requests), format!("{}", s.cache_hits)))
-            .unwrap_or_else(|| ("-".to_string(), "-".to_string()));
+        let (served, hits, cache) = stats
+            .map(|s| {
+                (
+                    format!("{}", s.requests),
+                    format!("{}", s.cache_hits),
+                    format!("{}", s.cache_size),
+                )
+            })
+            .unwrap_or_else(|| ("-".to_string(), "-".to_string(), "-".to_string()));
         table.row(vec![
             p.addr,
             format!("{weight}"),
@@ -721,6 +795,7 @@ fn cmd_cluster_status(flags: &Flags) -> Result<()> {
             format!("{:.2}", p.rtt_ms),
             served,
             hits,
+            cache,
             p.detail,
         ]);
     }

@@ -22,7 +22,13 @@
 //!   the global sum, so a sweep can report both per-scenario and
 //!   whole-run throughput without double counting (the invariant
 //!   "session deltas sum to the broker, broker misses equal backend
-//!   requests" is pinned by tests below).
+//!   requests" is pinned by tests below);
+//! * optionally a persistent [`CacheStore`] backs the cache
+//!   ([`EvalBroker::with_store`], CLI `--cache-dir`): entries spilled
+//!   by an earlier run pre-load at open (hits on them count as
+//!   [`EvalStats::persisted_hits`]) and every cacheable fresh
+//!   evaluation is appended back, so repeated runs and sweeps
+//!   warm-start across processes (`tests/cache_persistence.rs`).
 //!
 //! Concurrency model: one mutex guards the backend + cache + global
 //! counters, and a session's whole `evaluate_batch` (cache resolve →
@@ -44,6 +50,13 @@ use std::sync::{Arc, Mutex};
 
 use crate::search::evaluator::{EvalResult, EvalStats, Evaluator};
 use crate::search::parallel::{joint_key, MemoCache};
+use crate::search::store::CacheStore;
+
+/// Cache-entry owner id reserved for entries loaded from a persistent
+/// [`CacheStore`]: hits on them are warm-start hits
+/// ([`EvalStats::persisted_hits`]), not cross-session ones. Session
+/// ids count up from 0 and can never collide with it.
+const PERSISTED_OWNER: u64 = u64::MAX;
 
 /// Default capacity of the cross-search cache: sized for a whole sweep
 /// (several searches of a few thousand samples each), not one search.
@@ -64,10 +77,17 @@ const BROKER_CACHE_CAPACITY: usize = 64 * 1024;
 struct BrokerCore {
     backend: Box<dyn Evaluator + Send>,
     cache: MemoCache<(EvalResult, u64)>,
+    /// Cross-run persistence: pre-loaded into `cache` at open (owner
+    /// [`PERSISTED_OWNER`]), appended to on every cacheable fresh
+    /// evaluation, flushed when the broker drops.
+    store: Option<CacheStore>,
+    /// Entries the store loaded at open (the warm-start inventory).
+    persisted_loaded: usize,
     requests: usize,
     evals: usize,
     invalid: usize,
     cross_session_hits: usize,
+    persisted_hits: usize,
 }
 
 /// What one admitted batch did, for the session's own bookkeeping.
@@ -76,6 +96,7 @@ struct BatchReceipt {
     evals: usize,
     invalid: usize,
     cross_session_hits: usize,
+    persisted_hits: usize,
 }
 
 impl BrokerCore {
@@ -87,13 +108,16 @@ impl BrokerCore {
         self.requests += batch.len();
         let mut results: Vec<Option<EvalResult>> = vec![None; batch.len()];
         let mut cross = 0usize;
+        let mut persisted = 0usize;
         // Deduped misses: (first batch slot, joint key), first-seen order.
         let mut pending: Vec<(usize, Vec<usize>)> = Vec::new();
         let mut waiting: HashMap<Vec<usize>, Vec<usize>> = HashMap::new();
         for (i, (nas_d, has_d)) in batch.iter().enumerate() {
             let key = joint_key(nas_d, has_d);
             if let Some((r, owner)) = self.cache.get(&key) {
-                if owner != session {
+                if owner == PERSISTED_OWNER {
+                    persisted += 1;
+                } else if owner != session {
                     cross += 1;
                 }
                 results[i] = Some(r);
@@ -115,9 +139,14 @@ impl BrokerCore {
                 for &slot in &waiting[&key] {
                     results[slot] = Some(r);
                 }
-                // A transient transport failure must not be memoized:
-                // a later resample (from any session) has to retry it.
+                // A transient transport failure must not be memoized —
+                // and, a fortiori, must never reach the persistent
+                // store: a later resample (from any session, or a
+                // whole later run) has to retry it.
                 if cacheable {
+                    if let Some(store) = &mut self.store {
+                        store.append(&key, &r);
+                    }
                     self.cache.insert(key, (r, session));
                 }
             }
@@ -128,7 +157,14 @@ impl BrokerCore {
         self.evals += evals;
         self.invalid += invalid;
         self.cross_session_hits += cross;
-        BatchReceipt { results, evals, invalid, cross_session_hits: cross }
+        self.persisted_hits += persisted;
+        BatchReceipt {
+            results,
+            evals,
+            invalid,
+            cross_session_hits: cross,
+            persisted_hits: persisted,
+        }
     }
 
     fn stats(&self) -> EvalStats {
@@ -139,6 +175,7 @@ impl BrokerCore {
             cache_hits: self.requests - self.evals,
             invalid: self.invalid,
             cross_session_hits: self.cross_session_hits,
+            persisted_hits: self.persisted_hits,
             hosts_down: backend.hosts_down,
             per_host: backend.per_host,
         }
@@ -160,16 +197,59 @@ impl EvalBroker {
     /// decisions, which is the contract every tier already pins in
     /// `tests/parallel_equivalence.rs`.
     pub fn new(backend: Box<dyn Evaluator + Send>) -> Self {
+        Self::build(backend, None)
+    }
+
+    /// Wrap a backend with a persistent [`CacheStore`] behind the
+    /// cross-search cache (`--cache-dir`): entries the store loaded
+    /// are served as [`EvalStats::persisted_hits`]; every cacheable
+    /// fresh evaluation is appended back, and the file is flushed when
+    /// the broker drops. The store must have been opened with the
+    /// fingerprint of this broker's evaluation context
+    /// ([`crate::search::store::eval_fingerprint`]) — the fingerprint,
+    /// not the caller, is what makes replaying an entry sound.
+    pub fn with_store(backend: Box<dyn Evaluator + Send>, store: CacheStore) -> Self {
+        Self::build(backend, Some(store))
+    }
+
+    fn build(backend: Box<dyn Evaluator + Send>, mut store: Option<CacheStore>) -> Self {
+        let loaded = store.as_mut().map(|s| s.take_loaded()).unwrap_or_default();
+        let persisted_loaded = loaded.len();
+        // The whole warm inventory must be resident: "a fully-warm run
+        // performs zero backend evals" only holds if no persisted entry
+        // is evicted before it is re-requested, so a file that outgrew
+        // the default capacity sizes the cache up to fit it.
+        let mut cache = MemoCache::new(BROKER_CACHE_CAPACITY.max(persisted_loaded));
+        for (key, r) in loaded {
+            cache.insert(key, (r, PERSISTED_OWNER));
+        }
         EvalBroker {
             core: Arc::new(Mutex::new(BrokerCore {
                 backend,
-                cache: MemoCache::new(BROKER_CACHE_CAPACITY),
+                cache,
+                store,
+                persisted_loaded,
                 requests: 0,
                 evals: 0,
                 invalid: 0,
                 cross_session_hits: 0,
+                persisted_hits: 0,
             })),
             next_session: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Entries pre-loaded from the persistent store (0 without one) —
+    /// the warm-start inventory this broker started with.
+    pub fn persisted_loaded(&self) -> usize {
+        self.lock().persisted_loaded
+    }
+
+    /// Push buffered store appends to disk now (they are also flushed
+    /// when the broker drops). No-op without a store.
+    pub fn flush_store(&self) {
+        if let Some(store) = &mut self.lock().store {
+            store.flush();
         }
     }
 
@@ -184,6 +264,7 @@ impl EvalBroker {
             evals: 0,
             invalid: 0,
             cross_session_hits: 0,
+            persisted_hits: 0,
         }
     }
 
@@ -218,6 +299,7 @@ pub struct BrokerSession {
     evals: usize,
     invalid: usize,
     cross_session_hits: usize,
+    persisted_hits: usize,
 }
 
 impl Evaluator for BrokerSession {
@@ -238,6 +320,7 @@ impl Evaluator for BrokerSession {
         self.evals += receipt.evals;
         self.invalid += receipt.invalid;
         self.cross_session_hits += receipt.cross_session_hits;
+        self.persisted_hits += receipt.persisted_hits;
         receipt.results
     }
 
@@ -248,6 +331,7 @@ impl Evaluator for BrokerSession {
             cache_hits: self.requests - self.evals,
             invalid: self.invalid,
             cross_session_hits: self.cross_session_hits,
+            persisted_hits: self.persisted_hits,
             ..Default::default()
         }
     }
@@ -385,6 +469,52 @@ mod tests {
                 })
                 .collect()
         }
+    }
+
+    #[test]
+    fn store_backed_broker_warm_starts_and_spills() {
+        let path = std::env::temp_dir()
+            .join(format!("nahas-broker-warm-{}.cache", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let fp = "eval/unit-test-fp";
+        let batch = random_batch(10, 3);
+
+        // Cold run: every key is a backend eval, spilled to the store.
+        {
+            let store = CacheStore::open(&path, fp).unwrap();
+            let broker = EvalBroker::with_store(sim_backend(), store);
+            assert_eq!(broker.persisted_loaded(), 0);
+            let mut s = broker.session();
+            s.evaluate_batch(&batch);
+            let g = broker.stats();
+            assert_eq!((g.evals, g.persisted_hits), (10, 0));
+        } // Broker drop flushes the store.
+
+        // Warm run: fresh backend, fresh broker, same file — every
+        // request is a persisted hit, the backend is never touched,
+        // and the values are bit-identical to a serial reference.
+        let store = CacheStore::open(&path, fp).unwrap();
+        let broker = EvalBroker::with_store(sim_backend(), store);
+        assert_eq!(broker.persisted_loaded(), 10);
+        let mut s = broker.session();
+        let got = s.evaluate_batch(&batch);
+        let g = broker.stats();
+        assert_eq!(g.evals, 0, "fully warm: no backend evals");
+        assert_eq!(g.persisted_hits, 10);
+        assert_eq!(g.cross_session_hits, 0, "warm hits are not cross-session hits");
+        assert_eq!(broker.backend_stats().requests, 0);
+        let serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+        for ((n, h), r) in batch.iter().zip(&got) {
+            let w = serial.evaluate_pure(n, h);
+            assert_eq!(w.acc.to_bits(), r.acc.to_bits());
+            assert_eq!(w.latency_ms.to_bits(), r.latency_ms.to_bits());
+        }
+        // A re-served persisted key is not appended again.
+        drop(s);
+        drop(broker);
+        let mut reopened: CacheStore = CacheStore::open(&path, fp).unwrap();
+        assert_eq!(reopened.take_loaded().len(), 10);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

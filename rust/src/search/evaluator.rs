@@ -86,6 +86,11 @@ pub struct EvalStats {
     /// Of `cache_hits`, hits on keys another session evaluated first
     /// (broker tier only; 0 elsewhere).
     pub cross_session_hits: usize,
+    /// Of `cache_hits`, hits on keys loaded from a persistent cache
+    /// file spilled by an earlier run (broker tier with a
+    /// [`crate::search::store::CacheStore`] attached only; 0
+    /// elsewhere) — the warm-start savings of `--cache-dir`.
+    pub persisted_hits: usize,
     /// Hosts currently marked down (cluster tier only; 0 elsewhere).
     pub hosts_down: usize,
     /// Per-host counters (cluster tier only; empty elsewhere).
@@ -130,6 +135,7 @@ impl EvalStats {
             cross_session_hits: self
                 .cross_session_hits
                 .saturating_sub(earlier.cross_session_hits),
+            persisted_hits: self.persisted_hits.saturating_sub(earlier.persisted_hits),
             hosts_down: self.hosts_down,
             per_host,
         }
@@ -164,6 +170,7 @@ impl EvalStats {
             cache_hits: self.cache_hits + other.cache_hits,
             invalid: self.invalid + other.invalid,
             cross_session_hits: self.cross_session_hits + other.cross_session_hits,
+            persisted_hits: self.persisted_hits + other.persisted_hits,
             hosts_down,
             per_host,
         }
@@ -480,6 +487,7 @@ mod tests {
             cache_hits: 4,
             invalid: 1,
             cross_session_hits: 3,
+            persisted_hits: 1,
             ..Default::default()
         };
         let b = EvalStats {
@@ -493,9 +501,11 @@ mod tests {
         let m = a.merged(&b);
         assert_eq!(m.requests, 15);
         assert_eq!(m.cross_session_hits, 3);
+        assert_eq!(m.persisted_hits, 1);
         let d = m.since(&b);
         assert_eq!(d.requests, 10);
         assert_eq!(d.cross_session_hits, 3);
+        assert_eq!(d.persisted_hits, 1);
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //! * [`broker`] — the shared evaluation seam: [`EvalBroker`]
 //!   multiplexes any number of concurrent search sessions onto one
 //!   backend tier behind a cross-search memo cache;
+//! * [`store`] — cross-run persistence: the versioned append-only
+//!   [`CacheStore`] file the broker (and the `nahas serve` result
+//!   cache) spill to, so repeated runs warm-start (`--cache-dir`);
 //! * [`sweep`] — the concurrent multi-scenario orchestrator (latency
 //!   targets x objectives x drivers over one broker, merged into a
 //!   union Pareto frontier — the paper's headline figures are sweeps);
@@ -37,6 +40,7 @@ pub mod phase;
 pub mod ppo;
 pub mod reinforce;
 pub mod reward;
+pub mod store;
 pub mod sweep;
 
 pub use broker::{BrokerSession, EvalBroker};
@@ -44,6 +48,7 @@ pub use evaluator::{EvalResult, EvalStats, Evaluator, HostEvalStats, SurrogateSi
 pub use joint::{joint_search, Sample, SearchCfg, SearchOutcome};
 pub use parallel::{joint_key, MemoCache, ParallelSim};
 pub use reward::{ConstraintMode, CostObjective, RewardCfg};
+pub use store::{CacheStore, CacheValue};
 pub use sweep::{
     run_scenario, run_sweep, scenario_grid, ControllerKind, Scenario, ScenarioOutcome,
     SweepDriver, SweepOutcome,

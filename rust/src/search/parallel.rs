@@ -80,6 +80,24 @@ impl<V: Clone> MemoCache<V> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Iterate every resident entry (both generations), newest
+    /// generation first, in unspecified order within a generation. A
+    /// key present in both generations (possible only when `insert` is
+    /// called without a preceding `get`, which promotes-and-removes)
+    /// yields its current-generation value once. Persistence
+    /// ([`crate::search::store`]) spills incrementally rather than by
+    /// snapshot, so today this is the in-memory *reference* view its
+    /// property tests compare a reloaded file against — and the export
+    /// seam for any future snapshot-style spill.
+    pub fn entries(&self) -> impl Iterator<Item = (&[usize], &V)> {
+        let shadowed =
+            self.prev.iter().filter(|(k, _)| !self.cur.contains_key(k.as_slice()));
+        self.cur
+            .iter()
+            .chain(shadowed)
+            .map(|(k, v)| (k.as_slice(), v))
+    }
 }
 
 /// Concatenated memo key for one sample.
@@ -337,6 +355,26 @@ mod tests {
         assert_eq!(c.get(&[99]).map(|r| r.acc), Some(99.0));
         // Something ancient is gone.
         assert!(c.get(&[0]).is_none());
+    }
+
+    #[test]
+    fn memo_cache_entries_cover_both_generations_without_duplicates() {
+        let mut c = MemoCache::new(2);
+        c.insert(vec![1], EvalResult { acc: 1.0, valid: true, ..Default::default() });
+        c.insert(vec![2], EvalResult { acc: 2.0, valid: true, ..Default::default() });
+        // Rotation: {1, 2} -> prev; 3 starts the new generation.
+        c.insert(vec![3], EvalResult { acc: 3.0, valid: true, ..Default::default() });
+        // Blind re-insert of 1 (no get first): now in both generations.
+        c.insert(vec![1], EvalResult { acc: 10.0, valid: true, ..Default::default() });
+        let mut got: Vec<(Vec<usize>, u64)> =
+            c.entries().map(|(k, v)| (k.to_vec(), v.acc.to_bits())).collect();
+        got.sort();
+        let want: Vec<(Vec<usize>, u64)> = vec![
+            (vec![1], 10.0f64.to_bits()),
+            (vec![2], 2.0f64.to_bits()),
+            (vec![3], 3.0f64.to_bits()),
+        ];
+        assert_eq!(got, want, "shadowed prev entry must not appear");
     }
 
     #[test]

@@ -1,0 +1,513 @@
+//! Persistent cross-run evaluation cache (the warm-start layer).
+//!
+//! The paper's joint search is tractable only because evaluations are
+//! amortized: the same joint design points recur across latency
+//! targets, objectives and repeated sweeps (§4), and every cache tier
+//! in this repo — `ParallelSim`, the `nahas serve` result cache, the
+//! cluster front, the cross-search [`crate::search::EvalBroker`] —
+//! dedups them *within* one process. This module makes the savings
+//! survive the process: a [`CacheStore`] is a versioned, append-only
+//! cache file mapping a joint decision key to a memoized value, so a
+//! later `nahas sweep` with the same `--cache-dir` warm-starts from
+//! every evaluation an earlier run already paid for.
+//!
+//! Design rules, in order of importance:
+//!
+//! * **Never lie.** A cached value is only reusable if it is still a
+//!   bit-identical replay of what the backend would compute. The file
+//!   header carries a *fingerprint* (format version + simulator
+//!   fingerprint + the evaluation context: space, task, seed); any
+//!   mismatch rejects the whole file and the run degrades to a cold
+//!   start. Floats are stored as exact IEEE-754 bit patterns, so a
+//!   round-trip through disk cannot perturb a single ULP.
+//! * **Never crash the run.** A corrupt, truncated or stale file is
+//!   data loss, not an error: `open` reports *why* the contents were
+//!   discarded and starts a fresh file. Append failures (disk full,
+//!   permissions racing) disable the store for the rest of the run and
+//!   keep evaluating.
+//! * **Never persist a transport failure.** Callers only append
+//!   results their own cache admitted as *cacheable*; the
+//!   non-cacheable markers of the service/cluster tiers (see
+//!   [`crate::search::Evaluator::evaluate_batch_tagged`]) therefore
+//!   never reach disk by construction — pinned by
+//!   `tests/cluster_failover.rs`.
+//!
+//! The store is value-generic via [`CacheValue`], so the same file
+//! format serves both the broker's `EvalResult` entries and the
+//! `nahas serve` server-side cache of serialized response lines.
+//!
+//! File format (one record per line, `\n`-terminated):
+//!
+//! ```text
+//! nahas-cache v1 eval/s2-efficientnet/classification/seed7/<sim fp>
+//! 3,0,1,4|1 3fe6b851eb851eb8 3fd0624dd2f1a9fc 3fe0000000000000 4053c00000000000
+//! ...
+//! ```
+//!
+//! Left of `|`: the comma-separated joint key. Right: the encoded
+//! value (for [`EvalResult`]: valid flag + the four metric f64s as hex
+//! bit patterns). Append-only means two runs can extend the same file
+//! sequentially; concurrent writers should use separate files (the
+//! CLI derives one file per evaluation fingerprint).
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::nas::NasSpaceId;
+use crate::search::evaluator::{EvalResult, Task};
+
+/// On-disk format tag; bump on any incompatible layout change so old
+/// files are rejected instead of misparsed.
+pub const STORE_FORMAT: &str = "nahas-cache v1";
+
+/// Fingerprint of the evaluation semantics baked into this binary.
+/// Bump whenever the simulator, surrogate accuracy, or decision
+/// decoding changes in a result-visible way: persisted entries from
+/// the old semantics must be invalidated, not replayed.
+pub const SIM_FINGERPRINT: &str = "sim-v1";
+
+/// A value the store can persist: encoded to a single `\n`-free line
+/// and decoded back bit-exactly.
+pub trait CacheValue: Clone {
+    fn encode(&self) -> String;
+    fn decode(s: &str) -> Option<Self>;
+}
+
+impl CacheValue for EvalResult {
+    /// Valid flag + the four metrics as IEEE-754 bit patterns in hex —
+    /// exact round-trip by construction (including NaN payloads, which
+    /// a decimal float format would not preserve).
+    fn encode(&self) -> String {
+        format!(
+            "{} {:016x} {:016x} {:016x} {:016x}",
+            self.valid as u8,
+            self.acc.to_bits(),
+            self.latency_ms.to_bits(),
+            self.energy_mj.to_bits(),
+            self.area_mm2.to_bits()
+        )
+    }
+
+    fn decode(s: &str) -> Option<Self> {
+        let mut it = s.split_ascii_whitespace();
+        let valid = match it.next()? {
+            "0" => false,
+            "1" => true,
+            _ => return None,
+        };
+        let mut bits = [0u64; 4];
+        for b in &mut bits {
+            *b = u64::from_str_radix(it.next()?, 16).ok()?;
+        }
+        if it.next().is_some() {
+            return None;
+        }
+        Some(EvalResult {
+            acc: f64::from_bits(bits[0]),
+            latency_ms: f64::from_bits(bits[1]),
+            energy_mj: f64::from_bits(bits[2]),
+            area_mm2: f64::from_bits(bits[3]),
+            valid,
+        })
+    }
+}
+
+impl CacheValue for String {
+    /// Serialized single-line payloads (the `nahas serve` response
+    /// cache). Values containing a newline are unrepresentable and are
+    /// skipped at append time.
+    fn encode(&self) -> String {
+        self.clone()
+    }
+
+    fn decode(s: &str) -> Option<Self> {
+        Some(s.to_string())
+    }
+}
+
+fn space_tag(space: NasSpaceId) -> &'static str {
+    match space {
+        NasSpaceId::MobileNetV2 => "s1-mobilenetv2",
+        NasSpaceId::EfficientNet => "s2-efficientnet",
+        NasSpaceId::Evolved => "s3-evolved",
+        NasSpaceId::Proxy => "proxy",
+    }
+}
+
+fn task_tag(task: Task) -> &'static str {
+    match task {
+        Task::Classification => "classification",
+        Task::Segmentation => "segmentation",
+    }
+}
+
+/// The evaluation-context fingerprint: a persisted `EvalResult` is a
+/// deterministic function of (space, task, seed, decisions) plus the
+/// simulator code itself, so all of those go into the header. The
+/// *backend tier* deliberately does not: every tier is bit-identical
+/// for a seed (`tests/parallel_equivalence.rs`), so a cache spilled by
+/// a local run legitimately warm-starts a cluster run and vice versa.
+pub fn eval_fingerprint(space: NasSpaceId, task: Task, seed: u64) -> String {
+    format!("eval/{}/{}/seed{}/{}", space_tag(space), task_tag(task), seed, SIM_FINGERPRINT)
+}
+
+/// Fingerprint of the `nahas serve` response cache. The serve key
+/// already encodes space and task, and the server computes no
+/// seed-dependent accuracy, so the components are the simulator
+/// fingerprint plus a wire-protocol version — the cached values are
+/// literal response lines, so bump `v1` whenever the simulate
+/// response *schema* changes (new/renamed fields), even when the
+/// simulator math does not.
+pub fn serve_fingerprint() -> String {
+    format!("serve/v1/{SIM_FINGERPRINT}")
+}
+
+/// The cache file a `--cache-dir` run uses: one file per evaluation
+/// fingerprint, so runs with different contexts never invalidate each
+/// other's entries.
+pub fn eval_cache_file(dir: &Path, space: NasSpaceId, task: Task, seed: u64) -> PathBuf {
+    dir.join(format!("evals-{}-{}-seed{}.cache", space_tag(space), task_tag(task), seed))
+}
+
+fn encode_key(key: &[usize]) -> String {
+    let parts: Vec<String> = key.iter().map(|k| k.to_string()).collect();
+    parts.join(",")
+}
+
+fn decode_key(s: &str) -> Option<Vec<usize>> {
+    if s.is_empty() {
+        return Some(Vec::new());
+    }
+    s.split(',').map(|t| t.parse().ok()).collect()
+}
+
+/// Disk-backed, append-only cache of `joint key -> V`, with a
+/// fingerprint header guarding staleness. See the module docs for the
+/// format and the safety rules.
+pub struct CacheStore<V: CacheValue = EvalResult> {
+    path: PathBuf,
+    writer: BufWriter<File>,
+    /// Entries successfully read at open (empty after
+    /// [`CacheStore::take_loaded`]). Later lines win over earlier ones
+    /// on a duplicate key when loaded in order, matching append-only
+    /// semantics.
+    loaded: Vec<(Vec<usize>, V)>,
+    /// Why pre-existing contents were discarded at open, if they were.
+    discarded: Option<String>,
+    appended: usize,
+    /// A write failed; stop appending (the run continues uncached).
+    write_failed: bool,
+}
+
+impl<V: CacheValue> CacheStore<V> {
+    /// Open (or create) the cache file at `path` for the given
+    /// fingerprint. Existing contents load only if the header matches
+    /// `STORE_FORMAT` + `fingerprint` and every entry line parses;
+    /// otherwise the file is restarted empty and
+    /// [`CacheStore::discarded`] reports why. Only I/O that prevents
+    /// the store from operating at all (unwritable directory/file) is
+    /// an error.
+    pub fn open(path: impl Into<PathBuf>, fingerprint: &str) -> Result<CacheStore<V>> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)
+                    .with_context(|| format!("creating cache dir {}", parent.display()))?;
+            }
+        }
+        let header = format!("{STORE_FORMAT} {fingerprint}");
+        let mut loaded = Vec::new();
+        let mut discarded = None;
+        let mut preserve = false;
+        match fs::read_to_string(&path) {
+            // No previous file: a genuinely fresh start.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            // Non-UTF-8 bytes: the file is corrupt; restart it.
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                discarded = Some(format!("unreadable: {e}"));
+            }
+            // Any other read failure (permissions racing, flaky
+            // network filesystem) may be transient and the file may be
+            // perfectly healthy: leave it untouched and run with
+            // persistence disabled rather than destroy a warm
+            // inventory we merely failed to read.
+            Err(e) => {
+                discarded = Some(format!("unreadable ({e}); file kept, persistence off"));
+                preserve = true;
+            }
+            Ok(text) => match Self::parse(&text, &header) {
+                Ok(entries) => loaded = entries,
+                Err(why) => discarded = Some(why),
+            },
+        }
+        // A clean load appends to the existing file; anything else
+        // (fresh, stale, corrupt) restarts it with just the header —
+        // atomically, via a temp file renamed into place, so a
+        // concurrent writer still holding the old file keeps appending
+        // to the orphaned inode instead of splicing bytes into ours.
+        let warm = discarded.is_none() && !loaded.is_empty();
+        if !warm && !preserve {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("evals.cache");
+            let tmp = path.with_file_name(format!("{name}.tmp{}", std::process::id()));
+            let mut fresh = File::create(&tmp)
+                .with_context(|| format!("creating cache file {}", tmp.display()))?;
+            writeln!(fresh, "{header}")
+                .with_context(|| format!("writing cache header to {}", tmp.display()))?;
+            fs::rename(&tmp, &path)
+                .with_context(|| format!("installing cache file {}", path.display()))?;
+        }
+        // Both paths end on an O_APPEND handle: every flushed line
+        // lands at the file's current end, whatever other handles did.
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening cache file {}", path.display()))?;
+        let writer = BufWriter::new(file);
+        Ok(CacheStore { path, writer, loaded, discarded, appended: 0, write_failed: preserve })
+    }
+
+    /// Parse a whole previous file against the expected header. Any
+    /// defect — wrong header, stale fingerprint, malformed or
+    /// truncated entry — rejects everything: a cold start is always
+    /// correct, a salvaged half-file may not be.
+    fn parse(text: &str, header: &str) -> Result<Vec<(Vec<usize>, V)>, String> {
+        let mut lines = text.lines();
+        match lines.next() {
+            None => return Err("empty file".to_string()),
+            Some(h) if h != header => {
+                return Err(format!("fingerprint mismatch (found '{h}')"));
+            }
+            Some(_) => {}
+        }
+        // A well-formed file ends in '\n'; a partial trailing line
+        // (killed mid-append) shows up here as a parse failure.
+        if !text.ends_with('\n') {
+            return Err("truncated final line".to_string());
+        }
+        let mut out = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let parsed =
+                line.split_once('|').and_then(|(k, v)| decode_key(k).zip(V::decode(v)));
+            match parsed {
+                Some(entry) => out.push(entry),
+                None => return Err(format!("corrupt entry at line {}", i + 2)),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Entries read at open, in file order (later entries are newer).
+    /// Leaves the store empty; call once when filling the in-memory
+    /// cache tier.
+    pub fn take_loaded(&mut self) -> Vec<(Vec<usize>, V)> {
+        std::mem::take(&mut self.loaded)
+    }
+
+    /// How many entries the open loaded (0 after `take_loaded`).
+    pub fn loaded_len(&self) -> usize {
+        self.loaded.len()
+    }
+
+    /// Why pre-existing contents were discarded at open, if they were.
+    pub fn discarded(&self) -> Option<&str> {
+        self.discarded.as_deref()
+    }
+
+    /// Entries appended since open.
+    pub fn appended(&self) -> usize {
+        self.appended
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one entry. Failures (and unrepresentable values) are
+    /// swallowed after a warning: persistence is an accelerator, never
+    /// a reason to fail an evaluation.
+    ///
+    /// Each entry is flushed immediately, so a line reaches the OS as
+    /// one small `O_APPEND` write: a crash can tear at most the final
+    /// line, and a second writer on the same file (operator error, but
+    /// survivable) interleaves whole lines rather than fragments. The
+    /// cost — one syscall per *fresh* evaluation — is noise next to
+    /// the evaluation itself.
+    pub fn append(&mut self, key: &[usize], value: &V) {
+        if self.write_failed {
+            return;
+        }
+        let encoded = value.encode();
+        if encoded.contains('\n') {
+            return; // Unrepresentable in the line format; skip.
+        }
+        if writeln!(self.writer, "{}|{}", encode_key(key), encoded).is_err() {
+            eprintln!(
+                "cache store {}: append failed; persistence disabled for this run",
+                self.path.display()
+            );
+            self.write_failed = true;
+            return;
+        }
+        self.appended += 1;
+        self.flush();
+    }
+
+    /// Push buffered appends to the OS. Called on drop; call earlier
+    /// if another reader needs to see the entries mid-run.
+    pub fn flush(&mut self) {
+        if self.writer.flush().is_err() && !self.write_failed {
+            eprintln!(
+                "cache store {}: flush failed; persistence disabled for this run",
+                self.path.display()
+            );
+            self.write_failed = true;
+        }
+    }
+}
+
+impl<V: CacheValue> Drop for CacheStore<V> {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("nahas-store-unit-{}-{name}", std::process::id()))
+    }
+
+    fn result(acc: f64, lat: f64, valid: bool) -> EvalResult {
+        EvalResult { acc, latency_ms: lat, energy_mj: 0.25, area_mm2: 80.0, valid }
+    }
+
+    #[test]
+    fn roundtrips_entries_bit_exactly() {
+        let path = tmp("roundtrip.cache");
+        let _ = fs::remove_file(&path);
+        let fp = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, 7);
+        {
+            let mut store: CacheStore = CacheStore::open(&path, &fp).unwrap();
+            assert!(store.discarded().is_none());
+            assert_eq!(store.loaded_len(), 0);
+            store.append(&[1, 2, 3], &result(0.761234567890123, 0.35, true));
+            store.append(&[], &result(f64::NAN, -0.0, false));
+            store.append(&[9], &result(f64::INFINITY, 1e-300, true));
+        }
+        let mut store: CacheStore = CacheStore::open(&path, &fp).unwrap();
+        assert!(store.discarded().is_none());
+        let loaded = store.take_loaded();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded[0].0, vec![1, 2, 3]);
+        assert_eq!(loaded[0].1.acc.to_bits(), 0.761234567890123f64.to_bits());
+        assert_eq!(loaded[1].0, Vec::<usize>::new());
+        assert!(loaded[1].1.acc.is_nan());
+        assert_eq!(loaded[1].1.latency_ms.to_bits(), (-0.0f64).to_bits());
+        assert!(!loaded[1].1.valid);
+        assert_eq!(loaded[2].1.acc, f64::INFINITY);
+        assert_eq!(loaded[2].1.latency_ms.to_bits(), 1e-300f64.to_bits());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_fingerprint_discards_and_restarts() {
+        let path = tmp("stale.cache");
+        let _ = fs::remove_file(&path);
+        {
+            let mut store: CacheStore = CacheStore::open(&path, "eval/old-fp").unwrap();
+            store.append(&[4, 2], &result(0.7, 0.4, true));
+        }
+        let mut store: CacheStore = CacheStore::open(&path, "eval/new-fp").unwrap();
+        assert!(store.discarded().unwrap().contains("fingerprint mismatch"));
+        assert_eq!(store.loaded_len(), 0);
+        store.append(&[1], &result(0.5, 0.1, true));
+        drop(store);
+        // The restarted file carries the new fingerprint only.
+        let mut again: CacheStore = CacheStore::open(&path, "eval/new-fp").unwrap();
+        assert!(again.discarded().is_none());
+        assert_eq!(again.take_loaded().len(), 1);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_files_fall_back_cold() {
+        let path = tmp("corrupt.cache");
+        for damage in ["garbage in the middle", "1,2|1 aa"] {
+            let _ = fs::remove_file(&path);
+            let fp = "eval/fp";
+            {
+                let mut store: CacheStore = CacheStore::open(&path, fp).unwrap();
+                store.append(&[1, 2], &result(0.7, 0.4, true));
+            }
+            let mut text = fs::read_to_string(&path).unwrap();
+            text.push_str(damage); // No trailing newline: also truncated.
+            fs::write(&path, &text).unwrap();
+            let store: CacheStore = CacheStore::open(&path, fp).unwrap();
+            assert!(store.discarded().is_some(), "damage '{damage}' not detected");
+            assert_eq!(store.loaded_len(), 0);
+        }
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unreadable_bytes_discard_with_a_reason_not_silently() {
+        let path = tmp("non-utf8.cache");
+        let _ = fs::remove_file(&path);
+        let fp = "eval/fp";
+        {
+            let mut store: CacheStore = CacheStore::open(&path, fp).unwrap();
+            store.append(&[3], &result(0.6, 0.2, true));
+        }
+        // Raw invalid-UTF-8 corruption: read_to_string cannot even
+        // read it; that must surface as a discard, not a fresh file.
+        let mut bytes = fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xFF, 0xFE, 0xFD]);
+        fs::write(&path, &bytes).unwrap();
+        let store: CacheStore = CacheStore::open(&path, fp).unwrap();
+        assert!(store.discarded().unwrap().contains("unreadable"));
+        assert_eq!(store.loaded_len(), 0);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn string_values_roundtrip_for_the_serve_cache() {
+        let path = tmp("serve.cache");
+        let _ = fs::remove_file(&path);
+        let fp = serve_fingerprint();
+        let resp = r#"{"valid": true, "latency_ms": 0.41}"#.to_string();
+        {
+            let mut store: CacheStore<String> = CacheStore::open(&path, &fp).unwrap();
+            store.append(&[1, 0, 7, 3], &resp);
+            // A newline-bearing value is unrepresentable: skipped.
+            store.append(&[5], &"bad\nvalue".to_string());
+            assert_eq!(store.appended(), 1);
+        }
+        let mut store: CacheStore<String> = CacheStore::open(&path, &fp).unwrap();
+        let loaded = store.take_loaded();
+        assert_eq!(loaded, vec![(vec![1, 0, 7, 3], resp)]);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fingerprints_separate_contexts() {
+        let a = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, 7);
+        let b = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, 8);
+        let c = eval_fingerprint(NasSpaceId::EfficientNet, Task::Segmentation, 7);
+        let d = eval_fingerprint(NasSpaceId::MobileNetV2, Task::Classification, 7);
+        let all = [a, b, c, d, serve_fingerprint()];
+        for (i, x) in all.iter().enumerate() {
+            for y in &all[i + 1..] {
+                assert_ne!(x, y);
+            }
+        }
+    }
+}

@@ -25,7 +25,14 @@
 //! * the per-scenario winners merge into a union Pareto frontier
 //!   ([`crate::pareto::union_frontier`]) — Fig. 2's "joint search
 //!   extends the Pareto frontier by joining multiple frontiers", here
-//!   across *use cases* rather than accelerators.
+//!   across *use cases* rather than accelerators;
+//! * with a persistent cache behind the broker
+//!   ([`EvalBroker::with_store`], CLI `--cache-dir`), the whole sweep
+//!   also warm-starts from every evaluation an *earlier run* spilled:
+//!   per-scenario [`EvalStats::persisted_hits`] deltas merge into the
+//!   sweep totals exactly like the cross-session counters
+//!   (`tests/cache_persistence.rs` pins a fully-warm re-sweep at zero
+//!   backend evaluations).
 //!
 //! CLI: `nahas sweep --targets 0.3,0.5,0.7 --objectives latency,energy
 //! --drivers joint,phase --evaluator parallel|cluster ...`.

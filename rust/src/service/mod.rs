@@ -25,6 +25,7 @@ use crate::accel::simulate_network;
 use crate::has::{validate, HasSpace};
 use crate::nas::{NasSpace, NasSpaceId};
 use crate::search::evaluator::segmentation_variant;
+use crate::search::store::CacheStore;
 use crate::search::MemoCache;
 use crate::util::json::{obj, Json};
 
@@ -94,9 +95,17 @@ pub fn handle_request(req: &Json) -> Json {
 /// map lookup instead of a simulation. Everything the server computes
 /// is a deterministic function of the key (the server never does
 /// accuracy, only hardware metrics), so entries never expire; the
-/// two-generation [`MemoCache`] bounds residency.
+/// two-generation [`MemoCache`] bounds residency. With a persistent
+/// [`CacheStore`] attached ([`ServeCache::with_store`], CLI
+/// `--cache-dir`) the cache additionally survives the process: spilled
+/// entries pre-load at startup and every fresh response is appended
+/// (each append flushes — a serve process is usually killed, not
+/// dropped).
 pub struct ServeCache {
     cache: Mutex<MemoCache<String>>,
+    /// The persistent spill file, behind its own lock so response
+    /// lookups never wait on another connection's disk write.
+    store: Mutex<Option<CacheStore<String>>>,
     /// Simulate requests answered from the cache.
     pub hits: AtomicU64,
     /// Simulate requests actually simulated (cacheable misses).
@@ -109,6 +118,7 @@ impl Default for ServeCache {
     fn default() -> Self {
         ServeCache {
             cache: Mutex::new(MemoCache::new(SERVE_CACHE_CAPACITY)),
+            store: Mutex::new(None),
             hits: AtomicU64::new(0),
             sim_evals: AtomicU64::new(0),
         }
@@ -116,11 +126,43 @@ impl Default for ServeCache {
 }
 
 impl ServeCache {
+    /// Warm-start from (and spill back to) a persistent store — the
+    /// same format and staleness rules as the search-side broker
+    /// cache, opened with
+    /// [`crate::search::store::serve_fingerprint`]. The cache sizes up
+    /// to the loaded inventory so no persisted response is evicted
+    /// before it is ever re-served.
+    pub fn with_store(mut store: CacheStore<String>) -> Self {
+        let mut cache = MemoCache::new(SERVE_CACHE_CAPACITY.max(store.loaded_len()));
+        for (key, resp) in store.take_loaded() {
+            cache.insert(key, resp);
+        }
+        ServeCache {
+            cache: Mutex::new(cache),
+            store: Mutex::new(Some(store)),
+            hits: AtomicU64::new(0),
+            sim_evals: AtomicU64::new(0),
+        }
+    }
+
+    /// Resident entries in the result cache (the `cache_size` field of
+    /// the `{"stats": true}` protocol).
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     /// Answer `req` (whose derived cache key is `key`) from the cache,
-    /// simulating on a miss. The lock covers only the map operations —
-    /// two connections racing on the same fresh key may both simulate
-    /// it (deterministic, so harmless), but neither ever blocks behind
-    /// another's simulation.
+    /// simulating on a miss. The cache lock covers only the map
+    /// operations — two connections racing on the same fresh key may
+    /// both simulate it (deterministic, so harmless — at worst the
+    /// spill file gets a duplicate line, and reloads are last-wins),
+    /// but neither ever blocks behind another's simulation, and the
+    /// spill file's own lock keeps cache hits off the disk-write path
+    /// entirely.
     fn get_or_compute(&self, key: Vec<usize>, req: &Json) -> String {
         if let Some(resp) = self.lock().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -128,12 +170,20 @@ impl ServeCache {
         }
         let resp = handle_request(req).to_string();
         self.sim_evals.fetch_add(1, Ordering::Relaxed);
-        self.lock().insert(key, resp.clone());
+        self.lock().insert(key.clone(), resp.clone());
+        // Spill outside the cache lock (append flushes immediately).
+        if let Some(store) = self.store_lock().as_mut() {
+            store.append(&key, &resp);
+        }
         resp
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, MemoCache<String>> {
         self.cache.lock().expect("serve cache poisoned")
+    }
+
+    fn store_lock(&self) -> std::sync::MutexGuard<'_, Option<CacheStore<String>>> {
+        self.store.lock().expect("serve cache store poisoned")
     }
 }
 
@@ -174,12 +224,19 @@ pub struct Server {
 impl Server {
     /// Bind and serve on `addr` (use port 0 for an ephemeral port).
     pub fn spawn(addr: &str) -> Result<Server> {
+        Self::spawn_with_cache(addr, ServeCache::default())
+    }
+
+    /// [`Server::spawn`] with a caller-built result cache — e.g. one
+    /// warm-started from a persistent store (`nahas serve
+    /// --cache-dir`).
+    pub fn spawn_with_cache(addr: &str, cache: ServeCache) -> Result<Server> {
         let listener = TcpListener::bind(addr).context("binding simulator service")?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let requests = Arc::new(AtomicU64::new(0));
-        let cache = Arc::new(ServeCache::default());
+        let cache = Arc::new(cache);
         let (stop2, req2, cache2) = (stop.clone(), requests.clone(), cache.clone());
         let handle = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
@@ -231,6 +288,7 @@ fn serve_conn(stream: TcpStream, requests: Arc<AtomicU64>, cache: Arc<ServeCache
                 ("requests", (requests.load(Ordering::Relaxed) as f64).into()),
                 ("cache_hits", (cache.hits.load(Ordering::Relaxed) as f64).into()),
                 ("sim_evals", (cache.sim_evals.load(Ordering::Relaxed) as f64).into()),
+                ("cache_size", (cache.len() as f64).into()),
             ])
             .to_string(),
             Ok(req) => match serve_cache_key(&req) {
@@ -383,7 +441,46 @@ mod tests {
         let st = Json::parse(line.trim()).unwrap();
         assert_eq!(st.get("cache_hits").and_then(Json::as_usize), Some(1));
         assert_eq!(st.get("sim_evals").and_then(Json::as_usize), Some(2));
+        assert_eq!(st.get("cache_size").and_then(Json::as_usize), Some(2));
         server.stop();
+    }
+
+    #[test]
+    fn serve_cache_warm_starts_from_a_persistent_store() {
+        use crate::search::store::serve_fingerprint;
+        let path = std::env::temp_dir()
+            .join(format!("nahas-serve-warm-{}.cache", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let has = HasSpace::new();
+        let mut rng = Rng::new(11);
+        let nas_d = space.random(&mut rng);
+        let hw = has.baseline_decisions();
+
+        // First server: simulates once, spills the response.
+        let store = CacheStore::open(&path, &serve_fingerprint()).unwrap();
+        let server = Server::spawn_with_cache("127.0.0.1:0", ServeCache::with_store(store))
+            .unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let r1 = client.query("efficientnet", &nas_d, &hw, false).unwrap();
+        assert_eq!(server.cache.sim_evals.load(Ordering::Relaxed), 1);
+        server.stop();
+
+        // Second server, same file: the response is served from the
+        // warm cache byte-identically, with zero fresh simulations.
+        let store = CacheStore::open(&path, &serve_fingerprint()).unwrap();
+        assert!(store.discarded().is_none());
+        assert_eq!(store.loaded_len(), 1);
+        let server = Server::spawn_with_cache("127.0.0.1:0", ServeCache::with_store(store))
+            .unwrap();
+        assert_eq!(server.cache.len(), 1);
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let r2 = client.query("efficientnet", &nas_d, &hw, false).unwrap();
+        assert_eq!(r1, r2, "warm response must match the original");
+        assert_eq!(server.cache.sim_evals.load(Ordering::Relaxed), 0);
+        assert_eq!(server.cache.hits.load(Ordering::Relaxed), 1);
+        server.stop();
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Cross-run persistence equivalence: a warm re-run from a populated
+//! `--cache-dir` must be **bit-identical** to its cold run for the
+//! same seed on every backend tier, perform zero backend evaluations
+//! when fully warm, and report the savings as
+//! `EvalStats::persisted_hits`. A stale-fingerprint, corrupted or
+//! truncated cache file must degrade to a clean cold start — never
+//! fail the run, never silently replay stale data.
+
+use std::fs;
+use std::path::PathBuf;
+
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::store::{eval_cache_file, eval_fingerprint};
+use nahas::search::{
+    run_scenario, run_sweep, CacheStore, CostObjective, EvalBroker, Evaluator, ParallelSim,
+    RewardCfg, Scenario, ScenarioOutcome, SurrogateSim, SweepDriver, Task,
+};
+
+const SAMPLES: usize = 64;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nahas-persist-{}-{tag}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Two joint scenarios (latency + energy objective) and one
+/// phase-driver scenario, all on one controller seed — the same shape
+/// `tests/sweep_equivalence.rs` pins, small enough to run cold twice
+/// per backend.
+fn scenarios(seed: u64) -> Vec<Scenario> {
+    vec![
+        Scenario::new("lat0.4ms", NasSpaceId::EfficientNet, RewardCfg::latency(0.4), seed)
+            .samples(SAMPLES)
+            .batch(16),
+        Scenario::new("energy1mJ", NasSpaceId::EfficientNet, RewardCfg::energy(1.0), seed)
+            .samples(SAMPLES)
+            .batch(16),
+        Scenario::new("lat0.4ms-phase", NasSpaceId::EfficientNet, RewardCfg::latency(0.4), seed)
+            .samples(SAMPLES)
+            .driver(SweepDriver::Phase),
+    ]
+}
+
+fn backend(kind: &str, seed: u64) -> Box<dyn Evaluator + Send> {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    match kind {
+        "local" => Box::new(SurrogateSim::new(space, seed)),
+        "parallel" => Box::new(ParallelSim::new(space, seed, 4)),
+        other => panic!("unknown backend kind {other}"),
+    }
+}
+
+fn assert_scenario_identical(want: &ScenarioOutcome, got: &ScenarioOutcome, ctx: &str) {
+    assert_eq!(want.search.history.len(), got.search.history.len(), "{ctx}: history length");
+    for (w, g) in want.search.history.iter().zip(&got.search.history) {
+        assert_eq!(w.nas_d, g.nas_d, "{ctx}: sample {} nas decisions", w.index);
+        assert_eq!(w.has_d, g.has_d, "{ctx}: sample {} has decisions", w.index);
+        assert_eq!(w.reward.to_bits(), g.reward.to_bits(), "{ctx}: sample {}", w.index);
+        assert_eq!(w.result.acc.to_bits(), g.result.acc.to_bits(), "{ctx}");
+        assert_eq!(w.result.latency_ms.to_bits(), g.result.latency_ms.to_bits(), "{ctx}");
+        assert_eq!(w.result.energy_mj.to_bits(), g.result.energy_mj.to_bits(), "{ctx}");
+        assert_eq!(w.result.area_mm2.to_bits(), g.result.area_mm2.to_bits(), "{ctx}");
+    }
+    assert_eq!(want.search.num_invalid, got.search.num_invalid, "{ctx}: invalid count");
+    assert_eq!(want.selected_hw, got.selected_hw, "{ctx}: selected hw");
+    assert_eq!(want.frontier, got.frontier, "{ctx}: frontier");
+}
+
+#[test]
+fn warm_rerun_is_bit_identical_with_zero_backend_evals() {
+    for kind in ["local", "parallel"] {
+        for seed in [1u64, 7, 42] {
+            let ctx = format!("backend {kind}, seed {seed}");
+            let dir = tmp_dir(&format!("warm-{kind}-{seed}"));
+            let path =
+                eval_cache_file(&dir, NasSpaceId::EfficientNet, Task::Classification, seed);
+            let fp = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, seed);
+            let scs = scenarios(seed);
+
+            // Cold run: pays the backend bill, spills every entry.
+            let store = CacheStore::open(&path, &fp).unwrap();
+            let cold_broker = EvalBroker::with_store(backend(kind, seed), store);
+            assert_eq!(cold_broker.persisted_loaded(), 0, "{ctx}");
+            let cold = run_sweep(&cold_broker, &scs);
+            assert_eq!(cold.eval_stats.persisted_hits, 0, "{ctx}");
+            let cold_evals = cold_broker.stats().evals;
+            assert!(cold_broker.backend_stats().requests > 0, "{ctx}");
+            assert_eq!(cold_broker.backend_stats().requests, cold_evals, "{ctx}");
+            drop(cold_broker); // Flush-on-drop.
+
+            // Warm re-run: fresh backend and broker, same cache file.
+            let store = CacheStore::open(&path, &fp).unwrap();
+            assert!(store.discarded().is_none(), "{ctx}: warm open must not discard");
+            assert_eq!(store.loaded_len(), cold_evals, "{ctx}: one entry per cold eval");
+            let warm_broker = EvalBroker::with_store(backend(kind, seed), store);
+            assert_eq!(warm_broker.persisted_loaded(), cold_evals, "{ctx}");
+            let warm = run_sweep(&warm_broker, &scs);
+
+            // Bit-identical trajectories and frontiers, scenario by
+            // scenario, plus the merged union frontiers.
+            for (w, g) in cold.outcomes.iter().zip(&warm.outcomes) {
+                assert_scenario_identical(w, g, &format!("{ctx}, {}", w.scenario.name));
+            }
+            assert_eq!(cold.union, warm.union, "{ctx}: union frontier");
+
+            // Fully warm: zero backend evaluations, all requests served
+            // as persisted hits (merged across the sweep's sessions and
+            // agreeing with the broker's global view).
+            assert_eq!(warm_broker.backend_stats().requests, 0, "{ctx}: backend touched");
+            assert_eq!(warm.eval_stats.evals, 0, "{ctx}: warm run evaluated");
+            assert!(warm.eval_stats.persisted_hits > 0, "{ctx}: no persisted hits");
+            assert_eq!(
+                warm.eval_stats.persisted_hits,
+                warm_broker.stats().persisted_hits,
+                "{ctx}: session deltas must sum to the broker's persisted counter"
+            );
+            drop(warm_broker);
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn corrupt_or_truncated_cache_degrades_to_clean_cold_start() {
+    let seed = 7u64;
+    let dir = tmp_dir("damage");
+    let path = dir.join("evals.cache");
+    let fp = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, seed);
+    let sc = scenarios(seed).remove(0);
+
+    // Reference: the scenario with no store at all.
+    let want = run_scenario(&EvalBroker::new(backend("local", seed)), &sc);
+
+    // Populate a pristine cache file once.
+    {
+        let store = CacheStore::open(&path, &fp).unwrap();
+        let broker = EvalBroker::with_store(backend("local", seed), store);
+        run_scenario(&broker, &sc);
+    }
+    let pristine = fs::read_to_string(&path).unwrap();
+
+    // Cut mid-entry (right after the last key/value separator), the
+    // shape a crash mid-append leaves behind.
+    let cut = pristine.rfind('|').unwrap() + 1;
+    let damages: Vec<(&str, String)> = vec![
+        ("truncated", pristine[..cut].to_string()),
+        ("corrupt line", format!("{pristine}not,a|valid entry\n")),
+        ("binary garbage", format!("{pristine}\u{1}\u{2}\u{3}")),
+    ];
+    for (name, text) in damages {
+        fs::write(&path, text).unwrap();
+        let store = CacheStore::open(&path, &fp).unwrap();
+        assert!(store.discarded().is_some(), "{name}: damage must be detected");
+        assert_eq!(store.loaded_len(), 0, "{name}: nothing salvaged");
+        let broker = EvalBroker::with_store(backend("local", seed), store);
+        let got = run_scenario(&broker, &sc);
+        assert_scenario_identical(&want, &got, name);
+        let stats = broker.stats();
+        assert_eq!(stats.persisted_hits, 0, "{name}: cold start cannot have warm hits");
+        assert!(broker.backend_stats().requests > 0, "{name}");
+        drop(broker);
+        // The restarted file is healthy again: a follow-up warm run
+        // loads what the cold-start run re-spilled.
+        let store = CacheStore::open(&path, &fp).unwrap();
+        assert!(store.discarded().is_none(), "{name}: restart left a bad file");
+        assert!(store.loaded_len() > 0, "{name}: cold start did not re-spill");
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_fingerprint_falls_back_to_cold_start() {
+    let seed = 42u64;
+    let dir = tmp_dir("stale-fp");
+    let path = dir.join("evals.cache");
+    let sc = Scenario::new("lat0.5ms", NasSpaceId::EfficientNet, RewardCfg::latency(0.5), seed)
+        .samples(SAMPLES)
+        .batch(16);
+    let want = run_scenario(&EvalBroker::new(backend("local", seed)), &sc);
+
+    // Spill under one fingerprint, reopen under another — the shape of
+    // a simulator upgrade (SIM_FINGERPRINT bump) between runs.
+    {
+        let store: CacheStore = CacheStore::open(&path, "eval/old-simulator").unwrap();
+        let broker = EvalBroker::with_store(backend("local", seed), store);
+        run_scenario(&broker, &sc);
+    }
+    let fp = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, seed);
+    let store = CacheStore::open(&path, &fp).unwrap();
+    assert!(
+        store.discarded().unwrap().contains("fingerprint mismatch"),
+        "stale fingerprint must be rejected, got {:?}",
+        store.discarded()
+    );
+    let broker = EvalBroker::with_store(backend("local", seed), store);
+    let got = run_scenario(&broker, &sc);
+    assert_scenario_identical(&want, &got, "stale fingerprint");
+    assert_eq!(broker.stats().persisted_hits, 0);
+    assert!(broker.backend_stats().requests > 0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sweep_objectives_still_union_per_objective_when_warm() {
+    // Warm-start must not disturb the sweep's merge step: the union
+    // frontier per objective of a warm sweep equals the cold one even
+    // though every result came off disk.
+    let seed = 1u64;
+    let dir = tmp_dir("union");
+    let path = dir.join("evals.cache");
+    let fp = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, seed);
+    let scs = scenarios(seed);
+    let store = CacheStore::open(&path, &fp).unwrap();
+    let cold = run_sweep(&EvalBroker::with_store(backend("local", seed), store), &scs);
+    let store = CacheStore::open(&path, &fp).unwrap();
+    let warm = run_sweep(&EvalBroker::with_store(backend("local", seed), store), &scs);
+    assert_eq!(cold.union.len(), warm.union.len());
+    let objectives: Vec<CostObjective> = cold.union.iter().map(|(o, _)| *o).collect();
+    assert!(objectives.contains(&CostObjective::Latency));
+    assert!(objectives.contains(&CostObjective::Energy));
+    assert_eq!(cold.union, warm.union);
+    let _ = fs::remove_dir_all(&dir);
+}

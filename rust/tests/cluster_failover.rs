@@ -14,7 +14,11 @@ use nahas::has::HasSpace;
 use nahas::nas::{NasSpace, NasSpaceId};
 use nahas::search::joint::JointLayout;
 use nahas::search::ppo::PpoController;
-use nahas::search::{joint_search, Evaluator, RewardCfg, SearchCfg, SearchOutcome, SurrogateSim};
+use nahas::search::store::eval_fingerprint;
+use nahas::search::{
+    joint_search, CacheStore, EvalBroker, Evaluator, RewardCfg, SearchCfg, SearchOutcome,
+    SurrogateSim, Task,
+};
 use nahas::service::Server;
 
 const SAMPLES: usize = 96;
@@ -139,6 +143,95 @@ fn entirely_dead_pool_refuses_to_connect() {
         })
         .collect();
     assert!(ShardedEvaluator::connect(&dead, NasSpaceId::EfficientNet, 0, 1).is_err());
+}
+
+#[test]
+fn transport_failures_never_reach_the_spilled_cache() {
+    // A cluster run with a black-holed host, spilling through a
+    // store-backed broker: failover keeps every *result* correct, and
+    // the non-cacheable transport verdicts must keep every *entry*
+    // that reaches disk correct too — reloading the spilled file must
+    // yield only values bit-identical to the serial simulator.
+    let seed = 5u64;
+    let space_id = NasSpaceId::EfficientNet;
+    let path = std::env::temp_dir()
+        .join(format!("nahas-failover-spill-{}.cache", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let fp = eval_fingerprint(space_id, Task::Classification, seed);
+
+    let s1 = Server::spawn("127.0.0.1:0").unwrap();
+    let (bh_addr, bh_stop, bh_handle) = black_hole();
+    let hosts = vec![s1.addr.to_string(), bh_addr];
+    let cluster = ShardedEvaluator::connect(&hosts, space_id, seed, 2).unwrap();
+    let store = CacheStore::open(&path, &fp).unwrap();
+    let broker = EvalBroker::with_store(Box::new(cluster), store);
+    let mut session = broker.session();
+    let got = run(&mut session, seed);
+    let mut serial = SurrogateSim::new(NasSpace::new(space_id), seed);
+    assert_same_trajectory(&run(&mut serial, seed), &got);
+    let evals = broker.stats().evals;
+    assert!(evals > 0);
+    drop(session);
+    drop(broker); // Flush the spill file.
+
+    let mut store: CacheStore = CacheStore::open(&path, &fp).unwrap();
+    assert!(store.discarded().is_none());
+    let loaded = store.take_loaded();
+    // Failover resolved every miss, so every (cacheable) eval spilled.
+    assert_eq!(loaded.len(), evals, "one spilled entry per broker eval");
+    let nas_len = NasSpace::new(space_id).num_decisions();
+    let reference = SurrogateSim::new(NasSpace::new(space_id), seed);
+    for (key, r) in &loaded {
+        let want = reference.evaluate_pure(&key[..nas_len], &key[nas_len..]);
+        assert_eq!(want.valid, r.valid, "poisoned entry for key {key:?}");
+        assert_eq!(want.acc.to_bits(), r.acc.to_bits());
+        assert_eq!(want.latency_ms.to_bits(), r.latency_ms.to_bits());
+        assert_eq!(want.energy_mj.to_bits(), r.energy_mj.to_bits());
+        assert_eq!(want.area_mm2.to_bits(), r.area_mm2.to_bits());
+    }
+
+    bh_stop.store(true, Ordering::Relaxed);
+    bh_handle.join().unwrap();
+    s1.stop();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn all_hosts_down_spills_nothing() {
+    // A pool that is only a black hole: every sample fails as a
+    // non-cacheable transport invalid. The spilled cache file must
+    // stay empty — persisting those invalids would starve every later
+    // warm-started run of its retry.
+    let seed = 9u64;
+    let space_id = NasSpaceId::EfficientNet;
+    let path = std::env::temp_dir()
+        .join(format!("nahas-failover-poison-{}.cache", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let fp = eval_fingerprint(space_id, Task::Classification, seed);
+
+    let (bh_addr, bh_stop, bh_handle) = black_hole();
+    let cluster = ShardedEvaluator::connect(&[bh_addr], space_id, seed, 1)
+        .expect("a black hole accepts connections");
+    let store = CacheStore::open(&path, &fp).unwrap();
+    let broker = EvalBroker::with_store(Box::new(cluster), store);
+    let mut session = broker.session();
+    let space = NasSpace::new(space_id);
+    let has = HasSpace::new();
+    let mut rng = nahas::util::Rng::new(seed);
+    let batch: Vec<(Vec<usize>, Vec<usize>)> =
+        (0..4).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect();
+    let results = session.evaluate_batch(&batch);
+    assert!(results.iter().all(|r| !r.valid), "no host could have answered");
+    drop(session);
+    drop(broker);
+
+    let mut store: CacheStore = CacheStore::open(&path, &fp).unwrap();
+    assert!(store.discarded().is_none());
+    assert_eq!(store.take_loaded().len(), 0, "transport failures were spilled");
+
+    bh_stop.store(true, Ordering::Relaxed);
+    bh_handle.join().unwrap();
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

@@ -1,11 +1,20 @@
 //! Coordinator invariants under the in-crate property harness
 //! (`nahas::util::proptest`): decode totality over every search space,
-//! validator totality over the HAS space, and memo-cache transparency.
+//! validator totality over the HAS space, memo-cache transparency, and
+//! the persistent-store invariants (bit-exact round-trip,
+//! append-then-reload equals the in-memory map, no cross-file
+//! contamination between concurrently flushing brokers).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
 
 use nahas::has::{validate, HasSpace};
 use nahas::nas::{NasSpace, NasSpaceId};
-use nahas::search::{EvalResult, Evaluator, ParallelSim, SurrogateSim};
+use nahas::search::{
+    CacheStore, EvalBroker, EvalResult, Evaluator, MemoCache, ParallelSim, SurrogateSim,
+};
 use nahas::util::proptest;
+use nahas::util::Rng;
 
 const ALL_SPACES: [NasSpaceId; 4] = [
     NasSpaceId::MobileNetV2,
@@ -94,4 +103,206 @@ fn prop_memo_cache_returns_same_result_as_fresh_evaluation() {
     let st = cached.stats();
     assert_eq!(st.requests, 256);
     assert_eq!(st.evals, 128, "every second request must be a memo hit");
+}
+
+// ---- persistent store properties (`nahas::search::store`) ----
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nahas-prop-{}-{name}.cache", std::process::id()))
+}
+
+/// Comparable bit-exact projection of an [`EvalResult`].
+type ResultBits = (bool, u64, u64, u64, u64);
+
+fn bits(r: &EvalResult) -> ResultBits {
+    (
+        r.valid,
+        r.acc.to_bits(),
+        r.latency_ms.to_bits(),
+        r.energy_mj.to_bits(),
+        r.area_mm2.to_bits(),
+    )
+}
+
+/// Arbitrary entries: short random keys, and metric f64s drawn from
+/// raw bit patterns so NaNs, infinities, subnormals and negative zero
+/// are all exercised (the bit-pattern format must round-trip them
+/// exactly; a decimal format would not).
+fn arbitrary_entries(r: &mut Rng, n: usize) -> Vec<(Vec<usize>, EvalResult)> {
+    (0..n)
+        .map(|_| {
+            let key: Vec<usize> = (0..r.below(6)).map(|_| r.below(1000)).collect();
+            let result = EvalResult {
+                acc: f64::from_bits(r.next_u64()),
+                latency_ms: f64::from_bits(r.next_u64()),
+                energy_mj: f64::from_bits(r.next_u64()),
+                area_mm2: f64::from_bits(r.next_u64()),
+                valid: r.below(2) == 0,
+            };
+            (key, result)
+        })
+        .collect()
+}
+
+/// Last-wins map view of an entry sequence (the store's append-only
+/// reload semantics).
+fn as_map(entries: &[(Vec<usize>, EvalResult)]) -> HashMap<Vec<usize>, ResultBits> {
+    entries.iter().map(|(k, v)| (k.clone(), bits(v))).collect()
+}
+
+#[test]
+fn prop_store_roundtrips_arbitrary_entry_sets_bit_exactly() {
+    let path = tmp("roundtrip");
+    proptest::check(
+        "store serialize/deserialize roundtrip",
+        64,
+        |r| {
+            let n = r.below(24);
+            arbitrary_entries(r, n)
+        },
+        |entries| {
+            let _ = std::fs::remove_file(&path);
+            {
+                let mut store: CacheStore =
+                    CacheStore::open(&path, "prop/fp").map_err(|e| e.to_string())?;
+                for (k, v) in entries {
+                    store.append(k, v);
+                }
+            }
+            let mut store: CacheStore =
+                CacheStore::open(&path, "prop/fp").map_err(|e| e.to_string())?;
+            if let Some(why) = store.discarded() {
+                return Err(format!("clean file discarded: {why}"));
+            }
+            let got = as_map(&store.take_loaded());
+            let want = as_map(entries);
+            if got != want {
+                return Err(format!("reload mismatch: {got:?} vs {want:?}"));
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn prop_append_then_reload_equals_in_memory_map() {
+    // Two append sessions against one file must reload to exactly the
+    // map an in-memory MemoCache built from the same inserts holds.
+    let path = tmp("append-reload");
+    proptest::check(
+        "append across sessions == in-memory map",
+        32,
+        |r| {
+            let (n, m) = (1 + r.below(12), 1 + r.below(12));
+            (arbitrary_entries(r, n), arbitrary_entries(r, m))
+        },
+        |(first, second)| {
+            let _ = std::fs::remove_file(&path);
+            let mut memo: MemoCache = MemoCache::new(1024);
+            {
+                let mut store: CacheStore =
+                    CacheStore::open(&path, "prop/fp").map_err(|e| e.to_string())?;
+                for (k, v) in first {
+                    store.append(k, v);
+                    memo.insert(k.clone(), *v);
+                }
+            }
+            {
+                let mut store: CacheStore =
+                    CacheStore::open(&path, "prop/fp").map_err(|e| e.to_string())?;
+                if store.discarded().is_some() {
+                    return Err("mid-sequence reopen discarded the file".to_string());
+                }
+                for (k, v) in second {
+                    store.append(k, v);
+                    memo.insert(k.clone(), *v);
+                }
+            }
+            let mut store: CacheStore =
+                CacheStore::open(&path, "prop/fp").map_err(|e| e.to_string())?;
+            let got = as_map(&store.take_loaded());
+            let want: HashMap<_, _> =
+                memo.entries().map(|(k, v)| (k.to_vec(), bits(v))).collect();
+            if got != want {
+                return Err(format!("disk {} entries vs memory {}", got.len(), want.len()));
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn prop_interleaved_brokers_on_separate_files_never_cross_contaminate() {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let (path_a, path_b) = (tmp("broker-a"), tmp("broker-b"));
+    proptest::check(
+        "two brokers, two files, interleaved flushes",
+        12,
+        |r| {
+            let mut batch = |n: usize| -> Vec<(Vec<usize>, Vec<usize>)> {
+                (0..n).map(|_| (space.random(r), has.random(r))).collect()
+            };
+            (batch(6), batch(6), batch(6), batch(6))
+        },
+        |(a1, b1, a2, b2)| {
+            let _ = std::fs::remove_file(&path_a);
+            let _ = std::fs::remove_file(&path_b);
+            let mk = |path: &PathBuf| -> Result<EvalBroker, String> {
+                let store: CacheStore =
+                    CacheStore::open(path, "prop/fp").map_err(|e| e.to_string())?;
+                let sim = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+                Ok(EvalBroker::with_store(Box::new(sim), store))
+            };
+            let (broker_a, broker_b) = (mk(&path_a)?, mk(&path_b)?);
+            let (mut sa, mut sb) = (broker_a.session(), broker_b.session());
+            // Interleave batches and flushes between the two brokers.
+            sa.evaluate_batch(a1);
+            sb.evaluate_batch(b1);
+            broker_a.flush_store();
+            sb.evaluate_batch(b2);
+            sa.evaluate_batch(a2);
+            broker_b.flush_store();
+            let keys = |x: &[(Vec<usize>, Vec<usize>)], y: &[(Vec<usize>, Vec<usize>)]| {
+                x.iter()
+                    .chain(y.iter())
+                    .map(|(n, h)| nahas::search::joint_key(n, h))
+                    .collect::<Vec<Vec<usize>>>()
+            };
+            let (keys_a, keys_b) = (keys(a1, a2), keys(b1, b2));
+            drop((sa, sb, broker_a, broker_b));
+            for (path, own, evals) in [(&path_a, &keys_a, &keys_b), (&path_b, &keys_b, &keys_a)]
+            {
+                let mut store: CacheStore =
+                    CacheStore::open(path, "prop/fp").map_err(|e| e.to_string())?;
+                let loaded = store.take_loaded();
+                for (k, _) in &loaded {
+                    if !own.contains(k) {
+                        let foreign = evals.contains(k);
+                        return Err(format!(
+                            "{} holds key {k:?} it never evaluated (foreign: {foreign})",
+                            path.display()
+                        ));
+                    }
+                }
+                // Every unique key the broker evaluated is present.
+                let mut unique = own.clone();
+                unique.sort();
+                unique.dedup();
+                if loaded.len() != unique.len() {
+                    return Err(format!(
+                        "{}: {} entries for {} unique keys",
+                        path.display(),
+                        loaded.len(),
+                        unique.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_file(&path_a);
+    let _ = std::fs::remove_file(&path_b);
 }

@@ -9,9 +9,10 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 
+use nahas::cluster::query_host_stats;
 use nahas::has::HasSpace;
 use nahas::nas::{NasSpace, NasSpaceId};
-use nahas::service::Server;
+use nahas::service::{Client, Server};
 use nahas::util::json::Json;
 use nahas::util::Rng;
 
@@ -115,5 +116,40 @@ fn eight_threads_fifty_mixed_requests_each() {
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     assert_eq!(Json::parse(&line).unwrap().get("valid"), Some(&Json::Bool(true)));
+    server.stop();
+}
+
+#[test]
+fn stats_probe_reports_server_cache_size() {
+    // The `{"stats": true}` probe must expose the resident size of the
+    // server-side result cache, both over the raw protocol and through
+    // `query_host_stats` — the exact path `nahas cluster-status` uses
+    // to print its Cache column.
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let baseline = has.baseline_decisions();
+    let mut rng = Rng::new(0xCAFE);
+    let (a, b) = (space.random(&mut rng), space.random(&mut rng));
+    let mut client = Client::connect(&addr).unwrap();
+    client.query("efficientnet", &a, &baseline, false).unwrap();
+    client.query("efficientnet", &b, &baseline, false).unwrap();
+    client.query("efficientnet", &a, &baseline, false).unwrap(); // repeat: a hit
+
+    // Raw protocol probe.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    writeln!(stream, "{{\"stats\": true}}").unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    let st = Json::parse(line.trim()).unwrap();
+    assert_eq!(st.get("cache_size").and_then(Json::as_usize), Some(2));
+    assert_eq!(st.get("cache_hits").and_then(Json::as_usize), Some(1));
+
+    // The cluster-status path reads the same field.
+    let hs = query_host_stats(&addr, std::time::Duration::from_millis(1000)).unwrap();
+    assert_eq!(hs.cache_size, 2);
+    assert_eq!(hs.cache_hits, 1);
+    assert_eq!(hs.sim_evals, 2);
     server.stop();
 }
