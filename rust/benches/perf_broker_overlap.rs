@@ -1,0 +1,119 @@
+//! §Perf — broker admission overlap: the same multi-scenario sweep run
+//! with strictly serial admission (`--broker-inflight 1`, the pre-PR-5
+//! dispatch path) and with full overlap (limit = the parallel
+//! backend's worker capacity).
+//!
+//! The win comes from *coalescing*: at limit 1 every backend call
+//! carries at most one scenario's controller batch (here deliberately
+//! small — 4 samples against 8 workers, so half the pool idles), while
+//! with overlap the batches that pile up behind a dispatch merge into
+//! the next one and fill the pool. Scenarios use distinct controller
+//! seeds so they explore distinct keys — the cross-scenario cache
+//! cannot hide the dispatch behavior.
+//!
+//! Both runs must be bit-identical (admission changes scheduling,
+//! never results) and perform the same number of backend evaluations;
+//! the bench asserts both. Record the printed trajectory row in
+//! `docs/BENCH_TRAJECTORY.md`.
+
+use std::time::Instant;
+
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{
+    run_sweep, ControllerKind, EvalBroker, ParallelSim, RewardCfg, Scenario, SweepOutcome,
+};
+
+const SAMPLES: usize = 240;
+const BATCH: usize = 4;
+const WORKERS: usize = 8;
+const EVAL_SEED: u64 = 3;
+
+fn scenarios() -> Vec<Scenario> {
+    // Distinct controller seeds: each scenario samples its own region
+    // of the joint space, so the sweep's cost is real backend work.
+    [(0.3, 11u64), (0.4, 22), (0.5, 33), (0.6, 44), (0.7, 55), (0.8, 66)]
+        .into_iter()
+        .map(|(target, seed)| {
+            Scenario::new(
+                format!("lat{target}ms-s{seed}"),
+                NasSpaceId::EfficientNet,
+                RewardCfg::latency(target),
+                seed,
+            )
+            .samples(SAMPLES)
+            .batch(BATCH)
+            .controller(ControllerKind::Random)
+        })
+        .collect()
+}
+
+fn run(inflight: Option<usize>) -> (SweepOutcome, f64, EvalBroker) {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let backend = ParallelSim::new(space, EVAL_SEED, WORKERS);
+    let mut broker = EvalBroker::new(Box::new(backend));
+    if let Some(n) = inflight {
+        broker = broker.with_inflight_limit(n);
+    }
+    let scs = scenarios();
+    let t0 = Instant::now();
+    let out = run_sweep(&broker, &scs);
+    (out, t0.elapsed().as_secs_f64(), broker)
+}
+
+fn main() {
+    println!(
+        "broker overlap: {} scenarios x {SAMPLES} samples, batch {BATCH}, \
+         parallel backend with {WORKERS} workers\n",
+        scenarios().len()
+    );
+
+    let (serial, serial_s, serial_broker) = run(Some(1));
+    let sov = serial_broker.overlap_stats();
+    println!(
+        "  inflight 1: {serial_s:>6.2}s  {} evals over {} dispatches \
+         ({:.1} keys/dispatch, peak {} admitted)",
+        serial.eval_stats.evals,
+        sov.dispatches,
+        serial.eval_stats.evals as f64 / sov.dispatches.max(1) as f64,
+        sov.peak_admitted,
+    );
+
+    let (overlap, overlap_s, overlap_broker) = run(None);
+    let oov = overlap_broker.overlap_stats();
+    println!(
+        "  inflight {}: {overlap_s:>6.2}s  {} evals over {} dispatches \
+         ({:.1} keys/dispatch, peak {} admitted, {} coalesced)",
+        oov.inflight_limit,
+        overlap.eval_stats.evals,
+        oov.dispatches,
+        overlap.eval_stats.evals as f64 / oov.dispatches.max(1) as f64,
+        oov.peak_admitted,
+        oov.coalesced_dispatches,
+    );
+
+    // Admission changes scheduling, never results: bit-identical
+    // trajectories and identical backend work.
+    assert_eq!(serial.eval_stats.requests, overlap.eval_stats.requests);
+    assert_eq!(
+        serial.eval_stats.evals, overlap.eval_stats.evals,
+        "dedup must be interleaving-independent"
+    );
+    for (a, b) in serial.outcomes.iter().zip(&overlap.outcomes) {
+        assert_eq!(a.search.history.len(), b.search.history.len());
+        for (x, y) in a.search.history.iter().zip(&b.search.history) {
+            assert_eq!(x.nas_d, y.nas_d, "{}: sampled decisions diverged", a.scenario.name);
+            assert_eq!(x.reward.to_bits(), y.reward.to_bits(), "{}", a.scenario.name);
+        }
+        assert_eq!(a.frontier, b.frontier, "{}: frontier diverged", a.scenario.name);
+    }
+    assert_eq!(sov.peak_admitted, 1, "limit 1 must stay strictly serial");
+
+    let speedup = serial_s / overlap_s.max(1e-9);
+    println!("\n  speedup: {speedup:.2}x (inflight 1 / inflight {})", oov.inflight_limit);
+    println!("\n  trajectory row (docs/BENCH_TRAJECTORY.md):");
+    println!(
+        "  | perf_broker_overlap | inflight 1: {serial_s:.2}s | inflight {}: {overlap_s:.2}s \
+         | {speedup:.2}x | {} coalesced / {} dispatches |",
+        oov.inflight_limit, oov.coalesced_dispatches, oov.dispatches
+    );
+}

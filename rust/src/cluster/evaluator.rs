@@ -1,7 +1,7 @@
 //! [`ShardedEvaluator`] — `Evaluator::evaluate_batch` over a pool of
 //! `nahas serve` hosts.
 //!
-//! One batch flows through the same [`BatchPlan`] memo-cache front as
+//! One batch flows through the same `BatchPlan` memo-cache front as
 //! the single-host tiers, then the deduped misses are routed by
 //! rendezvous hash of the joint key ([`super::HashRing`]) to their
 //! owning host and fanned out over that host's connection sub-pool.
@@ -359,6 +359,13 @@ impl Evaluator for ShardedEvaluator {
         let out = plan.finish_tagged(&mut self.cache, fresh);
         self.counters.invalid += out.iter().filter(|(r, _)| !r.valid).count();
         out
+    }
+
+    /// The pool's total pooled connections: each can carry one service
+    /// roundtrip at a time, so that is how much concurrent batch work
+    /// the broker can usefully admit against this tier.
+    fn capacity(&self) -> usize {
+        self.pool.total_conns()
     }
 
     fn stats(&self) -> EvalStats {

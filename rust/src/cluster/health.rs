@@ -37,6 +37,16 @@ fn rtt(t0: Instant) -> f64 {
 /// answers `{"valid": false, "error": "unknown space"}` — proves the
 /// whole serve loop (accept, parse, dispatch, respond) is alive
 /// without costing a simulation.
+///
+/// # Examples
+///
+/// ```no_run
+/// use std::time::Duration;
+/// use nahas::cluster::probe_host;
+///
+/// let p = probe_host("127.0.0.1:7878", Duration::from_millis(500));
+/// println!("{}: up={} rtt={:.2}ms ({})", p.addr, p.up, p.rtt_ms, p.detail);
+/// ```
 pub fn probe_host(addr: &str, timeout: Duration) -> HostProbe {
     let t0 = Instant::now();
     let sock = match addr.to_socket_addrs().ok().and_then(|mut a| a.next()) {

@@ -18,10 +18,15 @@
 //! * [`evaluator`] — [`ShardedEvaluator`], the `Evaluator` that ties
 //!   them together behind the same memo-cache front as the other
 //!   tiers. Bit-identical to the serial path for the same seed, with
-//!   or without failover.
+//!   or without failover. It advertises the pool's total pooled
+//!   connections as its [`crate::search::Evaluator::capacity`] hint,
+//!   so a shared [`crate::search::EvalBroker`] admits overlapping
+//!   session batches against it (`--broker-inflight`).
 //!
 //! CLI: `nahas search --evaluator cluster --hosts a:7878,b:7878` and
-//! `nahas cluster-status --hosts ...`.
+//! `nahas cluster-status --hosts ...`. The whole stack, including how
+//! this tier composes with the broker and the persistent caches, is
+//! documented in `docs/ARCHITECTURE.md`.
 //!
 //! [`Client`]: crate::service::Client
 

@@ -112,6 +112,14 @@ impl HostPool {
         self.hosts.iter().filter(|h| h.is_up()).count()
     }
 
+    /// Pooled connections across every host — the cluster tier's
+    /// concurrency capacity (its [`crate::search::Evaluator::capacity`]
+    /// hint). At least 1: a pool cannot be constructed with zero
+    /// reachable hosts.
+    pub fn total_conns(&self) -> usize {
+        self.conns.iter().map(Vec::len).sum::<usize>().max(1)
+    }
+
     /// Shared states, for handing to a [`super::HealthMonitor`].
     pub fn shared_hosts(&self) -> Arc<Vec<HostState>> {
         self.hosts.clone()

@@ -35,6 +35,23 @@ const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 /// scores depend only on the host *address* (and weight), so the same
 /// weighted address list in any order routes every key to the same
 /// address.
+///
+/// # Examples
+///
+/// ```
+/// use nahas::cluster::HashRing;
+///
+/// let ring = HashRing::new(&["10.0.0.1:7878", "10.0.0.2:7878", "10.0.0.3:7878"]);
+/// let key = vec![3, 1, 4, 1, 5];
+/// // Affinity: the same joint key always routes to the same host...
+/// let owner = ring.owner(&key).unwrap();
+/// assert_eq!(ring.owner(&key), Some(owner));
+/// // ...and when that host goes down, the key fails over to another
+/// // host while every key owned by a surviving host stays put.
+/// let mut up = vec![true; 3];
+/// up[owner] = false;
+/// assert_ne!(ring.route(&key, &up), Some(owner));
+/// ```
 #[derive(Clone, Debug)]
 pub struct HashRing {
     /// Per-host seed: FNV-1a of the host address.

@@ -45,7 +45,12 @@
 //! any backend behind an `Arc` handle layer and multiplexes any number
 //! of concurrent search sessions onto it, with a cross-search memo
 //! cache (a joint decision evaluated by one search is never
-//! re-evaluated by another) and per-session stats deltas. The
+//! re-evaluated by another — including *mid-flight*: a key one
+//! session's batch has claimed is waited on, not dispatched twice) and
+//! per-session stats deltas. Its dispatch path is admission-controlled
+//! (`--broker-inflight N`, clamped to the backend's
+//! [`search::Evaluator::capacity`] hint): up to N session batches
+//! overlap on the backend, coalescing into shared backend calls. The
 //! [`search::sweep`] orchestrator (`nahas sweep`) runs whole scenario
 //! grids — latency targets x objectives x joint/phase drivers — as
 //! concurrent sessions over one broker and merges the winners into a
@@ -67,6 +72,11 @@
 //! cluster-status` probes pool health and server-side cache hits).
 //! Cache-hit, throughput and per-host counters come back in
 //! `SearchOutcome::eval_stats`.
+//!
+//! The full architecture book for this stack — layer diagram, the
+//! [`search::Evaluator`] contract, a life-of-an-evaluation
+//! walkthrough, and a which-knob-do-I-turn table — is
+//! `docs/ARCHITECTURE.md` at the repo root.
 
 pub mod accel;
 pub mod bench;

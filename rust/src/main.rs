@@ -197,6 +197,11 @@ fn report_cache_store<V: CacheValue>(store: &CacheStore<V>) {
 /// `nahas sweep` runs many concurrently over the same broker — and
 /// with `--cache-dir`, the broker warm-starts from (and spills back
 /// to) a persistent cache shared across runs and backend tiers.
+/// `--broker-inflight N` caps how many concurrent session batches the
+/// broker admits against the backend (clamped to the backend's
+/// capacity hint; defaults to that capacity, so parallel-capable
+/// tiers overlap out of the box and `--broker-inflight 1` restores
+/// strictly serial one-batch-at-a-time dispatch).
 fn evaluator_arg(
     flags: &Flags,
     space: NasSpace,
@@ -263,9 +268,19 @@ fn evaluator_arg(
         }
         other => bail!("unknown evaluator '{other}' (local|parallel|service|cluster)"),
     };
-    Ok(match cache_store_arg(flags, space_id, seg, seed)? {
+    let broker = match cache_store_arg(flags, space_id, seg, seed)? {
         Some(store) => EvalBroker::with_store(backend, store),
         None => EvalBroker::new(backend),
+    };
+    Ok(match flags.get("broker-inflight") {
+        Some(_) => {
+            let n = flags.usize("broker-inflight", 0)?;
+            if n == 0 {
+                bail!("--broker-inflight must be at least 1 (1 = serial admission)");
+            }
+            broker.with_inflight_limit(n)
+        }
+        None => broker,
     })
 }
 
@@ -291,6 +306,13 @@ fn print_eval_stats(st: &nahas::search::EvalStats) {
         println!(
             "  {} persisted warm-start hits (keys loaded from --cache-dir)",
             st.persisted_hits
+        );
+    }
+    if st.inflight_hits > 0 {
+        println!(
+            "  {} in-flight dedup hits (requests that waited on an evaluation already \
+             running in another session)",
+            st.inflight_hits
         );
     }
     for h in &st.per_host {
@@ -358,15 +380,17 @@ fn print_usage() {
          \x20              [--remote ADDR   use a `nahas serve` simulator service]\n\
          \x20              [--hosts A,B=2,..  shard over weighted `nahas serve` hosts]\n\
          \x20              [--cache-dir DIR  persist evaluations across runs (warm start)]\n\
+         \x20              [--broker-inflight N  concurrent session batches (1 = serial)]\n\
          \x20 sweep        [--targets 0.3,0.5,0.7 --objectives latency,energy]\n\
          \x20              [--drivers joint,phase --samples 500 --batch 16 --seed S]\n\
          \x20              [--space s2 --out results/sweep.csv]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N]\n\
          \x20              [--cache-dir DIR  warm-start repeated sweeps from disk]\n\
+         \x20              [--broker-inflight N  overlap scenario batches on the backend]\n\
          \x20              runs all scenarios concurrently over one shared broker\n\
          \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N --batch 16]\n\
-         \x20              [--cache-dir DIR]\n\
+         \x20              [--cache-dir DIR --broker-inflight N]\n\
          \x20 oneshot      [--warmup 60 --steps 200 --target-ms 0.02 --seed S]\n\
          \x20 train-child  [--steps 30 --seed S]\n\
          \x20 costmodel    [--data 2000 --train-steps 600 --eval 256 --space s2]\n\
@@ -635,6 +659,15 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
     // --cache-dir reports zero backend evals (the CI smoke greps this).
     println!("backend evals this run: {}", broker.backend_stats().requests);
     print_eval_stats(&broker.stats());
+    // Admission-control accounting: how much the scenarios actually
+    // overlapped on the backend (the CI smoke greps this line too).
+    let ov = broker.overlap_stats();
+    let (limit, cap) = (ov.inflight_limit, ov.capacity);
+    println!(
+        "broker admission: limit {limit} (backend capacity {cap}), peak {} overlapping \
+         batches, {} dispatches ({} coalesced)",
+        ov.peak_admitted, ov.dispatches, ov.coalesced_dispatches
+    );
 
     let mut rows = Vec::new();
     for (objective, front) in &out.union {

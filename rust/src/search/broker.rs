@@ -1,4 +1,4 @@
-//! [`EvalBroker`] — the shared, concurrency-safe evaluation seam.
+//! [`EvalBroker`] — the shared, admission-controlled evaluation seam.
 //!
 //! PR 1/PR 2 built four evaluator tiers (local, parallel, service,
 //! cluster), but every search driver *exclusively borrowed* its
@@ -8,8 +8,7 @@
 //! cache between scenarios. The broker removes that restriction:
 //!
 //! * [`EvalBroker`] wraps **one** backend (`Box<dyn Evaluator + Send>`)
-//!   behind an `Arc<Mutex<..>>` and hands out any number of
-//!   [`BrokerSession`] handles;
+//!   and hands out any number of [`BrokerSession`] handles;
 //! * each session implements [`Evaluator`], so every existing driver
 //!   ([`crate::search::joint_search`],
 //!   [`crate::search::phase::phase_search`]) runs unchanged on its own
@@ -30,23 +29,70 @@
 //!   evaluation is appended back, so repeated runs and sweeps
 //!   warm-start across processes (`tests/cache_persistence.rs`).
 //!
-//! Concurrency model: one mutex guards the backend + cache + global
-//! counters, and a session's whole `evaluate_batch` (cache resolve →
-//! backend fan-out → cache fill) runs under it. Batches from
-//! concurrent sessions therefore *interleave* rather than overlap —
-//! which is deliberate: the parallelism lives inside the backend's own
-//! `evaluate_batch` fan-out (worker threads, service connections,
-//! cluster shards), and admitting one batch at a time is what makes
-//! "every unique key is evaluated exactly once" a hard guarantee
-//! instead of a race. Because every backend evaluation is a
-//! deterministic function of (space, task, seed, decisions), sharing a
-//! broker can never change *what* a scenario computes — each scenario
-//! stays bit-identical to its standalone run for the same controller
-//! seed (`tests/sweep_equivalence.rs`).
+//! # Concurrency model: two tiers under one lock, dispatch outside it
+//!
+//! Until PR 5 the broker held its mutex **across the backend call**, so
+//! a backend with idle worker capacity still served exactly one
+//! session's batch at a time. The dispatch path is now an
+//! admission-controlled scheduler split into two tiers:
+//!
+//! * the **cache/stats tier** (`CacheTier`) is only ever touched with
+//!   the state lock held: memo-cache resolution, persistent-store
+//!   appends, and the global counters;
+//! * the **dispatch tier** (`DispatchTier`) tracks what is *between*
+//!   the cache and the backend: an **in-flight table** (joint key →
+//!   slot) of evaluations some session has claimed but the backend has
+//!   not finished, a FIFO **queue** of claimed-but-not-yet-dispatched
+//!   keys, and the **admission** count of session batches currently in
+//!   flight. The backend call itself runs with the state lock
+//!   *released*: a session "checks the backend out" of the state,
+//!   evaluates the whole queue in one call, and parks it back.
+//!
+//! A session batch flows through three steps:
+//!
+//! 1. **resolve** (lock held) — cache hits are answered immediately; a
+//!    key that is already *in flight* is never claimed again: the
+//!    session registers as a waiter on its slot and the repeat request
+//!    is counted as a cross-session hit ([`EvalStats::inflight_hits`]
+//!    tallies this mid-flight subset) — overlapping sessions can never
+//!    duplicate an in-progress evaluation;
+//! 2. **admit + claim** (lock held) — a batch that needs fresh backend
+//!    work waits until fewer than `inflight_limit` batches are in
+//!    flight (`--broker-inflight N`, clamped to the backend's
+//!    [`Evaluator::capacity`] hint; `local` advertises 1, so the serial
+//!    path is untouched), then claims its unresolved keys: one
+//!    in-flight slot and one queue entry each. Keys that become cached
+//!    or in-flight *while queueing for admission* resolve without a
+//!    slot — a batch never waits out admission it no longer needs;
+//! 3. **dispatch or wait** (lock released around the backend) — any
+//!    session whose results are still pending takes the parked backend
+//!    and evaluates the *entire* queue — its own claims and everyone
+//!    else's — in one `evaluate_batch_tagged` call, then completes the
+//!    slots, memoizes the cacheable results, and wakes all waiters.
+//!    Batches admitted while the backend is busy therefore *coalesce*
+//!    into the next dispatch, which is where the overlap pays: small
+//!    per-session batches combine to fill the backend's worker pool
+//!    instead of underfilling it one batch at a time
+//!    (`benches/perf_broker_overlap.rs` measures exactly this).
+//!
+//! Failure rules: a transient transport failure (`cacheable: false`
+//! from the backend) completes its slot and wakes every waiter, but is
+//! never memoized and never reaches the persistent store — the
+//! in-flight entry is simply removed so the next resample retries. A
+//! backend that *panics* mid-dispatch can never be parked again; the
+//! broker marks it lost and every blocked or future session panics
+//! instead of hanging (`tests/broker_admission.rs`).
+//!
+//! Because every backend evaluation is a deterministic function of
+//! (space, task, seed, decisions), neither coalescing nor overlap can
+//! change *what* a scenario computes — each scenario stays
+//! bit-identical to its standalone run for the same controller seed
+//! whatever the interleaving (`tests/sweep_equivalence.rs`,
+//! `tests/broker_admission.rs`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::search::evaluator::{EvalResult, EvalStats, Evaluator};
 use crate::search::parallel::{joint_key, MemoCache};
@@ -70,14 +116,55 @@ const PERSISTED_OWNER: u64 = u64::MAX;
 /// failover results out of *its* cache independently of the broker.
 const BROKER_CACHE_CAPACITY: usize = 64 * 1024;
 
-/// Everything the broker mutex guards: the backend, the cross-search
-/// cache (values carry the id of the session that paid for them, so
-/// cross-session hits can be told apart from a session re-hitting its
-/// own keys), and the global counters.
-struct BrokerCore {
-    backend: Box<dyn Evaluator + Send>,
-    cache: MemoCache<(EvalResult, u64)>,
-    /// Cross-run persistence: pre-loaded into `cache` at open (owner
+/// Panic message when the state mutex itself was poisoned (a panic in
+/// broker code while holding the lock — never expected).
+const POISONED: &str = "evaluation broker state poisoned";
+
+/// Panic message propagated to every session once the backend panicked
+/// mid-dispatch and can never be parked again.
+const BACKEND_LOST: &str = "evaluation broker poisoned by a panicked backend";
+
+/// One in-progress (or queued) backend evaluation. Created by the
+/// session that *claims* the key (it pays for the eval in its stats);
+/// completed exactly once by whichever session dispatches it; read by
+/// every session waiting on the key.
+struct InflightSlot {
+    /// Session that claimed the key — the cache entry's owner tag, and
+    /// what tells an in-batch duplicate ("my own claim") apart from a
+    /// genuine cross-session mid-flight hit.
+    owner: u64,
+    /// `None` until dispatched; then the result and its cacheable
+    /// marker. Only ever accessed with the broker state lock held, but
+    /// waiters hold `Arc`s to slots across lock releases, so the field
+    /// needs its own interior mutability.
+    outcome: Mutex<Option<(EvalResult, bool)>>,
+}
+
+impl InflightSlot {
+    fn outcome(&self) -> Option<(EvalResult, bool)> {
+        *self.outcome.lock().expect(POISONED)
+    }
+
+    fn complete(&self, r: EvalResult, cacheable: bool) {
+        *self.outcome.lock().expect(POISONED) = Some((r, cacheable));
+    }
+}
+
+/// A claimed key parked in the dispatch queue, waiting for a session
+/// to drive it (and whatever else is queued) through the backend.
+struct QueuedEval {
+    nas_d: Vec<usize>,
+    has_d: Vec<usize>,
+    key: Vec<usize>,
+    slot: Arc<InflightSlot>,
+}
+
+/// Lock-held tier: the cross-search memo cache, the persistent spill
+/// store, and the broker-global counters. Nothing here is ever touched
+/// without the state lock.
+struct CacheTier {
+    memo: MemoCache<(EvalResult, u64)>,
+    /// Cross-run persistence: pre-loaded into `memo` at open (owner
     /// [`PERSISTED_OWNER`]), appended to on every cacheable fresh
     /// evaluation, flushed when the broker drops.
     store: Option<CacheStore>,
@@ -88,105 +175,254 @@ struct BrokerCore {
     invalid: usize,
     cross_session_hits: usize,
     persisted_hits: usize,
+    inflight_hits: usize,
 }
 
-/// What one admitted batch did, for the session's own bookkeeping.
-struct BatchReceipt {
-    results: Vec<EvalResult>,
-    evals: usize,
-    invalid: usize,
-    cross_session_hits: usize,
-    persisted_hits: usize,
+/// Dispatch tier: everything between the cache and the backend. The
+/// *state* lives under the same lock as [`CacheTier`], but the backend
+/// call itself always runs with the lock released — the backend is
+/// checked out (`backend.take()`), driven, and parked back.
+struct DispatchTier {
+    /// The one evaluation backend; `None` while a session has it
+    /// checked out for a dispatch.
+    backend: Option<Box<dyn Evaluator + Send>>,
+    /// The backend panicked mid-dispatch and will never come home;
+    /// every session propagates [`BACKEND_LOST`] instead of waiting.
+    backend_lost: bool,
+    /// Joint key → slot for every claimed-but-unfinished evaluation.
+    /// Entries are removed the moment their slot completes, so a later
+    /// request for a key whose eval *failed* misses here and retries.
+    inflight: HashMap<Vec<usize>, Arc<InflightSlot>>,
+    /// Claimed keys not yet handed to the backend, in claim order. The
+    /// next dispatch takes the whole queue, so batches from different
+    /// sessions coalesce into one backend call.
+    queue: Vec<QueuedEval>,
+    /// Session batches currently admitted (claimed keys and not yet
+    /// fully resolved). Admission blocks while `admitted >=
+    /// inflight_limit`.
+    admitted: usize,
+    /// Effective admission limit: `--broker-inflight` clamped to
+    /// `capacity`.
+    inflight_limit: usize,
+    /// The backend's [`Evaluator::capacity`] hint, frozen at build.
+    capacity: usize,
+    dispatches: usize,
+    coalesced_dispatches: usize,
+    peak_admitted: usize,
+}
+
+/// What the one state mutex guards: both tiers.
+struct BrokerState {
+    cache: CacheTier,
+    dispatch: DispatchTier,
+}
+
+/// How one key resolved against the cache and in-flight table.
+enum Resolution {
+    /// Memoized: the result and its owner tag.
+    Hit(EvalResult, u64),
+    /// Claimed by some batch already; wait on its slot.
+    Wait(Arc<InflightSlot>),
+    /// Unknown: the caller may claim it (after admission).
+    Miss,
+}
+
+impl BrokerState {
+    fn resolve(&mut self, key: &[usize]) -> Resolution {
+        if let Some((r, owner)) = self.cache.memo.get(key) {
+            return Resolution::Hit(r, owner);
+        }
+        if let Some(slot) = self.dispatch.inflight.get(key) {
+            return Resolution::Wait(slot.clone());
+        }
+        Resolution::Miss
+    }
+}
+
+/// The shared immutable shell: state mutex + the condvar every wait in
+/// the broker (admission, backend checkout, slot completion) goes
+/// through.
+struct BrokerCore {
+    state: Mutex<BrokerState>,
+    progress: Condvar,
 }
 
 impl BrokerCore {
-    /// Admit one session batch: resolve cross-search cache hits, dedup
-    /// the misses (first-seen order, exactly like the per-evaluator
-    /// `BatchPlan`), evaluate them in one backend call, memoize the
-    /// cacheable results, and reassemble in batch order.
-    fn run(&mut self, session: u64, batch: &[(Vec<usize>, Vec<usize>)]) -> BatchReceipt {
-        self.requests += batch.len();
-        let mut results: Vec<Option<EvalResult>> = vec![None; batch.len()];
-        let mut cross = 0usize;
-        let mut persisted = 0usize;
-        // Deduped misses: (first batch slot, joint key), first-seen order.
-        let mut pending: Vec<(usize, Vec<usize>)> = Vec::new();
-        let mut waiting: HashMap<Vec<usize>, Vec<usize>> = HashMap::new();
-        for (i, (nas_d, has_d)) in batch.iter().enumerate() {
-            let key = joint_key(nas_d, has_d);
-            if let Some((r, owner)) = self.cache.get(&key) {
-                if owner == PERSISTED_OWNER {
-                    persisted += 1;
-                } else if owner != session {
-                    cross += 1;
-                }
-                results[i] = Some(r);
-            } else {
-                let slots = waiting.entry(key.clone()).or_default();
-                if slots.is_empty() {
-                    pending.push((i, key));
-                }
-                slots.push(i);
-            }
+    fn lock_state(&self) -> MutexGuard<'_, BrokerState> {
+        self.state.lock().expect(POISONED)
+    }
+}
+
+/// Marks the backend lost if a dispatch unwinds (backend panic), so
+/// blocked sessions panic loudly instead of waiting forever for a
+/// backend that will never be parked again.
+struct DispatchGuard<'a> {
+    core: &'a BrokerCore,
+    defused: bool,
+}
+
+impl Drop for DispatchGuard<'_> {
+    fn drop(&mut self) {
+        if self.defused {
+            return;
         }
-        let evals = pending.len();
-        if evals > 0 {
-            let misses: Vec<(Vec<usize>, Vec<usize>)> =
-                pending.iter().map(|(i, _)| batch[*i].clone()).collect();
-            let fresh = self.backend.evaluate_batch_tagged(&misses);
-            assert_eq!(fresh.len(), evals, "backend must preserve batch length");
-            for ((_, key), (r, cacheable)) in pending.into_iter().zip(fresh) {
-                for &slot in &waiting[&key] {
-                    results[slot] = Some(r);
-                }
-                // A transient transport failure must not be memoized —
-                // and, a fortiori, must never reach the persistent
-                // store: a later resample (from any session, or a
-                // whole later run) has to retry it.
-                if cacheable {
-                    if let Some(store) = &mut self.store {
-                        store.append(&key, &r);
-                    }
-                    self.cache.insert(key, (r, session));
-                }
+        // Never panic in Drop during an unwind: tolerate poisoning.
+        let mut st = match self.core.state.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        st.dispatch.backend_lost = true;
+        self.core.progress.notify_all();
+    }
+}
+
+/// Take the parked backend, evaluate the whole dispatch queue in one
+/// call with the state lock released, then park it back, complete the
+/// slots, memoize/spill the cacheable results, and wake everyone.
+fn dispatch_chunk<'a>(
+    core: &'a BrokerCore,
+    mut st: MutexGuard<'a, BrokerState>,
+) -> MutexGuard<'a, BrokerState> {
+    let mut backend = st.dispatch.backend.take().expect("dispatch requires a parked backend");
+    let chunk: Vec<QueuedEval> = std::mem::take(&mut st.dispatch.queue);
+    st.dispatch.dispatches += 1;
+    let mut owners: Vec<u64> = chunk.iter().map(|q| q.slot.owner).collect();
+    owners.sort_unstable();
+    owners.dedup();
+    if owners.len() > 1 {
+        st.dispatch.coalesced_dispatches += 1;
+    }
+    drop(st);
+
+    let misses: Vec<(Vec<usize>, Vec<usize>)> =
+        chunk.iter().map(|q| (q.nas_d.clone(), q.has_d.clone())).collect();
+    let fresh = {
+        let mut guard = DispatchGuard { core, defused: false };
+        let fresh = backend.evaluate_batch_tagged(&misses);
+        // Check while the guard is still armed: a length-lying backend
+        // must mark itself lost, not strand every waiter.
+        assert_eq!(fresh.len(), chunk.len(), "backend must preserve batch length");
+        guard.defused = true;
+        fresh
+    };
+
+    let mut st = core.lock_state();
+    for (q, (r, cacheable)) in chunk.into_iter().zip(fresh) {
+        st.dispatch.inflight.remove(&q.key);
+        q.slot.complete(r, cacheable);
+        // A transient transport failure must not be memoized — and, a
+        // fortiori, must never reach the persistent store: a later
+        // resample (from any session, or a whole later run) has to
+        // retry it. Its waiters still wake with the invalid result.
+        if cacheable {
+            if let Some(store) = &mut st.cache.store {
+                store.append(&q.key, &r);
             }
+            let owner = q.slot.owner;
+            st.cache.memo.insert(q.key, (r, owner));
         }
-        let results: Vec<EvalResult> =
-            results.into_iter().map(|r| r.expect("all batch slots resolved")).collect();
-        let invalid = results.iter().filter(|r| !r.valid).count();
-        self.evals += evals;
-        self.invalid += invalid;
-        self.cross_session_hits += cross;
-        self.persisted_hits += persisted;
-        BatchReceipt {
-            results,
-            evals,
-            invalid,
-            cross_session_hits: cross,
-            persisted_hits: persisted,
+    }
+    st.dispatch.backend = Some(backend);
+    core.progress.notify_all();
+    st
+}
+
+/// Per-batch resolution bookkeeping: the partially filled results,
+/// the slots the batch waits on (own claims and foreign waits), and
+/// the hit counters by kind. One place owns the counting rules, so
+/// the resolve pass and the post-admission re-resolve can never
+/// account a hit differently.
+struct BatchTally {
+    results: Vec<Option<EvalResult>>,
+    waited: Vec<(usize, Arc<InflightSlot>)>,
+    cross: usize,
+    persisted: usize,
+    inflight_hits: usize,
+}
+
+impl BatchTally {
+    fn new(len: usize) -> Self {
+        BatchTally {
+            results: vec![None; len],
+            waited: Vec::new(),
+            cross: 0,
+            persisted: 0,
+            inflight_hits: 0,
         }
     }
 
-    fn stats(&self) -> EvalStats {
-        let backend = self.backend.stats();
-        EvalStats {
-            requests: self.requests,
-            evals: self.evals,
-            cache_hits: self.requests - self.evals,
-            invalid: self.invalid,
-            cross_session_hits: self.cross_session_hits,
-            persisted_hits: self.persisted_hits,
-            hosts_down: backend.hosts_down,
-            per_host: backend.per_host,
+    /// Absorb a cache hit or in-flight wait for batch slot `i`,
+    /// counting it against the right bucket given who paid for it
+    /// (`me` being this session's id). `false` for a miss — the
+    /// caller claims it (once admitted).
+    fn absorb(&mut self, i: usize, res: Resolution, me: u64) -> bool {
+        match res {
+            Resolution::Hit(r, owner) => {
+                if owner == PERSISTED_OWNER {
+                    self.persisted += 1;
+                } else if owner != me {
+                    self.cross += 1;
+                }
+                self.results[i] = Some(r);
+                true
+            }
+            Resolution::Wait(slot) => {
+                // Mid-flight dedup: the key is already being evaluated
+                // (on another session's dime unless it is this batch's
+                // own earlier claim) — wait for that instead of
+                // dispatching it a second time.
+                if slot.owner != me {
+                    self.cross += 1;
+                    self.inflight_hits += 1;
+                }
+                self.waited.push((i, slot));
+                true
+            }
+            Resolution::Miss => false,
         }
     }
+}
+
+/// Overlap telemetry of one broker: how much concurrent admission
+/// actually happened ([`EvalBroker::overlap_stats`], printed by `nahas
+/// sweep`).
+#[derive(Clone, Debug)]
+pub struct BrokerOverlapStats {
+    /// Effective admission limit (`--broker-inflight` clamped to the
+    /// backend capacity).
+    pub inflight_limit: usize,
+    /// The backend's [`Evaluator::capacity`] hint.
+    pub capacity: usize,
+    /// Backend `evaluate_batch_tagged` calls made.
+    pub dispatches: usize,
+    /// Dispatches whose chunk combined claims from more than one
+    /// session — the overlap actually paying off.
+    pub coalesced_dispatches: usize,
+    /// Most session batches ever in flight at once.
+    pub peak_admitted: usize,
 }
 
 /// Shared handle to one evaluation backend. Cheap to clone; create one
 /// [`BrokerSession`] per concurrent search with [`EvalBroker::session`].
+///
+/// # Examples
+///
+/// ```
+/// use nahas::has::HasSpace;
+/// use nahas::nas::{NasSpace, NasSpaceId};
+/// use nahas::search::{EvalBroker, Evaluator, SurrogateSim};
+///
+/// let space = NasSpace::new(NasSpaceId::EfficientNet);
+/// let nas_d = vec![0; space.num_decisions()];
+/// let broker = EvalBroker::new(Box::new(SurrogateSim::new(space, 3)));
+/// let mut session = broker.session(); // one per concurrent search
+/// let r = session.evaluate(&nas_d, &HasSpace::new().baseline_decisions());
+/// assert!(r.valid);
+/// assert_eq!(broker.stats().evals, 1);
+/// ```
 #[derive(Clone)]
 pub struct EvalBroker {
-    core: Arc<Mutex<BrokerCore>>,
+    core: Arc<BrokerCore>,
     next_session: Arc<AtomicU64>,
 }
 
@@ -195,7 +431,9 @@ impl EvalBroker {
     /// (local), `ParallelSim`, `ServiceEvaluator`, `ShardedEvaluator` —
     /// as long as it evaluates a sample as a pure function of its
     /// decisions, which is the contract every tier already pins in
-    /// `tests/parallel_equivalence.rs`.
+    /// `tests/parallel_equivalence.rs`. The admission limit defaults to
+    /// the backend's [`Evaluator::capacity`] hint (1 for the local
+    /// tier, so single-backend runs stay strictly serial).
     pub fn new(backend: Box<dyn Evaluator + Send>) -> Self {
         Self::build(backend, None)
     }
@@ -219,36 +457,71 @@ impl EvalBroker {
         // performs zero backend evals" only holds if no persisted entry
         // is evicted before it is re-requested, so a file that outgrew
         // the default capacity sizes the cache up to fit it.
-        let mut cache = MemoCache::new(BROKER_CACHE_CAPACITY.max(persisted_loaded));
+        let mut memo = MemoCache::new(BROKER_CACHE_CAPACITY.max(persisted_loaded));
         for (key, r) in loaded {
-            cache.insert(key, (r, PERSISTED_OWNER));
+            memo.insert(key, (r, PERSISTED_OWNER));
         }
+        let capacity = backend.capacity().max(1);
         EvalBroker {
-            core: Arc::new(Mutex::new(BrokerCore {
-                backend,
-                cache,
-                store,
-                persisted_loaded,
-                requests: 0,
-                evals: 0,
-                invalid: 0,
-                cross_session_hits: 0,
-                persisted_hits: 0,
-            })),
+            core: Arc::new(BrokerCore {
+                state: Mutex::new(BrokerState {
+                    cache: CacheTier {
+                        memo,
+                        store,
+                        persisted_loaded,
+                        requests: 0,
+                        evals: 0,
+                        invalid: 0,
+                        cross_session_hits: 0,
+                        persisted_hits: 0,
+                        inflight_hits: 0,
+                    },
+                    dispatch: DispatchTier {
+                        backend: Some(backend),
+                        backend_lost: false,
+                        inflight: HashMap::new(),
+                        queue: Vec::new(),
+                        admitted: 0,
+                        inflight_limit: capacity,
+                        capacity,
+                        dispatches: 0,
+                        coalesced_dispatches: 0,
+                        peak_admitted: 0,
+                    },
+                }),
+                progress: Condvar::new(),
+            }),
             next_session: Arc::new(AtomicU64::new(0)),
         }
+    }
+
+    /// Set the admission limit (CLI `--broker-inflight N`): how many
+    /// session batches may be in flight concurrently. Clamped to
+    /// `1..=capacity`, where capacity is the backend's
+    /// [`Evaluator::capacity`] hint — a backend that can only serve
+    /// one caller (the local tier) is never over-admitted, so the
+    /// serial path is untouched whatever the flag says. `1` restores
+    /// the pre-admission behavior: strictly one session batch at a
+    /// time.
+    pub fn with_inflight_limit(self, limit: usize) -> Self {
+        {
+            let mut st = self.core.lock_state();
+            let cap = st.dispatch.capacity;
+            st.dispatch.inflight_limit = limit.clamp(1, cap);
+        }
+        self
     }
 
     /// Entries pre-loaded from the persistent store (0 without one) —
     /// the warm-start inventory this broker started with.
     pub fn persisted_loaded(&self) -> usize {
-        self.lock().persisted_loaded
+        self.core.lock_state().cache.persisted_loaded
     }
 
     /// Push buffered store appends to disk now (they are also flushed
     /// when the broker drops). No-op without a store.
     pub fn flush_store(&self) {
-        if let Some(store) = &mut self.lock().store {
+        if let Some(store) = &mut self.core.lock_state().cache.store {
             store.flush();
         }
     }
@@ -265,27 +538,61 @@ impl EvalBroker {
             invalid: 0,
             cross_session_hits: 0,
             persisted_hits: 0,
+            inflight_hits: 0,
         }
     }
 
     /// Whole-broker counters (the sum of every session's delta), plus
     /// the backend's pool view (`hosts_down`, `per_host`) so operators
     /// keep per-host attribution when the backend is the cluster tier.
+    /// Waits out any dispatch in progress.
     pub fn stats(&self) -> EvalStats {
-        self.lock().stats()
+        let st = self.lock_with_backend();
+        let backend = st.dispatch.backend.as_ref().expect("backend parked").stats();
+        EvalStats {
+            requests: st.cache.requests,
+            evals: st.cache.evals,
+            cache_hits: st.cache.requests - st.cache.evals,
+            invalid: st.cache.invalid,
+            cross_session_hits: st.cache.cross_session_hits,
+            persisted_hits: st.cache.persisted_hits,
+            inflight_hits: st.cache.inflight_hits,
+            hosts_down: backend.hosts_down,
+            per_host: backend.per_host,
+        }
     }
 
     /// The backend's own counters. `backend_stats().requests` equals
     /// `stats().evals`: the backend sees exactly the broker's deduped
-    /// misses, nothing else.
+    /// misses, nothing else. Waits out any dispatch in progress.
     pub fn backend_stats(&self) -> EvalStats {
-        self.lock().backend.stats()
+        self.lock_with_backend().dispatch.backend.as_ref().expect("backend parked").stats()
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, BrokerCore> {
-        // A poisoned lock means a backend panicked mid-batch; there is
-        // no sane way to continue the sweep, so propagate.
-        self.core.lock().expect("evaluation broker poisoned by a panicked backend")
+    /// How much admission overlap this broker has seen so far.
+    pub fn overlap_stats(&self) -> BrokerOverlapStats {
+        let st = self.core.lock_state();
+        BrokerOverlapStats {
+            inflight_limit: st.dispatch.inflight_limit,
+            capacity: st.dispatch.capacity,
+            dispatches: st.dispatch.dispatches,
+            coalesced_dispatches: st.dispatch.coalesced_dispatches,
+            peak_admitted: st.dispatch.peak_admitted,
+        }
+    }
+
+    /// Lock the state with the backend parked, waiting out any
+    /// dispatch in progress, so the caller can read the backend's own
+    /// counters.
+    fn lock_with_backend(&self) -> MutexGuard<'_, BrokerState> {
+        let mut st = self.core.lock_state();
+        while st.dispatch.backend.is_none() {
+            if st.dispatch.backend_lost {
+                panic!("{BACKEND_LOST}");
+            }
+            st = self.core.progress.wait(st).expect(POISONED);
+        }
+        st
     }
 }
 
@@ -293,13 +600,14 @@ impl EvalBroker {
 /// [`Evaluator`], so the batch-structured drivers use it like any
 /// other tier; `stats()` reports this session's delta only.
 pub struct BrokerSession {
-    core: Arc<Mutex<BrokerCore>>,
+    core: Arc<BrokerCore>,
     id: u64,
     requests: usize,
     evals: usize,
     invalid: usize,
     cross_session_hits: usize,
     persisted_hits: usize,
+    inflight_hits: usize,
 }
 
 impl Evaluator for BrokerSession {
@@ -311,17 +619,118 @@ impl Evaluator for BrokerSession {
         if batch.is_empty() {
             return Vec::new();
         }
-        let receipt = self
-            .core
-            .lock()
-            .expect("evaluation broker poisoned by a panicked backend")
-            .run(self.id, batch);
+        let core = self.core.clone();
+        let keys: Vec<Vec<usize>> = batch.iter().map(|(n, h)| joint_key(n, h)).collect();
+        let mut tally = BatchTally::new(batch.len());
+        let mut claimed = 0usize;
+        let mut admitted_here = false;
+
+        // Step 1 — resolve against the cache tier and in-flight table.
+        let mut st = core.lock_state();
+        let mut fresh: Vec<usize> = Vec::new();
+        for (i, key) in keys.iter().enumerate() {
+            let res = st.resolve(key);
+            if !tally.absorb(i, res, self.id) {
+                fresh.push(i);
+            }
+        }
+
+        // Step 2 — only *genuinely unknown* keys need an admission
+        // slot before they may be claimed; keys that become cached or
+        // in-flight while we queue for one are absorbed without it, so
+        // a batch never holds out for admission it no longer needs.
+        while !fresh.is_empty() {
+            if st.dispatch.backend_lost {
+                panic!("{BACKEND_LOST}");
+            }
+            if st.dispatch.admitted >= st.dispatch.inflight_limit {
+                st = core.progress.wait(st).expect(POISONED);
+                // The world moved while we waited: anything another
+                // batch claimed or finished meanwhile resolves here —
+                // possibly emptying `fresh` and skipping admission
+                // entirely.
+                fresh.retain(|&i| {
+                    let res = st.resolve(&keys[i]);
+                    !tally.absorb(i, res, self.id)
+                });
+                continue;
+            }
+            // Admitted: claim everything still unknown, re-resolving
+            // as we go (earlier claims of this very batch put
+            // in-flight entries in front of duplicate keys).
+            for i in std::mem::take(&mut fresh) {
+                let res = st.resolve(&keys[i]);
+                if tally.absorb(i, res, self.id) {
+                    continue;
+                }
+                if !admitted_here {
+                    admitted_here = true;
+                    st.dispatch.admitted += 1;
+                    st.dispatch.peak_admitted =
+                        st.dispatch.peak_admitted.max(st.dispatch.admitted);
+                }
+                claimed += 1;
+                let slot = Arc::new(InflightSlot { owner: self.id, outcome: Mutex::new(None) });
+                st.dispatch.inflight.insert(keys[i].clone(), slot.clone());
+                st.dispatch.queue.push(QueuedEval {
+                    nas_d: batch[i].0.clone(),
+                    has_d: batch[i].1.clone(),
+                    key: keys[i].clone(),
+                    slot: slot.clone(),
+                });
+                tally.waited.push((i, slot));
+            }
+        }
+
+        // Step 3 — dispatch or wait until every slot has an outcome.
+        // Any session may drive the backend: the queue holds claims
+        // from every admitted batch, so whoever dispatches next
+        // coalesces them into one backend call.
+        loop {
+            let mut pending = false;
+            for (i, slot) in &tally.waited {
+                if tally.results[*i].is_none() {
+                    match slot.outcome() {
+                        Some((r, _cacheable)) => tally.results[*i] = Some(r),
+                        None => pending = true,
+                    }
+                }
+            }
+            if !pending {
+                break;
+            }
+            if st.dispatch.backend_lost {
+                panic!("{BACKEND_LOST}");
+            }
+            if st.dispatch.backend.is_some() && !st.dispatch.queue.is_empty() {
+                st = dispatch_chunk(&core, st);
+            } else {
+                st = core.progress.wait(st).expect(POISONED);
+            }
+        }
+
+        let results: Vec<EvalResult> =
+            tally.results.into_iter().map(|r| r.expect("all batch slots resolved")).collect();
+        let invalid = results.iter().filter(|r| !r.valid).count();
+        st.cache.requests += batch.len();
+        st.cache.evals += claimed;
+        st.cache.invalid += invalid;
+        st.cache.cross_session_hits += tally.cross;
+        st.cache.persisted_hits += tally.persisted;
+        st.cache.inflight_hits += tally.inflight_hits;
+        if admitted_here {
+            st.dispatch.admitted -= 1;
+        }
+        drop(st);
+        core.progress.notify_all();
+
         self.requests += batch.len();
-        self.evals += receipt.evals;
-        self.invalid += receipt.invalid;
-        self.cross_session_hits += receipt.cross_session_hits;
-        self.persisted_hits += receipt.persisted_hits;
-        receipt.results
+        self.evals += claimed;
+        self.invalid += invalid;
+        self.cross_session_hits += tally.cross;
+        self.persisted_hits += tally.persisted;
+        self.inflight_hits += tally.inflight_hits;
+        results
     }
 
     fn stats(&self) -> EvalStats {
@@ -332,6 +741,7 @@ impl Evaluator for BrokerSession {
             invalid: self.invalid,
             cross_session_hits: self.cross_session_hits,
             persisted_hits: self.persisted_hits,
+            inflight_hits: self.inflight_hits,
             ..Default::default()
         }
     }
@@ -375,6 +785,7 @@ mod tests {
         assert_eq!(sb.evals, 0);
         assert_eq!(sb.cache_hits, 12);
         assert_eq!(sb.cross_session_hits, 12);
+        assert_eq!(sb.inflight_hits, 0, "sequential sessions never overlap mid-flight");
         // Against a serial reference: broker values are bit-identical.
         let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
         for ((n, h), r) in batch.iter().zip(&ra) {
@@ -409,6 +820,7 @@ mod tests {
         assert_eq!(merged.cache_hits, global.cache_hits);
         assert_eq!(merged.invalid, global.invalid);
         assert_eq!(merged.cross_session_hits, global.cross_session_hits);
+        assert_eq!(merged.inflight_hits, global.inflight_hits);
         assert_eq!(merged.evals, 16, "10 + 6 unique keys");
         assert_eq!(merged.cross_session_hits, 10, "only B's replay of A's keys is cross");
         // The backend saw exactly the broker's deduped misses.
@@ -437,9 +849,30 @@ mod tests {
         let g = broker.stats();
         assert_eq!(g.requests, 64);
         assert_eq!(g.evals, 16, "each unique key evaluated exactly once");
-        // Whichever session won the race paid; the other three hit.
+        // Whichever session won the race paid; the other three hit —
+        // via the cache or by waiting on the keys mid-flight.
         assert_eq!(g.cross_session_hits, 48);
+        assert!(g.inflight_hits <= g.cross_session_hits);
         assert_eq!(broker.backend_stats().requests, 16);
+    }
+
+    #[test]
+    fn inflight_limit_clamps_to_backend_capacity() {
+        // parallel advertises its worker count; the flag can narrow
+        // but never exceed it.
+        let backend = ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3, 4);
+        let broker = EvalBroker::new(Box::new(backend));
+        assert_eq!(broker.overlap_stats().capacity, 4);
+        assert_eq!(broker.overlap_stats().inflight_limit, 4, "defaults to capacity");
+        let broker = broker.with_inflight_limit(64);
+        assert_eq!(broker.overlap_stats().inflight_limit, 4, "clamped to capacity");
+        let broker = broker.with_inflight_limit(2);
+        assert_eq!(broker.overlap_stats().inflight_limit, 2);
+        // local advertises 1: the serial path is untouched whatever
+        // the flag says.
+        let serial = EvalBroker::new(sim_backend()).with_inflight_limit(16);
+        assert_eq!(serial.overlap_stats().capacity, 1);
+        assert_eq!(serial.overlap_stats().inflight_limit, 1);
     }
 
     /// Backend that fails the first call to every key (uncacheable
@@ -525,8 +958,9 @@ mod tests {
         let mut b = broker.session();
         let batch = vec![(vec![1, 2], vec![3, 4])];
         assert!(!a.evaluate_batch(&batch)[0].valid, "first attempt fails");
-        // The failure was not cached: B's request retries the backend
-        // and succeeds; only now is the key memoized.
+        // The failure was not cached — and its in-flight entry is
+        // gone: B's request retries the backend and succeeds; only
+        // now is the key memoized.
         assert!(b.evaluate_batch(&batch)[0].valid, "retry reaches the backend");
         assert!(a.evaluate_batch(&batch)[0].valid, "success is memoized");
         let g = broker.stats();

@@ -75,8 +75,11 @@ impl HostEvalStats {
 /// broker tier ([`crate::search::EvalBroker`]) splits out
 /// `cross_session_hits`: hits on keys first evaluated by a *different*
 /// search session — the work a concurrent sweep saved by sharing one
-/// broker. The cluster tier additionally reports its host pool:
-/// `hosts_down` and one [`HostEvalStats`] per configured host.
+/// broker (`inflight_hits` further isolates the requests that were
+/// deduplicated *mid-flight*, i.e. served by waiting on an evaluation
+/// another session had already dispatched). The cluster tier
+/// additionally reports its host pool: `hosts_down` and one
+/// [`HostEvalStats`] per configured host.
 #[derive(Clone, Debug, Default)]
 pub struct EvalStats {
     pub requests: usize,
@@ -91,6 +94,13 @@ pub struct EvalStats {
     /// [`crate::search::store::CacheStore`] attached only; 0
     /// elsewhere) — the warm-start savings of `--cache-dir`.
     pub persisted_hits: usize,
+    /// Of `cross_session_hits`, requests that arrived while their key
+    /// was *in flight* — already claimed by another session's batch
+    /// but not yet finished — and were served by waiting on that
+    /// evaluation instead of dispatching it a second time (broker
+    /// tier with admission overlap only; 0 elsewhere). The in-flight
+    /// dedup savings of `--broker-inflight`.
+    pub inflight_hits: usize,
     /// Hosts currently marked down (cluster tier only; 0 elsewhere).
     pub hosts_down: usize,
     /// Per-host counters (cluster tier only; empty elsewhere).
@@ -136,6 +146,7 @@ impl EvalStats {
                 .cross_session_hits
                 .saturating_sub(earlier.cross_session_hits),
             persisted_hits: self.persisted_hits.saturating_sub(earlier.persisted_hits),
+            inflight_hits: self.inflight_hits.saturating_sub(earlier.inflight_hits),
             hosts_down: self.hosts_down,
             per_host,
         }
@@ -171,6 +182,7 @@ impl EvalStats {
             invalid: self.invalid + other.invalid,
             cross_session_hits: self.cross_session_hits + other.cross_session_hits,
             persisted_hits: self.persisted_hits + other.persisted_hits,
+            inflight_hits: self.inflight_hits + other.inflight_hits,
             hosts_down,
             per_host,
         }
@@ -236,6 +248,24 @@ pub trait Evaluator {
     /// Counters for throughput/cache reporting (zeroes by default).
     fn stats(&self) -> EvalStats {
         EvalStats::default()
+    }
+
+    /// Concurrency-capacity hint for the broker's admission control
+    /// ([`crate::search::EvalBroker`], CLI `--broker-inflight`): how
+    /// many samples this evaluator can usefully work on at once. The
+    /// broker admits up to `min(--broker-inflight, capacity)` session
+    /// batches concurrently, coalescing their misses into shared
+    /// backend calls, so a hint of `1` (the default — a strictly
+    /// serial evaluator) keeps the dispatch path exactly
+    /// one-batch-at-a-time. Parallel tiers advertise their fan-out:
+    /// worker threads ([`crate::search::ParallelSim`]), service
+    /// connections ([`crate::service::ServiceEvaluator`]), or the
+    /// pooled cluster connections
+    /// ([`crate::cluster::ShardedEvaluator`]). A hint, not a contract:
+    /// over- or under-advertising only changes scheduling, never any
+    /// result.
+    fn capacity(&self) -> usize {
+        1
     }
 }
 
@@ -488,6 +518,7 @@ mod tests {
             invalid: 1,
             cross_session_hits: 3,
             persisted_hits: 1,
+            inflight_hits: 2,
             ..Default::default()
         };
         let b = EvalStats {
@@ -502,10 +533,12 @@ mod tests {
         assert_eq!(m.requests, 15);
         assert_eq!(m.cross_session_hits, 3);
         assert_eq!(m.persisted_hits, 1);
+        assert_eq!(m.inflight_hits, 2);
         let d = m.since(&b);
         assert_eq!(d.requests, 10);
         assert_eq!(d.cross_session_hits, 3);
         assert_eq!(d.persisted_hits, 1);
+        assert_eq!(d.inflight_hits, 2);
     }
 
     #[test]

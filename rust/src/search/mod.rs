@@ -43,7 +43,7 @@ pub mod reward;
 pub mod store;
 pub mod sweep;
 
-pub use broker::{BrokerSession, EvalBroker};
+pub use broker::{BrokerOverlapStats, BrokerSession, EvalBroker};
 pub use evaluator::{EvalResult, EvalStats, Evaluator, HostEvalStats, SurrogateSim, Task};
 pub use joint::{joint_search, Sample, SearchCfg, SearchOutcome};
 pub use parallel::{joint_key, MemoCache, ParallelSim};

@@ -288,6 +288,12 @@ impl Evaluator for ParallelSim {
     fn stats(&self) -> EvalStats {
         self.counters.stats()
     }
+
+    /// A batch fans out over up to `workers` scoped threads, so the
+    /// broker may usefully keep that many session batches in flight.
+    fn capacity(&self) -> usize {
+        self.workers
+    }
 }
 
 #[cfg(test)]

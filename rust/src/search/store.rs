@@ -187,6 +187,29 @@ fn decode_key(s: &str) -> Option<Vec<usize>> {
 /// Disk-backed, append-only cache of `joint key -> V`, with a
 /// fingerprint header guarding staleness. See the module docs for the
 /// format and the safety rules.
+///
+/// # Examples
+///
+/// ```
+/// use nahas::search::{CacheStore, EvalResult};
+///
+/// let path =
+///     std::env::temp_dir().join(format!("nahas-store-doc-{}.cache", std::process::id()));
+/// # let _ = std::fs::remove_file(&path);
+/// {
+///     let mut store: CacheStore = CacheStore::open(&path, "eval/doc-example").unwrap();
+///     store.append(&[3, 1, 4], &EvalResult { acc: 0.76, valid: true, ..Default::default() });
+/// } // Dropping flushes.
+///
+/// // A later run with the same fingerprint warm-starts from the file.
+/// let mut store: CacheStore = CacheStore::open(&path, "eval/doc-example").unwrap();
+/// assert!(store.discarded().is_none());
+/// let loaded = store.take_loaded();
+/// assert_eq!(loaded.len(), 1);
+/// assert_eq!(loaded[0].0, vec![3, 1, 4]);
+/// assert_eq!(loaded[0].1.acc.to_bits(), 0.76f64.to_bits()); // exact round-trip
+/// # let _ = std::fs::remove_file(&path);
+/// ```
 pub struct CacheStore<V: CacheValue = EvalResult> {
     path: PathBuf,
     writer: BufWriter<File>,

@@ -9,9 +9,11 @@
 //! one shared [`EvalBroker`]:
 //!
 //! * every [`Scenario`] runs on its own thread with its own controller
-//!   and broker session, so the scenarios *interleave* their
-//!   evaluation batches on the shared backend instead of queueing
-//!   whole searches behind each other;
+//!   and broker session, so the scenarios *overlap* their evaluation
+//!   batches on the shared backend instead of queueing whole searches
+//!   behind each other — up to the broker's admission limit
+//!   (`--broker-inflight`, clamped to the backend's capacity hint),
+//!   concurrent batches coalesce into shared backend dispatches;
 //! * the broker's cross-search memo cache means a joint decision
 //!   discovered by one scenario is never re-evaluated by another —
 //!   sweeps over a common seed (common random numbers, the controlled-
@@ -288,6 +290,32 @@ pub fn run_scenario(broker: &EvalBroker, sc: &Scenario) -> ScenarioOutcome {
 /// Run every scenario concurrently over the shared broker (one thread
 /// and one broker session each) and merge the results. Outcomes come
 /// back in input order whatever the interleaving.
+///
+/// # Examples
+///
+/// ```no_run
+/// use nahas::nas::{NasSpace, NasSpaceId};
+/// use nahas::search::{
+///     run_sweep, scenario_grid, CostObjective, EvalBroker, ParallelSim, SweepDriver,
+/// };
+///
+/// let scenarios = scenario_grid(
+///     &[0.35, 0.5],
+///     &[CostObjective::Latency],
+///     &[SweepDriver::Joint],
+///     NasSpaceId::EfficientNet,
+///     200, // samples per scenario
+///     16,  // controller batch
+///     7,   // shared controller seed (common random numbers)
+/// );
+/// let backend = ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), 7, 4);
+/// let broker = EvalBroker::new(Box::new(backend));
+/// let sweep = run_sweep(&broker, &scenarios);
+/// for (objective, frontier) in &sweep.union {
+///     println!("{objective:?}: {} non-dominated points", frontier.len());
+/// }
+/// println!("{} cross-scenario hits", sweep.eval_stats.cross_session_hits);
+/// ```
 pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
     let t0 = Instant::now();
     // One broker backend decodes one search space; scenarios from a

@@ -751,6 +751,12 @@ impl crate::search::Evaluator for ServiceEvaluator {
     fn stats(&self) -> crate::search::EvalStats {
         self.counters.stats()
     }
+
+    /// One roundtrip can be in flight per pooled connection, so the
+    /// broker may usefully keep that many session batches admitted.
+    fn capacity(&self) -> usize {
+        self.conns.len()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,453 @@
+//! Concurrent admission control: overlapping session batches over one
+//! shared [`EvalBroker`] must never duplicate an in-flight evaluation
+//! (a key claimed by one session is *waited on*, not re-dispatched, by
+//! every other session that wants it mid-flight), per-session stats
+//! deltas must sum exactly to the broker's globals, and every result
+//! must stay bit-identical to the serial path for the same seed —
+//! whatever the interleaving, the admission limit, or the amount of
+//! dispatch coalescing.
+//!
+//! The deterministic-overlap tests use a *gated* stub backend: its
+//! first dispatch blocks until the test opens a gate, so the test can
+//! provably park one session mid-dispatch, pile further sessions onto
+//! the broker (observed via [`EvalBroker::overlap_stats`]), and only
+//! then let the world move. No sleeps-as-synchronization.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{
+    joint_key, CacheStore, EvalBroker, EvalResult, EvalStats, Evaluator, ParallelSim,
+    SurrogateSim,
+};
+use nahas::util::Rng;
+
+/// The pure function every stub backend computes, so any test can
+/// check bit-identity of a result from the key alone.
+fn det_result(nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+    let s = nas_d.iter().chain(has_d).sum::<usize>() as f64;
+    EvalResult {
+        acc: 0.5 + s * 1e-3,
+        latency_ms: 1.0 + s,
+        energy_mj: 0.25 * s,
+        area_mm2: 42.0,
+        valid: true,
+    }
+}
+
+/// Synthetic sample `i`: distinct joint key per `i`.
+fn sample(i: usize) -> (Vec<usize>, Vec<usize>) {
+    (vec![i], vec![i % 3])
+}
+
+/// Shared observer for stub backends: how often each joint key was
+/// actually evaluated by the backend (the duplicate-eval detector).
+#[derive(Default)]
+struct BackendProbe {
+    seen: Mutex<HashMap<Vec<usize>, usize>>,
+}
+
+impl BackendProbe {
+    fn record(&self, nas_d: &[usize], has_d: &[usize]) {
+        *self.seen.lock().unwrap().entry(joint_key(nas_d, has_d)).or_insert(0) += 1;
+    }
+
+    fn assert_each_key_evaluated_once(&self, expect_keys: usize, ctx: &str) {
+        let seen = self.seen.lock().unwrap();
+        assert_eq!(seen.len(), expect_keys, "{ctx}: unique keys reaching the backend");
+        for (key, count) in seen.iter() {
+            assert_eq!(*count, 1, "{ctx}: key {key:?} dispatched {count} times");
+        }
+    }
+}
+
+/// Stub backend whose FIRST dispatch blocks on a gate (and optionally
+/// fails as an uncacheable transport error); later dispatches pass
+/// straight through. Advertises a wide capacity so admission is bound
+/// by the broker's limit, not the backend hint.
+struct GatedBackend {
+    probe: Arc<BackendProbe>,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+    first_call: bool,
+    fail_first_call: bool,
+    capacity: usize,
+}
+
+impl GatedBackend {
+    fn new(probe: Arc<BackendProbe>, gate: Arc<(Mutex<bool>, Condvar)>, fail: bool) -> Self {
+        GatedBackend { probe, gate, first_call: true, fail_first_call: fail, capacity: 8 }
+    }
+}
+
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    let (open, cvar) = &**gate;
+    *open.lock().unwrap() = true;
+    cvar.notify_all();
+}
+
+impl Evaluator for GatedBackend {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        self.probe.record(nas_d, has_d);
+        det_result(nas_d, has_d)
+    }
+
+    fn evaluate_batch_tagged(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<(EvalResult, bool)> {
+        let first = self.first_call;
+        self.first_call = false;
+        if first {
+            let (open, cvar) = &*self.gate;
+            let mut open = open.lock().unwrap();
+            while !*open {
+                open = cvar.wait(open).unwrap();
+            }
+        }
+        batch
+            .iter()
+            .map(|(n, h)| {
+                self.probe.record(n, h);
+                if first && self.fail_first_call {
+                    (EvalResult::invalid(), false)
+                } else {
+                    (det_result(n, h), true)
+                }
+            })
+            .collect()
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Stub backend that just takes a while per key — enough contention
+/// for the stress test without timing-sensitive assertions.
+struct SlowBackend {
+    probe: Arc<BackendProbe>,
+}
+
+impl Evaluator for SlowBackend {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        self.probe.record(nas_d, has_d);
+        det_result(nas_d, has_d)
+    }
+
+    fn evaluate_batch_tagged(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<(EvalResult, bool)> {
+        std::thread::sleep(Duration::from_micros(200 * batch.len() as u64));
+        batch
+            .iter()
+            .map(|(n, h)| {
+                self.probe.record(n, h);
+                (det_result(n, h), true)
+            })
+            .collect()
+    }
+
+    fn capacity(&self) -> usize {
+        4
+    }
+}
+
+/// Poll a broker-observable condition instead of sleeping blind; the
+/// deadline turns a would-be deadlock into a loud failure.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+fn assert_deltas_sum_to_broker(deltas: &[EvalStats], broker: &EvalBroker, ctx: &str) {
+    let merged = deltas.iter().fold(EvalStats::default(), |acc, d| acc.merged(d));
+    let global = broker.stats();
+    assert_eq!(merged.requests, global.requests, "{ctx}: requests");
+    assert_eq!(merged.evals, global.evals, "{ctx}: evals");
+    assert_eq!(merged.cache_hits, global.cache_hits, "{ctx}: cache hits");
+    assert_eq!(merged.invalid, global.invalid, "{ctx}: invalid");
+    assert_eq!(merged.cross_session_hits, global.cross_session_hits, "{ctx}: cross hits");
+    assert_eq!(merged.persisted_hits, global.persisted_hits, "{ctx}: persisted hits");
+    assert_eq!(merged.inflight_hits, global.inflight_hits, "{ctx}: inflight hits");
+}
+
+/// A session that requests a key mid-flight waits on the in-progress
+/// evaluation instead of dispatching it again, and batches admitted
+/// while the backend is busy coalesce into the next dispatch. Fully
+/// deterministic: the first dispatch is parked on a gate until the
+/// test has *observed* (via overlap stats) that three session batches
+/// are admitted concurrently.
+#[test]
+fn overlapping_batches_dedup_inflight_keys_and_coalesce() {
+    let probe = Arc::new(BackendProbe::default());
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let backend = GatedBackend::new(probe.clone(), gate.clone(), false);
+    let broker = EvalBroker::new(Box::new(backend)).with_inflight_limit(3);
+
+    let batch_a: Vec<_> = (0..4).map(sample).collect(); // claims k0..k3
+    let batch_b = vec![sample(0), sample(4), sample(5)]; // waits k0, claims k4 k5
+    let batch_c = vec![sample(1), sample(6)]; // waits k1, claims k6
+
+    let (ra, rb, rc, stats) = std::thread::scope(|s| {
+        let mut sa = broker.session();
+        let ba = &batch_a;
+        let ha = s.spawn(move || {
+            let r = sa.evaluate_batch(ba);
+            (r, sa.stats())
+        });
+        // A is provably mid-dispatch (backend checked out, parked on
+        // the gate) once the first dispatch is counted.
+        wait_until("session A mid-dispatch", || broker.overlap_stats().dispatches >= 1);
+
+        let mut sb = broker.session();
+        let bb = &batch_b;
+        let hb = s.spawn(move || {
+            let r = sb.evaluate_batch(bb);
+            (r, sb.stats())
+        });
+        let mut sc = broker.session();
+        let bc = &batch_c;
+        let hc = s.spawn(move || {
+            let r = sc.evaluate_batch(bc);
+            (r, sc.stats())
+        });
+        // B and C must be admitted *while* A is still in flight: only
+        // then can their k0/k1 requests be mid-flight waits.
+        wait_until("three admitted batches", || broker.overlap_stats().peak_admitted >= 3);
+        open_gate(&gate);
+
+        let (ra, da) = ha.join().expect("session A panicked");
+        let (rb, db) = hb.join().expect("session B panicked");
+        let (rc, dc) = hc.join().expect("session C panicked");
+        (ra, rb, rc, vec![da, db, dc])
+    });
+
+    // No in-flight key was ever dispatched twice: 7 unique keys, one
+    // backend evaluation each.
+    probe.assert_each_key_evaluated_once(7, "gated overlap");
+    let g = broker.stats();
+    assert_eq!(g.requests, 9);
+    assert_eq!(g.evals, 7, "k0 and k1 must not be re-dispatched for B/C");
+    assert_eq!(g.cross_session_hits, 2, "B's k0 and C's k1");
+    assert_eq!(g.inflight_hits, 2, "both cross hits were served mid-flight");
+    assert_deltas_sum_to_broker(&stats, &broker, "gated overlap");
+
+    // Overlap actually happened, and the second dispatch coalesced
+    // B's and C's claims into one backend call.
+    let ov = broker.overlap_stats();
+    assert_eq!(ov.inflight_limit, 3);
+    assert_eq!(ov.peak_admitted, 3);
+    assert_eq!(ov.dispatches, 2, "k0..k3, then coalesced k4 k5 k6");
+    assert_eq!(ov.coalesced_dispatches, 1);
+
+    // Bit-identical to the pure function whatever session computed or
+    // waited on a key.
+    for (batch, results) in [(&batch_a, &ra), (&batch_b, &rb), (&batch_c, &rc)] {
+        for ((n, h), r) in batch.iter().zip(results) {
+            let want = det_result(n, h);
+            assert_eq!(r.acc.to_bits(), want.acc.to_bits());
+            assert_eq!(r.latency_ms.to_bits(), want.latency_ms.to_bits());
+        }
+    }
+}
+
+/// An uncacheable transport failure wakes every mid-flight waiter with
+/// the invalid result, but poisons neither the in-flight table nor the
+/// persistent store: the next request for the key retries the backend,
+/// and only genuine results ever reach disk.
+#[test]
+fn transport_failure_wakes_waiters_without_poisoning_table_or_store() {
+    let path = std::env::temp_dir()
+        .join(format!("nahas-admission-spill-{}.cache", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let probe = Arc::new(BackendProbe::default());
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let backend = GatedBackend::new(probe.clone(), gate.clone(), true);
+    let store = CacheStore::open(&path, "eval/admission-test").unwrap();
+    let broker = EvalBroker::with_store(Box::new(backend), store);
+
+    let batch_a = vec![sample(0)]; // fails (uncacheable) on dispatch 1
+    let batch_b = vec![sample(0), sample(9)]; // waits on k0 mid-flight, claims k9
+
+    let (ra, rb) = std::thread::scope(|s| {
+        let mut sa = broker.session();
+        let ba = &batch_a;
+        let ha = s.spawn(move || sa.evaluate_batch(ba));
+        wait_until("session A mid-dispatch", || broker.overlap_stats().dispatches >= 1);
+        let mut sb = broker.session();
+        let bb = &batch_b;
+        let hb = s.spawn(move || sb.evaluate_batch(bb));
+        wait_until("session B admitted", || broker.overlap_stats().peak_admitted >= 2);
+        open_gate(&gate);
+        (ha.join().expect("session A panicked"), hb.join().expect("session B panicked"))
+    });
+
+    assert!(!ra[0].valid, "A sees the transport failure");
+    assert!(!rb[0].valid, "the waiter wakes with the same failed outcome, no retry yet");
+    assert!(rb[1].valid, "B's own claim evaluated normally");
+    assert_eq!(broker.stats().evals, 2, "k0 (failed) and k9");
+    assert_eq!(broker.stats().inflight_hits, 1, "B's k0 was a mid-flight wait");
+
+    // The failure is not memoized and its in-flight entry is gone: a
+    // later session retries the backend and succeeds.
+    let mut sc = broker.session();
+    let rc = sc.evaluate_batch(&batch_a);
+    assert!(rc[0].valid, "retry reaches the backend after the gate");
+    assert_eq!(broker.stats().evals, 3);
+    assert_eq!(*probe.seen.lock().unwrap().get(&joint_key(&[0], &[0])).unwrap(), 2);
+
+    // And once memoized, no further backend traffic for the key.
+    let mut sd = broker.session();
+    assert!(sd.evaluate_batch(&batch_a)[0].valid);
+    assert_eq!(broker.stats().evals, 3, "memoized success is served from cache");
+
+    // The spill file holds only the two genuine results (k9 and the
+    // k0 retry) — the transport failure never reached disk.
+    drop((sc, sd, broker));
+    let mut reopened: CacheStore = CacheStore::open(&path, "eval/admission-test").unwrap();
+    let mut keys: Vec<Vec<usize>> =
+        reopened.take_loaded().into_iter().map(|(k, _)| k).collect();
+    keys.sort();
+    assert_eq!(keys, vec![joint_key(&[0], &[0]), joint_key(&[9], &[0])]);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `--broker-inflight 1` restores strictly serial admission: however
+/// many sessions pile on, at most one batch is ever in flight.
+#[test]
+fn inflight_limit_one_serializes_session_batches() {
+    let probe = Arc::new(BackendProbe::default());
+    let broker =
+        EvalBroker::new(Box::new(SlowBackend { probe: probe.clone() })).with_inflight_limit(1);
+    let batch: Vec<_> = (0..24).map(sample).collect();
+    let stats: Vec<EvalStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let mut session = broker.session();
+                let batch = &batch;
+                s.spawn(move || {
+                    let r = session.evaluate_batch(batch);
+                    for ((n, h), got) in batch.iter().zip(&r) {
+                        assert_eq!(got.acc.to_bits(), det_result(n, h).acc.to_bits());
+                    }
+                    session.stats()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("session panicked")).collect()
+    });
+    probe.assert_each_key_evaluated_once(24, "serial limit");
+    let ov = broker.overlap_stats();
+    assert_eq!(ov.inflight_limit, 1);
+    assert_eq!(ov.peak_admitted, 1, "limit 1 must never admit overlapping batches");
+    assert_eq!(broker.stats().evals, 24);
+    assert_deltas_sum_to_broker(&stats, &broker, "serial limit");
+}
+
+/// Stress: 8 sessions hammer one broker with rotated slices of a
+/// shared 60-key universe (every session requests every key exactly
+/// once, in a different batch order), over a slow backend with full
+/// admission overlap. Each unique key must reach the backend exactly
+/// once, the counters must balance at every layer, and every result
+/// must equal the pure function.
+#[test]
+fn stress_shared_keys_never_duplicate_backend_evals() {
+    const KEYS: usize = 60;
+    const SESSIONS: usize = 8;
+    let universe: Vec<_> = (0..KEYS).map(sample).collect();
+    let probe = Arc::new(BackendProbe::default());
+    let broker = EvalBroker::new(Box::new(SlowBackend { probe: probe.clone() }));
+
+    let stats: Vec<EvalStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..SESSIONS)
+            .map(|t| {
+                let mut session = broker.session();
+                let universe = &universe;
+                s.spawn(move || {
+                    // Three batches of 20, starting at a per-session
+                    // offset: a rotation of the universe, so sessions
+                    // contend on every key but never repeat their own.
+                    for b in 0..3 {
+                        let batch: Vec<_> = (0..KEYS / 3)
+                            .map(|j| universe[(t * 7 + b * (KEYS / 3) + j) % KEYS].clone())
+                            .collect();
+                        let r = session.evaluate_batch(&batch);
+                        for ((n, h), got) in batch.iter().zip(&r) {
+                            let want = det_result(n, h);
+                            assert_eq!(got.acc.to_bits(), want.acc.to_bits());
+                            assert_eq!(got.latency_ms.to_bits(), want.latency_ms.to_bits());
+                        }
+                    }
+                    session.stats()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("session panicked")).collect()
+    });
+
+    probe.assert_each_key_evaluated_once(KEYS, "stress");
+    let g = broker.stats();
+    assert_eq!(g.requests, KEYS * SESSIONS);
+    assert_eq!(g.evals, KEYS, "each unique key evaluated exactly once");
+    assert_eq!(
+        g.cross_session_hits,
+        KEYS * (SESSIONS - 1),
+        "every non-paying request is a cross-session hit"
+    );
+    assert!(g.inflight_hits <= g.cross_session_hits);
+    assert_eq!(g.invalid, 0);
+    assert_deltas_sum_to_broker(&stats, &broker, "stress");
+}
+
+/// Overlap over the real evaluation stack: concurrent sessions with
+/// overlapping random batches on the parallel backend (admission limit
+/// = its worker count) stay bit-identical to the serial
+/// [`SurrogateSim`] for the same seed, and the backend still sees only
+/// the broker's deduped misses.
+#[test]
+fn overlapped_parallel_backend_matches_serial_simulator_bit_for_bit() {
+    let space = || NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(17);
+    let pool: Vec<(Vec<usize>, Vec<usize>)> =
+        (0..48).map(|_| (space().random(&mut rng), has.random(&mut rng))).collect();
+
+    let broker = EvalBroker::new(Box::new(ParallelSim::new(space(), 3, 4)));
+    assert_eq!(broker.overlap_stats().inflight_limit, 4, "defaults to worker capacity");
+    let outputs: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let mut session = broker.session();
+                let pool = &pool;
+                s.spawn(move || {
+                    // Overlapping 24-sample windows of the pool.
+                    let batch: Vec<_> = pool[t * 8..t * 8 + 24].to_vec();
+                    let r = session.evaluate_batch(&batch);
+                    (batch, r)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("session panicked")).collect()
+    });
+
+    let serial = SurrogateSim::new(space(), 3);
+    for (batch, results) in &outputs {
+        for ((n, h), got) in batch.iter().zip(results) {
+            let want = serial.evaluate_pure(n, h);
+            assert_eq!(got.valid, want.valid);
+            assert_eq!(got.acc.to_bits(), want.acc.to_bits());
+            assert_eq!(got.latency_ms.to_bits(), want.latency_ms.to_bits());
+            assert_eq!(got.energy_mj.to_bits(), want.energy_mj.to_bits());
+            assert_eq!(got.area_mm2.to_bits(), want.area_mm2.to_bits());
+        }
+    }
+    // The backend saw exactly the broker's deduped misses.
+    assert_eq!(broker.backend_stats().requests, broker.stats().evals);
+}
