@@ -1,0 +1,168 @@
+//! §Perf — dispatch-chunk tail latency: 8 overlapping sessions hammer
+//! one broker over a deliberately slow backend (0.5 ms per key), once
+//! with drain-the-whole-queue dispatch (the pre-PR-6 path, forced via
+//! a huge `--dispatch-chunk`) and once with the default capacity-sized
+//! chunks.
+//!
+//! The measurement is per-batch *wait*: how long one session's
+//! `evaluate_batch` call takes wall-clock. Under drain-all, a session
+//! whose keys sit at the queue front still rides out the whole
+//! mega-dispatch — every batch that piled up behind the backend goes
+//! out as one call — so the p99 wait grows with the number of
+//! contending sessions. Chunked dispatch bounds each backend call at
+//! `capacity()` keys and completes queue-front sessions first, so the
+//! tail collapses while the median stays put. Sessions use disjoint
+//! key namespaces: no cache hit can hide a dispatch.
+//!
+//! Chunking is pure scheduling: the bench asserts bit-identical
+//! results, identical backend eval counts, and a strictly lower p99
+//! for the chunked run. Record the printed trajectory row in
+//! `docs/BENCH_TRAJECTORY.md`.
+
+use std::time::{Duration, Instant};
+
+use nahas::search::{EvalBroker, EvalResult, Evaluator};
+
+const SESSIONS: usize = 8;
+const BATCHES: usize = 15;
+const BATCH: usize = 8;
+const PER_KEY: Duration = Duration::from_micros(500);
+
+/// The pure function the backend computes, for bit-identity checks.
+fn det_result(nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+    let s = nas_d.iter().chain(has_d).sum::<usize>() as f64;
+    EvalResult {
+        acc: 0.5 + s * 1e-9,
+        latency_ms: 1.0 + s,
+        energy_mj: 0.25 * s,
+        area_mm2: 42.0,
+        valid: true,
+    }
+}
+
+/// Deterministic slow backend: 0.5 ms of "simulation" per key, one
+/// sleep per dispatch — so a mega-dispatch holds the backend (and
+/// every queue-front waiter) for its whole length.
+struct SleepBackend;
+
+impl Evaluator for SleepBackend {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        det_result(nas_d, has_d)
+    }
+
+    fn evaluate_batch_tagged(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<(EvalResult, bool)> {
+        std::thread::sleep(PER_KEY * batch.len() as u32);
+        batch.iter().map(|(n, h)| (det_result(n, h), true)).collect()
+    }
+
+    fn capacity(&self) -> usize {
+        8
+    }
+}
+
+/// Session `t`, batch `b`, slot `j` -> a key no other (t, b, j) makes.
+fn key(t: usize, b: usize, j: usize) -> (Vec<usize>, Vec<usize>) {
+    let id = t * 10_000 + b * 100 + j;
+    (vec![id], vec![id % 5])
+}
+
+/// Run the contention pattern; per-batch waits (ms), per-session
+/// results, and the broker for its ledgers.
+fn run(chunk: Option<usize>) -> (Vec<f64>, Vec<Vec<EvalResult>>, EvalBroker) {
+    let mut broker = EvalBroker::new(Box::new(SleepBackend));
+    if let Some(c) = chunk {
+        broker = broker.with_dispatch_chunk(c);
+    }
+    let per_session: Vec<(Vec<f64>, Vec<EvalResult>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..SESSIONS)
+            .map(|t| {
+                let mut session = broker.session();
+                s.spawn(move || {
+                    let mut waits = Vec::with_capacity(BATCHES);
+                    let mut results = Vec::with_capacity(BATCHES * BATCH);
+                    for b in 0..BATCHES {
+                        let batch: Vec<_> = (0..BATCH).map(|j| key(t, b, j)).collect();
+                        let t0 = Instant::now();
+                        let r = session.evaluate_batch(&batch);
+                        waits.push(t0.elapsed().as_secs_f64() * 1e3);
+                        results.extend(r);
+                    }
+                    (waits, results)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("session panicked")).collect()
+    });
+    let mut waits = Vec::new();
+    let mut results = Vec::new();
+    for (w, r) in per_session {
+        waits.extend(w);
+        results.push(r);
+    }
+    (waits, results, broker)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    println!(
+        "tail latency: {SESSIONS} sessions x {BATCHES} batches x {BATCH} keys, \
+         {:?}/key backend\n",
+        PER_KEY
+    );
+
+    let (mut drain_w, drain_r, drain_broker) = run(Some(usize::MAX));
+    let dov = drain_broker.overlap_stats();
+    drain_w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (d50, d99) = (percentile(&drain_w, 50.0), percentile(&drain_w, 99.0));
+    println!(
+        "  drain-all: p50 {d50:>7.2} ms  p99 {d99:>7.2} ms  \
+         ({} dispatches, peak queue depth {})",
+        dov.dispatches, dov.peak_queue_depth
+    );
+
+    let (mut chunk_w, chunk_r, chunk_broker) = run(None);
+    let cov = chunk_broker.overlap_stats();
+    chunk_w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (c50, c99) = (percentile(&chunk_w, 50.0), percentile(&chunk_w, 99.0));
+    println!(
+        "  chunk {}:   p50 {c50:>7.2} ms  p99 {c99:>7.2} ms  \
+         ({} dispatches, {} chunked, peak queue depth {})",
+        cov.chunk_limit, cov.dispatches, cov.chunked_dispatches, cov.peak_queue_depth
+    );
+
+    // Chunking is pure scheduling: same results, same backend work.
+    assert_eq!(
+        drain_broker.stats().evals,
+        chunk_broker.stats().evals,
+        "both runs must evaluate every unique key exactly once"
+    );
+    assert_eq!(drain_broker.stats().evals, SESSIONS * BATCHES * BATCH);
+    for (a, b) in drain_r.iter().zip(&chunk_r) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.acc.to_bits(), y.acc.to_bits(), "results diverged under chunking");
+            assert_eq!(x.latency_ms.to_bits(), y.latency_ms.to_bits());
+        }
+    }
+    // The point of the PR: bounded dispatches cut the tail.
+    assert!(
+        c99 < d99,
+        "chunked p99 ({c99:.2} ms) must beat drain-all p99 ({d99:.2} ms)"
+    );
+
+    let gain = (d99 - c99) / d99 * 100.0;
+    println!("\n  p99 improvement: {gain:.0}% (drain-all {d99:.2} ms -> chunked {c99:.2} ms)");
+    println!("\n  trajectory row (docs/BENCH_TRAJECTORY.md):");
+    println!(
+        "  | perf_tail_latency | drain-all p50/p99: {d50:.2}/{d99:.2} ms \
+         | chunk {}: p50/p99 {c50:.2}/{c99:.2} ms | p99 -{gain:.0}% | {} chunked / {} dispatches |",
+        cov.chunk_limit, cov.chunked_dispatches, cov.dispatches
+    );
+}

@@ -4,7 +4,10 @@
 //! One batch flows through the same `BatchPlan` memo-cache front as
 //! the single-host tiers, then the deduped misses are routed by
 //! rendezvous hash of the joint key ([`super::HashRing`]) to their
-//! owning host and fanned out over that host's connection sub-pool.
+//! owning host and fanned out over that host's connection sub-pool —
+//! each connection's share travelling as one **pipelined** id-tagged
+//! burst ([`Client::query_pipelined`]) so the host's event loop keeps
+//! the whole slice in flight at once.
 //! Because every evaluation is a deterministic function of (space,
 //! task, seed, decisions) — hardware metrics from the simulator
 //! service, accuracy from the local [`SurrogateSim`] — *where* a
@@ -158,9 +161,13 @@ impl ShardedEvaluator {
     }
 
     /// Worker body: evaluate `keys` (indices into `pending`) against
-    /// one connection of one host. On double transport failure the
-    /// host is marked down and the unfinished keys are returned for
-    /// re-routing.
+    /// one connection of one host. The fast path pipelines the whole
+    /// share as one id-tagged burst; any burst failure falls back to
+    /// the serial ladder on a *fresh* connection (a dirty pipelined
+    /// socket may hold unread responses and must never answer another
+    /// query), which localizes the failure to an exact key. On double
+    /// transport failure the host is marked down and the unfinished
+    /// keys are returned for re-routing.
     fn shard_task(
         mut client: Option<&mut Client>,
         state: &HostState,
@@ -184,6 +191,36 @@ impl ShardedEvaluator {
                 }
             },
         };
+        if keys.len() > 1 {
+            let burst: Vec<Vec<usize>> = keys.iter().map(|&ki| pending[ki].clone()).collect();
+            match client.query_pipelined(ctx.space_name, ctx.seg, &burst, ctx.nas_len) {
+                Ok(resps) => {
+                    state.bursts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let done = keys
+                        .iter()
+                        .zip(&resps)
+                        .map(|(&ki, resp)| {
+                            state.evals.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            (ki, remote_result(resp, ctx.sim, &pending[ki][..ctx.nas_len]))
+                        })
+                        .collect();
+                    return (done, Vec::new());
+                }
+                Err(_) => match Client::connect_with_io_timeout(state.addr(), IO_TIMEOUT) {
+                    Ok(fresh) => *client = fresh,
+                    Err(_) => {
+                        state.set_up(false);
+                        eprintln!(
+                            "cluster: host {} failed a pipelined burst and a reconnect; \
+                             re-routing {} sample(s)",
+                            state.addr(),
+                            keys.len()
+                        );
+                        return (Vec::new(), keys.to_vec());
+                    }
+                },
+            }
+        }
         let mut done = Vec::with_capacity(keys.len());
         for (pos, &ki) in keys.iter().enumerate() {
             match Self::query_via(client, state, ctx, &pending[ki]) {

@@ -27,6 +27,12 @@ pub struct HostState {
     pub requests: AtomicUsize,
     /// Service roundtrips this host answered.
     pub evals: AtomicUsize,
+    /// Pipelined bursts this host answered: each burst keeps a whole
+    /// key slice in flight on one connection
+    /// ([`Client::query_pipelined`]) instead of one
+    /// request/response at a time, so `evals / bursts` is the average
+    /// multiplexing depth the event-loop server actually saw.
+    pub bursts: AtomicUsize,
 }
 
 impl HostState {
@@ -36,6 +42,7 @@ impl HostState {
             up: AtomicBool::new(up),
             requests: AtomicUsize::new(0),
             evals: AtomicUsize::new(0),
+            bursts: AtomicUsize::new(0),
         }
     }
 
@@ -59,6 +66,8 @@ pub struct HostSnapshot {
     pub up: bool,
     pub requests: usize,
     pub evals: usize,
+    /// Pipelined bursts answered (see [`HostState::bursts`]).
+    pub bursts: usize,
 }
 
 /// The host pool: shared states (also held by the health monitor) and
@@ -166,6 +175,7 @@ impl HostPool {
                 up: h.is_up(),
                 requests: h.requests.load(Ordering::Relaxed),
                 evals: h.evals.load(Ordering::Relaxed),
+                bursts: h.bursts.load(Ordering::Relaxed),
             })
             .collect()
     }

@@ -38,7 +38,7 @@ use nahas::search::{
     CacheValue, Controller, CostObjective, EvalBroker, Evaluator, ParallelSim, RandomController,
     RewardCfg, SearchCfg, SurrogateSim, SweepDriver, Task,
 };
-use nahas::service::{ServeCache, Server, ServiceEvaluator};
+use nahas::service::{ServeCache, Server, ServerOpts, ServiceEvaluator};
 use nahas::trainer::ProxyTrainer;
 use nahas::util::Rng;
 
@@ -202,6 +202,11 @@ fn report_cache_store<V: CacheValue>(store: &CacheStore<V>) {
 /// capacity hint; defaults to that capacity, so parallel-capable
 /// tiers overlap out of the box and `--broker-inflight 1` restores
 /// strictly serial one-batch-at-a-time dispatch).
+/// `--dispatch-chunk N` bounds how many queued keys one backend
+/// dispatch may carry (defaults to the backend's capacity hint, so a
+/// long shared queue streams through in capacity-sized chunks and
+/// early sessions unblock as soon as their keys complete; a very
+/// large N restores the old drain-the-whole-queue behaviour).
 fn evaluator_arg(
     flags: &Flags,
     space: NasSpace,
@@ -272,13 +277,23 @@ fn evaluator_arg(
         Some(store) => EvalBroker::with_store(backend, store),
         None => EvalBroker::new(backend),
     };
-    Ok(match flags.get("broker-inflight") {
+    let broker = match flags.get("broker-inflight") {
         Some(_) => {
             let n = flags.usize("broker-inflight", 0)?;
             if n == 0 {
                 bail!("--broker-inflight must be at least 1 (1 = serial admission)");
             }
             broker.with_inflight_limit(n)
+        }
+        None => broker,
+    };
+    Ok(match flags.get("dispatch-chunk") {
+        Some(_) => {
+            let n = flags.usize("dispatch-chunk", 0)?;
+            if n == 0 {
+                bail!("--dispatch-chunk must be at least 1 (keys per backend dispatch)");
+            }
+            broker.with_dispatch_chunk(n)
         }
         None => broker,
     })
@@ -381,20 +396,23 @@ fn print_usage() {
          \x20              [--hosts A,B=2,..  shard over weighted `nahas serve` hosts]\n\
          \x20              [--cache-dir DIR  persist evaluations across runs (warm start)]\n\
          \x20              [--broker-inflight N  concurrent session batches (1 = serial)]\n\
+         \x20              [--dispatch-chunk N  keys per backend dispatch (streaming)]\n\
          \x20 sweep        [--targets 0.3,0.5,0.7 --objectives latency,energy]\n\
          \x20              [--drivers joint,phase --samples 500 --batch 16 --seed S]\n\
          \x20              [--space s2 --out results/sweep.csv]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N]\n\
          \x20              [--cache-dir DIR  warm-start repeated sweeps from disk]\n\
          \x20              [--broker-inflight N  overlap scenario batches on the backend]\n\
+         \x20              [--dispatch-chunk N  keys per backend dispatch (streaming)]\n\
          \x20              runs all scenarios concurrently over one shared broker\n\
          \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N --batch 16]\n\
-         \x20              [--cache-dir DIR --broker-inflight N]\n\
+         \x20              [--cache-dir DIR --broker-inflight N --dispatch-chunk N]\n\
          \x20 oneshot      [--warmup 60 --steps 200 --target-ms 0.02 --seed S]\n\
          \x20 train-child  [--steps 30 --seed S]\n\
          \x20 costmodel    [--data 2000 --train-steps 600 --eval 256 --space s2]\n\
          \x20 serve        [--addr 127.0.0.1:7878 --cache-dir DIR]\n\
+         \x20              [--event-threads N --sim-workers N  event-loop sizing]\n\
          \x20 cluster-status [--hosts a:7878,b:7878=2 --timeout-ms 1000]"
     );
 }
@@ -668,6 +686,13 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
          batches, {} dispatches ({} coalesced)",
         ov.peak_admitted, ov.dispatches, ov.coalesced_dispatches
     );
+    // Streaming-dispatch accounting: how often a dispatch had to leave
+    // keys queued for a later chunk, and the deepest the shared queue
+    // ever got (the streaming CI smoke greps this line).
+    println!(
+        "broker dispatch: chunk {}, {} chunked dispatches, peak queue depth {}",
+        ov.chunk_limit, ov.chunked_dispatches, ov.peak_queue_depth
+    );
 
     let mut rows = Vec::new();
     for (objective, front) in &out.union {
@@ -786,8 +811,16 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         }
         None => ServeCache::default(),
     };
-    let server = Server::spawn_with_cache(addr, cache)?;
-    println!("simulator service on {}; Ctrl-C to stop", server.addr);
+    let defaults = ServerOpts::default();
+    let opts = ServerOpts {
+        event_threads: flags.usize("event-threads", defaults.event_threads)?.max(1),
+        sim_workers: flags.usize("sim-workers", defaults.sim_workers)?.max(1),
+    };
+    let server = Server::spawn_with_opts(addr, cache, opts)?;
+    println!(
+        "simulator service on {} ({} event threads, {} sim workers); Ctrl-C to stop",
+        server.addr, opts.event_threads, opts.sim_workers
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -46,7 +46,8 @@
 //!   keys, and the **admission** count of session batches currently in
 //!   flight. The backend call itself runs with the state lock
 //!   *released*: a session "checks the backend out" of the state,
-//!   evaluates the whole queue in one call, and parks it back.
+//!   evaluates a bounded *chunk* from the front of the queue, and
+//!   parks it back.
 //!
 //! A session batch flows through three steps:
 //!
@@ -66,14 +67,23 @@
 //!    slot — a batch never waits out admission it no longer needs;
 //! 3. **dispatch or wait** (lock released around the backend) — any
 //!    session whose results are still pending takes the parked backend
-//!    and evaluates the *entire* queue — its own claims and everyone
-//!    else's — in one `evaluate_batch_tagged` call, then completes the
+//!    and evaluates at most a *chunk* (`--dispatch-chunk`, default the
+//!    backend's [`Evaluator::capacity`] hint) from the **front** of
+//!    the FIFO queue — its own claims and everyone else's interleaved
+//!    — in one `evaluate_batch_tagged` call, then completes those
 //!    slots, memoizes the cacheable results, and wakes all waiters.
 //!    Batches admitted while the backend is busy therefore *coalesce*
 //!    into the next dispatch, which is where the overlap pays: small
 //!    per-session batches combine to fill the backend's worker pool
 //!    instead of underfilling it one batch at a time
-//!    (`benches/perf_broker_overlap.rs` measures exactly this).
+//!    (`benches/perf_broker_overlap.rs` measures exactly this). The
+//!    chunk bound is what keeps tail latency flat: a session whose
+//!    keys sit at the front of a long queue is completed — and woken —
+//!    by the first chunk instead of waiting out one giant dispatch of
+//!    everyone's work (`benches/perf_tail_latency.rs` measures the
+//!    p50/p99 per-batch wait; `tests/broker_streaming.rs` pins the
+//!    ordering). Sessions left pending simply dispatch the next chunk,
+//!    so the queue keeps draining as long as anyone still waits.
 //!
 //! Failure rules: a transient transport failure (`cacheable: false`
 //! from the backend) completes its slot and wakes every waiter, but is
@@ -193,9 +203,10 @@ struct DispatchTier {
     /// Entries are removed the moment their slot completes, so a later
     /// request for a key whose eval *failed* misses here and retries.
     inflight: HashMap<Vec<usize>, Arc<InflightSlot>>,
-    /// Claimed keys not yet handed to the backend, in claim order. The
-    /// next dispatch takes the whole queue, so batches from different
-    /// sessions coalesce into one backend call.
+    /// Claimed keys not yet handed to the backend, in claim order. A
+    /// dispatch takes at most `chunk_limit` entries from the front, so
+    /// batches from different sessions coalesce into one backend call
+    /// while a long queue still drains in bounded, FIFO slices.
     queue: Vec<QueuedEval>,
     /// Session batches currently admitted (claimed keys and not yet
     /// fully resolved). Admission blocks while `admitted >=
@@ -206,8 +217,19 @@ struct DispatchTier {
     inflight_limit: usize,
     /// The backend's [`Evaluator::capacity`] hint, frozen at build.
     capacity: usize,
+    /// Most keys a single dispatch may take off the queue
+    /// (`--dispatch-chunk`, default `capacity`). Unlike the admission
+    /// limit this may exceed capacity — `usize::MAX` restores the
+    /// drain-all behavior for A/B measurement.
+    chunk_limit: usize,
     dispatches: usize,
     coalesced_dispatches: usize,
+    /// Dispatches that left work behind: the queue was deeper than the
+    /// chunk limit, so streaming actually kicked in.
+    chunked_dispatches: usize,
+    /// Deepest the queue has ever been at the moment a dispatch pulled
+    /// its chunk — the head-of-line pressure the chunk bound relieves.
+    peak_queue_depth: usize,
     peak_admitted: usize,
 }
 
@@ -276,16 +298,25 @@ impl Drop for DispatchGuard<'_> {
     }
 }
 
-/// Take the parked backend, evaluate the whole dispatch queue in one
-/// call with the state lock released, then park it back, complete the
-/// slots, memoize/spill the cacheable results, and wake everyone.
+/// Take the parked backend, evaluate at most a chunk-limit-sized slice
+/// off the *front* of the dispatch queue in one call with the state
+/// lock released, then park it back, complete the slots, memoize/spill
+/// the cacheable results, and wake everyone. Leftover queue entries
+/// wait for the next dispatch — their claiming sessions are still in
+/// their dispatch-or-wait loops, so the queue keeps draining.
 fn dispatch_chunk<'a>(
     core: &'a BrokerCore,
     mut st: MutexGuard<'a, BrokerState>,
 ) -> MutexGuard<'a, BrokerState> {
     let mut backend = st.dispatch.backend.take().expect("dispatch requires a parked backend");
-    let chunk: Vec<QueuedEval> = std::mem::take(&mut st.dispatch.queue);
+    let depth = st.dispatch.queue.len();
+    st.dispatch.peak_queue_depth = st.dispatch.peak_queue_depth.max(depth);
+    let take = st.dispatch.chunk_limit.min(depth);
+    let chunk: Vec<QueuedEval> = st.dispatch.queue.drain(..take).collect();
     st.dispatch.dispatches += 1;
+    if depth > take {
+        st.dispatch.chunked_dispatches += 1;
+    }
     let mut owners: Vec<u64> = chunk.iter().map(|q| q.slot.owner).collect();
     owners.sort_unstable();
     owners.dedup();
@@ -400,6 +431,15 @@ pub struct BrokerOverlapStats {
     pub coalesced_dispatches: usize,
     /// Most session batches ever in flight at once.
     pub peak_admitted: usize,
+    /// Most keys a single dispatch may take (`--dispatch-chunk`,
+    /// default the backend capacity; `usize::MAX` means drain-all).
+    pub chunk_limit: usize,
+    /// Dispatches that hit the chunk bound with work left over — the
+    /// streaming path actually engaging.
+    pub chunked_dispatches: usize,
+    /// Deepest the queue has ever been when a dispatch pulled its
+    /// chunk.
+    pub peak_queue_depth: usize,
 }
 
 /// Shared handle to one evaluation backend. Cheap to clone; create one
@@ -484,8 +524,11 @@ impl EvalBroker {
                         admitted: 0,
                         inflight_limit: capacity,
                         capacity,
+                        chunk_limit: capacity,
                         dispatches: 0,
                         coalesced_dispatches: 0,
+                        chunked_dispatches: 0,
+                        peak_queue_depth: 0,
                         peak_admitted: 0,
                     },
                 }),
@@ -508,6 +551,23 @@ impl EvalBroker {
             let mut st = self.core.lock_state();
             let cap = st.dispatch.capacity;
             st.dispatch.inflight_limit = limit.clamp(1, cap);
+        }
+        self
+    }
+
+    /// Set the dispatch chunk bound (CLI `--dispatch-chunk N`): the
+    /// most keys one backend call may take off the front of the queue.
+    /// Defaults to the backend's [`Evaluator::capacity`] hint — one
+    /// dispatch fills the worker pool exactly, and a queue deeper than
+    /// the pool streams out in capacity-sized slices instead of one
+    /// giant head-of-line-blocking call. Unlike the admission limit
+    /// this is *not* clamped above: `usize::MAX` restores the PR 5
+    /// drain-all behavior (what `benches/perf_tail_latency.rs` A/B
+    /// compares against). Clamped below to 1.
+    pub fn with_dispatch_chunk(self, chunk: usize) -> Self {
+        {
+            let mut st = self.core.lock_state();
+            st.dispatch.chunk_limit = chunk.max(1);
         }
         self
     }
@@ -539,6 +599,7 @@ impl EvalBroker {
             cross_session_hits: 0,
             persisted_hits: 0,
             inflight_hits: 0,
+            dispatched_chunks: 0,
         }
     }
 
@@ -557,6 +618,7 @@ impl EvalBroker {
             cross_session_hits: st.cache.cross_session_hits,
             persisted_hits: st.cache.persisted_hits,
             inflight_hits: st.cache.inflight_hits,
+            dispatched_chunks: st.dispatch.dispatches,
             hosts_down: backend.hosts_down,
             per_host: backend.per_host,
         }
@@ -578,6 +640,9 @@ impl EvalBroker {
             dispatches: st.dispatch.dispatches,
             coalesced_dispatches: st.dispatch.coalesced_dispatches,
             peak_admitted: st.dispatch.peak_admitted,
+            chunk_limit: st.dispatch.chunk_limit,
+            chunked_dispatches: st.dispatch.chunked_dispatches,
+            peak_queue_depth: st.dispatch.peak_queue_depth,
         }
     }
 
@@ -608,6 +673,10 @@ pub struct BrokerSession {
     cross_session_hits: usize,
     persisted_hits: usize,
     inflight_hits: usize,
+    /// Backend dispatches this session drove (each dispatch is driven
+    /// by exactly one session, so deltas sum to the broker's
+    /// `dispatches`).
+    dispatched_chunks: usize,
 }
 
 impl Evaluator for BrokerSession {
@@ -685,7 +754,10 @@ impl Evaluator for BrokerSession {
         // Step 3 — dispatch or wait until every slot has an outcome.
         // Any session may drive the backend: the queue holds claims
         // from every admitted batch, so whoever dispatches next
-        // coalesces them into one backend call.
+        // coalesces them into one backend call — at most a chunk
+        // at a time, so early-queued batches complete (and wake)
+        // before the whole backlog is through.
+        let mut drove = 0usize;
         loop {
             let mut pending = false;
             for (i, slot) in &tally.waited {
@@ -703,6 +775,7 @@ impl Evaluator for BrokerSession {
                 panic!("{BACKEND_LOST}");
             }
             if st.dispatch.backend.is_some() && !st.dispatch.queue.is_empty() {
+                drove += 1;
                 st = dispatch_chunk(&core, st);
             } else {
                 st = core.progress.wait(st).expect(POISONED);
@@ -730,6 +803,7 @@ impl Evaluator for BrokerSession {
         self.cross_session_hits += tally.cross;
         self.persisted_hits += tally.persisted;
         self.inflight_hits += tally.inflight_hits;
+        self.dispatched_chunks += drove;
         results
     }
 
@@ -742,6 +816,7 @@ impl Evaluator for BrokerSession {
             cross_session_hits: self.cross_session_hits,
             persisted_hits: self.persisted_hits,
             inflight_hits: self.inflight_hits,
+            dispatched_chunks: self.dispatched_chunks,
             ..Default::default()
         }
     }
@@ -873,6 +948,40 @@ mod tests {
         let serial = EvalBroker::new(sim_backend()).with_inflight_limit(16);
         assert_eq!(serial.overlap_stats().capacity, 1);
         assert_eq!(serial.overlap_stats().inflight_limit, 1);
+    }
+
+    #[test]
+    fn dispatch_chunk_defaults_to_capacity_and_streams_long_queues() {
+        let backend = ParallelSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3, 4);
+        let broker = EvalBroker::new(Box::new(backend));
+        assert_eq!(broker.overlap_stats().chunk_limit, 4, "defaults to capacity");
+        let broker = broker.with_dispatch_chunk(0);
+        assert_eq!(broker.overlap_stats().chunk_limit, 1, "clamped below to 1");
+        let broker = broker.with_dispatch_chunk(usize::MAX);
+        assert_eq!(
+            broker.overlap_stats().chunk_limit,
+            usize::MAX,
+            "drain-all stays available for A/B runs"
+        );
+
+        // A 12-key batch over a chunk-2 broker streams out in 6 FIFO
+        // dispatches, bit-identical to the serial reference.
+        let batch = random_batch(12, 11);
+        let broker = EvalBroker::new(sim_backend()).with_dispatch_chunk(2);
+        let mut s = broker.session();
+        let got = s.evaluate_batch(&batch);
+        let ov = broker.overlap_stats();
+        assert_eq!(ov.dispatches, 6);
+        assert_eq!(ov.chunked_dispatches, 5, "every dispatch but the last left work behind");
+        assert_eq!(ov.peak_queue_depth, 12);
+        assert_eq!(s.stats().dispatched_chunks, 6, "the lone session drove every chunk");
+        assert_eq!(broker.stats().dispatched_chunks, 6);
+        let serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+        for ((n, h), r) in batch.iter().zip(&got) {
+            let w = serial.evaluate_pure(n, h);
+            assert_eq!(w.acc.to_bits(), r.acc.to_bits());
+            assert_eq!(w.latency_ms.to_bits(), r.latency_ms.to_bits());
+        }
     }
 
     /// Backend that fails the first call to every key (uncacheable

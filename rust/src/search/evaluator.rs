@@ -101,6 +101,14 @@ pub struct EvalStats {
     /// tier with admission overlap only; 0 elsewhere). The in-flight
     /// dedup savings of `--broker-inflight`.
     pub inflight_hits: usize,
+    /// Backend dispatch calls made (broker tier only; 0 elsewhere).
+    /// For a session this counts the chunks *that session drove*; each
+    /// dispatch is driven by exactly one session, so session deltas
+    /// sum to the broker global, which equals
+    /// [`crate::search::BrokerOverlapStats::dispatches`]. With
+    /// `--dispatch-chunk` below the queue depth one batch streams out
+    /// over several of these.
+    pub dispatched_chunks: usize,
     /// Hosts currently marked down (cluster tier only; 0 elsewhere).
     pub hosts_down: usize,
     /// Per-host counters (cluster tier only; empty elsewhere).
@@ -147,6 +155,9 @@ impl EvalStats {
                 .saturating_sub(earlier.cross_session_hits),
             persisted_hits: self.persisted_hits.saturating_sub(earlier.persisted_hits),
             inflight_hits: self.inflight_hits.saturating_sub(earlier.inflight_hits),
+            dispatched_chunks: self
+                .dispatched_chunks
+                .saturating_sub(earlier.dispatched_chunks),
             hosts_down: self.hosts_down,
             per_host,
         }
@@ -183,6 +194,7 @@ impl EvalStats {
             cross_session_hits: self.cross_session_hits + other.cross_session_hits,
             persisted_hits: self.persisted_hits + other.persisted_hits,
             inflight_hits: self.inflight_hits + other.inflight_hits,
+            dispatched_chunks: self.dispatched_chunks + other.dispatched_chunks,
             hosts_down,
             per_host,
         }
@@ -519,6 +531,7 @@ mod tests {
             cross_session_hits: 3,
             persisted_hits: 1,
             inflight_hits: 2,
+            dispatched_chunks: 4,
             ..Default::default()
         };
         let b = EvalStats {
@@ -534,11 +547,13 @@ mod tests {
         assert_eq!(m.cross_session_hits, 3);
         assert_eq!(m.persisted_hits, 1);
         assert_eq!(m.inflight_hits, 2);
+        assert_eq!(m.dispatched_chunks, 4);
         let d = m.since(&b);
         assert_eq!(d.requests, 10);
         assert_eq!(d.cross_session_hits, 3);
         assert_eq!(d.persisted_hits, 1);
         assert_eq!(d.inflight_hits, 2);
+        assert_eq!(d.dispatched_chunks, 4);
     }
 
     #[test]

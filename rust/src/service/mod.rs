@@ -10,14 +10,31 @@
 //!     "area_mm2": 79.2, "utilization": 0.21}
 //! ```
 //!
-//! The server is a std-thread TCP accept loop (tokio is not vendored in
-//! this offline build); each connection gets a worker thread, which is
-//! exactly the paper's "parallel requests" scale-out on one box.
+//! The server is a **non-blocking multiplexed event loop** (std-only;
+//! tokio is not vendored in this offline build): an accept thread
+//! deals connections round-robin onto a handful of readiness-polled
+//! event threads, each multiplexing many non-blocking sockets —
+//! buffering partial request lines, parsing complete ones, and
+//! flushing responses as the sockets accept them — while a shared pool
+//! of simulation workers drains the actual simulator work. One `nahas
+//! serve` host therefore multiplexes hundreds of concurrent sessions
+//! on a handful of OS threads (`--event-threads`), and a stalled
+//! (slow-loris) client costs one idle socket, never a hostage thread
+//! (`tests/service_concurrency.rs`).
+//!
+//! Requests on one connection may be **pipelined**: a request carrying
+//! an `"id"` field gets that id echoed in its response and is answered
+//! in *completion* order — the client keeps many requests in flight on
+//! one socket and matches responses by id ([`Client::query_pipelined`]).
+//! Requests without an id keep the strict request/response contract:
+//! responses come back in arrival order, so pre-pipelining clients work
+//! unchanged.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -210,6 +227,92 @@ fn serve_cache_key(req: &Json) -> Option<Vec<usize>> {
     Some(key)
 }
 
+/// Tuning knobs for the event-loop server ([`Server::spawn_with_opts`],
+/// CLI `nahas serve --event-threads N`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOpts {
+    /// Readiness-polling event-loop threads; each multiplexes its share
+    /// of the open connections (socket IO + request framing + response
+    /// ordering). A handful is plenty — connections cost a buffer, not
+    /// a thread.
+    pub event_threads: usize,
+    /// Worker threads draining the shared simulation job queue (the
+    /// CPU-bound half, kept off the event threads so a burst of
+    /// expensive simulations never stalls socket readiness).
+    pub sim_workers: usize,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts { event_threads: 2, sim_workers: 4 }
+    }
+}
+
+/// How a finished response is released onto its connection.
+enum RespTag {
+    /// The request carried an `"id"`: the response (id echoed) is
+    /// written in *completion* order — pipelining.
+    Ident,
+    /// No id: the response is held until every earlier no-id request
+    /// on the connection has been answered — the strict
+    /// request/response contract pre-pipelining clients rely on.
+    Seq(u64),
+}
+
+/// The half of a connection shared with the simulation workers:
+/// finished responses parked here until the owning event thread drains
+/// them onto the socket.
+struct ConnShared {
+    done: Mutex<Vec<(RespTag, String)>>,
+}
+
+/// One multiplexed connection, owned by exactly one event thread.
+struct Conn {
+    stream: TcpStream,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    shared: Arc<ConnShared>,
+    /// Arrival sequence assigned to the next no-id request.
+    next_seq: u64,
+    /// Next no-id sequence allowed onto the socket (in-order release).
+    next_release: u64,
+    /// No-id responses finished out of order, held for release.
+    held: BTreeMap<u64, String>,
+    /// Requests handed to the sim pool and not yet drained back.
+    outstanding: usize,
+    /// Peer sent EOF; the connection closes once fully drained.
+    eof: bool,
+}
+
+/// One queued simulation request (the CPU-bound half of a request
+/// line, computed off the event threads).
+struct SimJob {
+    shared: Arc<ConnShared>,
+    tag: RespTag,
+    id: Option<Json>,
+    req: Json,
+}
+
+/// The shared simulation work queue the event threads feed.
+struct SimPool {
+    jobs: Mutex<VecDeque<SimJob>>,
+    ready: Condvar,
+}
+
+/// Echo the request's `id` onto a response line (cached response
+/// strings are stored id-less and shared; every requester gets its own
+/// id back).
+fn attach_id(resp: String, id: Option<Json>) -> String {
+    let Some(id) = id else { return resp };
+    match Json::parse(&resp) {
+        Ok(Json::Obj(mut m)) => {
+            m.insert("id".to_string(), id);
+            Json::Obj(m).to_string()
+        }
+        _ => resp,
+    }
+}
+
 /// Running server handle.
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -218,7 +321,8 @@ pub struct Server {
     pub requests: Arc<AtomicU64>,
     /// The shared simulate-result cache and its hit/eval counters.
     pub cache: Arc<ServeCache>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    sim_pool: Arc<SimPool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -231,75 +335,284 @@ impl Server {
     /// warm-started from a persistent store (`nahas serve
     /// --cache-dir`).
     pub fn spawn_with_cache(addr: &str, cache: ServeCache) -> Result<Server> {
+        Self::spawn_with_opts(addr, cache, ServerOpts::default())
+    }
+
+    /// Bind and serve with explicit event-loop sizing.
+    pub fn spawn_with_opts(addr: &str, cache: ServeCache, opts: ServerOpts) -> Result<Server> {
         let listener = TcpListener::bind(addr).context("binding simulator service")?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let requests = Arc::new(AtomicU64::new(0));
         let cache = Arc::new(cache);
-        let (stop2, req2, cache2) = (stop.clone(), requests.clone(), cache.clone());
-        let handle = std::thread::spawn(move || {
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let req3 = req2.clone();
-                        let cache3 = cache2.clone();
-                        // Detached worker: it exits when the client hangs
-                        // up (joining here would deadlock on clients that
-                        // outlive the server).
-                        std::thread::spawn(move || serve_conn(stream, req3, cache3));
+        let sim_pool =
+            Arc::new(SimPool { jobs: Mutex::new(VecDeque::new()), ready: Condvar::new() });
+        let mut handles = Vec::new();
+
+        // Per-event-thread intake queues; the accept thread deals new
+        // connections round-robin.
+        let event_threads = opts.event_threads.max(1);
+        let intakes: Vec<Arc<Mutex<Vec<TcpStream>>>> =
+            (0..event_threads).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+
+        {
+            let (stop, intakes) = (stop.clone(), intakes.clone());
+            handles.push(std::thread::spawn(move || {
+                let mut next = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if stream.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            let _ = stream.set_nodelay(true);
+                            intakes[next].lock().expect("intake poisoned").push(stream);
+                            next = (next + 1) % intakes.len();
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
                     }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
                 }
-            }
-        });
-        Ok(Server { addr: local, stop, requests, cache, handle: Some(handle) })
+            }));
+        }
+
+        for intake in intakes {
+            let (stop, requests, cache, sim_pool) =
+                (stop.clone(), requests.clone(), cache.clone(), sim_pool.clone());
+            handles.push(std::thread::spawn(move || {
+                event_loop(&stop, &intake, &requests, &cache, &sim_pool)
+            }));
+        }
+
+        for _ in 0..opts.sim_workers.max(1) {
+            let (stop, cache, sim_pool) = (stop.clone(), cache.clone(), sim_pool.clone());
+            handles.push(std::thread::spawn(move || sim_worker(&stop, &cache, &sim_pool)));
+        }
+
+        Ok(Server { addr: local, stop, requests, cache, sim_pool, handles })
     }
 
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
+        self.sim_pool.ready.notify_all();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn serve_conn(stream: TcpStream, requests: Arc<AtomicU64>, cache: Arc<ServeCache>) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+/// One event thread: multiplex every connection on the intake list —
+/// drain finished responses onto write buffers, flush writable
+/// sockets, read readable ones, frame complete request lines, answer
+/// the cheap ones inline and queue the simulations. Never blocks on
+/// any one socket, so a stalled client stalls only itself.
+fn event_loop(
+    stop: &AtomicBool,
+    intake: &Mutex<Vec<TcpStream>>,
+    requests: &AtomicU64,
+    cache: &ServeCache,
+    sim_pool: &SimPool,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        for stream in intake.lock().expect("intake poisoned").drain(..) {
+            conns.push(Conn {
+                stream,
+                read_buf: Vec::new(),
+                write_buf: Vec::new(),
+                shared: Arc::new(ConnShared { done: Mutex::new(Vec::new()) }),
+                next_seq: 0,
+                next_release: 0,
+                held: BTreeMap::new(),
+                outstanding: 0,
+                eof: false,
+            });
+        }
+        let mut busy = false;
+        conns.retain_mut(|conn| {
+            let alive = tick_conn(conn, requests, cache, sim_pool, &mut busy);
+            alive
+                && !(conn.eof
+                    && conn.outstanding == 0
+                    && conn.held.is_empty()
+                    && conn.write_buf.is_empty())
+        });
+        if !busy {
+            // Nothing moved this pass: idle-poll instead of spinning.
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        }
+    }
+}
+
+/// Advance one connection without blocking. Returns `false` on a fatal
+/// socket error (the connection is dropped, like a hangup mid-response
+/// always was). Sets `busy` if any byte or response moved.
+fn tick_conn(
+    conn: &mut Conn,
+    requests: &AtomicU64,
+    cache: &ServeCache,
+    sim_pool: &SimPool,
+    busy: &mut bool,
+) -> bool {
+    // 1. Collect responses the sim workers finished.
+    let done: Vec<(RespTag, String)> =
+        std::mem::take(&mut *conn.shared.done.lock().expect("conn outbox poisoned"));
+    for (tag, resp) in done {
+        conn.outstanding -= 1;
+        *busy = true;
+        release(conn, tag, resp);
+    }
+
+    // 2. Flush as much of the write buffer as the socket accepts.
+    while !conn.write_buf.is_empty() {
+        match conn.stream.write(&conn.write_buf) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.write_buf.drain(..n);
+                *busy = true;
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+
+    // 3. Read whatever is waiting (bounded per tick so one firehose
+    // client cannot starve its siblings on this event thread).
+    if !conn.eof {
+        let mut buf = [0u8; 4096];
+        for _ in 0..16 {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.read_buf.extend_from_slice(&buf[..n]);
+                    *busy = true;
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+
+    // 4. Frame and answer complete request lines.
+    while let Some(pos) = conn.read_buf.iter().position(|&b| b == b'\n') {
+        let raw: Vec<u8> = conn.read_buf.drain(..=pos).collect();
+        let line = String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned();
         if line.trim().is_empty() {
             continue;
         }
-        let resp: String = match Json::parse(&line) {
+        *busy = true;
+        match Json::parse(&line) {
             Err(e) => {
-                obj(vec![("valid", false.into()), ("error", e.as_str().into())]).to_string()
+                // Parse errors are answered inline (no id to echo —
+                // the line never became a request object).
+                let resp = obj(vec![("valid", false.into()), ("error", e.as_str().into())])
+                    .to_string();
+                requests.fetch_add(1, Ordering::Relaxed);
+                let tag = next_tag(conn, &None);
+                release(conn, tag, resp);
             }
             // `{"stats": true}`: report this server's counters (used by
             // `nahas cluster-status` to surface cache effectiveness).
-            Ok(req) if req.get("stats").is_some() => obj(vec![
-                ("requests", (requests.load(Ordering::Relaxed) as f64).into()),
-                ("cache_hits", (cache.hits.load(Ordering::Relaxed) as f64).into()),
-                ("sim_evals", (cache.sim_evals.load(Ordering::Relaxed) as f64).into()),
-                ("cache_size", (cache.len() as f64).into()),
-            ])
-            .to_string(),
-            Ok(req) => match serve_cache_key(&req) {
-                Some(key) => cache.get_or_compute(key, &req),
-                None => handle_request(&req).to_string(),
-            },
-        };
-        requests.fetch_add(1, Ordering::Relaxed);
-        if writeln!(writer, "{resp}").is_err() {
-            break;
+            // Cheap, so answered inline on the event thread; the
+            // request count snapshot excludes the probe itself.
+            Ok(req) if req.get("stats").is_some() => {
+                let resp = obj(vec![
+                    ("requests", (requests.load(Ordering::Relaxed) as f64).into()),
+                    ("cache_hits", (cache.hits.load(Ordering::Relaxed) as f64).into()),
+                    ("sim_evals", (cache.sim_evals.load(Ordering::Relaxed) as f64).into()),
+                    ("cache_size", (cache.len() as f64).into()),
+                ]);
+                requests.fetch_add(1, Ordering::Relaxed);
+                let id = req.get("id").cloned();
+                let resp = attach_id(resp.to_string(), id.clone());
+                let tag = next_tag(conn, &id);
+                release(conn, tag, resp);
+            }
+            Ok(req) => {
+                // Simulation work goes to the worker pool; the event
+                // thread stays on socket duty.
+                requests.fetch_add(1, Ordering::Relaxed);
+                let id = req.get("id").cloned();
+                let tag = next_tag(conn, &id);
+                conn.outstanding += 1;
+                sim_pool
+                    .jobs
+                    .lock()
+                    .expect("sim pool poisoned")
+                    .push_back(SimJob { shared: conn.shared.clone(), tag, id, req });
+                sim_pool.ready.notify_one();
+            }
         }
+    }
+    true
+}
+
+/// Ordering tag for the next response on `conn`: id'd requests release
+/// in completion order, id-less ones in arrival order.
+fn next_tag(conn: &mut Conn, id: &Option<Json>) -> RespTag {
+    if id.is_some() {
+        RespTag::Ident
+    } else {
+        let seq = conn.next_seq;
+        conn.next_seq += 1;
+        RespTag::Seq(seq)
+    }
+}
+
+/// Stage a finished response line for writing, honoring its ordering
+/// tag.
+fn release(conn: &mut Conn, tag: RespTag, resp: String) {
+    match tag {
+        RespTag::Ident => {
+            conn.write_buf.extend_from_slice(resp.as_bytes());
+            conn.write_buf.push(b'\n');
+        }
+        RespTag::Seq(seq) => {
+            conn.held.insert(seq, resp);
+            while let Some(line) = conn.held.remove(&conn.next_release) {
+                conn.write_buf.extend_from_slice(line.as_bytes());
+                conn.write_buf.push(b'\n');
+                conn.next_release += 1;
+            }
+        }
+    }
+}
+
+/// One simulation worker: drain the shared job queue, answer through
+/// the result cache, park the response on the owning connection.
+fn sim_worker(stop: &AtomicBool, cache: &ServeCache, sim_pool: &SimPool) {
+    loop {
+        let job = {
+            let mut q = sim_pool.jobs.lock().expect("sim pool poisoned");
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if stop.load(Ordering::Relaxed) {
+                    break None;
+                }
+                let (guard, _) = sim_pool
+                    .ready
+                    .wait_timeout(q, std::time::Duration::from_millis(50))
+                    .expect("sim pool poisoned");
+                q = guard;
+            }
+        };
+        let Some(job) = job else { return };
+        let resp = match serve_cache_key(&job.req) {
+            Some(key) => cache.get_or_compute(key, &job.req),
+            None => handle_request(&job.req).to_string(),
+        };
+        let resp = attach_id(resp, job.id);
+        job.shared.done.lock().expect("conn outbox poisoned").push((job.tag, resp));
     }
 }
 
@@ -365,6 +678,59 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    /// Pipeline a burst of joint-key queries on this one connection:
+    /// every request carries its index as an `"id"`, the whole burst
+    /// is written before any response is read, and the server answers
+    /// in *completion* order — the echoed ids restore request order
+    /// here. Responses are returned in `keys` order. Any transport
+    /// error, unparseable line, or missing/duplicate id fails the
+    /// whole burst (the caller falls back to one-at-a-time
+    /// roundtrips, which keep per-key transport verdicts exact).
+    pub fn query_pipelined(
+        &mut self,
+        space: &str,
+        seg: bool,
+        keys: &[Vec<usize>],
+        nas_len: usize,
+    ) -> Result<Vec<Json>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        let arr = |v: &[usize]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+        let mut burst = String::new();
+        for (i, key) in keys.iter().enumerate() {
+            let (nas_d, has_d) = key.split_at(nas_len);
+            let req = obj(vec![
+                ("space", space.into()),
+                ("nas", arr(nas_d)),
+                ("hw", arr(has_d)),
+                ("task", if seg { "seg".into() } else { "cls".into() }),
+                ("id", Json::Num(i as f64)),
+            ]);
+            burst.push_str(&req.to_string());
+            burst.push('\n');
+        }
+        self.writer.write_all(burst.as_bytes())?;
+        let mut out: Vec<Option<Json>> = vec![None; keys.len()];
+        for _ in 0..keys.len() {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(anyhow!("connection closed mid-pipeline"));
+            }
+            let resp = Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))?;
+            let Some(id) = resp.get("id").and_then(Json::as_usize) else {
+                return Err(anyhow!("pipelined response without id: {line}"));
+            };
+            let slot =
+                out.get_mut(id).ok_or_else(|| anyhow!("response id {id} out of range"))?;
+            if slot.is_some() {
+                return Err(anyhow!("duplicate response id {id}"));
+            }
+            *slot = Some(resp);
+        }
+        Ok(out.into_iter().map(|r| r.expect("every id matched")).collect())
     }
 }
 
@@ -562,9 +928,13 @@ pub(crate) fn query_with_reconnect(
 /// Batched remote evaluator: the paper's "multiple NAHAS clients can
 /// send parallel requests" made literal. Holds one TCP connection per
 /// worker; `evaluate_batch` dedups the batch through a joint-decision
-/// memo cache and fans the misses out over `std::thread::scope`
-/// workers, each driving its own connection (the server gives every
-/// connection a thread, so requests overlap end to end). Results are
+/// memo cache, splits the misses into contiguous per-connection
+/// slices, and **pipelines** each slice as one id-tagged burst over
+/// its connection ([`Client::query_pipelined`]) — many requests in
+/// flight per socket, matched by id, with the server's event loop
+/// answering in completion order. A failed burst falls back to
+/// one-at-a-time roundtrips after a reconnect, so per-key transport
+/// verdicts (and their cacheable tags) stay exact. Results are
 /// reassembled in batch order and — because the simulator and the
 /// local surrogate accuracy are deterministic — are bit-identical to
 /// the local [`crate::search::SurrogateSim`] path for the same seed
@@ -635,7 +1005,59 @@ impl ServiceEvaluator {
         }
     }
 
-    /// Evaluate deduped keys across the connection pool, in key order.
+    /// Pipeline one contiguous key slice over one connection; on a
+    /// failed burst, reconnect and replay the slice one key at a time
+    /// so each key gets its own exact transport verdict.
+    fn query_chunk(
+        client: &mut Client,
+        addr: &str,
+        space_name: &str,
+        sim: &crate::search::SurrogateSim,
+        seg: bool,
+        keys: &[Vec<usize>],
+        nas_len: usize,
+    ) -> Vec<(crate::search::EvalResult, bool)> {
+        match client.query_pipelined(space_name, seg, keys, nas_len) {
+            Ok(resps) => resps
+                .iter()
+                .zip(keys)
+                .map(|(resp, key)| (remote_result(resp, sim, &key[..nas_len]), true))
+                .collect(),
+            Err(_) => {
+                // The burst died somewhere mid-stream: the connection
+                // may still hold unread id-tagged responses, so it
+                // must never serve another query (a stale line would
+                // silently answer the wrong key). Reconnect, then let
+                // the serial ladder sort out per-key success/failure;
+                // if even the reconnect fails, the whole slice is a
+                // transport failure (uncacheable, retried on the next
+                // resample).
+                match Client::connect_opts(addr, client.io_timeout) {
+                    Ok(fresh) => {
+                        *client = fresh;
+                        keys.iter()
+                            .map(|k| {
+                                Self::query_one(client, addr, space_name, sim, seg, k, nas_len)
+                            })
+                            .collect()
+                    }
+                    Err(_) => {
+                        eprintln!(
+                            "service evaluator: transport failure to {addr}; \
+                             {} sample(s) invalid",
+                            keys.len()
+                        );
+                        keys.iter()
+                            .map(|_| (crate::search::EvalResult::invalid(), false))
+                            .collect()
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evaluate deduped keys across the connection pool, in key order:
+    /// one pipelined burst per connection over contiguous slices.
     fn query_pending(
         &mut self,
         pending: &[Vec<usize>],
@@ -652,29 +1074,19 @@ impl ServiceEvaluator {
         let mut fresh = Vec::with_capacity(pending.len());
         if nconn == 1 {
             let client = &mut self.conns[0];
-            for key in pending {
-                fresh.push(Self::query_one(
-                    client, addr, space_name, sim, seg, key, nas_len,
-                ));
-            }
+            fresh = Self::query_chunk(client, addr, space_name, sim, seg, pending, nas_len);
         } else {
-            // One worker thread per connection; each drives its
-            // contiguous slice of the deduped keys, so concatenated
-            // join output restores key order.
+            // One worker thread per connection; each pipelines its
+            // contiguous slice of the deduped keys as a single burst,
+            // so concatenated join output restores key order.
             std::thread::scope(|s| {
                 let handles: Vec<_> = self
                     .conns
                     .iter_mut()
                     .zip(pending.chunks(chunk))
                     .map(|(client, keys)| {
-                        s.spawn(move || {
-                            keys.iter()
-                                .map(|k| {
-                                    Self::query_one(
-                                        client, addr, space_name, sim, seg, k, nas_len,
-                                    )
-                                })
-                                .collect::<Vec<(EvalResult, bool)>>()
+                        s.spawn(move || -> Vec<(EvalResult, bool)> {
+                            Self::query_chunk(client, addr, space_name, sim, seg, keys, nas_len)
                         })
                     })
                     .collect();

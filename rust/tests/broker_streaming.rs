@@ -1,0 +1,352 @@
+//! Chunked streaming dispatch: a long shared queue must flow through
+//! the backend in `capacity()`-sized chunks — never as one
+//! queue-draining mega-batch — so a session whose keys land in an
+//! early chunk unblocks as soon as that chunk completes, while later
+//! chunks are still queued (or still gated) behind it. The chunking is
+//! pure scheduling: results stay bit-identical to the serial
+//! simulator, and the per-session `dispatched_chunks` deltas sum to
+//! the broker's global dispatch count like every other counter.
+//!
+//! The ordering test uses a *counting gate* backend: dispatch `k`
+//! blocks until the test has released at least `k + 1` calls, so the
+//! test can deterministically hold chunk 2 closed while proving the
+//! chunk-1 session already returned. No sleeps-as-synchronization.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{
+    joint_key, EvalBroker, EvalResult, EvalStats, Evaluator, ParallelSim, SurrogateSim,
+};
+use nahas::util::Rng;
+
+/// The pure function every stub backend computes, so any test can
+/// check bit-identity of a result from the key alone.
+fn det_result(nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+    let s = nas_d.iter().chain(has_d).sum::<usize>() as f64;
+    EvalResult {
+        acc: 0.5 + s * 1e-3,
+        latency_ms: 1.0 + s,
+        energy_mj: 0.25 * s,
+        area_mm2: 42.0,
+        valid: true,
+    }
+}
+
+/// Synthetic sample `i`: distinct joint key per `i`.
+fn sample(i: usize) -> (Vec<usize>, Vec<usize>) {
+    (vec![i], vec![i % 3])
+}
+
+/// Poll a broker-observable condition instead of sleeping blind; the
+/// deadline turns a would-be deadlock into a loud failure.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Shared per-dispatch log: the joint keys of every backend call, in
+/// call order — the chunk-size and chunk-content witness.
+type CallLog = Arc<Mutex<Vec<Vec<Vec<usize>>>>>;
+
+fn record_call(calls: &CallLog, batch: &[(Vec<usize>, Vec<usize>)]) {
+    calls.lock().unwrap().push(batch.iter().map(|(n, h)| joint_key(n, h)).collect());
+}
+
+fn assert_calls_within_capacity(calls: &CallLog, cap: usize, ctx: &str) {
+    for (i, call) in calls.lock().unwrap().iter().enumerate() {
+        assert!(
+            call.len() <= cap,
+            "{ctx}: dispatch {i} carried {} keys, over the {cap}-key chunk limit",
+            call.len()
+        );
+    }
+}
+
+/// Stub backend whose dispatch `k` blocks until the test has released
+/// `k + 1` calls. Records every call's key list before blocking, so
+/// the test can watch chunks arrive while they are still gated.
+struct CountingGateBackend {
+    calls: CallLog,
+    gate: Arc<(Mutex<usize>, Condvar)>,
+    call_no: usize,
+    capacity: usize,
+}
+
+fn release_calls(gate: &Arc<(Mutex<usize>, Condvar)>, n: usize) {
+    let (released, cvar) = &**gate;
+    *released.lock().unwrap() = n;
+    cvar.notify_all();
+}
+
+impl Evaluator for CountingGateBackend {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        det_result(nas_d, has_d)
+    }
+
+    fn evaluate_batch_tagged(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<(EvalResult, bool)> {
+        let k = self.call_no;
+        self.call_no += 1;
+        record_call(&self.calls, batch);
+        let (released, cvar) = &*self.gate;
+        let mut released = released.lock().unwrap();
+        while *released <= k {
+            released = cvar.wait(released).unwrap();
+        }
+        drop(released);
+        batch.iter().map(|(n, h)| (det_result(n, h), true)).collect()
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Recording backend with a small per-key delay — contention for the
+/// stats test without timing-sensitive assertions.
+struct SlowRecordingBackend {
+    calls: CallLog,
+}
+
+impl Evaluator for SlowRecordingBackend {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        det_result(nas_d, has_d)
+    }
+
+    fn evaluate_batch_tagged(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<(EvalResult, bool)> {
+        record_call(&self.calls, batch);
+        std::thread::sleep(Duration::from_micros(100 * batch.len() as u64));
+        batch.iter().map(|(n, h)| (det_result(n, h), true)).collect()
+    }
+
+    fn capacity(&self) -> usize {
+        4
+    }
+}
+
+/// The heart of streaming dispatch, proven deterministically:
+///
+/// 1. no dispatch ever exceeds `capacity()` keys (the default chunk);
+/// 2. the queue is chunked FIFO — chunk 1 is exactly the first
+///    session's keys, chunk 2 exactly the second's;
+/// 3. the session whose keys went in chunk 1 RETURNS while chunk 2 is
+///    still gated — under drain-all dispatch it would have had to wait
+///    for the whole queue.
+#[test]
+fn chunk_one_session_unblocks_while_chunk_two_still_gated() {
+    let calls: CallLog = Arc::new(Mutex::new(Vec::new()));
+    let gate = Arc::new((Mutex::new(0usize), Condvar::new()));
+    let backend =
+        CountingGateBackend { calls: calls.clone(), gate: gate.clone(), call_no: 0, capacity: 2 };
+    let broker = EvalBroker::new(Box::new(backend)).with_inflight_limit(3);
+
+    let batch_c = vec![sample(9)]; // occupies the backend (call 0, gated)
+    let batch_a = vec![sample(0), sample(1)]; // queued first -> chunk 1
+    let batch_b = vec![sample(2), sample(3)]; // queued second -> chunk 2
+    let a_done = AtomicBool::new(false);
+    let b_done = AtomicBool::new(false);
+
+    let stats = std::thread::scope(|s| {
+        let mut sc = broker.session();
+        let bc = &batch_c;
+        let hc = s.spawn(move || {
+            let r = sc.evaluate_batch(bc);
+            (r, sc.stats())
+        });
+        // C is provably mid-dispatch (backend checked out, blocked on
+        // the gate) once call 0 is counted.
+        wait_until("session C mid-dispatch", || broker.overlap_stats().dispatches >= 1);
+
+        // Admit A, then B, in that order: admission claims a session's
+        // keys into the FIFO queue atomically, so once the overlap
+        // stats show the admission, the keys are queued.
+        let mut sa = broker.session();
+        let (ba, ad) = (&batch_a, &a_done);
+        let ha = s.spawn(move || {
+            let r = sa.evaluate_batch(ba);
+            ad.store(true, Ordering::SeqCst);
+            (r, sa.stats())
+        });
+        wait_until("session A admitted", || broker.overlap_stats().peak_admitted >= 2);
+        let mut sb = broker.session();
+        let (bb, bd) = (&batch_b, &b_done);
+        let hb = s.spawn(move || {
+            let r = sb.evaluate_batch(bb);
+            bd.store(true, Ordering::SeqCst);
+            (r, sb.stats())
+        });
+        wait_until("session B admitted", || broker.overlap_stats().peak_admitted >= 3);
+
+        // Release call 0: C finishes, and the 4-deep queue must go out
+        // as TWO capacity-sized chunks, chunk 1 = A's keys.
+        release_calls(&gate, 1);
+        wait_until("chunk 1 dispatched", || calls.lock().unwrap().len() >= 2);
+        assert_eq!(
+            calls.lock().unwrap()[1],
+            vec![joint_key(&[0], &[0]), joint_key(&[1], &[1])],
+            "chunk 1 must be exactly A's keys, FIFO from the queue front"
+        );
+
+        // Release call 1 only: A must come back while chunk 2 ([k2,k3])
+        // is still gated — the streaming property.
+        release_calls(&gate, 2);
+        wait_until("session A returned", || a_done.load(Ordering::SeqCst));
+        assert!(
+            !b_done.load(Ordering::SeqCst),
+            "B cannot have returned: its chunk-2 keys are still gated"
+        );
+
+        release_calls(&gate, 3);
+        let (rc, dc) = hc.join().expect("session C panicked");
+        let (ra, da) = ha.join().expect("session A panicked");
+        let (rb, db) = hb.join().expect("session B panicked");
+        for (batch, results) in [(&batch_c, &rc), (&batch_a, &ra), (&batch_b, &rb)] {
+            for ((n, h), r) in batch.iter().zip(results) {
+                assert_eq!(r.acc.to_bits(), det_result(n, h).acc.to_bits());
+            }
+        }
+        vec![dc, da, db]
+    });
+
+    // Chunk shapes: [k9], then [k0,k1], then [k2,k3] — never more than
+    // capacity() keys per dispatch.
+    assert_calls_within_capacity(&calls, 2, "gated streaming");
+    assert_eq!(calls.lock().unwrap().len(), 3);
+    assert_eq!(
+        calls.lock().unwrap()[2],
+        vec![joint_key(&[2], &[2]), joint_key(&[3], &[0])],
+        "chunk 2 must be exactly B's keys"
+    );
+
+    // Streaming accounting: only the depth-4 dispatch left keys behind.
+    let ov = broker.overlap_stats();
+    assert_eq!(ov.chunk_limit, 2, "default chunk = backend capacity");
+    assert_eq!(ov.dispatches, 3);
+    assert_eq!(ov.chunked_dispatches, 1, "only chunk 1 left keys queued");
+    assert_eq!(ov.peak_queue_depth, 4, "A's and B's claims queued together");
+
+    // Per-session chunk counts sum to the broker's dispatch total.
+    let driven: usize = stats.iter().map(|d| d.dispatched_chunks).sum();
+    assert_eq!(driven, ov.dispatches, "every dispatch driven by exactly one session");
+    assert_eq!(broker.stats().dispatched_chunks, ov.dispatches);
+}
+
+/// Chunked dispatch is pure scheduling: concurrent sessions with
+/// overlapping random batches stay bit-identical to the serial
+/// [`SurrogateSim`] for the same seed — at the default chunk AND at
+/// the degenerate one-key-per-dispatch extreme — across seeds.
+#[test]
+fn chunked_dispatch_matches_serial_simulator_bit_for_bit_across_seeds() {
+    for seed in [1u64, 7, 42] {
+        for chunk in [None, Some(1)] {
+            let space = || NasSpace::new(NasSpaceId::EfficientNet);
+            let has = HasSpace::new();
+            let mut rng = Rng::new(seed);
+            let pool: Vec<(Vec<usize>, Vec<usize>)> =
+                (0..40).map(|_| (space().random(&mut rng), has.random(&mut rng))).collect();
+
+            let mut broker = EvalBroker::new(Box::new(ParallelSim::new(space(), seed, 4)));
+            if let Some(c) = chunk {
+                broker = broker.with_dispatch_chunk(c);
+            }
+            let outputs: Vec<_> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..4)
+                    .map(|t| {
+                        let mut session = broker.session();
+                        let pool = &pool;
+                        s.spawn(move || {
+                            // Overlapping 16-sample windows of the pool.
+                            let batch: Vec<_> = pool[t * 8..t * 8 + 16].to_vec();
+                            let r = session.evaluate_batch(&batch);
+                            (batch, r)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("session panicked")).collect()
+            });
+
+            let serial = SurrogateSim::new(space(), seed);
+            for (batch, results) in &outputs {
+                for ((n, h), got) in batch.iter().zip(results) {
+                    let want = serial.evaluate_pure(n, h);
+                    assert_eq!(got.valid, want.valid, "seed {seed} chunk {chunk:?}");
+                    assert_eq!(got.acc.to_bits(), want.acc.to_bits());
+                    assert_eq!(got.latency_ms.to_bits(), want.latency_ms.to_bits());
+                    assert_eq!(got.energy_mj.to_bits(), want.energy_mj.to_bits());
+                    assert_eq!(got.area_mm2.to_bits(), want.area_mm2.to_bits());
+                }
+            }
+            // Chunking must not duplicate backend work either.
+            assert_eq!(broker.backend_stats().requests, broker.stats().evals);
+        }
+    }
+}
+
+/// Under heavy chunking (chunk 2 on a capacity-4 backend, shared keys,
+/// full overlap) the whole stats ledger still balances: per-session
+/// deltas — including `dispatched_chunks` — sum exactly to the broker
+/// globals, and no dispatch ever exceeds the configured chunk.
+#[test]
+fn session_stat_deltas_sum_to_broker_globals_under_chunking() {
+    const KEYS: usize = 30;
+    const SESSIONS: usize = 4;
+    let universe: Vec<_> = (0..KEYS).map(sample).collect();
+    let calls: CallLog = Arc::new(Mutex::new(Vec::new()));
+    let broker = EvalBroker::new(Box::new(SlowRecordingBackend { calls: calls.clone() }))
+        .with_dispatch_chunk(2);
+
+    let stats: Vec<EvalStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..SESSIONS)
+            .map(|t| {
+                let mut session = broker.session();
+                let universe = &universe;
+                s.spawn(move || {
+                    // Rotated halves of the universe: sessions contend
+                    // on every key but never repeat their own.
+                    for b in 0..2 {
+                        let batch: Vec<_> = (0..KEYS / 2)
+                            .map(|j| universe[(t * 7 + b * (KEYS / 2) + j) % KEYS].clone())
+                            .collect();
+                        let r = session.evaluate_batch(&batch);
+                        for ((n, h), got) in batch.iter().zip(&r) {
+                            assert_eq!(got.acc.to_bits(), det_result(n, h).acc.to_bits());
+                        }
+                    }
+                    session.stats()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("session panicked")).collect()
+    });
+
+    assert_calls_within_capacity(&calls, 2, "chunk-2 stress");
+    let merged = stats.iter().fold(EvalStats::default(), |acc, d| acc.merged(d));
+    let g = broker.stats();
+    assert_eq!(merged.requests, g.requests, "requests");
+    assert_eq!(merged.evals, g.evals, "evals");
+    assert_eq!(merged.cache_hits, g.cache_hits, "cache hits");
+    assert_eq!(merged.cross_session_hits, g.cross_session_hits, "cross hits");
+    assert_eq!(merged.inflight_hits, g.inflight_hits, "inflight hits");
+    assert_eq!(merged.dispatched_chunks, g.dispatched_chunks, "dispatched chunks");
+    assert_eq!(g.requests, KEYS * SESSIONS);
+    assert_eq!(g.evals, KEYS, "each unique key evaluated exactly once");
+    let ov = broker.overlap_stats();
+    assert_eq!(g.dispatched_chunks, ov.dispatches, "chunk ledger vs overlap ledger");
+    assert!(
+        ov.dispatches >= KEYS / 2,
+        "30 unique keys at 2 per chunk need at least 15 dispatches, saw {}",
+        ov.dispatches
+    );
+}

@@ -105,6 +105,106 @@ fn prop_memo_cache_returns_same_result_as_fresh_evaluation() {
     assert_eq!(st.evals, 128, "every second request must be a memo hit");
 }
 
+// ---- streaming dispatch properties (`nahas::search::broker`) ----
+
+/// Backend that logs the joint keys of every dispatch it receives.
+struct RecordingBackend {
+    calls: std::sync::Arc<std::sync::Mutex<Vec<Vec<Vec<usize>>>>>,
+}
+
+impl Evaluator for RecordingBackend {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        prop_det_result(nas_d, has_d)
+    }
+
+    fn evaluate_batch_tagged(
+        &mut self,
+        batch: &[(Vec<usize>, Vec<usize>)],
+    ) -> Vec<(EvalResult, bool)> {
+        self.calls
+            .lock()
+            .unwrap()
+            .push(batch.iter().map(|(n, h)| nahas::search::joint_key(n, h)).collect());
+        batch.iter().map(|(n, h)| (prop_det_result(n, h), true)).collect()
+    }
+
+    fn capacity(&self) -> usize {
+        8
+    }
+}
+
+/// Pure reference function for the recording backend.
+fn prop_det_result(nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+    let s = nas_d.iter().chain(has_d).sum::<usize>() as f64;
+    EvalResult {
+        acc: 0.5 + s * 1e-3,
+        latency_ms: 1.0 + s,
+        energy_mj: 0.25 * s,
+        area_mm2: 1.0,
+        valid: true,
+    }
+}
+
+/// Chunked dispatch is a pure partition of the dedup'd queue: for any
+/// batch (duplicate keys included) and any chunk limit, the per-chunk
+/// key lists concatenate to exactly the batch's unique keys in
+/// first-occurrence (FIFO) order — every queued key exactly once,
+/// never more than the chunk limit per dispatch, and a key deduped
+/// against an earlier slot never reappears in a later chunk. Results
+/// stay bit-identical to the pure function throughout.
+#[test]
+fn prop_chunk_partition_preserves_fifo_order_and_covers_each_key_once() {
+    proptest::check(
+        "chunked dispatch partitions the queue",
+        128,
+        |r| {
+            // Keys from a small pool so in-batch duplicates are common.
+            let batch: Vec<(Vec<usize>, Vec<usize>)> = (0..1 + r.below(20))
+                .map(|_| (vec![r.below(8), r.below(4)], vec![r.below(3)]))
+                .collect();
+            let chunk = 1 + r.below(5);
+            (batch, chunk)
+        },
+        |(batch, chunk)| {
+            let calls = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+            let broker = EvalBroker::new(Box::new(RecordingBackend { calls: calls.clone() }))
+                .with_dispatch_chunk(*chunk);
+            let mut session = broker.session();
+            let results = session.evaluate_batch(batch);
+            for ((n, h), got) in batch.iter().zip(&results) {
+                if !bits_equal(got, &prop_det_result(n, h)) {
+                    return Err(format!("result for {n:?}/{h:?} diverged"));
+                }
+            }
+            // Unique keys in first-occurrence order: the expected
+            // concatenation of all chunks.
+            let mut expect: Vec<Vec<usize>> = Vec::new();
+            for (n, h) in batch {
+                let k = nahas::search::joint_key(n, h);
+                if !expect.contains(&k) {
+                    expect.push(k);
+                }
+            }
+            let calls = calls.lock().unwrap();
+            for (i, call) in calls.iter().enumerate() {
+                if call.is_empty() || call.len() > *chunk {
+                    return Err(format!(
+                        "dispatch {i} carried {} keys (chunk limit {chunk})",
+                        call.len()
+                    ));
+                }
+            }
+            let flat: Vec<Vec<usize>> = calls.iter().flatten().cloned().collect();
+            if flat != expect {
+                return Err(format!(
+                    "chunks {flat:?} are not the FIFO unique-key partition {expect:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---- persistent store properties (`nahas::search::store`) ----
 
 fn tmp(name: &str) -> PathBuf {

@@ -119,6 +119,121 @@ fn eight_threads_fifty_mixed_requests_each() {
     server.stop();
 }
 
+/// Pipelining on ONE connection: 50 id-tagged requests written as a
+/// single burst before any response is read, with deliberately
+/// shuffled ids. The server answers id'd requests in *completion*
+/// order (whatever its sim workers finish first), so the echoed id is
+/// the only valid way to match responses — the test pins that every
+/// id comes back exactly once and that the response carrying id `k`
+/// is bit-for-bit the answer to request `k` (checked against serial
+/// roundtrips for the same keys on a second connection).
+#[test]
+fn pipelined_burst_of_fifty_matches_serial_responses_by_id() {
+    const BURST: usize = 50;
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let baseline = has.baseline_decisions();
+    let mut rng = Rng::new(0xBEEF);
+    let nas_pool: Vec<Vec<usize>> = (0..BURST).map(|_| space.random(&mut rng)).collect();
+
+    // Write the whole burst — request j carries id (j*17+5) % 50, a
+    // permutation, so arrival order and id order never coincide.
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut burst = String::new();
+    for j in 0..BURST {
+        let id = (j * 17 + 5) % BURST;
+        burst.push_str(&format!(
+            "{{\"space\":\"efficientnet\",\"nas\":{},\"hw\":{},\"id\":{id}}}\n",
+            json_arr(&nas_pool[id]),
+            json_arr(&baseline)
+        ));
+    }
+    writer.write_all(burst.as_bytes()).unwrap();
+
+    // 50 responses, matched purely by echoed id.
+    let mut by_id: Vec<Option<Json>> = vec![None; BURST];
+    for _ in 0..BURST {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap_or_else(|e| panic!("unparseable '{line}': {e}"));
+        let id = j.get("id").and_then(Json::as_usize).expect("response without echoed id");
+        assert!(by_id[id].is_none(), "id {id} answered twice");
+        by_id[id] = Some(j);
+    }
+
+    // Each id's response is the answer to *that* request: identical to
+    // a serial roundtrip for the same key on a fresh connection (the
+    // simulator is deterministic).
+    let mut serial = Client::connect(&addr).unwrap();
+    for (id, resp) in by_id.iter().enumerate() {
+        let resp = resp.as_ref().unwrap();
+        assert_eq!(resp.get("valid"), Some(&Json::Bool(true)), "id {id}");
+        let want = serial.query("efficientnet", &nas_pool[id], &baseline, false).unwrap();
+        let (got, want_lat) = (resp.get("latency_ms"), want.get("latency_ms"));
+        assert_eq!(got, want_lat, "id {id} got another key's answer");
+        assert_eq!(resp.get("energy_mj"), want.get("energy_mj"), "id {id}");
+    }
+    assert_eq!(
+        server.requests.load(Ordering::Relaxed),
+        2 * BURST as u64,
+        "burst + serial check, every line answered exactly once"
+    );
+    server.stop();
+}
+
+/// Slow-loris robustness: connections that write half a request line
+/// and then stall must not stall anyone else — more of them than the
+/// server has event threads, so a blocking-read loop anywhere would
+/// wedge the whole service. Normal clients keep getting answers, and
+/// a loris that finally completes its line still gets its response on
+/// the same connection.
+#[test]
+fn stalled_partial_line_connections_do_not_stall_other_clients() {
+    let server = Server::spawn("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let baseline = has.baseline_decisions();
+    let mut rng = Rng::new(0x10E1);
+
+    // Four stalled connections (server default is two event threads),
+    // each holding an unterminated request fragment.
+    let mut loris: Vec<TcpStream> = (0..4)
+        .map(|_| {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            write!(s, "{{\"space\":\"efficientnet\",").unwrap();
+            s.flush().unwrap();
+            s
+        })
+        .collect();
+
+    // A normal client gets prompt answers while all four loris streams
+    // sit mid-line. The io timeout turns a wedged server into a loud
+    // failure instead of a hung test.
+    let mut client =
+        Client::connect_with_io_timeout(&addr, std::time::Duration::from_secs(10)).unwrap();
+    for _ in 0..5 {
+        let nas = space.random(&mut rng);
+        let resp = client.query("efficientnet", &nas, &baseline, false).unwrap();
+        assert_eq!(resp.get("valid"), Some(&Json::Bool(true)));
+    }
+
+    // A loris that completes its line is served like anyone else: the
+    // buffered fragment and the completion frame into one request.
+    let mut s = loris.pop().unwrap();
+    s.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+    let nas = space.random(&mut rng);
+    writeln!(s, "\"nas\":{},\"hw\":{}}}", json_arr(&nas), json_arr(&baseline)).unwrap();
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(&line).unwrap().get("valid"), Some(&Json::Bool(true)));
+    server.stop();
+}
+
 #[test]
 fn stats_probe_reports_server_cache_size() {
     // The `{"stats": true}` probe must expose the resident size of the
