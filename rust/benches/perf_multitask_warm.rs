@@ -1,0 +1,95 @@
+//! §Perf — registry-driven multi-task sweep, cold vs. warm: the
+//! `multitask-cls-seg` substrate compiled from the registry, run cold
+//! (fresh `--cache-dir`) and then warm (reopening the spilled
+//! task-set-fingerprinted cache file). The warm pass must perform
+//! **zero** backend evaluations; per-task frontiers and the union
+//! frontier must replay identically. This is the cold-vs-warm row of
+//! `docs/BENCH_TRAJECTORY.md` for the scenario-substrate PR.
+
+use std::time::Instant;
+
+use nahas::nas::NasSpaceId;
+use nahas::search::store::{eval_cache_file_tasks, eval_fingerprint_tasks};
+use nahas::search::{
+    builtin_registry, compile_substrates, run_sweep, CacheStore, EvalBroker, MultiTaskEval,
+    Scenario, SubstrateParams,
+};
+
+const SAMPLES: usize = 200;
+const SEED: u64 = 7;
+
+fn broker(scenarios: &[Scenario], store: CacheStore) -> EvalBroker {
+    let tasks = scenarios[0].tasks.as_ref().expect("multi-task scenarios");
+    let backend =
+        Box::new(MultiTaskEval::surrogate(tasks, NasSpaceId::EfficientNet, SEED, 4));
+    EvalBroker::with_store(backend, store)
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("nahas-mtwarm-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let registry = builtin_registry();
+    let params = SubstrateParams::new(NasSpaceId::EfficientNet, SAMPLES, 20, SEED)
+        .targets(vec![0.4, 0.5, 0.6]);
+    let scenarios =
+        compile_substrates(&registry, &["multitask-cls-seg".to_string()], &params).unwrap();
+    let kinds = scenarios[0].tasks_key();
+    let path = eval_cache_file_tasks(&dir, NasSpaceId::EfficientNet, &kinds, SEED);
+    let fp = eval_fingerprint_tasks(NasSpaceId::EfficientNet, &kinds, SEED);
+    println!(
+        "multi-task warm start: {} scenarios x {SAMPLES} samples x {} tasks, cache file {}\n",
+        scenarios.len(),
+        kinds.len(),
+        path.display()
+    );
+
+    // Cold pass: pays the full simulator bill, spills every entry.
+    let store = CacheStore::open(&path, &fp).expect("open cache store");
+    let cold_broker = broker(&scenarios, store);
+    let t0 = Instant::now();
+    let cold = run_sweep(&cold_broker, &scenarios);
+    let cold_s = t0.elapsed().as_secs_f64();
+    let cold_backend = cold_broker.backend_stats().requests;
+    drop(cold_broker); // Flush the spill file.
+    println!(
+        "  cold: {cold_s:>6.2}s  {} evals, {} backend requests, {} persisted hits, \
+         {} cross-scenario hits",
+        cold.eval_stats.evals,
+        cold_backend,
+        cold.eval_stats.persisted_hits,
+        cold.eval_stats.cross_session_hits
+    );
+
+    // Warm pass: fresh process state, same file.
+    let t0 = Instant::now();
+    let store = CacheStore::open(&path, &fp).expect("reopen cache store");
+    let load_s = t0.elapsed().as_secs_f64();
+    let loaded = store.loaded_len();
+    let warm_broker = broker(&scenarios, store);
+    let t0 = Instant::now();
+    let warm = run_sweep(&warm_broker, &scenarios);
+    let warm_s = t0.elapsed().as_secs_f64();
+    let warm_backend = warm_broker.backend_stats().requests;
+    println!(
+        "  warm: {warm_s:>6.2}s  {} evals, {} backend requests, {} persisted hits \
+         ({loaded} entries loaded in {:.1}ms)",
+        warm.eval_stats.evals,
+        warm_backend,
+        warm.eval_stats.persisted_hits,
+        load_s * 1e3
+    );
+
+    assert_eq!(warm_backend, 0, "fully-warm multi-task sweep must not touch the backend");
+    assert!(warm.eval_stats.persisted_hits > 0);
+    assert!(cold.eval_stats.cross_session_hits > 0, "same-seed scenarios must share work");
+    // Per-task frontier equivalence: warm replay is the same sweep.
+    assert_eq!(cold.task_frontiers, warm.task_frontiers, "warm per-task frontiers diverged");
+    for ((_, a), (_, b)) in cold.union.iter().zip(&warm.union) {
+        assert_eq!(a.len(), b.len(), "warm union frontier diverged");
+    }
+    for (key, front) in &warm.task_frontiers {
+        println!("  per-task frontier {key}: {} points", front.len());
+    }
+    println!("\n  speedup: {:.1}x (cold/warm wall clock)", cold_s / warm_s.max(1e-9));
+    let _ = std::fs::remove_dir_all(&dir);
+}

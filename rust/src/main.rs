@@ -4,6 +4,7 @@
 //!   simulate       cost every Table-3 baseline (or random samples) on a hw config
 //!   search         multi-trial joint / platform-aware / HAS-only search
 //!   sweep          concurrent multi-scenario sweep over one shared eval broker
+//!   scenarios      list the registered scenario substrates (sweep --scenario)
 //!   phase          phase-based (HAS-then-NAS) search (Fig. 9 ablation)
 //!   oneshot        weight-sharing search on the AOT proxy supernet
 //!   train-child    train one proxy child end-to-end through PJRT
@@ -28,15 +29,19 @@ use nahas::metrics;
 use nahas::nas::{baselines, NasSpace, NasSpaceId};
 use nahas::runtime::Runtime;
 use nahas::search::joint::JointLayout;
-use nahas::search::oneshot::{oneshot_search, OneshotCfg, SimOracle};
+use nahas::search::oneshot::{oneshot_search, BrokerOracle, OneshotCfg};
 use nahas::search::phase::phase_search;
 use nahas::search::ppo::PpoController;
 use nahas::search::reinforce::ReinforceController;
-use nahas::search::store::{eval_cache_file, eval_fingerprint, serve_fingerprint};
+use nahas::search::store::{
+    eval_cache_file, eval_cache_file_tasks, eval_fingerprint, eval_fingerprint_tasks,
+    serve_fingerprint,
+};
 use nahas::search::{
-    evolution::EvolutionController, joint_search, run_sweep, scenario_grid, CacheStore,
-    CacheValue, Controller, CostObjective, EvalBroker, Evaluator, ParallelSim, RandomController,
-    RewardCfg, SearchCfg, SurrogateSim, SweepDriver, Task,
+    builtin_registry, compile_substrates, evolution::EvolutionController, joint_search, run_sweep,
+    scenario_grid, CacheStore, CacheValue, Controller, CostObjective, EvalBroker, Evaluator,
+    MultiTaskEval, ParallelSim, RandomController, RewardCfg, Scenario, SearchCfg, SubstrateParams,
+    SurrogateSim, SweepDriver, Task,
 };
 use nahas::service::{ServeCache, Server, ServerOpts, ServiceEvaluator};
 use nahas::trainer::ProxyTrainer;
@@ -273,7 +278,20 @@ fn evaluator_arg(
         }
         other => bail!("unknown evaluator '{other}' (local|parallel|service|cluster)"),
     };
-    let broker = match cache_store_arg(flags, space_id, seg, seed)? {
+    let store = cache_store_arg(flags, space_id, seg, seed)?;
+    broker_with_flags(flags, backend, store)
+}
+
+/// Wrap a backend in an [`EvalBroker`], honouring the shared broker
+/// flags (`--broker-inflight`, `--dispatch-chunk`) and an optional
+/// persistent store. Shared by [`evaluator_arg`], the multi-task
+/// scenario backend, and the oneshot oracle.
+fn broker_with_flags(
+    flags: &Flags,
+    backend: Box<dyn Evaluator + Send>,
+    store: Option<CacheStore>,
+) -> Result<EvalBroker> {
+    let broker = match store {
         Some(store) => EvalBroker::with_store(backend, store),
         None => EvalBroker::new(backend),
     };
@@ -297,6 +315,47 @@ fn evaluator_arg(
         }
         None => broker,
     })
+}
+
+/// Build the broker for a multi-task scenario set: a task-dispatching
+/// [`MultiTaskEval`] over per-task simulator backends. Multi-task
+/// joint keys carry a task prefix, so the persistent cache file (and
+/// its fingerprint) are keyed by the scenario's whole task SET —
+/// a multi-task cache can never warm-start a single-task run.
+fn multi_task_broker(
+    flags: &Flags,
+    scenarios: &[Scenario],
+    space: NasSpaceId,
+    seed: u64,
+) -> Result<EvalBroker> {
+    let kind = flags.get("evaluator").unwrap_or("local");
+    let workers = match kind {
+        "local" => 1,
+        "parallel" => workers_arg(flags)?,
+        other => bail!(
+            "multi-task scenarios evaluate through a task-dispatching in-process backend; \
+             --evaluator {other} is not supported yet (use local|parallel)"
+        ),
+    };
+    if flags.bool("seg") {
+        bail!("--seg conflicts with multi-task scenarios (each task declares its own variant)");
+    }
+    let tasks = scenarios[0]
+        .tasks
+        .as_ref()
+        .expect("multi_task_broker called without a multi-task scenario");
+    let store = match flags.get("cache-dir") {
+        Some(dir) => {
+            let kinds = scenarios[0].tasks_key();
+            let path = eval_cache_file_tasks(Path::new(dir), space, &kinds, seed);
+            let store = CacheStore::open(&path, &eval_fingerprint_tasks(space, &kinds, seed))?;
+            report_cache_store(&store);
+            Some(store)
+        }
+        None => None,
+    };
+    let backend = Box::new(MultiTaskEval::surrogate(tasks, space, seed, workers));
+    broker_with_flags(flags, backend, store)
 }
 
 fn print_eval_stats(st: &nahas::search::EvalStats) {
@@ -368,6 +427,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&flags),
         "search" => cmd_search(&flags),
         "sweep" => cmd_sweep(&flags),
+        "scenarios" => cmd_scenarios(),
         "phase" => cmd_phase(&flags),
         "oneshot" => cmd_oneshot(&flags),
         "train-child" => cmd_train_child(&flags),
@@ -397,18 +457,23 @@ fn print_usage() {
          \x20              [--cache-dir DIR  persist evaluations across runs (warm start)]\n\
          \x20              [--broker-inflight N  concurrent session batches (1 = serial)]\n\
          \x20              [--dispatch-chunk N  keys per backend dispatch (streaming)]\n\
-         \x20 sweep        [--targets 0.3,0.5,0.7 --objectives latency,energy]\n\
+         \x20 sweep        [--targets 0.3,0.5,0.7 --objectives latency,energy,area]\n\
          \x20              [--drivers joint,phase --samples 500 --batch 16 --seed S]\n\
+         \x20              [--scenario NAME[,NAME..]  run registered substrates instead\n\
+         \x20              \x20of the grid (see `nahas scenarios`; multi-task substrates\n\
+         \x20              \x20report per-task frontiers)]\n\
          \x20              [--space s2 --out results/sweep.csv]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N]\n\
          \x20              [--cache-dir DIR  warm-start repeated sweeps from disk]\n\
          \x20              [--broker-inflight N  overlap scenario batches on the backend]\n\
          \x20              [--dispatch-chunk N  keys per backend dispatch (streaming)]\n\
          \x20              runs all scenarios concurrently over one shared broker\n\
+         \x20 scenarios    list registered scenario substrates (for sweep --scenario)\n\
          \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
          \x20              [--evaluator local|parallel|service|cluster --workers N --batch 16]\n\
          \x20              [--cache-dir DIR --broker-inflight N --dispatch-chunk N]\n\
          \x20 oneshot      [--warmup 60 --steps 200 --target-ms 0.02 --seed S]\n\
+         \x20              [--cache-dir DIR  warm-start the cost oracle from disk]\n\
          \x20 train-child  [--steps 30 --seed S]\n\
          \x20 costmodel    [--data 2000 --train-steps 600 --eval 256 --space s2]\n\
          \x20 serve        [--addr 127.0.0.1:7878 --cache-dir DIR]\n\
@@ -607,41 +672,84 @@ fn dedup_keep_order<T: PartialEq + Copy>(v: &mut Vec<T>) {
 /// union Pareto frontier per objective.
 fn cmd_sweep(flags: &Flags) -> Result<()> {
     let space = space_arg(flags)?;
+    let space_id = space.id;
     let seed = flags.u64("seed", 0)?;
     let samples = flags.usize("samples", 500)?;
     let batch = flags.usize("batch", 16)?.max(1);
-    let targets = csv_f64(flags.get("targets").unwrap_or("0.3,0.5,0.7"), "targets")?;
-    let mut objectives = Vec::new();
-    let objective_toks = flags.get("objectives").unwrap_or("latency");
-    for tok in objective_toks.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-        objectives.push(match tok {
-            "latency" | "lat" => CostObjective::Latency,
-            "energy" => CostObjective::Energy,
-            other => bail!("unknown objective '{other}' (latency|energy)"),
-        });
+    let scenario_names: Vec<String> = flags
+        .get("scenario")
+        .map(|raw| {
+            raw.split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(String::from)
+                .collect()
+        })
+        .unwrap_or_default();
+
+    let scenarios = if scenario_names.is_empty() {
+        // Classic grid path: targets x objectives x drivers.
+        let targets = csv_f64(flags.get("targets").unwrap_or("0.3,0.5,0.7"), "targets")?;
+        let mut objectives = Vec::new();
+        let objective_toks = flags.get("objectives").unwrap_or("latency");
+        for tok in objective_toks.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            objectives.push(match tok {
+                "latency" | "lat" => CostObjective::Latency,
+                "energy" => CostObjective::Energy,
+                "area" => CostObjective::Area,
+                other => bail!("unknown objective '{other}' (latency|energy|area)"),
+            });
+        }
+        let mut drivers = Vec::new();
+        let driver_toks = flags.get("drivers").unwrap_or("joint");
+        for tok in driver_toks.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            drivers.push(match tok {
+                "joint" => SweepDriver::Joint,
+                "phase" => SweepDriver::Phase,
+                other => bail!("unknown driver '{other}' (joint|phase)"),
+            });
+        }
+        if objectives.is_empty() {
+            bail!("--objectives needs at least one of latency|energy|area");
+        }
+        if drivers.is_empty() {
+            bail!("--drivers needs at least one of joint|phase");
+        }
+        let mut targets = targets;
+        dedup_keep_order(&mut targets);
+        dedup_keep_order(&mut objectives);
+        dedup_keep_order(&mut drivers);
+        scenario_grid(&targets, &objectives, &drivers, space_id, samples, batch, seed)
+    } else {
+        // Registry path: compile named substrates from `nahas scenarios`.
+        if flags.get("objectives").is_some() || flags.get("drivers").is_some() {
+            bail!(
+                "--scenario compiles registered substrates with their own objectives and \
+                 drivers; drop --objectives/--drivers (combine substrates with a comma instead)"
+            );
+        }
+        let targets = match flags.get("targets") {
+            Some(raw) => {
+                let mut t = csv_f64(raw, "targets")?;
+                dedup_keep_order(&mut t);
+                t
+            }
+            // Empty = each substrate supplies its own default targets.
+            None => Vec::new(),
+        };
+        let registry = builtin_registry();
+        let params = SubstrateParams::new(space_id, samples, batch, seed).targets(targets);
+        compile_substrates(&registry, &scenario_names, &params)?
+    };
+    if scenarios.is_empty() {
+        bail!("no scenarios to run");
     }
-    let mut drivers = Vec::new();
-    let driver_toks = flags.get("drivers").unwrap_or("joint");
-    for tok in driver_toks.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-        drivers.push(match tok {
-            "joint" => SweepDriver::Joint,
-            "phase" => SweepDriver::Phase,
-            other => bail!("unknown driver '{other}' (joint|phase)"),
-        });
-    }
-    if objectives.is_empty() {
-        bail!("--objectives needs at least one of latency|energy");
-    }
-    if drivers.is_empty() {
-        bail!("--drivers needs at least one of joint|phase");
-    }
-    let mut targets = targets;
-    dedup_keep_order(&mut targets);
-    dedup_keep_order(&mut objectives);
-    dedup_keep_order(&mut drivers);
-    let scenarios =
-        scenario_grid(&targets, &objectives, &drivers, space.id, samples, batch, seed);
-    let broker = evaluator_arg(flags, space, seed, batch)?;
+    let multi_task = !scenarios[0].tasks_key().is_empty();
+    let broker = if multi_task {
+        multi_task_broker(flags, &scenarios, space_id, seed)?
+    } else {
+        evaluator_arg(flags, space, seed, batch)?
+    };
     println!(
         "sweep: {} scenarios x {} samples, concurrent over one shared evaluation broker",
         scenarios.len(),
@@ -694,12 +802,36 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
         ov.chunk_limit, ov.chunked_dispatches, ov.peak_queue_depth
     );
 
+    // Multi-task scenarios additionally report one frontier per task
+    // (acc vs. the scenario objective, restricted to that task's
+    // evaluations) — the folded union rows below mix tasks.
+    for (key, front) in &out.task_frontiers {
+        match front.last() {
+            Some(p) => println!(
+                "per-task frontier {key}: {} points (top acc {:.2}% @ cost {:.4})",
+                front.len(),
+                p.acc,
+                p.cost
+            ),
+            None => println!("per-task frontier {key}: 0 points"),
+        }
+    }
+    // N-dimensional frontiers (scenarios with `frontier_objectives`,
+    // e.g. the tri-objective substrate) — reporting only, never part
+    // of the search trajectory.
+    for (axes, front) in &out.union_nd {
+        let label: Vec<String> =
+            axes.iter().map(|o| format!("{o:?}").to_lowercase()).collect();
+        println!(
+            "N-dim union frontier ({}): {} non-dominated points",
+            label.join("+"),
+            front.len()
+        );
+    }
+
     let mut rows = Vec::new();
     for (objective, front) in &out.union {
-        let unit = match objective {
-            CostObjective::Latency => "ms",
-            CostObjective::Energy => "mJ",
-        };
+        let unit = objective.unit();
         println!("\nunion Pareto frontier ({unit} objective, {} points):", front.len());
         let cost_col = format!("Cost({unit})");
         let mut ftable = Table::new(&["Acc(%)", cost_col.as_str(), "Scenario"]);
@@ -721,17 +853,48 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// `nahas scenarios` — list the registered scenario substrates that
+/// `nahas sweep --scenario NAME` can compile and run.
+fn cmd_scenarios() -> Result<()> {
+    let registry = builtin_registry();
+    println!("registered scenario substrates ({}):", registry.len());
+    let mut table = Table::new(&["Name", "Tasks", "Objectives", "Summary"]);
+    for s in &registry {
+        let tasks: Vec<String> =
+            s.tasks().iter().map(|t| format!("{t:?}").to_lowercase()).collect();
+        let objectives: Vec<String> =
+            s.objectives().iter().map(|o| format!("{o:?}").to_lowercase()).collect();
+        table.row(vec![
+            s.name().to_string(),
+            tasks.join("+"),
+            objectives.join("+"),
+            s.summary().to_string(),
+        ]);
+    }
+    table.print();
+    println!("run one with: nahas sweep --scenario NAME[,NAME..] [--targets 0.5,..]");
+    Ok(())
+}
+
 fn cmd_oneshot(flags: &Flags) -> Result<()> {
     let rt = Runtime::load(Runtime::default_dir())?;
-    let mut trainer = ProxyTrainer::new(rt, flags.u64("seed", 0)?)?;
+    let seed = flags.u64("seed", 0)?;
+    let mut trainer = ProxyTrainer::new(rt, seed)?;
     let cfg = OneshotCfg {
         warmup_steps: flags.usize("warmup", 60)?,
         search_steps: flags.usize("steps", 200)?,
         t_latency_ms: flags.f64("target-ms", 0.02)?,
-        seed: flags.u64("seed", 0)?,
+        seed,
         ..Default::default()
     };
-    let mut oracle = SimOracle { space: NasSpace::new(NasSpaceId::Proxy), has: HasSpace::new() };
+    // The cost oracle is a broker session over the simulator backend:
+    // same latencies/areas as querying the simulator directly, but with
+    // memoized repeats and (with --cache-dir) persistent warm starts.
+    let store = cache_store_arg(flags, NasSpaceId::Proxy, false, seed)?;
+    let backend: Box<dyn Evaluator + Send> =
+        Box::new(SurrogateSim::new(NasSpace::new(NasSpaceId::Proxy), seed));
+    let broker = broker_with_flags(flags, backend, store)?;
+    let mut oracle = BrokerOracle::new(&broker);
     let t0 = std::time::Instant::now();
     let out = oneshot_search(&mut trainer, &mut oracle, &cfg)?;
     println!(
@@ -750,6 +913,7 @@ fn cmd_oneshot(flags: &Flags) -> Result<()> {
         out.oracle_evals,
         out.oracle_requests - out.oracle_evals
     );
+    print_eval_stats(&broker.stats());
     Ok(())
 }
 

@@ -70,6 +70,61 @@ pub fn union_frontier(frontiers: &[Vec<Point>]) -> Vec<Point> {
     frontier(&all)
 }
 
+/// One evaluated sample with N minimized cost axes (e.g. latency,
+/// energy, area) next to the maximized accuracy. The 2-D [`Point`] API
+/// above stays untouched — N-dim frontiers are a reporting layer for
+/// multi-objective scenarios, never part of the search trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MultiPoint {
+    pub acc: f64,
+    pub costs: Vec<f64>,
+    pub tag: String,
+}
+
+impl MultiPoint {
+    pub fn new(acc: f64, costs: Vec<f64>, tag: impl Into<String>) -> Self {
+        MultiPoint { acc, costs, tag: tag.into() }
+    }
+
+    /// True iff `self` dominates `other`: no worse on every axis
+    /// (acc maximized, every cost minimized) and strictly better on at
+    /// least one. Points of mismatched dimensionality never dominate.
+    pub fn dominates(&self, other: &MultiPoint) -> bool {
+        if self.costs.len() != other.costs.len() {
+            return false;
+        }
+        let no_worse = self.acc >= other.acc
+            && self.costs.iter().zip(&other.costs).all(|(a, b)| a <= b);
+        let better = self.acc > other.acc
+            || self.costs.iter().zip(&other.costs).any(|(a, b)| a < b);
+        no_worse && better
+    }
+}
+
+/// Extract the non-dominated subset of N-objective points. O(n^2)
+/// pairwise sweep — frontiers here are reporting-sized (hundreds, not
+/// millions). Deterministic: output order follows the input order.
+pub fn frontier_nd(points: &[MultiPoint]) -> Vec<MultiPoint> {
+    let mut out: Vec<MultiPoint> = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        let dominated = points.iter().enumerate().any(|(j, q)| {
+            // An exact duplicate is kept once: only the earliest copy
+            // survives (later copies are "dominated" by index order).
+            q.dominates(p) || (j < i && q == p)
+        });
+        if !dominated {
+            out.push(p.clone());
+        }
+    }
+    out
+}
+
+/// Merge several N-objective frontiers into one.
+pub fn union_frontier_nd(frontiers: &[Vec<MultiPoint>]) -> Vec<MultiPoint> {
+    let all: Vec<MultiPoint> = frontiers.iter().flatten().cloned().collect();
+    frontier_nd(&all)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +234,87 @@ mod tests {
         // Exact duplicates of the best point change nothing either.
         let twice = vec![p(0.8, 1.0), p(0.8, 1.0)];
         assert_eq!(hypervolume(&twice, 0.5, 2.0), hv);
+    }
+
+    fn mp(acc: f64, costs: &[f64]) -> MultiPoint {
+        MultiPoint::new(acc, costs.to_vec(), "")
+    }
+
+    #[test]
+    fn nd_dominance_basics() {
+        assert!(mp(0.8, &[1.0, 2.0]).dominates(&mp(0.7, &[1.0, 2.0])));
+        assert!(mp(0.8, &[1.0, 2.0]).dominates(&mp(0.8, &[1.5, 2.0])));
+        assert!(!mp(0.8, &[1.0, 2.0]).dominates(&mp(0.8, &[1.0, 2.0])));
+        // Better on one axis, worse on another: incomparable.
+        assert!(!mp(0.8, &[1.0, 3.0]).dominates(&mp(0.7, &[2.0, 2.0])));
+        // Mismatched dimensionality never dominates.
+        assert!(!mp(0.9, &[0.1]).dominates(&mp(0.1, &[5.0, 5.0])));
+    }
+
+    #[test]
+    fn nd_frontier_matches_2d_on_one_cost_axis() {
+        let pts2 = vec![p(0.7, 1.0), p(0.8, 2.0), p(0.75, 3.0), p(0.9, 4.0)];
+        let ptsn: Vec<MultiPoint> =
+            pts2.iter().map(|q| mp(q.acc, &[q.cost])).collect();
+        let f2: Vec<(f64, f64)> =
+            frontier(&pts2).iter().map(|q| (q.acc, q.cost)).collect();
+        let mut fn_: Vec<(f64, f64)> =
+            frontier_nd(&ptsn).iter().map(|q| (q.acc, q.costs[0])).collect();
+        fn_.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        assert_eq!(f2, fn_);
+    }
+
+    #[test]
+    fn nd_frontier_keeps_axis_tradeoffs() {
+        // Each point is best on one axis: all three survive, plus the
+        // dominated fourth is dropped and the duplicate kept once.
+        let pts = vec![
+            mp(0.9, &[3.0, 3.0, 1.0]),
+            mp(0.8, &[1.0, 3.0, 3.0]),
+            mp(0.7, &[3.0, 1.0, 3.0]),
+            mp(0.6, &[3.0, 3.0, 3.0]),
+            mp(0.9, &[3.0, 3.0, 1.0]),
+        ];
+        let f = frontier_nd(&pts);
+        assert_eq!(f.len(), 3);
+        assert!(f.iter().all(|q| q.acc >= 0.7));
+    }
+
+    #[test]
+    fn prop_nd_frontier_is_mutually_nondominated_and_complete() {
+        proptest::check(
+            "frontier_nd invariants",
+            128,
+            |r: &mut Rng| {
+                (0..(2 + r.below(30)))
+                    .map(|i| {
+                        MultiPoint::new(r.f64(), vec![r.f64(), r.f64(), r.f64()], format!("{i}"))
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |pts| {
+                let f = frontier_nd(pts);
+                for a in &f {
+                    for b in &f {
+                        if a != b && a.dominates(b) {
+                            return Err(format!("{a:?} dominates {b:?} in frontier"));
+                        }
+                    }
+                }
+                for q in pts {
+                    let covered = f.iter().any(|fp| fp.dominates(q) || fp == q);
+                    if !covered {
+                        return Err(format!("{q:?} not covered"));
+                    }
+                }
+                // Idempotency of the union on its own output.
+                let twice = union_frontier_nd(&[f.clone()]);
+                if twice != f {
+                    return Err("union_frontier_nd not idempotent".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

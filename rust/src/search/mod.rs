@@ -27,7 +27,12 @@
 //! * [`sweep`] — the concurrent multi-scenario orchestrator (latency
 //!   targets x objectives x drivers over one broker, merged into a
 //!   union Pareto frontier — the paper's headline figures are sweeps);
-//! * [`oneshot`] — weight-sharing search over the AOT supernet;
+//! * [`scenario`] — the substrate registry: named, pluggable (space x
+//!   task x objective) workload families — multi-task co-design,
+//!   area-constrained, N-objective — that compile down to [`sweep`]
+//!   scenarios (`nahas scenarios`, `nahas sweep --scenario NAME`);
+//! * [`oneshot`] — weight-sharing search over the AOT supernet, its
+//!   cost oracle a broker session ([`oneshot::BrokerOracle`]);
 //! * [`phase`] — the phase-based (HAS-then-NAS) ablation of Fig. 9.
 
 pub mod broker;
@@ -40,6 +45,7 @@ pub mod phase;
 pub mod ppo;
 pub mod reinforce;
 pub mod reward;
+pub mod scenario;
 pub mod store;
 pub mod sweep;
 
@@ -48,6 +54,10 @@ pub use evaluator::{EvalResult, EvalStats, Evaluator, HostEvalStats, SurrogateSi
 pub use joint::{joint_search, Sample, SearchCfg, SearchOutcome};
 pub use parallel::{joint_key, MemoCache, ParallelSim};
 pub use reward::{ConstraintMode, CostObjective, RewardCfg};
+pub use scenario::multitask::{multi_task_search, MultiTaskEval, MultiTaskOutcome, TaskSpec};
+pub use scenario::{
+    builtin_registry, compile_substrates, find_substrate, ScenarioSubstrate, SubstrateParams,
+};
 pub use store::{CacheStore, CacheValue};
 pub use sweep::{
     run_scenario, run_sweep, scenario_grid, ControllerKind, Scenario, ScenarioOutcome,

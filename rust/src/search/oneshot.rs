@@ -13,9 +13,9 @@ use anyhow::Result;
 
 use crate::has::{validate, HasSpace};
 use crate::nas::NasSpace;
-use crate::search::evaluator::EvalResult;
+use crate::search::broker::{BrokerSession, EvalBroker};
+use crate::search::evaluator::{EvalStats, Evaluator};
 use crate::search::joint::JointLayout;
-use crate::search::parallel::{joint_key, MemoCache};
 use crate::search::reinforce::{absolute_reward, ReinforceController};
 use crate::search::Controller;
 use crate::trainer::proxy::lr_at;
@@ -28,6 +28,12 @@ use crate::util::Rng;
 pub trait LatencyOracle {
     /// (latency_ms, area_mm2), or None if the pairing is invalid.
     fn cost(&mut self, nas_d: &[usize], has_d: &[usize]) -> Option<(f64, f64)>;
+
+    /// (total queries, queries that reached an actual evaluation).
+    /// Oracles without their own bookkeeping report (0, 0).
+    fn traffic(&self) -> (usize, usize) {
+        (0, 0)
+    }
 }
 
 /// Direct-simulator oracle.
@@ -46,48 +52,47 @@ impl LatencyOracle for SimOracle {
     }
 }
 
-/// Memoizing wrapper over a [`LatencyOracle`].
+/// [`LatencyOracle`] adapter over a broker session — the oneshot
+/// driver's seat at the shared evaluation substrate.
 ///
 /// The oneshot inner loop cannot pre-batch its cost queries — every
 /// controller sample depends on the preceding interleaved update — but
 /// as the policy sharpens it resamples the same joint vector over and
-/// over, and each repeat used to hit the simulator again (the very
-/// bottleneck the paper's learned cost model exists to relieve,
-/// §3.5.2). Deterministic oracles (simulator, trained cost model) make
-/// the cached result bit-identical to a fresh query.
-pub struct CachedOracle<'a> {
-    inner: &'a mut dyn LatencyOracle,
-    cache: MemoCache,
-    /// Total queries vs queries that reached the inner oracle.
-    pub requests: usize,
-    pub evals: usize,
+/// over. Routing each query through a [`BrokerSession`] gives the loop
+/// everything the other drivers already have: the cross-session memo
+/// cache (a repeat sample never re-runs the simulator), persisted
+/// warm-start hits from earlier runs ([`EvalBroker::with_store`]),
+/// admission control, and sweep participation — every oracle request
+/// shows up in the broker's [`EvalStats`]. Deterministic backends keep
+/// the memoized result bit-identical to a fresh query, so the search
+/// trajectory is unchanged by any cache state.
+pub struct BrokerOracle {
+    session: BrokerSession,
 }
 
-impl<'a> CachedOracle<'a> {
-    pub fn new(inner: &'a mut dyn LatencyOracle) -> Self {
-        CachedOracle { inner, cache: MemoCache::new(16 * 1024), requests: 0, evals: 0 }
+impl BrokerOracle {
+    pub fn new(broker: &EvalBroker) -> Self {
+        BrokerOracle { session: broker.session() }
+    }
+
+    /// This oracle's broker-session delta (requests, evals, memo /
+    /// cross-session / persisted hits ...).
+    pub fn stats(&self) -> EvalStats {
+        self.session.stats()
     }
 }
 
-impl LatencyOracle for CachedOracle<'_> {
+impl LatencyOracle for BrokerOracle {
     fn cost(&mut self, nas_d: &[usize], has_d: &[usize]) -> Option<(f64, f64)> {
-        self.requests += 1;
-        let key = joint_key(nas_d, has_d);
-        if let Some(r) = self.cache.get(&key) {
-            return r.valid.then_some((r.latency_ms, r.area_mm2));
-        }
-        self.evals += 1;
-        let cost = self.inner.cost(nas_d, has_d);
-        // Invalid pairings are cached too (valid = false): repeatedly
+        // Invalid pairings are memoized too (valid = false): repeatedly
         // sampling an unsimulable design must not re-run validation.
-        let r = match cost {
-            Some((lat, area)) => {
-                EvalResult { latency_ms: lat, area_mm2: area, valid: true, ..Default::default() }
-            }
-            None => EvalResult::invalid(),
-        };
-        self.cache.insert(key, r);
-        cost
+        let r = self.session.evaluate(nas_d, has_d);
+        r.valid.then_some((r.latency_ms, r.area_mm2))
+    }
+
+    fn traffic(&self) -> (usize, usize) {
+        let s = self.session.stats();
+        (s.requests, s.evals)
     }
 }
 
@@ -129,8 +134,9 @@ pub struct OneshotOutcome {
     pub final_area_mm2: f64,
     /// (step, reward) trace of controller updates.
     pub reward_trace: Vec<(usize, f64)>,
-    /// Cost-oracle traffic: total queries vs queries that missed the
-    /// memo cache and reached the simulator / cost model.
+    /// Cost-oracle traffic per [`LatencyOracle::traffic`]: total
+    /// queries vs queries that reached an actual evaluation (for a
+    /// [`BrokerOracle`], the broker session's requests and evals).
     pub oracle_requests: usize,
     pub oracle_evals: usize,
 }
@@ -147,9 +153,6 @@ pub fn oneshot_search(
     let mut ctl = ReinforceController::new(&cards);
     let mut rng = Rng::new(cfg.seed);
     let total = cfg.warmup_steps + cfg.search_steps;
-    // Memoize the oracle: repeat samples of a sharpened policy become
-    // cache hits instead of fresh simulator / cost-model queries.
-    let mut oracle = CachedOracle::new(oracle);
 
     let mut st: SupernetState = trainer.init_supernet(cfg.seed as i32)?;
     let mut trace = Vec::new();
@@ -200,6 +203,7 @@ pub fn oneshot_search(
     let final_acc = trainer.supernet_eval(&st, nas_d)?;
     let (final_latency_ms, final_area_mm2) =
         oracle.cost(nas_d, has_d).unwrap_or((f64::NAN, f64::NAN));
+    let (oracle_requests, oracle_evals) = oracle.traffic();
     Ok(OneshotOutcome {
         best_nas: nas_d.to_vec(),
         best_has: has_d.to_vec(),
@@ -207,8 +211,8 @@ pub fn oneshot_search(
         final_latency_ms,
         final_area_mm2,
         reward_trace: trace,
-        oracle_requests: oracle.requests,
-        oracle_evals: oracle.evals,
+        oracle_requests,
+        oracle_evals,
     })
 }
 
@@ -241,23 +245,33 @@ mod tests {
     }
 
     #[test]
-    fn cached_oracle_is_transparent_and_dedups() {
+    fn broker_oracle_is_transparent_and_dedups() {
+        // A BrokerOracle over a SurrogateSim backend must agree with
+        // the direct SimOracle (both run the same validate +
+        // simulate_network), while the broker's memo cache dedups
+        // repeat queries.
         let mut fresh =
-            SimOracle { space: NasSpace::new(NasSpaceId::Proxy), has: HasSpace::new() };
-        let mut backing =
             SimOracle { space: NasSpace::new(NasSpaceId::Proxy), has: HasSpace::new() };
         let space = NasSpace::new(NasSpaceId::Proxy);
         let has = HasSpace::new();
-        let mut cached = CachedOracle::new(&mut backing);
+        let broker = EvalBroker::new(Box::new(crate::search::SurrogateSim::new(
+            NasSpace::new(NasSpaceId::Proxy),
+            6,
+        )));
+        let mut oracle = BrokerOracle::new(&broker);
         let mut rng = Rng::new(6);
         let pairs: Vec<(Vec<usize>, Vec<usize>)> =
             (0..12).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect();
         for _round in 0..2 {
             for (nas_d, has_d) in &pairs {
-                assert_eq!(cached.cost(nas_d, has_d), fresh.cost(nas_d, has_d));
+                assert_eq!(oracle.cost(nas_d, has_d), fresh.cost(nas_d, has_d));
             }
         }
-        assert_eq!(cached.requests, 24);
-        assert_eq!(cached.evals, 12, "second round must be all cache hits");
+        let (requests, evals) = oracle.traffic();
+        assert_eq!(requests, 24);
+        assert_eq!(evals, 12, "second round must be all memo hits");
+        assert_eq!(oracle.stats().cache_hits, 12);
+        // Every oracle request is visible broker-side.
+        assert_eq!(broker.stats().requests, 24);
     }
 }

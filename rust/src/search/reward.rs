@@ -27,6 +27,31 @@ pub enum ConstraintMode {
 pub enum CostObjective {
     Latency,
     Energy,
+    /// Chip area as the primary cost axis (mm^2). Area-driven scenarios
+    /// trade accuracy directly against silicon budget; latency/energy
+    /// still bound feasibility through `t_cost` on the other axes when
+    /// combined in an N-objective frontier.
+    Area,
+}
+
+impl CostObjective {
+    /// Extract this objective's cost metric from an evaluation result.
+    pub fn cost_of(&self, r: &EvalResult) -> f64 {
+        match self {
+            CostObjective::Latency => r.latency_ms,
+            CostObjective::Energy => r.energy_mj,
+            CostObjective::Area => r.area_mm2,
+        }
+    }
+
+    /// Unit label for tables/CSV headers.
+    pub fn unit(&self) -> &'static str {
+        match self {
+            CostObjective::Latency => "ms",
+            CostObjective::Energy => "mJ",
+            CostObjective::Area => "mm2",
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -58,8 +83,26 @@ impl RewardCfg {
         RewardCfg { objective: CostObjective::Energy, t_cost: t_mj, ..Self::latency(0.0) }
     }
 
+    /// Area-driven objective: the cost axis is chip area itself (mm^2).
+    /// `t_area` doubles as the cost target so the two constraints agree.
+    pub fn area(t_mm2: f64) -> Self {
+        RewardCfg {
+            objective: CostObjective::Area,
+            t_cost: t_mm2,
+            t_area: t_mm2,
+            ..Self::latency(0.0)
+        }
+    }
+
     pub fn soft(mut self) -> Self {
         self.mode = ConstraintMode::Soft;
+        self
+    }
+
+    /// Override the chip-area target (mm^2). Area-constrained scenarios
+    /// tighten this below the baseline design's area.
+    pub fn with_t_area(mut self, t_mm2: f64) -> Self {
+        self.t_area = t_mm2;
         self
     }
 
@@ -75,10 +118,7 @@ impl RewardCfg {
         if !r.valid {
             return self.invalid_reward;
         }
-        let cost = match self.objective {
-            CostObjective::Latency => r.latency_ms,
-            CostObjective::Energy => r.energy_mj,
-        };
+        let cost = self.objective.cost_of(r);
         let (p, q) = self.p_q();
         let w0 = if cost <= self.t_cost { p } else { q };
         let w1 = if r.area_mm2 <= self.t_area { p } else { q };
@@ -88,11 +128,7 @@ impl RewardCfg {
 
     /// True iff the sample meets both constraints.
     pub fn feasible(&self, r: &EvalResult) -> bool {
-        let cost = match self.objective {
-            CostObjective::Latency => r.latency_ms,
-            CostObjective::Energy => r.energy_mj,
-        };
-        r.valid && cost <= self.t_cost && r.area_mm2 <= self.t_area
+        r.valid && self.objective.cost_of(r) <= self.t_cost && r.area_mm2 <= self.t_area
     }
 }
 
@@ -154,6 +190,27 @@ mod tests {
         let r2 = res(0.75, 0.6, a); // energy 1.2 > 1.0
         assert!(!cfg.feasible(&r2));
         assert!(cfg.reward(&r) > cfg.reward(&r2));
+    }
+
+    #[test]
+    fn area_objective_uses_area() {
+        let a = baseline_area_mm2();
+        let cfg = RewardCfg::area(a);
+        assert!(cfg.feasible(&res(0.75, 0.4, a)));
+        assert!(!cfg.feasible(&res(0.75, 0.4, a * 1.2)));
+        assert_eq!(CostObjective::Area.cost_of(&res(0.75, 0.4, a)), a);
+        assert_eq!(CostObjective::Area.unit(), "mm2");
+    }
+
+    #[test]
+    fn with_t_area_tightens_the_constraint() {
+        let a = baseline_area_mm2();
+        let loose = RewardCfg::latency(0.5);
+        let tight = RewardCfg::latency(0.5).with_t_area(a * 0.6);
+        let r = res(0.75, 0.4, a * 0.8);
+        assert!(loose.feasible(&r));
+        assert!(!tight.feasible(&r));
+        assert!(tight.reward(&r) < loose.reward(&r));
     }
 
     #[test]

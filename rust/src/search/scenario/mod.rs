@@ -1,0 +1,435 @@
+//! Scenario substrate registry — pluggable (search space × task ×
+//! objective) workloads.
+//!
+//! The sweep orchestrator runs whatever [`Scenario`]s it is handed; a
+//! *substrate* is where a whole family of scenarios — a use case in
+//! the paper's sense — is declared once and compiled on demand. Each
+//! [`ScenarioSubstrate`] names itself, declares its task set and its
+//! objective vector, and compiles a [`SubstrateParams`] (space, budget,
+//! seed, targets) down to plain [`Scenario`]s, so everything downstream
+//! — `run_sweep`, the broker, the equivalence suites — is unchanged:
+//! a substrate that reproduces an existing grid is bit-identical to
+//! the hand-built grid (`tests/sweep_equivalence.rs` pins this).
+//!
+//! Registering a new substrate is three steps (see
+//! `docs/ARCHITECTURE.md`, "Scenario substrate"):
+//!
+//! 1. implement [`ScenarioSubstrate`] for a (usually unit) struct,
+//! 2. push it into the vector your code seeds from
+//!    [`builtin_registry`],
+//! 3. compile it by name via [`compile_substrates`] — the CLI's
+//!    `nahas scenarios` / `nahas sweep --scenario NAME` do exactly
+//!    this against the built-in registry.
+//!
+//! Built-ins: the two classic grids (`latency-grid`, `energy-grid`),
+//! multi-task co-design (`multitask-cls-seg`, one shared accelerator
+//! jointly scored across classification and segmentation), an
+//! area-constrained family (`area-constrained`, 60% of the baseline
+//! silicon budget), and a 3-objective family (`tri-objective`,
+//! latency+energy+area N-dim frontier reporting).
+
+pub mod multitask;
+
+use anyhow::{bail, Result};
+
+use crate::accel::area::baseline_area_mm2;
+use crate::nas::NasSpaceId;
+use crate::search::evaluator::Task;
+use crate::search::reward::{CostObjective, RewardCfg};
+use crate::search::sweep::{scenario_grid, Scenario, SweepDriver};
+use multitask::TaskSpec;
+
+/// Everything a substrate needs to compile concrete scenarios: which
+/// space/backend the sweep runs on, the per-scenario budget, the
+/// shared controller seed, and (optionally) cost targets in the
+/// substrate's own objective unit.
+#[derive(Clone, Debug)]
+pub struct SubstrateParams {
+    pub space: NasSpaceId,
+    pub samples: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// Cost targets; empty = the substrate's documented defaults.
+    pub targets: Vec<f64>,
+}
+
+impl SubstrateParams {
+    pub fn new(space: NasSpaceId, samples: usize, batch: usize, seed: u64) -> Self {
+        SubstrateParams { space, samples, batch, seed, targets: Vec::new() }
+    }
+
+    pub fn targets(mut self, targets: Vec<f64>) -> Self {
+        self.targets = targets;
+        self
+    }
+
+    fn targets_or<'a>(&'a self, default: &'a [f64]) -> &'a [f64] {
+        if self.targets.is_empty() {
+            default
+        } else {
+            &self.targets
+        }
+    }
+}
+
+/// A named, registered family of scenarios. Implementations must be
+/// pure: `compile` may depend only on its parameters, so a compiled
+/// scenario replays bit-identically wherever it runs.
+pub trait ScenarioSubstrate: Send + Sync {
+    /// Registry key (`nahas sweep --scenario NAME`).
+    fn name(&self) -> &str;
+    /// One-line description for `nahas scenarios`.
+    fn summary(&self) -> &str;
+    /// The task set every compiled scenario evaluates. The sweep
+    /// backend (and the eval-cache fingerprint) must match this.
+    fn tasks(&self) -> Vec<Task>;
+    /// The cost axes this substrate's scenarios optimize/report.
+    fn objectives(&self) -> Vec<CostObjective>;
+    /// Compile to concrete scenarios for `run_sweep`.
+    fn compile(&self, p: &SubstrateParams) -> Vec<Scenario>;
+}
+
+/// The classic latency grid, as a substrate: compiles to exactly what
+/// `scenario_grid(targets, [Latency], [Joint], ...)` builds by hand.
+struct LatencyGrid;
+
+impl ScenarioSubstrate for LatencyGrid {
+    fn name(&self) -> &str {
+        "latency-grid"
+    }
+
+    fn summary(&self) -> &str {
+        "latency-target grid (joint driver), the classic single-task sweep"
+    }
+
+    fn tasks(&self) -> Vec<Task> {
+        vec![Task::Classification]
+    }
+
+    fn objectives(&self) -> Vec<CostObjective> {
+        vec![CostObjective::Latency]
+    }
+
+    fn compile(&self, p: &SubstrateParams) -> Vec<Scenario> {
+        scenario_grid(
+            p.targets_or(&[0.35, 0.5]),
+            &[CostObjective::Latency],
+            &[SweepDriver::Joint],
+            p.space,
+            p.samples,
+            p.batch,
+            p.seed,
+        )
+    }
+}
+
+/// The classic energy grid (targets in mJ).
+struct EnergyGrid;
+
+impl ScenarioSubstrate for EnergyGrid {
+    fn name(&self) -> &str {
+        "energy-grid"
+    }
+
+    fn summary(&self) -> &str {
+        "energy-target grid (joint driver), the energy-driven single-task sweep"
+    }
+
+    fn tasks(&self) -> Vec<Task> {
+        vec![Task::Classification]
+    }
+
+    fn objectives(&self) -> Vec<CostObjective> {
+        vec![CostObjective::Energy]
+    }
+
+    fn compile(&self, p: &SubstrateParams) -> Vec<Scenario> {
+        scenario_grid(
+            p.targets_or(&[0.5, 1.0]),
+            &[CostObjective::Energy],
+            &[SweepDriver::Joint],
+            p.space,
+            p.samples,
+            p.batch,
+            p.seed,
+        )
+    }
+}
+
+/// Multi-task co-design: one shared accelerator + one shared backbone
+/// jointly scored on classification and segmentation. The segmentation
+/// latency target is 10x the classification one (Table 4's scale:
+/// dense prediction at 640px vs classification at 224px).
+struct MultiTaskClsSeg;
+
+impl MultiTaskClsSeg {
+    fn task_specs(t_ms: f64) -> Vec<TaskSpec> {
+        vec![
+            TaskSpec::new("cls", Task::Classification, RewardCfg::latency(t_ms)),
+            TaskSpec::new("seg", Task::Segmentation, RewardCfg::latency(t_ms * 10.0)),
+        ]
+    }
+}
+
+impl ScenarioSubstrate for MultiTaskClsSeg {
+    fn name(&self) -> &str {
+        "multitask-cls-seg"
+    }
+
+    fn summary(&self) -> &str {
+        "one accelerator serving classification + segmentation, folded reward, per-task frontiers"
+    }
+
+    fn tasks(&self) -> Vec<Task> {
+        vec![Task::Classification, Task::Segmentation]
+    }
+
+    fn objectives(&self) -> Vec<CostObjective> {
+        vec![CostObjective::Latency]
+    }
+
+    fn compile(&self, p: &SubstrateParams) -> Vec<Scenario> {
+        p.targets_or(&[0.5])
+            .iter()
+            .map(|&t| {
+                Scenario::new(
+                    format!("multitask-cls-seg-lat{t}ms"),
+                    p.space,
+                    RewardCfg::latency(t),
+                    p.seed,
+                )
+                .samples(p.samples)
+                .batch(p.batch)
+                .tasks(Self::task_specs(t))
+            })
+            .collect()
+    }
+}
+
+/// Area-constrained co-design: the latency objective under a tight
+/// silicon budget (60% of the baseline accelerator's area) — the
+/// paper's area-vs-accuracy tradeoff pushed into the constraint.
+struct AreaConstrained;
+
+impl ScenarioSubstrate for AreaConstrained {
+    fn name(&self) -> &str {
+        "area-constrained"
+    }
+
+    fn summary(&self) -> &str {
+        "latency targets under a 60%-of-baseline chip-area constraint"
+    }
+
+    fn tasks(&self) -> Vec<Task> {
+        vec![Task::Classification]
+    }
+
+    fn objectives(&self) -> Vec<CostObjective> {
+        vec![CostObjective::Latency, CostObjective::Area]
+    }
+
+    fn compile(&self, p: &SubstrateParams) -> Vec<Scenario> {
+        let t_area = baseline_area_mm2() * 0.6;
+        p.targets_or(&[0.35, 0.5])
+            .iter()
+            .map(|&t| {
+                Scenario::new(
+                    format!("area60-lat{t}ms"),
+                    p.space,
+                    RewardCfg::latency(t).with_t_area(t_area),
+                    p.seed,
+                )
+                .samples(p.samples)
+                .batch(p.batch)
+                .frontier_objectives(vec![CostObjective::Latency, CostObjective::Area])
+            })
+            .collect()
+    }
+}
+
+/// 3-objective scenarios: the search optimizes the latency reward, and
+/// every valid sample is also reported on a latency+energy+area N-dim
+/// Pareto frontier (the 2-axis trajectory is untouched — the N-dim
+/// frontier is a reporting layer).
+struct TriObjective;
+
+impl ScenarioSubstrate for TriObjective {
+    fn name(&self) -> &str {
+        "tri-objective"
+    }
+
+    fn summary(&self) -> &str {
+        "latency-driven search reported on a latency+energy+area 3-D frontier"
+    }
+
+    fn tasks(&self) -> Vec<Task> {
+        vec![Task::Classification]
+    }
+
+    fn objectives(&self) -> Vec<CostObjective> {
+        vec![CostObjective::Latency, CostObjective::Energy, CostObjective::Area]
+    }
+
+    fn compile(&self, p: &SubstrateParams) -> Vec<Scenario> {
+        p.targets_or(&[0.5])
+            .iter()
+            .map(|&t| {
+                Scenario::new(format!("tri-lat{t}ms"), p.space, RewardCfg::latency(t), p.seed)
+                    .samples(p.samples)
+                    .batch(p.batch)
+                    .frontier_objectives(vec![
+                        CostObjective::Latency,
+                        CostObjective::Energy,
+                        CostObjective::Area,
+                    ])
+            })
+            .collect()
+    }
+}
+
+/// The built-in substrates, in listing order. Callers own the vector:
+/// push further [`ScenarioSubstrate`] implementations to register them
+/// alongside the built-ins.
+pub fn builtin_registry() -> Vec<Box<dyn ScenarioSubstrate>> {
+    vec![
+        Box::new(LatencyGrid),
+        Box::new(EnergyGrid),
+        Box::new(MultiTaskClsSeg),
+        Box::new(AreaConstrained),
+        Box::new(TriObjective),
+    ]
+}
+
+/// Look a substrate up by its registry key.
+pub fn find_substrate<'a>(
+    registry: &'a [Box<dyn ScenarioSubstrate>],
+    name: &str,
+) -> Option<&'a dyn ScenarioSubstrate> {
+    registry.iter().find(|s| s.name() == name).map(|b| b.as_ref())
+}
+
+/// Compile the named substrates into one scenario list for `run_sweep`.
+/// All named substrates must agree on their task set (one sweep shares
+/// one broker backend); an unknown name is an error listing the
+/// registered keys.
+pub fn compile_substrates(
+    registry: &[Box<dyn ScenarioSubstrate>],
+    names: &[String],
+    p: &SubstrateParams,
+) -> Result<Vec<Scenario>> {
+    let mut out: Vec<Scenario> = Vec::new();
+    let mut task_set: Option<Vec<Task>> = None;
+    for name in names {
+        let Some(sub) = find_substrate(registry, name) else {
+            let known: Vec<&str> = registry.iter().map(|s| s.name()).collect();
+            bail!("unknown scenario substrate {name:?}; registered: {}", known.join(", "));
+        };
+        match &task_set {
+            None => task_set = Some(sub.tasks()),
+            Some(t) if *t == sub.tasks() => {}
+            Some(t) => bail!(
+                "substrate {:?} evaluates tasks {:?}, but this sweep's backend serves {:?}: \
+                 one sweep shares one broker backend, so all --scenario substrates must \
+                 agree on their task set",
+                name,
+                sub.tasks(),
+                t
+            ),
+        }
+        out.extend(sub.compile(p));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> SubstrateParams {
+        SubstrateParams::new(NasSpaceId::EfficientNet, 96, 16, 7)
+    }
+
+    #[test]
+    fn registry_lists_all_builtin_families() {
+        let reg = builtin_registry();
+        let names: Vec<&str> = reg.iter().map(|s| s.name()).collect();
+        for expect in
+            ["latency-grid", "energy-grid", "multitask-cls-seg", "area-constrained", "tri-objective"]
+        {
+            assert!(names.contains(&expect), "{expect} missing from registry: {names:?}");
+        }
+        // Keys are unique.
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len());
+    }
+
+    #[test]
+    fn latency_grid_compiles_to_the_hand_built_grid() {
+        let reg = builtin_registry();
+        let sub = find_substrate(&reg, "latency-grid").unwrap();
+        let got = sub.compile(&params().targets(vec![0.35, 0.5]));
+        let want = scenario_grid(
+            &[0.35, 0.5],
+            &[CostObjective::Latency],
+            &[SweepDriver::Joint],
+            NasSpaceId::EfficientNet,
+            96,
+            16,
+            7,
+        );
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.name, w.name);
+            assert_eq!(g.space, w.space);
+            assert_eq!(g.seed, w.seed);
+            assert_eq!(g.samples, w.samples);
+            assert_eq!(g.batch, w.batch);
+            assert_eq!(g.reward.t_cost.to_bits(), w.reward.t_cost.to_bits());
+            assert_eq!(g.reward.objective, w.reward.objective);
+            assert!(g.tasks.is_none());
+        }
+    }
+
+    #[test]
+    fn multitask_substrate_declares_two_tasks() {
+        let reg = builtin_registry();
+        let sub = find_substrate(&reg, "multitask-cls-seg").unwrap();
+        assert_eq!(sub.tasks(), vec![Task::Classification, Task::Segmentation]);
+        let scs = sub.compile(&params());
+        assert_eq!(scs.len(), 1);
+        let tasks = scs[0].tasks.as_ref().expect("multi-task scenario carries its task specs");
+        assert_eq!(tasks.len(), 2);
+        assert!(tasks[1].reward.t_cost > tasks[0].reward.t_cost, "seg target is looser");
+    }
+
+    #[test]
+    fn area_constrained_tightens_t_area() {
+        let reg = builtin_registry();
+        let sub = find_substrate(&reg, "area-constrained").unwrap();
+        let scs = sub.compile(&params().targets(vec![0.5]));
+        assert_eq!(scs.len(), 1);
+        assert!(scs[0].reward.t_area < baseline_area_mm2());
+        assert_eq!(
+            scs[0].frontier_objectives,
+            vec![CostObjective::Latency, CostObjective::Area]
+        );
+    }
+
+    #[test]
+    fn compile_substrates_rejects_unknown_and_mixed_task_sets() {
+        let reg = builtin_registry();
+        let p = params();
+        let err = compile_substrates(&reg, &["no-such-substrate".into()], &p).unwrap_err();
+        assert!(err.to_string().contains("registered:"), "{err}");
+        let err =
+            compile_substrates(&reg, &["latency-grid".into(), "multitask-cls-seg".into()], &p)
+                .unwrap_err();
+        assert!(err.to_string().contains("task set"), "{err}");
+        // Homogeneous task sets compose.
+        let ok =
+            compile_substrates(&reg, &["latency-grid".into(), "energy-grid".into()], &p).unwrap();
+        assert_eq!(ok.len(), 4);
+    }
+}

@@ -1,0 +1,358 @@
+//! Multi-task co-design: one accelerator serving several model/task
+//! pairs (the paper's third observation — "different use cases lead to
+//! very different search outcomes" — taken to its logical end: a
+//! single hardware configuration jointly scored across use cases).
+//!
+//! The controller still samples one joint NAS ++ HAS vector per trial.
+//! The shared backbone architecture and the shared hardware half are
+//! then evaluated once *per task* — the broker sees task-tagged keys
+//! `[task_idx] ++ nas_d`, so per-task results memoize independently —
+//! and the per-task rewards fold into one scalar (the mean) for the
+//! controller. Per-task results are kept so the sweep can report one
+//! Pareto frontier per task next to the folded scenario frontier.
+
+use std::time::Instant;
+
+use crate::nas::{NasSpace, NasSpaceId};
+use crate::search::evaluator::{EvalResult, EvalStats, Evaluator, SurrogateSim, Task};
+use crate::search::joint::{JointLayout, Sample, SearchCfg, SearchOutcome};
+use crate::search::parallel::ParallelSim;
+use crate::search::reward::RewardCfg;
+use crate::search::Controller;
+use crate::util::Rng;
+
+/// One task inside a multi-task scenario: a name for reporting, the
+/// evaluation task (which network variant the simulator scores), and
+/// the per-task reward/constraint configuration.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    pub task: Task,
+    pub reward: RewardCfg,
+}
+
+impl TaskSpec {
+    pub fn new(name: impl Into<String>, task: Task, reward: RewardCfg) -> Self {
+        TaskSpec { name: name.into(), task, reward }
+    }
+}
+
+/// Evaluator backend for multi-task scenarios: one inner evaluator per
+/// task, dispatched on a task-index prefix.
+///
+/// Keys are `[task_idx] ++ nas_d` with the hardware half unchanged, so
+/// a multi-task key can never collide with a single-task key of the
+/// same space (lengths differ by one) and the broker's memo / in-flight
+/// dedup / persisted-cache machinery work per (task, architecture,
+/// hardware) triple with no changes.
+pub struct MultiTaskEval {
+    inners: Vec<Box<dyn Evaluator + Send>>,
+}
+
+impl MultiTaskEval {
+    pub fn new(inners: Vec<Box<dyn Evaluator + Send>>) -> Self {
+        assert!(!inners.is_empty(), "MultiTaskEval needs at least one task evaluator");
+        MultiTaskEval { inners }
+    }
+
+    /// Surrogate-simulator backend for `tasks`: per task, a
+    /// [`ParallelSim`] when `workers > 1` (else a [`SurrogateSim`]),
+    /// switched to the segmentation network variant where the task
+    /// asks for it. All inners share `eval_seed` so each task's
+    /// accuracy surrogate is the same function a single-task run of
+    /// that task would see.
+    pub fn surrogate(tasks: &[TaskSpec], space: NasSpaceId, eval_seed: u64, workers: usize) -> Self {
+        let inners = tasks
+            .iter()
+            .map(|t| {
+                let inner: Box<dyn Evaluator + Send> = if workers > 1 {
+                    let mut sim = ParallelSim::new(NasSpace::new(space), eval_seed, workers);
+                    if t.task == Task::Segmentation {
+                        sim = sim.segmentation();
+                    }
+                    Box::new(sim)
+                } else {
+                    let mut sim = SurrogateSim::new(NasSpace::new(space), eval_seed);
+                    if t.task == Task::Segmentation {
+                        sim = sim.segmentation();
+                    }
+                    Box::new(sim)
+                };
+                inner
+            })
+            .collect();
+        MultiTaskEval::new(inners)
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.inners.len()
+    }
+
+    fn task_of(&self, nas_d: &[usize]) -> usize {
+        assert!(
+            !nas_d.is_empty() && nas_d[0] < self.inners.len(),
+            "multi-task key must start with a task index < {}",
+            self.inners.len()
+        );
+        nas_d[0]
+    }
+}
+
+impl Evaluator for MultiTaskEval {
+    fn evaluate(&mut self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        let t = self.task_of(nas_d);
+        self.inners[t].evaluate(&nas_d[1..], has_d)
+    }
+
+    fn evaluate_batch(&mut self, batch: &[(Vec<usize>, Vec<usize>)]) -> Vec<EvalResult> {
+        // Partition by task so each inner evaluator sees one batch (and
+        // a parallel inner fans it out), then scatter back in order.
+        let mut per_task: Vec<Vec<(Vec<usize>, Vec<usize>)>> =
+            vec![Vec::new(); self.inners.len()];
+        let mut slots: Vec<Vec<usize>> = vec![Vec::new(); self.inners.len()];
+        for (i, (nas_d, has_d)) in batch.iter().enumerate() {
+            let t = self.task_of(nas_d);
+            per_task[t].push((nas_d[1..].to_vec(), has_d.clone()));
+            slots[t].push(i);
+        }
+        let mut out = vec![EvalResult::invalid(); batch.len()];
+        for (t, chunk) in per_task.into_iter().enumerate() {
+            if chunk.is_empty() {
+                continue;
+            }
+            let results = self.inners[t].evaluate_batch(&chunk);
+            assert_eq!(results.len(), chunk.len(), "inner evaluate_batch must preserve length");
+            for (slot, r) in slots[t].iter().zip(results) {
+                out[*slot] = r;
+            }
+        }
+        out
+    }
+
+    fn stats(&self) -> EvalStats {
+        self.inners.iter().fold(EvalStats::default(), |acc, e| acc.merged(&e.stats()))
+    }
+
+    fn capacity(&self) -> usize {
+        self.inners.iter().map(|e| e.capacity()).max().unwrap_or(1)
+    }
+}
+
+/// A finished multi-task search: the folded trajectory plus the
+/// per-task raw results behind it.
+#[derive(Debug, Default)]
+pub struct MultiTaskOutcome {
+    /// Folded trajectory: each [`Sample`]'s result averages the
+    /// per-task metrics (shared-hardware area is common to all tasks)
+    /// and its reward is the mean of the per-task rewards.
+    pub search: SearchOutcome,
+    /// Per task (input order): every *valid* per-task evaluation as
+    /// (sample index, result) — the raw material for per-task
+    /// frontiers.
+    pub per_task: Vec<Vec<(usize, EvalResult)>>,
+}
+
+/// Run a multi-trial multi-task joint search: one controller over the
+/// full NAS ++ HAS vector, each sample expanded into one task-tagged
+/// evaluation per task. Batch-structured exactly like
+/// [`crate::search::joint::joint_search`] (sample the whole batch from
+/// the current policy, evaluate in one `evaluate_batch` call, reward
+/// and update in sample order), so trajectories are bit-identical for
+/// a given seed whatever the evaluator tier or cache state.
+pub fn multi_task_search(
+    evaluator: &mut dyn Evaluator,
+    controller: &mut dyn Controller,
+    layout: &JointLayout,
+    tasks: &[TaskSpec],
+    cfg: &SearchCfg,
+) -> MultiTaskOutcome {
+    assert!(!tasks.is_empty(), "multi-task search needs at least one task");
+    let t0 = Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let mut outcome = MultiTaskOutcome {
+        search: SearchOutcome::default(),
+        per_task: vec![Vec::new(); tasks.len()],
+    };
+    let n_tasks = tasks.len();
+    let batch_size = cfg.batch.max(1);
+    let stats_at_start = evaluator.stats();
+
+    let mut index = 0;
+    while index < cfg.samples {
+        let n = batch_size.min(cfg.samples - index);
+        // 1. Sample the whole batch from the current policy.
+        let mut frees: Vec<Vec<usize>> = Vec::with_capacity(n);
+        let mut pairs: Vec<(Vec<usize>, Vec<usize>)> = Vec::with_capacity(n * n_tasks);
+        for _ in 0..n {
+            let free = controller.sample(&mut rng);
+            let (nas_d, has_d) = layout.split(&free);
+            for t in 0..n_tasks {
+                let mut key = Vec::with_capacity(nas_d.len() + 1);
+                key.push(t);
+                key.extend_from_slice(nas_d);
+                pairs.push((key, has_d.to_vec()));
+            }
+            frees.push(free);
+        }
+        // 2. One evaluate_batch over all (sample x task) pairs.
+        let results = evaluator.evaluate_batch(&pairs);
+        assert_eq!(results.len(), n * n_tasks, "evaluate_batch must preserve batch length");
+        // 3. Fold per-task rewards, record, one controller update.
+        let mut batch: Vec<(Vec<usize>, f64)> = Vec::with_capacity(n);
+        for i in 0..n {
+            let free = std::mem::take(&mut frees[i]);
+            let task_results = &results[i * n_tasks..(i + 1) * n_tasks];
+            let (nas_d, has_d) = layout.split(&free);
+            let mut reward_sum = 0.0;
+            let mut acc = 0.0;
+            let mut lat = 0.0;
+            let mut energy = 0.0;
+            let mut area = 0.0;
+            let mut valid = true;
+            for (t, r) in task_results.iter().enumerate() {
+                reward_sum += tasks[t].reward.reward(r);
+                acc += r.acc;
+                lat += r.latency_ms;
+                energy += r.energy_mj;
+                area = area.max(r.area_mm2);
+                valid &= r.valid;
+                if r.valid {
+                    outcome.per_task[t].push((index + i, *r));
+                }
+            }
+            let k = n_tasks as f64;
+            let reward = reward_sum / k;
+            let folded = if valid {
+                EvalResult {
+                    acc: acc / k,
+                    latency_ms: lat / k,
+                    energy_mj: energy / k,
+                    area_mm2: area,
+                    valid: true,
+                }
+            } else {
+                EvalResult::invalid()
+            };
+            let feasible = valid
+                && task_results.iter().zip(tasks).all(|(r, t)| t.reward.feasible(r));
+            let sample = Sample {
+                index: index + i,
+                nas_d: nas_d.to_vec(),
+                has_d: has_d.to_vec(),
+                result: folded,
+                reward,
+            };
+            if !sample.result.valid {
+                outcome.search.num_invalid += 1;
+            }
+            if outcome.search.best.as_ref().map(|b| reward > b.reward).unwrap_or(true) {
+                outcome.search.best = Some(sample.clone());
+            }
+            if feasible
+                && outcome
+                    .search
+                    .best_feasible
+                    .as_ref()
+                    .map(|b| sample.result.acc > b.result.acc)
+                    .unwrap_or(true)
+            {
+                outcome.search.best_feasible = Some(sample.clone());
+            }
+            if cfg.keep_history {
+                outcome.search.history.push(sample);
+            }
+            batch.push((free, reward));
+        }
+        controller.update(&batch);
+        index += n;
+    }
+    outcome.search.eval_stats = evaluator.stats().since(&stats_at_start);
+    outcome.search.elapsed_s = t0.elapsed().as_secs_f64();
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::has::HasSpace;
+    use crate::search::broker::EvalBroker;
+    use crate::search::RandomController;
+
+    fn cls_seg_tasks(t_ms: f64) -> Vec<TaskSpec> {
+        vec![
+            TaskSpec::new("cls", Task::Classification, RewardCfg::latency(t_ms)),
+            TaskSpec::new("seg", Task::Segmentation, RewardCfg::latency(t_ms * 10.0)),
+        ]
+    }
+
+    #[test]
+    fn multi_task_eval_dispatches_on_the_task_prefix() {
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let has = HasSpace::new();
+        let mut rng = Rng::new(3);
+        let nas_d = space.random(&mut rng);
+        let hw = has.baseline_decisions();
+        let tasks = cls_seg_tasks(0.5);
+        let mut mt = MultiTaskEval::surrogate(&tasks, NasSpaceId::EfficientNet, 3, 1);
+
+        let cls_ref = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3)
+            .evaluate_pure(&nas_d, &hw);
+        let seg_ref = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3)
+            .segmentation()
+            .evaluate_pure(&nas_d, &hw);
+
+        let mut key0 = vec![0];
+        key0.extend_from_slice(&nas_d);
+        let mut key1 = vec![1];
+        key1.extend_from_slice(&nas_d);
+        let got = mt.evaluate_batch(&[(key1.clone(), hw.clone()), (key0.clone(), hw.clone())]);
+        assert_eq!(got[1].latency_ms.to_bits(), cls_ref.latency_ms.to_bits());
+        assert_eq!(got[0].latency_ms.to_bits(), seg_ref.latency_ms.to_bits());
+        // Table 4 scale: dense prediction is roughly an order of
+        // magnitude slower than classification on the same hardware.
+        assert!(got[0].latency_ms > 3.0 * got[1].latency_ms);
+    }
+
+    #[test]
+    fn multi_task_search_folds_rewards_and_keeps_per_task_results() {
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let has = HasSpace::new();
+        let (cards, layout) = JointLayout::cards(&space, &has);
+        let tasks = cls_seg_tasks(2.0);
+        let broker = EvalBroker::new(Box::new(MultiTaskEval::surrogate(
+            &tasks,
+            NasSpaceId::EfficientNet,
+            5,
+            1,
+        )));
+        let cfg = SearchCfg::new(60, RewardCfg::latency(2.0), 5);
+        let mut ctl = RandomController::new(cards.clone());
+        let mut session = broker.session();
+        let out = multi_task_search(&mut session, &mut ctl, &layout, &tasks, &cfg);
+        assert_eq!(out.search.history.len(), 60);
+        assert_eq!(out.per_task.len(), 2);
+        // One broker request per (sample x task) pair.
+        assert_eq!(out.search.eval_stats.requests, 120);
+        for s in &out.search.history {
+            assert_eq!(s.nas_d.len(), layout.nas_len);
+            assert_eq!(s.has_d.len(), layout.has_len);
+        }
+        // Determinism: the same seed replays bit for bit.
+        let broker2 = EvalBroker::new(Box::new(MultiTaskEval::surrogate(
+            &tasks,
+            NasSpaceId::EfficientNet,
+            5,
+            1,
+        )));
+        let mut ctl2 = RandomController::new(cards);
+        let mut session2 = broker2.session();
+        let out2 = multi_task_search(&mut session2, &mut ctl2, &layout, &tasks, &cfg);
+        assert_eq!(out.search.history.len(), out2.search.history.len());
+        for (a, b) in out.search.history.iter().zip(&out2.search.history) {
+            assert_eq!(a.nas_d, b.nas_d);
+            assert_eq!(a.has_d, b.has_d);
+            assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+            assert_eq!(a.result.acc.to_bits(), b.result.acc.to_bits());
+        }
+    }
+}

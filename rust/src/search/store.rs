@@ -154,6 +154,29 @@ pub fn eval_fingerprint(space: NasSpaceId, task: Task, seed: u64) -> String {
     format!("eval/{}/{}/seed{}/{}", space_tag(space), task_tag(task), seed, SIM_FINGERPRINT)
 }
 
+/// The ordered task-set tag of a scenario: `"classification"`,
+/// `"multi-classification+segmentation"`, ... A multi-task cache keys
+/// its entries with a task-index prefix
+/// ([`crate::search::scenario::multitask::MultiTaskEval`]), so its
+/// entries are meaningless to a single-task run (and vice versa): the
+/// task *set* must be part of the fingerprint, not just one task.
+fn task_set_tag(tasks: &[Task]) -> String {
+    assert!(!tasks.is_empty(), "a task-set fingerprint needs at least one task");
+    if tasks.len() == 1 {
+        return task_tag(tasks[0]).to_string();
+    }
+    let parts: Vec<&str> = tasks.iter().map(|&t| task_tag(t)).collect();
+    format!("multi-{}", parts.join("+"))
+}
+
+/// [`eval_fingerprint`] generalized to a scenario's ordered task set.
+/// A single-task set reduces to exactly `eval_fingerprint` (old caches
+/// stay valid); any multi-task set gets its own distinct context, so a
+/// multi-task cache file can never warm-start a single-task run.
+pub fn eval_fingerprint_tasks(space: NasSpaceId, tasks: &[Task], seed: u64) -> String {
+    format!("eval/{}/{}/seed{}/{}", space_tag(space), task_set_tag(tasks), seed, SIM_FINGERPRINT)
+}
+
 /// Fingerprint of the `nahas serve` response cache. The serve key
 /// already encodes space and task, and the server computes no
 /// seed-dependent accuracy, so the components are the simulator
@@ -170,6 +193,13 @@ pub fn serve_fingerprint() -> String {
 /// other's entries.
 pub fn eval_cache_file(dir: &Path, space: NasSpaceId, task: Task, seed: u64) -> PathBuf {
     dir.join(format!("evals-{}-{}-seed{}.cache", space_tag(space), task_tag(task), seed))
+}
+
+/// [`eval_cache_file`] generalized to a task set, mirroring
+/// [`eval_fingerprint_tasks`]: single-task sets reduce to the classic
+/// file name, multi-task sets get their own file.
+pub fn eval_cache_file_tasks(dir: &Path, space: NasSpaceId, tasks: &[Task], seed: u64) -> PathBuf {
+    dir.join(format!("evals-{}-{}-seed{}.cache", space_tag(space), task_set_tag(tasks), seed))
 }
 
 fn encode_key(key: &[usize]) -> String {
@@ -532,5 +562,50 @@ mod tests {
                 assert_ne!(x, y);
             }
         }
+    }
+
+    #[test]
+    fn task_set_fingerprints_separate_multi_from_single() {
+        // A single-task set through the task-set API is exactly the
+        // classic fingerprint/file — old caches stay valid.
+        assert_eq!(
+            eval_fingerprint_tasks(NasSpaceId::EfficientNet, &[Task::Classification], 7),
+            eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, 7),
+        );
+        let dir = Path::new("cache");
+        assert_eq!(
+            eval_cache_file_tasks(dir, NasSpaceId::EfficientNet, &[Task::Classification], 7),
+            eval_cache_file(dir, NasSpaceId::EfficientNet, Task::Classification, 7),
+        );
+        // A multi-task set is distinct from every single-task context
+        // (its entries carry task-index-prefixed keys), and sensitive
+        // to task order — order defines the prefix indices.
+        let multi = eval_fingerprint_tasks(
+            NasSpaceId::EfficientNet,
+            &[Task::Classification, Task::Segmentation],
+            7,
+        );
+        let multi_rev = eval_fingerprint_tasks(
+            NasSpaceId::EfficientNet,
+            &[Task::Segmentation, Task::Classification],
+            7,
+        );
+        let singles = [
+            eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, 7),
+            eval_fingerprint(NasSpaceId::EfficientNet, Task::Segmentation, 7),
+        ];
+        for s in &singles {
+            assert_ne!(&multi, s);
+            assert_ne!(&multi_rev, s);
+        }
+        assert_ne!(multi, multi_rev);
+        assert!(multi.contains("multi-classification+segmentation"), "{multi}");
+        let f = eval_cache_file_tasks(
+            dir,
+            NasSpaceId::EfficientNet,
+            &[Task::Classification, Task::Segmentation],
+            7,
+        );
+        assert_ne!(f, eval_cache_file(dir, NasSpaceId::EfficientNet, Task::Classification, 7));
     }
 }

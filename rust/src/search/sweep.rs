@@ -43,15 +43,16 @@ use std::time::Instant;
 
 use crate::has::HasSpace;
 use crate::nas::{NasSpace, NasSpaceId};
-use crate::pareto::{frontier, union_frontier, Point};
+use crate::pareto::{frontier, frontier_nd, union_frontier, MultiPoint, Point};
 use crate::search::broker::EvalBroker;
-use crate::search::evaluator::EvalStats;
+use crate::search::evaluator::{EvalStats, Task};
 use crate::search::evolution::EvolutionController;
 use crate::search::joint::{joint_search, JointLayout, SearchCfg, SearchOutcome};
 use crate::search::phase::phase_search;
 use crate::search::ppo::PpoController;
 use crate::search::reinforce::ReinforceController;
 use crate::search::reward::{CostObjective, RewardCfg};
+use crate::search::scenario::multitask::{multi_task_search, TaskSpec};
 use crate::search::{Controller, RandomController};
 
 /// Which search driver a scenario runs.
@@ -90,6 +91,16 @@ pub struct Scenario {
     pub samples: usize,
     pub batch: usize,
     pub seed: u64,
+    /// Multi-task co-design: one shared backbone + one shared hardware
+    /// half jointly scored across these tasks
+    /// ([`crate::search::scenario::multitask`]). `None` is the classic
+    /// single-task path — bit-identical to before this field existed.
+    pub tasks: Option<Vec<TaskSpec>>,
+    /// Extra reporting axes: when non-empty, the scenario also reports
+    /// its valid samples on an N-dim Pareto frontier over these
+    /// objectives ([`ScenarioOutcome::frontier_nd`]). Reporting only —
+    /// the search trajectory never depends on it.
+    pub frontier_objectives: Vec<CostObjective>,
 }
 
 impl Scenario {
@@ -109,6 +120,8 @@ impl Scenario {
             samples: 500,
             batch: 16,
             seed,
+            tasks: None,
+            frontier_objectives: Vec::new(),
         }
     }
 
@@ -137,12 +150,33 @@ impl Scenario {
         self
     }
 
-    /// The cost axis of this scenario's Pareto points (ms or mJ).
+    /// Make this a multi-task scenario (`Joint` driver, free hardware).
+    pub fn tasks(mut self, tasks: Vec<TaskSpec>) -> Self {
+        assert!(!tasks.is_empty(), "a multi-task scenario needs at least one task");
+        self.tasks = Some(tasks);
+        self
+    }
+
+    /// Also report an N-dim frontier over these cost axes.
+    pub fn frontier_objectives(mut self, objectives: Vec<CostObjective>) -> Self {
+        self.frontier_objectives = objectives;
+        self
+    }
+
+    /// The evaluation-task list this scenario's broker backend must
+    /// serve: empty for the classic single-task path (the backend's
+    /// own task, whatever it is), the ordered task kinds otherwise.
+    /// Scenarios sharing a sweep must agree on this — and it is part
+    /// of the eval-cache fingerprint
+    /// ([`crate::search::store::eval_fingerprint_tasks`]), so a
+    /// multi-task cache file never warm-starts a single-task run.
+    pub fn tasks_key(&self) -> Vec<Task> {
+        self.tasks.as_ref().map(|ts| ts.iter().map(|t| t.task).collect()).unwrap_or_default()
+    }
+
+    /// The cost axis of this scenario's Pareto points (ms, mJ or mm2).
     fn cost_of(&self, r: &crate::search::EvalResult) -> f64 {
-        match self.reward.objective {
-            CostObjective::Latency => r.latency_ms,
-            CostObjective::Energy => r.energy_mj,
-        }
+        self.reward.objective.cost_of(r)
     }
 }
 
@@ -173,13 +207,21 @@ pub fn scenario_grid(
                     CostObjective::Energy => {
                         (RewardCfg::energy(target), format!("energy{target}mJ"))
                     }
+                    CostObjective::Area => (RewardCfg::area(target), format!("area{target}mm2")),
                 };
                 let dname = match driver {
                     SweepDriver::Joint => "joint",
                     SweepDriver::Phase => "phase",
                 };
+                let name = format!("{tag}-{dname}");
+                // Repeated targets/objectives/drivers would generate
+                // the same scenario twice under the same name — and
+                // `run_sweep` rejects duplicate names. Keep the first.
+                if out.iter().any(|s: &Scenario| s.name == name) {
+                    continue;
+                }
                 out.push(
-                    Scenario::new(format!("{tag}-{dname}"), space, reward, seed)
+                    Scenario::new(name, space, reward, seed)
                         .samples(samples)
                         .batch(batch)
                         .driver(driver),
@@ -202,6 +244,12 @@ pub struct ScenarioOutcome {
     pub eval_stats: EvalStats,
     /// Non-dominated (accuracy%, cost) points from the search history.
     pub frontier: Vec<Point>,
+    /// Multi-task scenarios only: one (task name, frontier) per task,
+    /// in task order, points tagged `"scenario@task"`. Empty otherwise.
+    pub task_frontiers: Vec<(String, Vec<Point>)>,
+    /// `frontier_objectives` scenarios only: the N-dim frontier of the
+    /// valid samples over those axes. Empty otherwise.
+    pub frontier_nd: Vec<MultiPoint>,
     pub elapsed_s: f64,
 }
 
@@ -214,6 +262,12 @@ pub struct ScenarioOutcome {
 pub struct SweepOutcome {
     pub outcomes: Vec<ScenarioOutcome>,
     pub union: Vec<(CostObjective, Vec<Point>)>,
+    /// Per-task frontiers from multi-task scenarios, keyed
+    /// `"scenario@task"`, in outcome-then-task order.
+    pub task_frontiers: Vec<(String, Vec<Point>)>,
+    /// One union N-dim frontier per distinct `frontier_objectives`
+    /// axis vector among the scenarios (axes must match to union).
+    pub union_nd: Vec<(Vec<CostObjective>, Vec<MultiPoint>)>,
     pub eval_stats: EvalStats,
     pub elapsed_s: f64,
 }
@@ -227,7 +281,44 @@ pub fn run_scenario(broker: &EvalBroker, sc: &Scenario) -> ScenarioOutcome {
     let has = HasSpace::new();
     let mut cfg = SearchCfg::new(sc.samples, sc.reward, sc.seed);
     cfg.batch = sc.batch.max(1);
-    let (search, selected_hw, eval_stats) = match sc.driver {
+    let (search, selected_hw, eval_stats, task_frontiers) = match sc.driver {
+        SweepDriver::Joint if sc.tasks.is_some() => {
+            let tasks = sc.tasks.as_ref().unwrap();
+            assert!(
+                sc.fixed_hw.is_none(),
+                "scenario {}: fixed_hw is not supported for multi-task scenarios \
+                 (the shared hardware half is what the search co-designs)",
+                sc.name
+            );
+            let (cards, layout) = JointLayout::cards(&space, &has);
+            let mut ctl: Box<dyn Controller> = match sc.controller {
+                ControllerKind::Ppo => Box::new(PpoController::new(&cards)),
+                ControllerKind::Random => Box::new(RandomController::new(cards)),
+                ControllerKind::Evolution => Box::new(EvolutionController::new(cards)),
+                ControllerKind::Reinforce => Box::new(ReinforceController::new(&cards)),
+            };
+            let mut session = broker.session();
+            let out = multi_task_search(&mut session, ctl.as_mut(), &layout, tasks, &cfg);
+            let stats = out.search.eval_stats.clone();
+            let tf: Vec<(String, Vec<Point>)> = tasks
+                .iter()
+                .zip(&out.per_task)
+                .map(|(t, rs)| {
+                    let pts: Vec<Point> = rs
+                        .iter()
+                        .map(|(_, r)| {
+                            Point::new(
+                                r.acc * 100.0,
+                                t.reward.objective.cost_of(r),
+                                format!("{}@{}", sc.name, t.name),
+                            )
+                        })
+                        .collect();
+                    (t.name.clone(), frontier(&pts))
+                })
+                .collect();
+            (out.search, None, stats, tf)
+        }
         SweepDriver::Joint => {
             let (cards, layout) = JointLayout::cards(&space, &has);
             let free_cards =
@@ -248,7 +339,7 @@ pub fn run_scenario(broker: &EvalBroker, sc: &Scenario) -> ScenarioOutcome {
                 &cfg,
             );
             let stats = out.eval_stats.clone();
-            (out, None, stats)
+            (out, None, stats, Vec::new())
         }
         SweepDriver::Phase => {
             // The phase driver has no knobs for these: surface the
@@ -256,6 +347,11 @@ pub fn run_scenario(broker: &EvalBroker, sc: &Scenario) -> ScenarioOutcome {
             assert!(
                 sc.fixed_hw.is_none(),
                 "scenario {}: fixed_hw is Joint-driver only (phase 1 searches the hardware)",
+                sc.name
+            );
+            assert!(
+                sc.tasks.is_none(),
+                "scenario {}: multi-task scenarios are Joint-driver only",
                 sc.name
             );
             assert!(
@@ -268,7 +364,7 @@ pub fn run_scenario(broker: &EvalBroker, sc: &Scenario) -> ScenarioOutcome {
             let initial = vec![0; space.num_decisions()];
             let out = phase_search(broker, &space, &initial, &cfg);
             let stats = out.eval_stats.clone();
-            (out.nas_phase, Some(out.selected_hw), stats)
+            (out.nas_phase, Some(out.selected_hw), stats, Vec::new())
         }
     };
     let points: Vec<Point> = search
@@ -277,9 +373,27 @@ pub fn run_scenario(broker: &EvalBroker, sc: &Scenario) -> ScenarioOutcome {
         .filter(|s| s.result.valid)
         .map(|s| Point::new(s.result.acc * 100.0, sc.cost_of(&s.result), sc.name.clone()))
         .collect();
+    let nd_points: Vec<MultiPoint> = if sc.frontier_objectives.is_empty() {
+        Vec::new()
+    } else {
+        search
+            .history
+            .iter()
+            .filter(|s| s.result.valid)
+            .map(|s| {
+                MultiPoint::new(
+                    s.result.acc * 100.0,
+                    sc.frontier_objectives.iter().map(|o| o.cost_of(&s.result)).collect(),
+                    sc.name.clone(),
+                )
+            })
+            .collect()
+    };
     ScenarioOutcome {
         scenario: sc.clone(),
         frontier: frontier(&points),
+        task_frontiers,
+        frontier_nd: frontier_nd(&nd_points),
         search,
         selected_hw,
         eval_stats,
@@ -326,6 +440,25 @@ pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
         scenarios.iter().all(|s| s.space == scenarios[0].space),
         "all scenarios of one sweep must share the broker backend's search space"
     );
+    // One broker backend serves one task set: a multi-task backend
+    // decodes task-prefixed keys a single-task backend would misread
+    // (and vice versa), so mixing them in one sweep is a hard error.
+    assert!(
+        scenarios.iter().all(|s| s.tasks_key() == scenarios[0].tasks_key()),
+        "all scenarios of one sweep must share the broker backend's task set \
+         (single- and multi-task scenarios cannot share a broker)"
+    );
+    // Duplicate names would make per-scenario outcomes and union-
+    // frontier attribution ambiguous — every point is tagged by name.
+    let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+    for sc in scenarios {
+        assert!(
+            seen.insert(sc.name.as_str()),
+            "duplicate scenario name {:?} in sweep: outcomes and union-frontier \
+             attribution would be ambiguous (scenario names must be unique)",
+            sc.name
+        );
+    }
     let outcomes: Vec<ScenarioOutcome> = std::thread::scope(|s| {
         let handles: Vec<_> =
             scenarios.iter().map(|sc| s.spawn(move || run_scenario(broker, sc))).collect();
@@ -334,7 +467,7 @@ pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
     let eval_stats =
         outcomes.iter().fold(EvalStats::default(), |acc, o| acc.merged(&o.eval_stats));
     let mut union = Vec::new();
-    for objective in [CostObjective::Latency, CostObjective::Energy] {
+    for objective in [CostObjective::Latency, CostObjective::Energy, CostObjective::Area] {
         let fronts: Vec<Vec<Point>> = outcomes
             .iter()
             .filter(|o| o.scenario.reward.objective == objective)
@@ -344,7 +477,35 @@ pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
             union.push((objective, union_frontier(&fronts)));
         }
     }
-    SweepOutcome { outcomes, union, eval_stats, elapsed_s: t0.elapsed().as_secs_f64() }
+    let task_frontiers: Vec<(String, Vec<Point>)> = outcomes
+        .iter()
+        .flat_map(|o| {
+            o.task_frontiers
+                .iter()
+                .map(|(task, front)| (format!("{}@{}", o.scenario.name, task), front.clone()))
+        })
+        .collect();
+    let mut union_nd: Vec<(Vec<CostObjective>, Vec<MultiPoint>)> = Vec::new();
+    for o in &outcomes {
+        if o.scenario.frontier_objectives.is_empty() {
+            continue;
+        }
+        match union_nd.iter_mut().find(|(axes, _)| *axes == o.scenario.frontier_objectives) {
+            Some((_, pts)) => pts.extend(o.frontier_nd.iter().cloned()),
+            None => union_nd.push((o.scenario.frontier_objectives.clone(), o.frontier_nd.clone())),
+        }
+    }
+    for (_, pts) in &mut union_nd {
+        *pts = frontier_nd(pts);
+    }
+    SweepOutcome {
+        outcomes,
+        union,
+        task_frontiers,
+        union_nd,
+        eval_stats,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    }
 }
 
 #[cfg(test)]
@@ -409,6 +570,91 @@ mod tests {
         let m = &out.eval_stats;
         assert_eq!(m.requests, 240);
         assert_eq!(m.evals + m.cache_hits, m.requests);
+    }
+
+    #[test]
+    fn grid_dedupes_repeated_axis_values() {
+        let g = scenario_grid(
+            &[0.5, 0.5, 0.3],
+            &[CostObjective::Latency, CostObjective::Latency],
+            &[SweepDriver::Joint],
+            NasSpaceId::EfficientNet,
+            100,
+            16,
+            7,
+        );
+        let names: Vec<&str> = g.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["lat0.5ms-joint", "lat0.3ms-joint"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate scenario name")]
+    fn sweep_rejects_duplicate_scenario_names() {
+        let sc = Scenario::new("twin", NasSpaceId::EfficientNet, RewardCfg::latency(0.5), 1)
+            .samples(8)
+            .controller(ControllerKind::Random);
+        let broker = local_broker(1);
+        run_sweep(&broker, &[sc.clone(), sc]);
+    }
+
+    #[test]
+    fn multi_task_scenario_reports_per_task_frontiers() {
+        use crate::search::scenario::multitask::MultiTaskEval;
+        let tasks = vec![
+            TaskSpec::new("cls", Task::Classification, RewardCfg::latency(2.0)),
+            TaskSpec::new("seg", Task::Segmentation, RewardCfg::latency(20.0)),
+        ];
+        let sc = Scenario::new("mt", NasSpaceId::EfficientNet, RewardCfg::latency(2.0), 4)
+            .samples(48)
+            .batch(16)
+            .controller(ControllerKind::Random)
+            .tasks(tasks.clone());
+        let broker = EvalBroker::new(Box::new(MultiTaskEval::surrogate(
+            &tasks,
+            NasSpaceId::EfficientNet,
+            4,
+            1,
+        )));
+        let out = run_sweep(&broker, &[sc]);
+        assert_eq!(out.outcomes.len(), 1);
+        let o = &out.outcomes[0];
+        assert_eq!(o.search.history.len(), 48);
+        // 48 samples x 2 tasks through the broker session.
+        assert_eq!(o.eval_stats.requests, 96);
+        assert_eq!(o.task_frontiers.len(), 2);
+        assert_eq!(o.task_frontiers[0].0, "cls");
+        assert_eq!(o.task_frontiers[1].0, "seg");
+        assert_eq!(out.task_frontiers.len(), 2);
+        assert_eq!(out.task_frontiers[0].0, "mt@cls");
+        let seg_front = &out.task_frontiers[1].1;
+        assert!(!seg_front.is_empty(), "segmentation frontier has valid points");
+        assert!(seg_front.iter().all(|p| p.tag == "mt@seg"));
+    }
+
+    #[test]
+    fn tri_objective_scenario_reports_an_nd_union() {
+        let sc = Scenario::new("tri", NasSpaceId::EfficientNet, RewardCfg::latency(2.0), 9)
+            .samples(64)
+            .batch(16)
+            .controller(ControllerKind::Random)
+            .frontier_objectives(vec![
+                CostObjective::Latency,
+                CostObjective::Energy,
+                CostObjective::Area,
+            ]);
+        let broker = local_broker(9);
+        let out = run_sweep(&broker, &[sc]);
+        let o = &out.outcomes[0];
+        assert!(!o.frontier_nd.is_empty());
+        assert!(o.frontier_nd.iter().all(|p| p.costs.len() == 3));
+        assert_eq!(out.union_nd.len(), 1);
+        assert_eq!(
+            out.union_nd[0].0,
+            vec![CostObjective::Latency, CostObjective::Energy, CostObjective::Area]
+        );
+        // The 2-D latency union still exists untouched beside it.
+        assert_eq!(out.union.len(), 1);
+        assert_eq!(out.union[0].0, CostObjective::Latency);
     }
 
     #[test]

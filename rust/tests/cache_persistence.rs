@@ -202,6 +202,164 @@ fn stale_fingerprint_falls_back_to_cold_start() {
 }
 
 #[test]
+fn oneshot_oracle_behind_broker_persists_and_warm_starts() {
+    // ISSUE 7 acceptance: the oneshot driver performs zero evaluations
+    // outside the broker seam — the oracle's traffic IS the broker
+    // session's counters — and a warm re-run answers off disk.
+    use nahas::has::HasSpace;
+    use nahas::search::oneshot::{BrokerOracle, LatencyOracle};
+    use nahas::util::Rng;
+
+    let seed = 7u64;
+    let dir = tmp_dir("oneshot-oracle");
+    let path = eval_cache_file(&dir, NasSpaceId::Proxy, Task::Classification, seed);
+    let fp = eval_fingerprint(NasSpaceId::Proxy, Task::Classification, seed);
+    let space = NasSpace::new(NasSpaceId::Proxy);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(seed);
+    let pairs: Vec<(Vec<usize>, Vec<usize>)> =
+        (0..24).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect();
+
+    // Cold run.
+    let store = CacheStore::open(&path, &fp).unwrap();
+    let broker =
+        EvalBroker::with_store(Box::new(SurrogateSim::new(space.clone(), seed)), store);
+    let mut oracle = BrokerOracle::new(&broker);
+    let cold: Vec<Option<(f64, f64)>> = pairs.iter().map(|(n, h)| oracle.cost(n, h)).collect();
+    let (requests, evals) = oracle.traffic();
+    assert_eq!(requests, pairs.len());
+    let g = broker.stats();
+    assert_eq!(g.requests, requests, "oracle queries outside the broker seam");
+    assert_eq!(g.evals, evals);
+    assert!(broker.backend_stats().requests > 0);
+    drop(oracle);
+    drop(broker); // Flush-on-drop.
+
+    // Warm run: fresh broker over the same cache file — bit-identical
+    // answers, zero backend work, all persisted hits.
+    let store = CacheStore::open(&path, &fp).unwrap();
+    assert!(store.discarded().is_none(), "warm open must not discard");
+    let broker =
+        EvalBroker::with_store(Box::new(SurrogateSim::new(space.clone(), seed)), store);
+    let mut oracle = BrokerOracle::new(&broker);
+    let warm: Vec<Option<(f64, f64)>> = pairs.iter().map(|(n, h)| oracle.cost(n, h)).collect();
+    for (i, (c, w)) in cold.iter().zip(&warm).enumerate() {
+        match (c, w) {
+            (None, None) => {}
+            (Some((cl, ca)), Some((wl, wa))) => {
+                assert_eq!(cl.to_bits(), wl.to_bits(), "pair {i}: latency");
+                assert_eq!(ca.to_bits(), wa.to_bits(), "pair {i}: area");
+            }
+            _ => panic!("pair {i}: validity changed across warm start: {c:?} vs {w:?}"),
+        }
+    }
+    let g = broker.stats();
+    assert_eq!(g.requests, pairs.len());
+    assert!(g.persisted_hits > 0, "warm oracle run had no persisted hits");
+    assert_eq!(broker.backend_stats().requests, 0, "warm oracle run touched the backend");
+    drop(oracle);
+    drop(broker);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn multi_task_cache_never_warm_starts_a_single_task_run() {
+    // ISSUE 7 satellite: the scenario's task SET is part of the
+    // eval-cache identity — same directory, same space, same seed, but
+    // a multi-task sweep and a single-task sweep land in different
+    // files under different fingerprints.
+    use nahas::search::store::{eval_cache_file_tasks, eval_fingerprint_tasks};
+    use nahas::search::{builtin_registry, compile_substrates, MultiTaskEval, SubstrateParams};
+
+    let seed = 7u64;
+    let dir = tmp_dir("task-set");
+    let space = NasSpaceId::EfficientNet;
+    let single = [Task::Classification];
+    let multi = [Task::Classification, Task::Segmentation];
+    let single_path = eval_cache_file_tasks(&dir, space, &single, seed);
+    let multi_path = eval_cache_file_tasks(&dir, space, &multi, seed);
+    assert_ne!(single_path, multi_path, "task sets must map to distinct cache files");
+    // The one-task form of the task-set API is the classic fingerprint,
+    // so pre-existing single-task cache files stay valid.
+    assert_eq!(
+        eval_fingerprint_tasks(space, &single, seed),
+        eval_fingerprint(space, Task::Classification, seed)
+    );
+    assert_eq!(single_path, eval_cache_file(&dir, space, Task::Classification, seed));
+
+    // Populate the multi-task cache from a registry-compiled sweep.
+    let registry = builtin_registry();
+    let params = SubstrateParams::new(space, 32, 16, seed).targets(vec![0.5]);
+    let scs =
+        compile_substrates(&registry, &["multitask-cls-seg".to_string()], &params).unwrap();
+    let tasks = scs[0].tasks.as_ref().unwrap().clone();
+    {
+        let store =
+            CacheStore::open(&multi_path, &eval_fingerprint_tasks(space, &multi, seed)).unwrap();
+        let backend = Box::new(MultiTaskEval::surrogate(&tasks, space, seed, 1));
+        let broker = EvalBroker::with_store(backend, store);
+        let out = run_sweep(&broker, &scs);
+        assert!(out.eval_stats.evals > 0);
+    }
+    // A single-task run in the same directory opens a different file:
+    // nothing to warm-start from.
+    let store =
+        CacheStore::open(&single_path, &eval_fingerprint_tasks(space, &single, seed)).unwrap();
+    assert_eq!(store.loaded_len(), 0, "single-task run warm-started from a multi-task cache");
+    // And force-feeding the multi-task FILE to a single-task run is a
+    // fingerprint mismatch — discarded, clean cold start.
+    let stale =
+        CacheStore::open(&multi_path, &eval_fingerprint_tasks(space, &single, seed)).unwrap();
+    assert!(
+        stale.discarded().unwrap().contains("fingerprint mismatch"),
+        "multi-task cache contents must not replay into a single-task run: {:?}",
+        stale.discarded()
+    );
+    drop(stale);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn multi_task_warm_rerun_is_bit_identical_with_zero_backend_evals() {
+    use nahas::search::store::{eval_cache_file_tasks, eval_fingerprint_tasks};
+    use nahas::search::{builtin_registry, compile_substrates, MultiTaskEval, SubstrateParams};
+
+    let seed = 1u64;
+    let dir = tmp_dir("multitask-warm");
+    let space = NasSpaceId::EfficientNet;
+    let registry = builtin_registry();
+    let params = SubstrateParams::new(space, SAMPLES, 16, seed).targets(vec![0.5, 0.6]);
+    let scs =
+        compile_substrates(&registry, &["multitask-cls-seg".to_string()], &params).unwrap();
+    let kinds = scs[0].tasks_key();
+    let tasks = scs[0].tasks.as_ref().unwrap().clone();
+    let path = eval_cache_file_tasks(&dir, space, &kinds, seed);
+    let fp = eval_fingerprint_tasks(space, &kinds, seed);
+
+    let store = CacheStore::open(&path, &fp).unwrap();
+    let cold_broker =
+        EvalBroker::with_store(Box::new(MultiTaskEval::surrogate(&tasks, space, seed, 1)), store);
+    let cold = run_sweep(&cold_broker, &scs);
+    assert!(cold_broker.backend_stats().requests > 0);
+    drop(cold_broker);
+
+    let store = CacheStore::open(&path, &fp).unwrap();
+    assert!(store.discarded().is_none(), "warm open must not discard");
+    let warm_broker =
+        EvalBroker::with_store(Box::new(MultiTaskEval::surrogate(&tasks, space, seed, 1)), store);
+    let warm = run_sweep(&warm_broker, &scs);
+    for (w, g) in cold.outcomes.iter().zip(&warm.outcomes) {
+        assert_scenario_identical(w, g, &format!("multi-task warm, {}", w.scenario.name));
+    }
+    assert_eq!(cold.task_frontiers, warm.task_frontiers, "per-task frontiers");
+    assert_eq!(cold.union, warm.union, "union frontier");
+    assert_eq!(warm_broker.backend_stats().requests, 0, "warm multi-task touched backend");
+    assert!(warm.eval_stats.persisted_hits > 0, "no persisted warm-start hits");
+    drop(warm_broker);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn sweep_objectives_still_union_per_objective_when_warm() {
     // Warm-start must not disturb the sweep's merge step: the union
     // frontier per objective of a warm sweep equals the cold one even

@@ -10,8 +10,9 @@
 use nahas::cluster::ShardedEvaluator;
 use nahas::nas::{NasSpace, NasSpaceId};
 use nahas::search::{
-    run_scenario, run_sweep, scenario_grid, CostObjective, EvalBroker, Evaluator, ParallelSim,
-    Scenario, ScenarioOutcome, SurrogateSim, SweepDriver,
+    builtin_registry, compile_substrates, run_scenario, run_sweep, scenario_grid, CostObjective,
+    EvalBroker, Evaluator, MultiTaskEval, ParallelSim, Scenario, ScenarioOutcome, SubstrateParams,
+    SurrogateSim, SweepDriver,
 };
 use nahas::service::Server;
 
@@ -158,5 +159,119 @@ fn sweep_over_cluster_backend_matches_standalone_local_runs() {
     assert!(sim_evals > 0);
     for s in servers {
         s.stop();
+    }
+}
+
+#[test]
+fn registry_compiled_grids_bit_identical_to_hand_built_twins() {
+    // ISSUE 7 acceptance: a sweep over registry-compiled substrates
+    // must replay, bit for bit, the sweep a user would have hand-built
+    // from `scenario_grid` before the registry existed — across seeds
+    // and evaluator tiers.
+    let registry = builtin_registry();
+    for kind in ["local", "parallel"] {
+        for seed in [1u64, 7, 42] {
+            let ctx = format!("backend {kind}, seed {seed}");
+            let params = SubstrateParams::new(NasSpaceId::EfficientNet, SAMPLES, 16, seed)
+                .targets(vec![0.35, 0.5]);
+            let compiled = compile_substrates(
+                &registry,
+                &["latency-grid".to_string(), "energy-grid".to_string()],
+                &params,
+            )
+            .unwrap();
+            let mut twins = scenario_grid(
+                &[0.35, 0.5],
+                &[CostObjective::Latency],
+                &[SweepDriver::Joint],
+                NasSpaceId::EfficientNet,
+                SAMPLES,
+                16,
+                seed,
+            );
+            twins.extend(scenario_grid(
+                &[0.35, 0.5],
+                &[CostObjective::Energy],
+                &[SweepDriver::Joint],
+                NasSpaceId::EfficientNet,
+                SAMPLES,
+                16,
+                seed,
+            ));
+            let names: Vec<&str> = compiled.iter().map(|s| s.name.as_str()).collect();
+            let twin_names: Vec<&str> = twins.iter().map(|s| s.name.as_str()).collect();
+            assert_eq!(names, twin_names, "{ctx}: compiled scenario names");
+            let got = run_sweep(&EvalBroker::new(backend(kind, seed)), &compiled);
+            let want = run_sweep(&EvalBroker::new(backend(kind, seed)), &twins);
+            for ((w, g), sc) in want.outcomes.iter().zip(&got.outcomes).zip(&compiled) {
+                assert_scenario_identical(w, g, &format!("{ctx}, scenario {}", sc.name));
+            }
+            assert_eq!(want.union, got.union, "{ctx}: union frontier");
+        }
+    }
+}
+
+/// The task-dispatching backend every multi-task scenario set runs on
+/// (`workers = 1` is the local tier, `> 1` the parallel tier).
+fn multitask_backend(
+    scs: &[Scenario],
+    seed: u64,
+    workers: usize,
+) -> Box<dyn Evaluator + Send> {
+    let tasks = scs[0].tasks.as_ref().expect("multi-task scenarios");
+    Box::new(MultiTaskEval::surrogate(tasks, NasSpaceId::EfficientNet, seed, workers))
+}
+
+#[test]
+fn multi_task_sweep_bit_identical_to_standalone_with_per_task_frontiers() {
+    let registry = builtin_registry();
+    for seed in [1u64, 7, 42] {
+        let ctx = format!("multi-task, seed {seed}");
+        let params = SubstrateParams::new(NasSpaceId::EfficientNet, SAMPLES, 16, seed)
+            .targets(vec![0.5, 0.6]);
+        let scs =
+            compile_substrates(&registry, &["multitask-cls-seg".to_string()], &params).unwrap();
+        assert_eq!(scs.len(), 2, "{ctx}: one scenario per target");
+
+        let sweep = run_sweep(&EvalBroker::new(multitask_backend(&scs, seed, 1)), &scs);
+        assert_eq!(sweep.outcomes.len(), scs.len(), "{ctx}");
+        // Every sample fans out to one evaluation per task, and the
+        // same-seed scenarios share their opening batches through the
+        // broker's cross-search memo cache.
+        let expect: usize = scs.iter().map(|s| s.samples * s.tasks_key().len()).sum();
+        assert_eq!(sweep.eval_stats.requests, expect, "{ctx}: per-task fan-out");
+        assert!(sweep.eval_stats.cross_session_hits > 0, "{ctx}: no cross-scenario hits");
+
+        // One frontier per (scenario, task), keyed "scenario@task",
+        // every point tagged with its own key.
+        let keys: Vec<String> = scs
+            .iter()
+            .flat_map(|sc| ["cls", "seg"].map(|t| format!("{}@{t}", sc.name)))
+            .collect();
+        assert_eq!(sweep.task_frontiers.len(), keys.len(), "{ctx}");
+        for key in &keys {
+            let (_, front) = sweep
+                .task_frontiers
+                .iter()
+                .find(|(k, _)| k == key)
+                .unwrap_or_else(|| panic!("{ctx}: missing per-task frontier {key}"));
+            assert!(!front.is_empty(), "{ctx}: empty frontier {key}");
+            assert!(front.iter().all(|p| p.tag == *key), "{ctx}: mistagged points in {key}");
+        }
+
+        // Sharing the sweep's broker changed nothing: each scenario is
+        // bit-identical to its standalone run, on the local AND the
+        // parallel multi-task tier.
+        for workers in [1usize, 4] {
+            for (sc, got) in scs.iter().zip(&sweep.outcomes) {
+                let want = run_scenario(
+                    &EvalBroker::new(multitask_backend(&scs, seed, workers)),
+                    sc,
+                );
+                let sctx = format!("{ctx}, workers {workers}, scenario {}", sc.name);
+                assert_scenario_identical(&want, got, &sctx);
+                assert_eq!(want.task_frontiers, got.task_frontiers, "{sctx}: task frontiers");
+            }
+        }
     }
 }
