@@ -1,0 +1,88 @@
+//! §Perf — one sweep, two wire codecs: the same fixed batch driven
+//! through the service tier over the JSON line protocol (`--wire
+//! json`) and the length-prefixed binary frame protocol (`--wire
+//! binary`, the default). The codec only changes how the same numbers
+//! travel — the server answers both from one result cache and ships
+//! raw f64 bits either way — so the bench asserts bit-identical
+//! results against the serial simulator, then prints bytes-on-wire
+//! and wall-clock for both. Record the printed trajectory row in
+//! `docs/BENCH_TRAJECTORY.md`.
+
+use std::time::Instant;
+
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{EvalResult, Evaluator, SurrogateSim};
+use nahas::service::{Server, ServiceEvaluator, Wire};
+use nahas::util::Rng;
+
+const BATCH: usize = 384;
+const CONNS: usize = 4;
+
+fn fixed_batch() -> Vec<(Vec<usize>, Vec<usize>)> {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(3);
+    (0..BATCH).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect()
+}
+
+/// Drive the batch through a fresh server over one wire preference;
+/// returns results, wall-clock, and (tx, rx) bytes on the wire. A
+/// fresh server per run keeps the comparison fair — a shared one
+/// would answer the second codec from a warm result cache.
+fn run_wire(wire: Wire, batch: &[(Vec<usize>, Vec<usize>)]) -> (Vec<EvalResult>, f64, u64, u64) {
+    let server = Server::spawn("127.0.0.1:0").expect("spawn server");
+    let mut ev = ServiceEvaluator::connect_wire(
+        &server.addr.to_string(),
+        NasSpaceId::EfficientNet,
+        3,
+        CONNS,
+        wire,
+    )
+    .expect("connect service evaluator");
+    let t0 = Instant::now();
+    let results = ev.evaluate_batch(batch);
+    let dt = t0.elapsed().as_secs_f64();
+    let (tx, rx) = ev.wire_bytes();
+    server.stop();
+    (results, dt, tx, rx)
+}
+
+fn bits_equal(a: &EvalResult, b: &EvalResult) -> bool {
+    a.valid == b.valid
+        && a.acc.to_bits() == b.acc.to_bits()
+        && a.latency_ms.to_bits() == b.latency_ms.to_bits()
+        && a.energy_mj.to_bits() == b.energy_mj.to_bits()
+        && a.area_mm2.to_bits() == b.area_mm2.to_bits()
+}
+
+fn main() {
+    println!("wire codec sweep: {BATCH} samples, {CONNS} connections, service tier\n");
+    let batch = fixed_batch();
+    let mut serial = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+    let want = serial.evaluate_batch(&batch);
+
+    let (json_r, json_s, jtx, jrx) = run_wire(Wire::Json, &batch);
+    let (bin_r, bin_s, btx, brx) = run_wire(Wire::Binary, &batch);
+    for (i, ((w, j), b)) in want.iter().zip(&json_r).zip(&bin_r).enumerate() {
+        assert!(bits_equal(w, j), "sample {i}: JSON wire diverged from the serial simulator");
+        assert!(bits_equal(w, b), "sample {i}: binary wire diverged from the serial simulator");
+    }
+
+    let (json_bytes, bin_bytes) = (jtx + jrx, btx + brx);
+    println!("  json wire    {json_s:>6.3}s  {json_bytes:>9} bytes (tx {jtx} / rx {jrx})");
+    println!("  binary wire  {bin_s:>6.3}s  {bin_bytes:>9} bytes (tx {btx} / rx {brx})");
+    let shrink = json_bytes as f64 / bin_bytes.max(1) as f64;
+    println!("\n  bytes shrink: {shrink:.2}x; results bit-identical across codecs");
+    assert!(
+        bin_bytes < json_bytes,
+        "binary wire must put fewer bytes on the wire than JSON \
+         ({bin_bytes} vs {json_bytes})"
+    );
+
+    println!("\n  trajectory row (docs/BENCH_TRAJECTORY.md):");
+    println!(
+        "  | perf_wire_codec | json: {json_s:.3}s, {json_bytes} B | binary: {bin_s:.3}s, \
+         {bin_bytes} B | {shrink:.2}x fewer bytes | bit-identical |"
+    );
+}

@@ -46,7 +46,7 @@ use crate::nas::{NasSpace, NasSpaceId};
 use crate::search::evaluator::{EvalCounters, EvalResult, EvalStats, Evaluator, HostEvalStats};
 use crate::search::parallel::BatchPlan;
 use crate::search::{joint_key, MemoCache, SurrogateSim};
-use crate::service::{query_with_reconnect, remote_result, service_space_name, Client};
+use crate::service::{query_with_reconnect, remote_result, service_space_name, Client, Wire};
 
 /// Shared read-only query context for shard worker threads.
 struct ShardCtx<'a> {
@@ -54,6 +54,9 @@ struct ShardCtx<'a> {
     space_name: &'static str,
     seg: bool,
     nas_len: usize,
+    /// Wire preference for ephemeral/replacement connections, matching
+    /// the pool's so failover never silently changes protocol policy.
+    wire: Wire,
 }
 
 /// Sharded multi-host remote evaluator (the cluster tier).
@@ -97,8 +100,23 @@ impl ShardedEvaluator {
         seed: u64,
         conns_per_host: usize,
     ) -> Result<Self> {
+        Self::connect_weighted_wire(hosts, id, seed, conns_per_host, Wire::Binary)
+    }
+
+    /// [`ShardedEvaluator::connect_weighted`] with an explicit wire
+    /// preference (`--wire json|binary`). Every pooled, refilled and
+    /// ephemeral connection the evaluator opens inherits it; with
+    /// [`Wire::Binary`] each host still falls back to JSON
+    /// independently if its server predates the hello.
+    pub fn connect_weighted_wire(
+        hosts: &[(String, f64)],
+        id: NasSpaceId,
+        seed: u64,
+        conns_per_host: usize,
+        wire: Wire,
+    ) -> Result<Self> {
         let addrs: Vec<&str> = hosts.iter().map(|(a, _)| a.as_str()).collect();
-        let pool = HostPool::connect(&addrs, conns_per_host)?;
+        let pool = HostPool::connect_wire(&addrs, conns_per_host, wire)?;
         Ok(ShardedEvaluator {
             ring: HashRing::weighted(hosts),
             pool,
@@ -143,6 +161,12 @@ impl ShardedEvaluator {
         self.pool.snapshot()
     }
 
+    /// The wire preference every connection in the pool was opened
+    /// with (individual hosts may still have negotiated down to JSON).
+    pub fn wire(&self) -> Wire {
+        self.pool.wire()
+    }
+
     /// One roundtrip through the shared
     /// [`query_with_reconnect`] ladder (same policy as the single-host
     /// tier). `Err(())` means the host failed both attempts; the
@@ -180,7 +204,7 @@ impl ShardedEvaluator {
         let mut ephemeral;
         let client: &mut Client = match client.take() {
             Some(c) => c,
-            None => match Client::connect_with_io_timeout(state.addr(), IO_TIMEOUT) {
+            None => match Client::connect_wire(state.addr(), Some(IO_TIMEOUT), ctx.wire) {
                 Ok(c) => {
                     ephemeral = c;
                     &mut ephemeral
@@ -206,7 +230,7 @@ impl ShardedEvaluator {
                         .collect();
                     return (done, Vec::new());
                 }
-                Err(_) => match Client::connect_with_io_timeout(state.addr(), IO_TIMEOUT) {
+                Err(_) => match Client::connect_wire(state.addr(), Some(IO_TIMEOUT), ctx.wire) {
                     Ok(fresh) => *client = fresh,
                     Err(_) => {
                         state.set_up(false);
@@ -271,8 +295,13 @@ impl ShardedEvaluator {
                 self.pool.refill(h);
             }
         }
-        let ctx =
-            ShardCtx { sim: &self.sim, space_name: self.space_name, seg: self.seg, nas_len };
+        let ctx = ShardCtx {
+            sim: &self.sim,
+            space_name: self.space_name,
+            seg: self.seg,
+            nas_len,
+            wire: self.pool.wire(),
+        };
         let mut failed: Vec<usize> = Vec::new();
         std::thread::scope(|s| {
             let mut handles = Vec::new();

@@ -9,6 +9,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::pool::HostState;
+use crate::service::{Client, Wire};
 use crate::util::json::Json;
 
 /// Result of probing one host.
@@ -79,6 +80,17 @@ pub fn probe_host(addr: &str, timeout: Duration) -> HostProbe {
         },
         Err(e) => HostProbe::down(addr, t0, format!("bad response: {e}")),
     }
+}
+
+/// Negotiated wire protocol for one host: open a client preferring
+/// the binary frame protocol and report what the versioned hello
+/// settled on — `"bin-v1"` when the host acked it, `"json"` when the
+/// host predates the hello and the client fell back, `None` when the
+/// host is unreachable. Used by `nahas cluster-status` to show each
+/// host's protocol column.
+pub fn probe_wire(addr: &str, timeout: Duration) -> Option<&'static str> {
+    let client = Client::connect_wire(addr, Some(timeout), Wire::Binary).ok()?;
+    Some(if client.is_binary() { "bin-v1" } else { "json" })
 }
 
 /// One host's server-side counters, as reported by the `{"stats":
@@ -184,6 +196,19 @@ mod tests {
         };
         let p = probe_host(&dead, Duration::from_millis(500));
         assert!(!p.up, "{p:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn wire_probe_reports_negotiated_protocol() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let w = probe_wire(&server.addr.to_string(), Duration::from_millis(500));
+        assert_eq!(w, Some("bin-v1"));
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(probe_wire(&dead, Duration::from_millis(300)).is_none());
         server.stop();
     }
 

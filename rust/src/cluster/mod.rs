@@ -36,6 +36,8 @@ pub mod pool;
 pub mod ring;
 
 pub use evaluator::ShardedEvaluator;
-pub use health::{probe_host, query_host_stats, HealthMonitor, HostProbe, HostServeStats};
+pub use health::{
+    probe_host, probe_wire, query_host_stats, HealthMonitor, HostProbe, HostServeStats,
+};
 pub use pool::{HostPool, HostSnapshot, HostState};
 pub use ring::HashRing;

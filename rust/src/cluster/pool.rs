@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::service::Client;
+use crate::service::{Client, Wire};
 
 /// Socket read/write timeout for every cluster connection: a stalled
 /// host must surface as a transport failure (and fail over) rather
@@ -77,22 +77,37 @@ pub struct HostPool {
     conns: Vec<Vec<Client>>,
     /// Target sub-pool size, for refilling after a host recovers.
     per_host: usize,
+    /// Wire preference for every connection this pool opens (including
+    /// refills): binary-negotiating by default, per-host fallback to
+    /// JSON against old servers, forced JSON under `--wire json`.
+    wire: Wire,
 }
 
 impl HostPool {
+    /// [`HostPool::connect_wire`] preferring the binary wire protocol
+    /// (each host falls back to JSON independently if it predates the
+    /// hello, so mixed clusters keep working).
+    pub fn connect<S: AsRef<str>>(addrs: &[S], conns_per_host: usize) -> Result<HostPool> {
+        Self::connect_wire(addrs, conns_per_host, Wire::Binary)
+    }
+
     /// Open `conns_per_host` connections to every host. A host with at
     /// least one live connection is up (a transiently refused extra
     /// connection just shrinks its sub-pool); a host with none starts
     /// *down* (the health monitor or a later batch may find it again).
     /// Only a pool with zero reachable hosts is an error.
-    pub fn connect<S: AsRef<str>>(addrs: &[S], conns_per_host: usize) -> Result<HostPool> {
+    pub fn connect_wire<S: AsRef<str>>(
+        addrs: &[S],
+        conns_per_host: usize,
+        wire: Wire,
+    ) -> Result<HostPool> {
         let per_host = conns_per_host.max(1);
         let mut hosts = Vec::with_capacity(addrs.len());
         let mut conns = Vec::with_capacity(addrs.len());
         for addr in addrs {
             let addr = addr.as_ref();
             let pool: Vec<Client> = (0..per_host)
-                .filter_map(|_| Client::connect_with_io_timeout(addr, IO_TIMEOUT).ok())
+                .filter_map(|_| Client::connect_wire(addr, Some(IO_TIMEOUT), wire).ok())
                 .collect();
             if pool.is_empty() {
                 eprintln!("cluster: host {addr} unreachable at connect; starting it as down");
@@ -102,11 +117,16 @@ impl HostPool {
             hosts.push(HostState::new(addr, !pool.is_empty()));
             conns.push(pool);
         }
-        let pool = HostPool { hosts: Arc::new(hosts), conns, per_host };
+        let pool = HostPool { hosts: Arc::new(hosts), conns, per_host, wire };
         if pool.hosts_up() == 0 {
             bail!("no cluster host reachable (tried {} hosts)", addrs.len());
         }
         Ok(pool)
+    }
+
+    /// The wire preference this pool connects with.
+    pub fn wire(&self) -> Wire {
+        self.wire
     }
 
     pub fn len(&self) -> usize {
@@ -158,9 +178,10 @@ impl HostPool {
     /// and falls back to the ephemeral-connection path.
     pub(crate) fn refill(&mut self, i: usize) {
         let addr = self.hosts[i].addr().to_string();
+        let wire = self.wire;
         let conns = &mut self.conns[i];
         while conns.len() < self.per_host {
-            match Client::connect_with_io_timeout(&addr, IO_TIMEOUT) {
+            match Client::connect_wire(&addr, Some(IO_TIMEOUT), wire) {
                 Ok(c) => conns.push(c),
                 Err(_) => break,
             }

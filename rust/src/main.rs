@@ -22,7 +22,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use nahas::accel::{simulate_network, AcceleratorConfig};
 use nahas::bench::Table;
-use nahas::cluster::{probe_host, query_host_stats, ShardedEvaluator};
+use nahas::cluster::{probe_host, probe_wire, query_host_stats, ShardedEvaluator};
 use nahas::costmodel::{self, CostModel};
 use nahas::has::HasSpace;
 use nahas::metrics;
@@ -38,12 +38,12 @@ use nahas::search::store::{
     serve_fingerprint,
 };
 use nahas::search::{
-    builtin_registry, compile_substrates, evolution::EvolutionController, joint_search, run_sweep,
-    scenario_grid, CacheStore, CacheValue, Controller, CostObjective, EvalBroker, Evaluator,
-    MultiTaskEval, ParallelSim, RandomController, RewardCfg, Scenario, SearchCfg, SubstrateParams,
-    SurrogateSim, SweepDriver, Task,
+    builtin_registry, compile_substrates, evolution::EvolutionController, joint_search,
+    run_sweep_resumable, scenario_grid, CacheStore, CacheValue, Controller, CostObjective,
+    EvalBroker, Evaluator, MultiTaskEval, ParallelSim, RandomController, RewardCfg, Scenario,
+    SearchCfg, SubstrateParams, SurrogateSim, SweepCheckpoint, SweepDriver, Task,
 };
-use nahas::service::{ServeCache, Server, ServerOpts, ServiceEvaluator};
+use nahas::service::{ServeCache, Server, ServerOpts, ServiceEvaluator, Wire};
 use nahas::trainer::ProxyTrainer;
 use nahas::util::Rng;
 
@@ -153,6 +153,21 @@ fn hosts_arg(raw: &str) -> Result<Vec<(String, f64)>> {
     Ok(hosts)
 }
 
+/// `--wire json|binary`: wire protocol preference for the remote
+/// tiers. `binary` (the default) sends a versioned hello at connect
+/// and upgrades to the length-prefixed binary frame protocol when the
+/// server acks it, falling back per host to the JSON line protocol
+/// against servers that predate the hello; `json` forces the line
+/// protocol everywhere. Results are bit-identical either way — the
+/// codec only changes how the same numbers travel.
+fn wire_arg(flags: &Flags) -> Result<Wire> {
+    match flags.get("wire").unwrap_or("binary") {
+        "binary" | "bin" => Ok(Wire::Binary),
+        "json" => Ok(Wire::Json),
+        other => bail!("unknown wire protocol '{other}' (json|binary)"),
+    }
+}
+
 /// `--cache-dir DIR`: open (or create) the persistent cross-run
 /// evaluation cache for this run's evaluation context. One file per
 /// (space, task, seed) fingerprint, so differently-configured runs
@@ -234,6 +249,9 @@ fn evaluator_arg(
     if kind != "cluster" && flags.get("hosts").is_some() {
         bail!("--hosts is only used by the cluster tier; drop it or pass --evaluator cluster");
     }
+    if kind != "service" && kind != "cluster" && flags.get("wire").is_some() {
+        bail!("--wire only applies to the service and cluster tiers");
+    }
     let backend: Box<dyn Evaluator + Send> = match kind {
         "local" => {
             let mut ev = SurrogateSim::new(space, seed);
@@ -254,7 +272,8 @@ fn evaluator_arg(
                 .get("remote")
                 .ok_or_else(|| anyhow!("--evaluator service requires --remote ADDR"))?;
             let conns = workers.min(batch.max(1));
-            let mut ev = ServiceEvaluator::connect(addr, space.id, seed, conns)?;
+            let mut ev =
+                ServiceEvaluator::connect_wire(addr, space.id, seed, conns, wire_arg(flags)?)?;
             if seg {
                 ev = ev.segmentation();
             }
@@ -268,8 +287,10 @@ fn evaluator_arg(
             // Split the worker budget over the pool, but keep at least
             // one connection per host and never more than the batch.
             let per_host = (workers / hosts.len()).clamp(1, batch.max(1));
-            let mut ev = ShardedEvaluator::connect_weighted(&hosts, space.id, seed, per_host)?
-                .with_health_probes(std::time::Duration::from_millis(500));
+            let wire = wire_arg(flags)?;
+            let mut ev =
+                ShardedEvaluator::connect_weighted_wire(&hosts, space.id, seed, per_host, wire)?
+                    .with_health_probes(std::time::Duration::from_millis(500));
             if seg {
                 ev = ev.segmentation();
             }
@@ -457,6 +478,7 @@ fn print_usage() {
          \x20              [--cache-dir DIR  persist evaluations across runs (warm start)]\n\
          \x20              [--broker-inflight N  concurrent session batches (1 = serial)]\n\
          \x20              [--dispatch-chunk N  keys per backend dispatch (streaming)]\n\
+         \x20              [--wire json|binary  remote-tier wire protocol (default binary)]\n\
          \x20 sweep        [--targets 0.3,0.5,0.7 --objectives latency,energy,area]\n\
          \x20              [--drivers joint,phase --samples 500 --batch 16 --seed S]\n\
          \x20              [--scenario NAME[,NAME..]  run registered substrates instead\n\
@@ -467,6 +489,9 @@ fn print_usage() {
          \x20              [--cache-dir DIR  warm-start repeated sweeps from disk]\n\
          \x20              [--broker-inflight N  overlap scenario batches on the backend]\n\
          \x20              [--dispatch-chunk N  keys per backend dispatch (streaming)]\n\
+         \x20              [--checkpoint DIR  resumable sweep: completed scenarios\n\
+         \x20              \x20survive a kill and replay bit-identically on re-run]\n\
+         \x20              [--sweep-threads N  concurrent scenarios (default: all)]\n\
          \x20              runs all scenarios concurrently over one shared broker\n\
          \x20 scenarios    list registered scenario substrates (for sweep --scenario)\n\
          \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
@@ -755,7 +780,48 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
         scenarios.len(),
         samples
     );
-    let out = run_sweep(&broker, &scenarios);
+    // `--checkpoint DIR`: resumable sweeps. Completed scenarios are
+    // appended to DIR/sweep.ckpt as they finish; a re-run of the same
+    // sweep (same eval fingerprint + per-scenario config digest)
+    // replays them bit-identically instead of re-evaluating.
+    let mut ckpt = match flags.get("checkpoint") {
+        Some(dir) => {
+            let kinds = scenarios[0].tasks_key();
+            let fp = if kinds.is_empty() {
+                let task =
+                    if flags.bool("seg") { Task::Segmentation } else { Task::Classification };
+                eval_fingerprint(space_id, task, seed)
+            } else {
+                eval_fingerprint_tasks(space_id, &kinds, seed)
+            };
+            let c = SweepCheckpoint::open(Path::new(dir), &fp)?;
+            match c.discarded() {
+                Some(why) => println!(
+                    "sweep checkpoint {}: stale contents discarded ({why}); cold start",
+                    c.path().display()
+                ),
+                None => println!(
+                    "sweep checkpoint {}: {} completed scenarios loaded",
+                    c.path().display(),
+                    c.loaded_len()
+                ),
+            }
+            Some(c)
+        }
+        None => None,
+    };
+    let threads = flags.usize("sweep-threads", scenarios.len())?.max(1);
+    let out = run_sweep_resumable(&broker, &scenarios, ckpt.as_mut(), threads);
+    if let Some(c) = &ckpt {
+        // Resumed scenarios replay from the checkpoint file and never
+        // reach the broker, so their re-evaluation count is zero by
+        // construction (the resume CI smoke greps this line).
+        println!(
+            "sweep checkpoint: resumed {} scenarios, 0 re-evaluations ({} recorded this run)",
+            c.resumed(),
+            c.recorded()
+        );
+    }
 
     let mut table = Table::new(&[
         "Scenario", "Best acc(%)", "Latency(ms)", "Energy(mJ)", "Feasible", "Evals", "Hits",
@@ -1000,12 +1066,15 @@ fn cmd_cluster_status(flags: &Flags) -> Result<()> {
     let hosts = hosts_arg(raw)?;
     let timeout = std::time::Duration::from_millis(flags.u64("timeout-ms", 1000)?);
     let mut table = Table::new(&[
-        "Host", "Weight", "Status", "RTT(ms)", "Served", "SimHits", "Cache", "Detail",
+        "Host", "Weight", "Status", "Wire", "RTT(ms)", "Served", "SimHits", "Cache", "Detail",
     ]);
     let mut up = 0;
     for (host, weight) in &hosts {
         let p = probe_host(host, timeout);
         up += p.up as usize;
+        // Negotiated wire protocol: "bin-v1" when the host acks the
+        // binary hello, "json" when it predates the frame protocol.
+        let wire = if p.up { probe_wire(host, timeout).unwrap_or("-") } else { "-" };
         // Hit counts and resident size of the server-side result
         // cache, when the host answers the stats protocol.
         let stats = if p.up { query_host_stats(host, timeout) } else { None };
@@ -1022,6 +1091,7 @@ fn cmd_cluster_status(flags: &Flags) -> Result<()> {
             p.addr,
             format!("{weight}"),
             if p.up { "up" } else { "DOWN" }.to_string(),
+            wire.to_string(),
             format!("{:.2}", p.rtt_ms),
             served,
             hits,

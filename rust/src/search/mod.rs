@@ -60,8 +60,8 @@ pub use scenario::{
 };
 pub use store::{CacheStore, CacheValue};
 pub use sweep::{
-    run_scenario, run_sweep, scenario_grid, ControllerKind, Scenario, ScenarioOutcome,
-    SweepDriver, SweepOutcome,
+    run_scenario, run_sweep, run_sweep_resumable, scenario_grid, ControllerKind, Scenario,
+    ScenarioOutcome, SweepCheckpoint, SweepDriver, SweepOutcome,
 };
 
 use crate::util::Rng;

@@ -36,20 +36,32 @@
 //! format serves both the broker's `EvalResult` entries and the
 //! `nahas serve` server-side cache of serialized response lines.
 //!
-//! File format (one record per line, `\n`-terminated):
+//! On-disk formats. New files are written as `nahas-cache v2`: a
+//! one-line text header followed by binary segment blocks from
+//! [`crate::util::codec`]:
 //!
 //! ```text
-//! nahas-cache v1 eval/s2-efficientnet/classification/seed7/<sim fp>
-//! 3,0,1,4|1 3fe6b851eb851eb8 3fd0624dd2f1a9fc 3fe0000000000000 4053c00000000000
+//! nahas-cache v2 eval/s2-efficientnet/classification/seed7/<sim fp>\n
+//! [0xC5][flags][u32 payload_len][u32 entry_count][u64 fnv1a][payload]
 //! ...
 //! ```
 //!
-//! Left of `|`: the comma-separated joint key. Right: the encoded
-//! value (for [`EvalResult`]: valid flag + the four metric f64s as hex
-//! bit patterns). Append-only means two runs can extend the same file
-//! sequentially; concurrent writers should use separate files (the
-//! CLI derives one file per evaluation fingerprint).
+//! Each segment payload is a run of entries — `put_usize_slice` joint
+//! key + [`CacheValue::encode_bin`] value. A warm open compacts the
+//! whole inventory (duplicates deduped, last write wins) into
+//! block-compressed *cold* segments of up to [`COLD_SEGMENT_ENTRIES`]
+//! entries and renames it into place atomically; fresh appends then
+//! land as uncompressed single-entry segments, flushed per entry, so a
+//! crash tears at most the final block. Segments are read with
+//! [`crate::util::codec::ReadPolicy::Strict`]: any defect discards the
+//! whole file — a cold start is always correct, a salvaged half-cache
+//! may not be.
+//!
+//! The previous text format (`nahas-cache v1`, one `key|value` record
+//! per `\n`-terminated line with f64s as hex bit patterns) still
+//! loads bit-identically; the first warm open migrates the file to v2.
 
+use std::collections::HashMap;
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
@@ -58,10 +70,21 @@ use anyhow::{Context, Result};
 
 use crate::nas::NasSpaceId;
 use crate::search::evaluator::{EvalResult, Task};
+use crate::util::codec::{self, ByteReader, ReadPolicy};
 
-/// On-disk format tag; bump on any incompatible layout change so old
-/// files are rejected instead of misparsed.
+/// Legacy text format tag (one `key|value` record per line). Files
+/// carrying it still load; new files are written as [`STORE_FORMAT_V2`].
 pub const STORE_FORMAT: &str = "nahas-cache v1";
+
+/// Current on-disk format tag: text header line + binary segment
+/// blocks. Bump on any incompatible layout change so old files are
+/// rejected instead of misparsed.
+pub const STORE_FORMAT_V2: &str = "nahas-cache v2";
+
+/// Entries per block-compressed cold segment written by a warm-open
+/// compaction. Bounds both the compression window reset and the
+/// per-segment allocation a reader makes.
+pub const COLD_SEGMENT_ENTRIES: usize = 1024;
 
 /// Fingerprint of the evaluation semantics baked into this binary.
 /// Bump whenever the simulator, surrogate accuracy, or decision
@@ -69,11 +92,18 @@ pub const STORE_FORMAT: &str = "nahas-cache v1";
 /// the old semantics must be invalidated, not replayed.
 pub const SIM_FINGERPRINT: &str = "sim-v1";
 
-/// A value the store can persist: encoded to a single `\n`-free line
-/// and decoded back bit-exactly.
+/// A value the store can persist bit-exactly, in both codecs: the
+/// text pair (`encode`/`decode`) reads legacy v1 files, the binary
+/// pair (`encode_bin`/`decode_bin`) is what v2 segments store.
 pub trait CacheValue: Clone {
+    /// Encode to a single `\n`-free line (legacy v1 record format).
     fn encode(&self) -> String;
     fn decode(s: &str) -> Option<Self>;
+    /// Append the binary encoding to `out` (v2 segment payloads).
+    fn encode_bin(&self, out: &mut Vec<u8>);
+    /// Inverse of [`CacheValue::encode_bin`]; `None` on malformed or
+    /// truncated bytes, never a panic.
+    fn decode_bin(r: &mut ByteReader) -> Option<Self>;
 }
 
 impl CacheValue for EvalResult {
@@ -113,18 +143,52 @@ impl CacheValue for EvalResult {
             valid,
         })
     }
+
+    /// Valid flag byte + the four metrics as raw little-endian bit
+    /// patterns — the binary twin of the hex text encoding.
+    fn encode_bin(&self, out: &mut Vec<u8>) {
+        out.push(self.valid as u8);
+        codec::put_f64_bits(out, self.acc);
+        codec::put_f64_bits(out, self.latency_ms);
+        codec::put_f64_bits(out, self.energy_mj);
+        codec::put_f64_bits(out, self.area_mm2);
+    }
+
+    fn decode_bin(r: &mut ByteReader) -> Option<Self> {
+        let valid = match r.u8()? {
+            0 => false,
+            1 => true,
+            _ => return None,
+        };
+        Some(EvalResult {
+            acc: r.f64_bits()?,
+            latency_ms: r.f64_bits()?,
+            energy_mj: r.f64_bits()?,
+            area_mm2: r.f64_bits()?,
+            valid,
+        })
+    }
 }
 
 impl CacheValue for String {
-    /// Serialized single-line payloads (the `nahas serve` response
-    /// cache). Values containing a newline are unrepresentable and are
-    /// skipped at append time.
+    /// Serialized payloads (the `nahas serve` response cache). In the
+    /// legacy v1 line format a newline-bearing value was
+    /// unrepresentable and skipped at append time; the v2 binary
+    /// encoding is length-prefixed, so any string round-trips.
     fn encode(&self) -> String {
         self.clone()
     }
 
     fn decode(s: &str) -> Option<Self> {
         Some(s.to_string())
+    }
+
+    fn encode_bin(&self, out: &mut Vec<u8>) {
+        codec::put_str(out, self);
+    }
+
+    fn decode_bin(r: &mut ByteReader) -> Option<Self> {
+        r.str()
     }
 }
 
@@ -202,11 +266,6 @@ pub fn eval_cache_file_tasks(dir: &Path, space: NasSpaceId, tasks: &[Task], seed
     dir.join(format!("evals-{}-{}-seed{}.cache", space_tag(space), task_set_tag(tasks), seed))
 }
 
-fn encode_key(key: &[usize]) -> String {
-    let parts: Vec<String> = key.iter().map(|k| k.to_string()).collect();
-    parts.join(",")
-}
-
 fn decode_key(s: &str) -> Option<Vec<usize>> {
     if s.is_empty() {
         return Some(Vec::new());
@@ -271,17 +330,12 @@ impl<V: CacheValue> CacheStore<V> {
                     .with_context(|| format!("creating cache dir {}", parent.display()))?;
             }
         }
-        let header = format!("{STORE_FORMAT} {fingerprint}");
         let mut loaded = Vec::new();
         let mut discarded = None;
         let mut preserve = false;
-        match fs::read_to_string(&path) {
+        match fs::read(&path) {
             // No previous file: a genuinely fresh start.
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
-            // Non-UTF-8 bytes: the file is corrupt; restart it.
-            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
-                discarded = Some(format!("unreadable: {e}"));
-            }
             // Any other read failure (permissions racing, flaky
             // network filesystem) may be transient and the file may be
             // perfectly healthy: leave it untouched and run with
@@ -291,28 +345,23 @@ impl<V: CacheValue> CacheStore<V> {
                 discarded = Some(format!("unreadable ({e}); file kept, persistence off"));
                 preserve = true;
             }
-            Ok(text) => match Self::parse(&text, &header) {
+            Ok(bytes) => match Self::parse_bytes(&bytes, fingerprint) {
                 Ok(entries) => loaded = entries,
                 Err(why) => discarded = Some(why),
             },
         }
-        // A clean load appends to the existing file; anything else
-        // (fresh, stale, corrupt) restarts it with just the header —
-        // atomically, via a temp file renamed into place, so a
-        // concurrent writer still holding the old file keeps appending
-        // to the orphaned inode instead of splicing bytes into ours.
-        let warm = discarded.is_none() && !loaded.is_empty();
-        if !warm && !preserve {
-            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("evals.cache");
-            let tmp = path.with_file_name(format!("{name}.tmp{}", std::process::id()));
-            let mut fresh = File::create(&tmp)
-                .with_context(|| format!("creating cache file {}", tmp.display()))?;
-            writeln!(fresh, "{header}")
-                .with_context(|| format!("writing cache header to {}", tmp.display()))?;
-            fs::rename(&tmp, &path)
-                .with_context(|| format!("installing cache file {}", path.display()))?;
+        // Every open rewrites the file as v2 atomically (temp file
+        // renamed into place, so a concurrent writer still holding the
+        // old file keeps appending to the orphaned inode instead of
+        // splicing bytes into ours). A warm open compacts the loaded
+        // inventory — duplicates deduped last-wins — into compressed
+        // cold segments (this is also what migrates a v1 file);
+        // anything else (fresh, stale, corrupt) restarts with just the
+        // header.
+        if !preserve {
+            Self::write_compacted(&path, fingerprint, &loaded)?;
         }
-        // Both paths end on an O_APPEND handle: every flushed line
+        // Both paths end on an O_APPEND handle: every flushed segment
         // lands at the file's current end, whatever other handles did.
         let file = OpenOptions::new()
             .create(true)
@@ -323,26 +372,76 @@ impl<V: CacheValue> CacheStore<V> {
         Ok(CacheStore { path, writer, loaded, discarded, appended: 0, write_failed: preserve })
     }
 
-    /// Parse a whole previous file against the expected header. Any
-    /// defect — wrong header, stale fingerprint, malformed or
-    /// truncated entry — rejects everything: a cold start is always
-    /// correct, a salvaged half-file may not be.
-    fn parse(text: &str, header: &str) -> Result<Vec<(Vec<usize>, V)>, String> {
-        let mut lines = text.lines();
-        match lines.next() {
-            None => return Err("empty file".to_string()),
-            Some(h) if h != header => {
-                return Err(format!("fingerprint mismatch (found '{h}')"));
-            }
-            Some(_) => {}
+    /// Parse a whole previous file against the expected fingerprint,
+    /// dispatching on the header line: `nahas-cache v2` bodies are
+    /// binary segment streams, `nahas-cache v1` bodies the legacy text
+    /// records. Any defect — wrong header, stale fingerprint,
+    /// malformed or truncated entry — rejects everything: a cold start
+    /// is always correct, a salvaged half-file may not be.
+    fn parse_bytes(bytes: &[u8], fingerprint: &str) -> Result<Vec<(Vec<usize>, V)>, String> {
+        if bytes.is_empty() {
+            return Err("empty file".to_string());
         }
+        let nl = match bytes.iter().position(|&b| b == b'\n') {
+            Some(i) => i,
+            None => return Err("truncated header line".to_string()),
+        };
+        let head = match std::str::from_utf8(&bytes[..nl]) {
+            Ok(h) => h,
+            Err(_) => return Err("unreadable: non-UTF-8 header line".to_string()),
+        };
+        let body = &bytes[nl + 1..];
+        if head == format!("{STORE_FORMAT_V2} {fingerprint}") {
+            return Self::parse_v2(body);
+        }
+        if head == format!("{STORE_FORMAT} {fingerprint}") {
+            let text = match std::str::from_utf8(bytes) {
+                Ok(t) => t,
+                Err(_) => return Err("unreadable: non-UTF-8 bytes in a v1 file".to_string()),
+            };
+            return Self::parse_v1(text);
+        }
+        Err(format!("fingerprint mismatch (found '{head}')"))
+    }
+
+    /// Decode a v2 segment stream (strictly: one bad segment rejects
+    /// the file) into entries, in write order.
+    fn parse_v2(body: &[u8]) -> Result<Vec<(Vec<usize>, V)>, String> {
+        let segs = codec::read_segments(body, ReadPolicy::Strict)?;
+        let mut out = Vec::new();
+        for seg in &segs {
+            let mut r = ByteReader::new(&seg.payload);
+            for i in 0..seg.entries {
+                let entry = r.usize_slice().zip(V::decode_bin(&mut r));
+                match entry {
+                    Some(e) => out.push(e),
+                    None => {
+                        return Err(format!(
+                            "corrupt entry {i} in segment at offset {}",
+                            seg.pos.offset
+                        ));
+                    }
+                }
+            }
+            if !r.is_empty() {
+                return Err(format!(
+                    "trailing bytes in segment at offset {}",
+                    seg.pos.offset
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode a legacy v1 text body (header already verified).
+    fn parse_v1(text: &str) -> Result<Vec<(Vec<usize>, V)>, String> {
         // A well-formed file ends in '\n'; a partial trailing line
         // (killed mid-append) shows up here as a parse failure.
         if !text.ends_with('\n') {
             return Err("truncated final line".to_string());
         }
         let mut out = Vec::new();
-        for (i, line) in lines.enumerate() {
+        for (i, line) in text.lines().skip(1).enumerate() {
             if line.is_empty() {
                 continue;
             }
@@ -354,6 +453,43 @@ impl<V: CacheValue> CacheStore<V> {
             }
         }
         Ok(out)
+    }
+
+    /// Atomically (re)write the file as v2: header line + the entries
+    /// deduped last-wins and packed into block-compressed cold
+    /// segments of up to [`COLD_SEGMENT_ENTRIES`] entries each.
+    fn write_compacted(path: &Path, fingerprint: &str, entries: &[(Vec<usize>, V)]) -> Result<()> {
+        let mut compacted: Vec<(Vec<usize>, V)> = Vec::new();
+        let mut index: HashMap<Vec<usize>, usize> = HashMap::new();
+        for (key, value) in entries {
+            match index.get(key) {
+                // Later entries are newer: overwrite in place, keeping
+                // first-occurrence order so the compacted file is a
+                // deterministic function of the input.
+                Some(&at) => compacted[at].1 = value.clone(),
+                None => {
+                    index.insert(key.clone(), compacted.len());
+                    compacted.push((key.clone(), value.clone()));
+                }
+            }
+        }
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(format!("{STORE_FORMAT_V2} {fingerprint}\n").as_bytes());
+        for chunk in compacted.chunks(COLD_SEGMENT_ENTRIES) {
+            let mut payload = Vec::new();
+            for (key, value) in chunk {
+                codec::put_usize_slice(&mut payload, key);
+                value.encode_bin(&mut payload);
+            }
+            codec::write_segment(&mut bytes, &payload, chunk.len(), true);
+        }
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("evals.cache");
+        let tmp = path.with_file_name(format!("{name}.tmp{}", std::process::id()));
+        fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing compacted cache file {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("installing cache file {}", path.display()))?;
+        Ok(())
     }
 
     /// Entries read at open, in file order (later entries are newer).
@@ -382,25 +518,27 @@ impl<V: CacheValue> CacheStore<V> {
         &self.path
     }
 
-    /// Append one entry. Failures (and unrepresentable values) are
-    /// swallowed after a warning: persistence is an accelerator, never
-    /// a reason to fail an evaluation.
+    /// Append one entry. Failures are swallowed after a warning:
+    /// persistence is an accelerator, never a reason to fail an
+    /// evaluation.
     ///
-    /// Each entry is flushed immediately, so a line reaches the OS as
-    /// one small `O_APPEND` write: a crash can tear at most the final
-    /// line, and a second writer on the same file (operator error, but
-    /// survivable) interleaves whole lines rather than fragments. The
-    /// cost — one syscall per *fresh* evaluation — is noise next to
-    /// the evaluation itself.
+    /// Each entry is written as one uncompressed single-entry segment
+    /// and flushed immediately, so it reaches the OS as one small
+    /// `O_APPEND` write: a crash can tear at most the final block, and
+    /// a second writer on the same file (operator error, but
+    /// survivable) interleaves whole segments rather than fragments.
+    /// The cost — one syscall per *fresh* evaluation — is noise next
+    /// to the evaluation itself.
     pub fn append(&mut self, key: &[usize], value: &V) {
         if self.write_failed {
             return;
         }
-        let encoded = value.encode();
-        if encoded.contains('\n') {
-            return; // Unrepresentable in the line format; skip.
-        }
-        if writeln!(self.writer, "{}|{}", encode_key(key), encoded).is_err() {
+        let mut payload = Vec::new();
+        codec::put_usize_slice(&mut payload, key);
+        value.encode_bin(&mut payload);
+        let mut block = Vec::new();
+        codec::write_segment(&mut block, &payload, 1, false);
+        if self.writer.write_all(&block).is_err() {
             eprintln!(
                 "cache store {}: append failed; persistence disabled for this run",
                 self.path.display()
@@ -520,11 +658,16 @@ mod tests {
             let mut store: CacheStore = CacheStore::open(&path, fp).unwrap();
             store.append(&[3], &result(0.6, 0.2, true));
         }
-        // Raw invalid-UTF-8 corruption: read_to_string cannot even
-        // read it; that must surface as a discard, not a fresh file.
+        // Garbage bytes after the last segment: the strict segment
+        // reader must reject the whole file, not salvage a prefix.
         let mut bytes = fs::read(&path).unwrap();
         bytes.extend_from_slice(&[0xFF, 0xFE, 0xFD]);
         fs::write(&path, &bytes).unwrap();
+        let store: CacheStore = CacheStore::open(&path, fp).unwrap();
+        assert!(store.discarded().unwrap().contains("bad segment magic"));
+        assert_eq!(store.loaded_len(), 0);
+        // A file whose header line itself is not UTF-8 is unreadable.
+        fs::write(&path, [0xFF, 0xFE, 0xFD, b'\n', 0x00]).unwrap();
         let store: CacheStore = CacheStore::open(&path, fp).unwrap();
         assert!(store.discarded().unwrap().contains("unreadable"));
         assert_eq!(store.loaded_len(), 0);
@@ -540,13 +683,96 @@ mod tests {
         {
             let mut store: CacheStore<String> = CacheStore::open(&path, &fp).unwrap();
             store.append(&[1, 0, 7, 3], &resp);
-            // A newline-bearing value is unrepresentable: skipped.
-            store.append(&[5], &"bad\nvalue".to_string());
-            assert_eq!(store.appended(), 1);
+            // Length-prefixed binary values: even a newline-bearing
+            // string (unrepresentable in the v1 line format) persists.
+            store.append(&[5], &"two\nlines".to_string());
+            assert_eq!(store.appended(), 2);
         }
         let mut store: CacheStore<String> = CacheStore::open(&path, &fp).unwrap();
         let loaded = store.take_loaded();
-        assert_eq!(loaded, vec![(vec![1, 0, 7, 3], resp)]);
+        assert_eq!(loaded, vec![(vec![1, 0, 7, 3], resp), (vec![5], "two\nlines".to_string())]);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_text_files_load_and_migrate_to_v2() {
+        let path = tmp("v1-migrate.cache");
+        let _ = fs::remove_file(&path);
+        let fp = "eval/v1-fp";
+        // A legacy v1 file, written byte-for-byte as PR 4 did.
+        let r1 = result(0.75, 0.4, true);
+        let r2 = result(f64::NAN, f64::INFINITY, false);
+        let v1 = format!("{STORE_FORMAT} {fp}\n1,2,3|{}\n4|{}\n", r1.encode(), r2.encode());
+        fs::write(&path, v1).unwrap();
+        let mut store: CacheStore = CacheStore::open(&path, fp).unwrap();
+        assert!(store.discarded().is_none(), "{:?}", store.discarded());
+        let loaded = store.take_loaded();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, vec![1, 2, 3]);
+        assert_eq!(loaded[0].1.acc.to_bits(), r1.acc.to_bits());
+        assert!(loaded[1].1.acc.is_nan());
+        assert_eq!(loaded[1].1.latency_ms.to_bits(), f64::INFINITY.to_bits());
+        drop(store);
+        // The warm open migrated the file: v2 header, same entries.
+        let bytes = fs::read(&path).unwrap();
+        assert!(bytes.starts_with(format!("{STORE_FORMAT_V2} {fp}\n").as_bytes()));
+        let mut again: CacheStore = CacheStore::open(&path, fp).unwrap();
+        assert!(again.discarded().is_none());
+        let reloaded = again.take_loaded();
+        assert_eq!(reloaded.len(), 2);
+        assert_eq!(reloaded[0].1.acc.to_bits(), r1.acc.to_bits());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn warm_compaction_dedups_last_wins() {
+        let path = tmp("dedup.cache");
+        let _ = fs::remove_file(&path);
+        let fp = "eval/dedup-fp";
+        {
+            let mut store: CacheStore = CacheStore::open(&path, fp).unwrap();
+            store.append(&[1, 1], &result(0.1, 0.1, true));
+            store.append(&[2, 2], &result(0.2, 0.2, true));
+            store.append(&[1, 1], &result(0.9, 0.9, true)); // newer
+        }
+        // First warm open still sees the raw append order...
+        let mut store: CacheStore = CacheStore::open(&path, fp).unwrap();
+        assert_eq!(store.loaded_len(), 3);
+        store.take_loaded();
+        drop(store);
+        // ...and compacts on the way: the next open loads the deduped
+        // inventory with the newest value for the duplicated key.
+        let mut store: CacheStore = CacheStore::open(&path, fp).unwrap();
+        let loaded = store.take_loaded();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, vec![1, 1]);
+        assert_eq!(loaded[0].1.acc.to_bits(), 0.9f64.to_bits());
+        assert_eq!(loaded[1].0, vec![2, 2]);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cold_segments_compress_a_large_inventory() {
+        let path = tmp("compress.cache");
+        let _ = fs::remove_file(&path);
+        let fp = "eval/compress-fp";
+        {
+            let mut store: CacheStore = CacheStore::open(&path, fp).unwrap();
+            for i in 0..COLD_SEGMENT_ENTRIES + 100 {
+                store.append(&[i, i % 7, 3], &result(0.5, 0.25, true));
+            }
+        }
+        let appended_size = fs::metadata(&path).unwrap().len();
+        // Warm open compacts >1 segment's worth into compressed blocks.
+        let mut store: CacheStore = CacheStore::open(&path, fp).unwrap();
+        assert_eq!(store.loaded_len(), COLD_SEGMENT_ENTRIES + 100);
+        store.take_loaded();
+        drop(store);
+        let compacted_size = fs::metadata(&path).unwrap().len();
+        assert!(
+            compacted_size < appended_size / 2,
+            "compaction did not shrink the file: {compacted_size} !< {appended_size}/2"
+        );
         let _ = fs::remove_file(&path);
     }
 

@@ -36,24 +36,43 @@
 //!   (`tests/cache_persistence.rs` pins a fully-warm re-sweep at zero
 //!   backend evaluations).
 //!
+//! Long sweeps additionally survive being killed: a
+//! [`SweepCheckpoint`] persists every completed scenario's full
+//! outcome — history, frontiers, stats — as one checksummed segment
+//! block ([`crate::util::codec`]), keyed by the evaluation fingerprint
+//! and a per-scenario config digest. A rerun pointed at the same
+//! checkpoint directory ([`run_sweep_resumable`], CLI `--checkpoint
+//! DIR`) replays the recorded outcomes bit-for-bit and only runs the
+//! scenarios the killed run never finished: zero re-evaluations of
+//! completed scenarios, by construction rather than by cache warmth.
+//!
 //! CLI: `nahas sweep --targets 0.3,0.5,0.7 --objectives latency,energy
 //! --drivers joint,phase --evaluator parallel|cluster ...`.
 
+use std::collections::{HashMap, VecDeque};
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 use std::time::Instant;
+
+use anyhow::{Context, Result};
 
 use crate::has::HasSpace;
 use crate::nas::{NasSpace, NasSpaceId};
 use crate::pareto::{frontier, frontier_nd, union_frontier, MultiPoint, Point};
 use crate::search::broker::EvalBroker;
-use crate::search::evaluator::{EvalStats, Task};
+use crate::search::evaluator::{EvalResult, EvalStats, HostEvalStats, Task};
 use crate::search::evolution::EvolutionController;
-use crate::search::joint::{joint_search, JointLayout, SearchCfg, SearchOutcome};
+use crate::search::joint::{joint_search, JointLayout, Sample, SearchCfg, SearchOutcome};
 use crate::search::phase::phase_search;
 use crate::search::ppo::PpoController;
 use crate::search::reinforce::ReinforceController;
 use crate::search::reward::{CostObjective, RewardCfg};
 use crate::search::scenario::multitask::{multi_task_search, TaskSpec};
+use crate::search::store::CacheValue;
 use crate::search::{Controller, RandomController};
+use crate::util::codec::{self, ByteReader, ReadPolicy};
 
 /// Which search driver a scenario runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -431,6 +450,25 @@ pub fn run_scenario(broker: &EvalBroker, sc: &Scenario) -> ScenarioOutcome {
 /// println!("{} cross-scenario hits", sweep.eval_stats.cross_session_hits);
 /// ```
 pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
+    run_sweep_resumable(broker, scenarios, None, scenarios.len())
+}
+
+/// [`run_sweep`] with checkpointing and a worker cap. Scenarios with a
+/// matching record in `ckpt` (same name, same config digest, same
+/// fingerprint via [`SweepCheckpoint::open`]) are *replayed* from the
+/// checkpoint — their recorded outcomes are returned bit-for-bit with
+/// zero evaluations — and every freshly completed scenario is recorded
+/// (and flushed) the moment it finishes, so a kill at any point loses
+/// at most the scenarios still in flight. `threads` bounds how many
+/// scenarios run concurrently (`run_sweep` uses one thread per
+/// scenario); pending scenarios drain from a shared queue in input
+/// order, and outcomes still come back in input order regardless.
+pub fn run_sweep_resumable(
+    broker: &EvalBroker,
+    scenarios: &[Scenario],
+    mut ckpt: Option<&mut SweepCheckpoint>,
+    threads: usize,
+) -> SweepOutcome {
     let t0 = Instant::now();
     // One broker backend decodes one search space; scenarios from a
     // different space would get silently wrong metrics memoized into
@@ -459,11 +497,52 @@ pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
             sc.name
         );
     }
-    let outcomes: Vec<ScenarioOutcome> = std::thread::scope(|s| {
-        let handles: Vec<_> =
-            scenarios.iter().map(|sc| s.spawn(move || run_scenario(broker, sc))).collect();
-        handles.into_iter().map(|h| h.join().expect("sweep scenario thread panicked")).collect()
+    let mut slots: Vec<Option<ScenarioOutcome>> = Vec::with_capacity(scenarios.len());
+    let mut pending: VecDeque<usize> = VecDeque::new();
+    for (i, sc) in scenarios.iter().enumerate() {
+        match ckpt.as_mut().and_then(|c| c.take(sc)) {
+            Some(out) => slots.push(Some(out)),
+            None => {
+                slots.push(None);
+                pending.push_back(i);
+            }
+        }
+    }
+    let workers = threads.max(1).min(pending.len().max(1));
+    let queue = Mutex::new(pending);
+    let slots = Mutex::new(slots);
+    let sink = Mutex::new(ckpt);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = match queue.lock().unwrap().pop_front() {
+                    Some(i) => i,
+                    None => break,
+                };
+                let out = run_scenario(broker, &scenarios[i]);
+                // Record before publishing: a kill between the two
+                // can only lose the slot, never a checkpoint entry
+                // for an outcome the caller saw.
+                if let Some(c) = sink.lock().unwrap().as_deref_mut() {
+                    c.record(&out);
+                }
+                slots.lock().unwrap()[i] = Some(out);
+            });
+        }
     });
+    let outcomes: Vec<ScenarioOutcome> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every sweep scenario either resumed or ran"))
+        .collect();
+    merge_outcomes(outcomes, t0)
+}
+
+/// Fold per-scenario outcomes (input order) into the sweep-level
+/// unions and merged stats. Pure and deterministic, so a sweep resumed
+/// from a checkpoint merges to bit-identical frontiers.
+fn merge_outcomes(outcomes: Vec<ScenarioOutcome>, t0: Instant) -> SweepOutcome {
     let eval_stats =
         outcomes.iter().fold(EvalStats::default(), |acc, o| acc.merged(&o.eval_stats));
     let mut union = Vec::new();
@@ -506,6 +585,465 @@ pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
         eval_stats,
         elapsed_s: t0.elapsed().as_secs_f64(),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Sweep checkpoints
+// ---------------------------------------------------------------------------
+
+/// On-disk format tag of a sweep checkpoint file; bump on any
+/// incompatible record-layout change.
+pub const SWEEP_CKPT_FORMAT: &str = "nahas-sweep-ckpt v1";
+
+/// A completed scenario's outcome minus the `Scenario` itself (which
+/// [`SweepCheckpoint::take`] reattaches from the live sweep after the
+/// config digest matched).
+struct StoredOutcome {
+    search: SearchOutcome,
+    selected_hw: Option<Vec<usize>>,
+    eval_stats: EvalStats,
+    frontier: Vec<Point>,
+    task_frontiers: Vec<(String, Vec<Point>)>,
+    frontier_nd: Vec<MultiPoint>,
+    elapsed_s: f64,
+}
+
+impl StoredOutcome {
+    fn into_outcome(self, scenario: Scenario) -> ScenarioOutcome {
+        ScenarioOutcome {
+            scenario,
+            search: self.search,
+            selected_hw: self.selected_hw,
+            eval_stats: self.eval_stats,
+            frontier: self.frontier,
+            task_frontiers: self.task_frontiers,
+            frontier_nd: self.frontier_nd,
+            elapsed_s: self.elapsed_s,
+        }
+    }
+}
+
+/// Everything result-visible about a scenario's configuration, as one
+/// comparable string. A record only replays when this matches exactly:
+/// rename a scenario, change its samples, reward, controller, tasks or
+/// frontier axes, and it re-runs instead of replaying a stale outcome.
+fn config_digest(sc: &Scenario) -> String {
+    format!("{sc:?}")
+}
+
+/// Loaded checkpoint records: scenario name -> (config digest, outcome).
+type CkptRecords = HashMap<String, (String, StoredOutcome)>;
+
+/// Persisted sweep progress: one checksummed, block-compressed segment
+/// per completed scenario under a text header carrying the evaluation
+/// fingerprint. Records are appended and flushed the moment a scenario
+/// finishes, and read back with
+/// [`ReadPolicy::Salvage`] — a kill mid-write
+/// loses at most the in-flight record, never the scenarios already
+/// completed. A stale fingerprint or corrupt record discards the whole
+/// checkpoint (cold start, with the reason reported), mirroring the
+/// eval-cache discipline.
+///
+/// The checkpoint stores *outcomes*, not inputs: a resumed scenario is
+/// the recorded [`ScenarioOutcome`] replayed bit-for-bit, so
+/// resumption can never diverge from what the killed run computed.
+pub struct SweepCheckpoint {
+    path: PathBuf,
+    writer: BufWriter<File>,
+    loaded: CkptRecords,
+    discarded: Option<String>,
+    resumed: usize,
+    recorded: usize,
+    write_failed: bool,
+}
+
+impl SweepCheckpoint {
+    /// Open (or create) `DIR/sweep.ckpt` for the given evaluation
+    /// fingerprint (the eval-cache fingerprint of the sweep's backend:
+    /// [`crate::search::store::eval_fingerprint_tasks`]). Existing
+    /// records load only under a matching fingerprint; otherwise the
+    /// file restarts empty and [`SweepCheckpoint::discarded`] says why.
+    pub fn open(dir: impl Into<PathBuf>, fingerprint: &str) -> Result<SweepCheckpoint> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let path = dir.join("sweep.ckpt");
+        let header = format!("{SWEEP_CKPT_FORMAT} {fingerprint}");
+        let mut loaded = HashMap::new();
+        let mut discarded = None;
+        let mut preserve = false;
+        match fs::read(&path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            // Possibly-transient read failure: keep the file (it may
+            // hold real progress we merely failed to read) and run
+            // with checkpointing disabled.
+            Err(e) => {
+                discarded = Some(format!("unreadable ({e}); file kept, checkpointing off"));
+                preserve = true;
+            }
+            Ok(bytes) => match Self::parse(&bytes, &header) {
+                Ok(records) => loaded = records,
+                Err(why) => discarded = Some(why),
+            },
+        }
+        let warm = discarded.is_none() && !loaded.is_empty();
+        if !warm && !preserve {
+            // Restart atomically (temp file renamed into place), same
+            // discipline as the cache store.
+            let tmp = path.with_file_name(format!("sweep.ckpt.tmp{}", std::process::id()));
+            fs::write(&tmp, format!("{header}\n"))
+                .with_context(|| format!("writing checkpoint header to {}", tmp.display()))?;
+            fs::rename(&tmp, &path)
+                .with_context(|| format!("installing checkpoint file {}", path.display()))?;
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening checkpoint file {}", path.display()))?;
+        Ok(SweepCheckpoint {
+            path,
+            writer: BufWriter::new(file),
+            loaded,
+            discarded,
+            resumed: 0,
+            recorded: 0,
+            write_failed: preserve,
+        })
+    }
+
+    fn parse(bytes: &[u8], header: &str) -> Result<CkptRecords, String> {
+        if bytes.is_empty() {
+            return Err("empty file".to_string());
+        }
+        let nl = match bytes.iter().position(|&b| b == b'\n') {
+            Some(i) => i,
+            None => return Err("truncated header line".to_string()),
+        };
+        match std::str::from_utf8(&bytes[..nl]) {
+            Ok(h) if h == header => {}
+            Ok(h) => return Err(format!("fingerprint mismatch (found '{h}')")),
+            Err(_) => return Err("unreadable: non-UTF-8 header line".to_string()),
+        }
+        // Salvage: a torn trailing segment (killed mid-record) drops
+        // silently; every segment that survives has a verified
+        // checksum, so a record that then fails to *decode* is format
+        // skew, not damage — reject the whole file.
+        let segs = codec::read_segments(&bytes[nl + 1..], ReadPolicy::Salvage)?;
+        let mut out = HashMap::new();
+        for seg in &segs {
+            match decode_record(&seg.payload) {
+                // Later records win: a re-run scenario (config digest
+                // changed, then changed back) appends a fresh record.
+                Some((name, digest, stored)) => {
+                    out.insert(name, (digest, stored));
+                }
+                None => return Err("corrupt checkpoint record".to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    /// The checkpoint file this instance reads and appends.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Why pre-existing contents were discarded at open, if they were.
+    pub fn discarded(&self) -> Option<&str> {
+        self.discarded.as_deref()
+    }
+
+    /// Records loaded at open and not yet claimed by `take`.
+    pub fn loaded_len(&self) -> usize {
+        self.loaded.len()
+    }
+
+    /// Scenarios replayed from this checkpoint so far.
+    pub fn resumed(&self) -> usize {
+        self.resumed
+    }
+
+    /// Scenarios recorded into this checkpoint so far.
+    pub fn recorded(&self) -> usize {
+        self.recorded
+    }
+
+    /// Claim the recorded outcome for `sc`, if one exists under its
+    /// name *and* its exact config digest. A name match with a
+    /// different digest stays untouched: the scenario re-runs, and its
+    /// fresh record supersedes the stale one (later records win).
+    pub fn take(&mut self, sc: &Scenario) -> Option<ScenarioOutcome> {
+        match self.loaded.get(&sc.name) {
+            Some((digest, _)) if *digest == config_digest(sc) => {
+                let (_, stored) = self.loaded.remove(&sc.name).unwrap();
+                self.resumed += 1;
+                Some(stored.into_outcome(sc.clone()))
+            }
+            _ => None,
+        }
+    }
+
+    /// Append one completed scenario as a compressed segment, flushed
+    /// immediately so the record survives a kill right after. Failures
+    /// disable checkpointing for the run but never fail the sweep.
+    pub fn record(&mut self, outcome: &ScenarioOutcome) {
+        if self.write_failed {
+            return;
+        }
+        let payload = encode_record(outcome);
+        let mut block = Vec::new();
+        codec::write_segment(&mut block, &payload, 1, true);
+        if self.writer.write_all(&block).is_err() || self.writer.flush().is_err() {
+            eprintln!(
+                "sweep checkpoint {}: write failed; checkpointing disabled for this run",
+                self.path.display()
+            );
+            self.write_failed = true;
+            return;
+        }
+        self.recorded += 1;
+    }
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize) {
+    codec::put_varint(out, v as u64);
+}
+
+fn put_sample(out: &mut Vec<u8>, s: &Sample) {
+    put_usize(out, s.index);
+    codec::put_usize_slice(out, &s.nas_d);
+    codec::put_usize_slice(out, &s.has_d);
+    s.result.encode_bin(out);
+    codec::put_f64_bits(out, s.reward);
+}
+
+fn read_sample(r: &mut ByteReader) -> Option<Sample> {
+    Some(Sample {
+        index: r.varint_usize()?,
+        nas_d: r.usize_slice()?,
+        has_d: r.usize_slice()?,
+        result: EvalResult::decode_bin(r)?,
+        reward: r.f64_bits()?,
+    })
+}
+
+fn put_opt_sample(out: &mut Vec<u8>, s: &Option<Sample>) {
+    match s {
+        Some(s) => {
+            out.push(1);
+            put_sample(out, s);
+        }
+        None => out.push(0),
+    }
+}
+
+fn read_opt_sample(r: &mut ByteReader) -> Option<Option<Sample>> {
+    match r.u8()? {
+        0 => Some(None),
+        1 => Some(Some(read_sample(r)?)),
+        _ => None,
+    }
+}
+
+fn put_stats(out: &mut Vec<u8>, st: &EvalStats) {
+    for v in [
+        st.requests,
+        st.evals,
+        st.cache_hits,
+        st.invalid,
+        st.cross_session_hits,
+        st.persisted_hits,
+        st.inflight_hits,
+        st.dispatched_chunks,
+        st.hosts_down,
+    ] {
+        put_usize(out, v);
+    }
+    put_usize(out, st.per_host.len());
+    for h in &st.per_host {
+        codec::put_str(out, &h.host);
+        put_usize(out, h.requests);
+        put_usize(out, h.evals);
+        out.push(h.down as u8);
+    }
+}
+
+fn read_stats(r: &mut ByteReader) -> Option<EvalStats> {
+    let mut c = [0usize; 9];
+    for v in &mut c {
+        *v = r.varint_usize()?;
+    }
+    let n = r.varint_usize()?;
+    if n > r.remaining() {
+        return None;
+    }
+    let mut per_host = Vec::with_capacity(n);
+    for _ in 0..n {
+        let host = r.str()?;
+        let requests = r.varint_usize()?;
+        let evals = r.varint_usize()?;
+        let down = match r.u8()? {
+            0 => false,
+            1 => true,
+            _ => return None,
+        };
+        per_host.push(HostEvalStats { host, requests, evals, down });
+    }
+    Some(EvalStats {
+        requests: c[0],
+        evals: c[1],
+        cache_hits: c[2],
+        invalid: c[3],
+        cross_session_hits: c[4],
+        persisted_hits: c[5],
+        inflight_hits: c[6],
+        dispatched_chunks: c[7],
+        hosts_down: c[8],
+        per_host,
+    })
+}
+
+fn put_points(out: &mut Vec<u8>, pts: &[Point]) {
+    put_usize(out, pts.len());
+    for p in pts {
+        codec::put_f64_bits(out, p.acc);
+        codec::put_f64_bits(out, p.cost);
+        codec::put_str(out, &p.tag);
+    }
+}
+
+fn read_points(r: &mut ByteReader) -> Option<Vec<Point>> {
+    let n = r.varint_usize()?;
+    if n > r.remaining() {
+        return None;
+    }
+    let mut pts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let acc = r.f64_bits()?;
+        let cost = r.f64_bits()?;
+        let tag = r.str()?;
+        pts.push(Point { acc, cost, tag });
+    }
+    Some(pts)
+}
+
+fn put_search(out: &mut Vec<u8>, so: &SearchOutcome) {
+    put_usize(out, so.history.len());
+    for s in &so.history {
+        put_sample(out, s);
+    }
+    put_opt_sample(out, &so.best);
+    put_opt_sample(out, &so.best_feasible);
+    put_usize(out, so.num_invalid);
+    put_stats(out, &so.eval_stats);
+    codec::put_f64_bits(out, so.elapsed_s);
+}
+
+fn read_search(r: &mut ByteReader) -> Option<SearchOutcome> {
+    let n = r.varint_usize()?;
+    if n > r.remaining() {
+        return None;
+    }
+    let mut history = Vec::with_capacity(n);
+    for _ in 0..n {
+        history.push(read_sample(r)?);
+    }
+    Some(SearchOutcome {
+        history,
+        best: read_opt_sample(r)?,
+        best_feasible: read_opt_sample(r)?,
+        num_invalid: r.varint_usize()?,
+        eval_stats: read_stats(r)?,
+        elapsed_s: r.f64_bits()?,
+    })
+}
+
+fn encode_record(o: &ScenarioOutcome) -> Vec<u8> {
+    let mut out = Vec::new();
+    codec::put_str(&mut out, &o.scenario.name);
+    codec::put_str(&mut out, &config_digest(&o.scenario));
+    put_search(&mut out, &o.search);
+    match &o.selected_hw {
+        Some(hw) => {
+            out.push(1);
+            codec::put_usize_slice(&mut out, hw);
+        }
+        None => out.push(0),
+    }
+    put_stats(&mut out, &o.eval_stats);
+    put_points(&mut out, &o.frontier);
+    put_usize(&mut out, o.task_frontiers.len());
+    for (task, pts) in &o.task_frontiers {
+        codec::put_str(&mut out, task);
+        put_points(&mut out, pts);
+    }
+    put_usize(&mut out, o.frontier_nd.len());
+    for p in &o.frontier_nd {
+        codec::put_f64_bits(&mut out, p.acc);
+        put_usize(&mut out, p.costs.len());
+        for &c in &p.costs {
+            codec::put_f64_bits(&mut out, c);
+        }
+        codec::put_str(&mut out, &p.tag);
+    }
+    codec::put_f64_bits(&mut out, o.elapsed_s);
+    out
+}
+
+fn decode_record(payload: &[u8]) -> Option<(String, String, StoredOutcome)> {
+    let mut r = ByteReader::new(payload);
+    let name = r.str()?;
+    let digest = r.str()?;
+    let search = read_search(&mut r)?;
+    let selected_hw = match r.u8()? {
+        0 => None,
+        1 => Some(r.usize_slice()?),
+        _ => return None,
+    };
+    let eval_stats = read_stats(&mut r)?;
+    let frontier = read_points(&mut r)?;
+    let ntf = r.varint_usize()?;
+    if ntf > r.remaining() {
+        return None;
+    }
+    let mut task_frontiers = Vec::with_capacity(ntf);
+    for _ in 0..ntf {
+        let task = r.str()?;
+        task_frontiers.push((task, read_points(&mut r)?));
+    }
+    let nnd = r.varint_usize()?;
+    if nnd > r.remaining() {
+        return None;
+    }
+    let mut frontier_nd = Vec::with_capacity(nnd);
+    for _ in 0..nnd {
+        let acc = r.f64_bits()?;
+        let nc = r.varint_usize()?;
+        if nc > r.remaining() {
+            return None;
+        }
+        let mut costs = Vec::with_capacity(nc);
+        for _ in 0..nc {
+            costs.push(r.f64_bits()?);
+        }
+        let tag = r.str()?;
+        frontier_nd.push(MultiPoint { acc, costs, tag });
+    }
+    let elapsed_s = r.f64_bits()?;
+    if !r.is_empty() {
+        return None;
+    }
+    let stored = StoredOutcome {
+        search,
+        selected_hw,
+        eval_stats,
+        frontier,
+        task_frontiers,
+        frontier_nd,
+        elapsed_s,
+    };
+    Some((name, digest, stored))
 }
 
 #[cfg(test)]
@@ -655,6 +1193,131 @@ mod tests {
         // The 2-D latency union still exists untouched beside it.
         assert_eq!(out.union.len(), 1);
         assert_eq!(out.union[0].0, CostObjective::Latency);
+    }
+
+    fn ckpt_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("nahas-sweep-ckpt-{}-{tag}", std::process::id()))
+    }
+
+    fn assert_outcomes_bit_identical(want: &SweepOutcome, got: &SweepOutcome) {
+        assert_eq!(want.outcomes.len(), got.outcomes.len());
+        for (w, g) in want.outcomes.iter().zip(&got.outcomes) {
+            assert_eq!(w.scenario.name, g.scenario.name);
+            assert_eq!(w.search.history.len(), g.search.history.len());
+            for (a, b) in w.search.history.iter().zip(&g.search.history) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.nas_d, b.nas_d);
+                assert_eq!(a.has_d, b.has_d);
+                assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+                assert_eq!(a.result.acc.to_bits(), b.result.acc.to_bits());
+                assert_eq!(a.result.latency_ms.to_bits(), b.result.latency_ms.to_bits());
+                assert_eq!(a.result.energy_mj.to_bits(), b.result.energy_mj.to_bits());
+                assert_eq!(a.result.area_mm2.to_bits(), b.result.area_mm2.to_bits());
+                assert_eq!(a.result.valid, b.result.valid);
+            }
+            assert_eq!(w.search.num_invalid, g.search.num_invalid);
+            assert_eq!(w.selected_hw, g.selected_hw);
+            assert_eq!(w.eval_stats.requests, g.eval_stats.requests);
+            assert_eq!(w.frontier.len(), g.frontier.len());
+            for (a, b) in w.frontier.iter().zip(&g.frontier) {
+                assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+                assert_eq!(a.tag, b.tag);
+            }
+        }
+        assert_eq!(want.union.len(), got.union.len());
+        for ((wo, wf), (go, gf)) in want.union.iter().zip(&got.union) {
+            assert_eq!(wo, go);
+            assert_eq!(wf.len(), gf.len());
+            for (a, b) in wf.iter().zip(gf) {
+                assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn checkpointed_scenarios_replay_bit_identically_with_zero_evals() {
+        let dir = ckpt_dir("replay");
+        let _ = fs::remove_dir_all(&dir);
+        let mk = |name: &str, reward: RewardCfg| {
+            Scenario::new(name, NasSpaceId::EfficientNet, reward, 3)
+                .samples(48)
+                .batch(16)
+                .controller(ControllerKind::Random)
+        };
+        let scenarios =
+            vec![mk("lat", RewardCfg::latency(0.5)), mk("energy", RewardCfg::energy(1.0))];
+        let cold = {
+            let broker = local_broker(3);
+            let mut ckpt = SweepCheckpoint::open(&dir, "eval/ckpt-test-fp").unwrap();
+            assert_eq!(ckpt.loaded_len(), 0);
+            let out = run_sweep_resumable(&broker, &scenarios, Some(&mut ckpt), 2);
+            assert_eq!(ckpt.recorded(), 2);
+            out
+        };
+        // Resume against a FRESH broker: outcomes replay from the
+        // checkpoint alone — zero requests reach the substrate.
+        let broker = local_broker(3);
+        let mut ckpt = SweepCheckpoint::open(&dir, "eval/ckpt-test-fp").unwrap();
+        assert!(ckpt.discarded().is_none(), "{:?}", ckpt.discarded());
+        assert_eq!(ckpt.loaded_len(), 2);
+        let warm = run_sweep_resumable(&broker, &scenarios, Some(&mut ckpt), 2);
+        assert_eq!(ckpt.resumed(), 2);
+        assert_eq!(broker.stats().requests, 0, "a fully-resumed sweep must not evaluate");
+        assert_outcomes_bit_identical(&cold, &warm);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_config_or_fingerprint_changes_force_a_rerun() {
+        let dir = ckpt_dir("stale");
+        let _ = fs::remove_dir_all(&dir);
+        let sc = Scenario::new("one", NasSpaceId::EfficientNet, RewardCfg::latency(0.5), 6)
+            .samples(32)
+            .batch(16)
+            .controller(ControllerKind::Random);
+        {
+            let broker = local_broker(6);
+            let mut ckpt = SweepCheckpoint::open(&dir, "eval/fp-a").unwrap();
+            run_sweep_resumable(&broker, std::slice::from_ref(&sc), Some(&mut ckpt), 1);
+        }
+        // Same fingerprint, changed scenario config: digest mismatch.
+        let mut ckpt = SweepCheckpoint::open(&dir, "eval/fp-a").unwrap();
+        assert_eq!(ckpt.loaded_len(), 1);
+        assert!(ckpt.take(&sc.clone().samples(64)).is_none());
+        assert_eq!(ckpt.resumed(), 0);
+        // Same config, new fingerprint: whole checkpoint discards.
+        let ckpt = SweepCheckpoint::open(&dir, "eval/fp-b").unwrap();
+        assert!(ckpt.discarded().unwrap().contains("fingerprint mismatch"));
+        assert_eq!(ckpt.loaded_len(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_checkpoint_tail_salvages_completed_records() {
+        let dir = ckpt_dir("torn");
+        let _ = fs::remove_dir_all(&dir);
+        let sc = Scenario::new("one", NasSpaceId::EfficientNet, RewardCfg::latency(0.5), 8)
+            .samples(32)
+            .batch(16)
+            .controller(ControllerKind::Random);
+        {
+            let broker = local_broker(8);
+            let mut ckpt = SweepCheckpoint::open(&dir, "eval/fp-torn").unwrap();
+            run_sweep_resumable(&broker, std::slice::from_ref(&sc), Some(&mut ckpt), 1);
+        }
+        // A kill mid-record leaves a torn trailing segment: the
+        // completed record before it must still load.
+        let path = dir.join("sweep.ckpt");
+        let mut bytes = fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[codec::SEG_MAGIC, 0, 0xFF, 0xFF]);
+        fs::write(&path, &bytes).unwrap();
+        let mut ckpt = SweepCheckpoint::open(&dir, "eval/fp-torn").unwrap();
+        assert!(ckpt.discarded().is_none(), "{:?}", ckpt.discarded());
+        assert_eq!(ckpt.loaded_len(), 1);
+        assert!(ckpt.take(&sc).is_some());
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -29,6 +29,23 @@
 //! Requests without an id keep the strict request/response contract:
 //! responses come back in arrival order, so pre-pipelining clients work
 //! unchanged.
+//!
+//! **Binary wire protocol** (negotiated, [`crate::util::codec`]): a new
+//! client opens with one JSON hello line —
+//! `{"hello": "nahas-wire", "version": 1}` — and a server that speaks
+//! the binary protocol answers a JSON hello-ack and switches that
+//! connection to length-prefixed binary frames
+//! (`[u32 len][u8 kind][body]`): one `REQ_BATCH` frame carries a whole
+//! pipelined burst (space/task bytes + varint-packed keys, replacing
+//! per-key JSON text), and each `RESP_ITEM` frame ships the result as
+//! raw f64 bits in completion order, matched by (batch, index). An old
+//! server answers the hello with an ordinary error object (it is just
+//! another well-formed request line to it), so the client falls back to
+//! the JSON line protocol — old clients, old servers and mixed clusters
+//! interoperate, and `--wire json` forces the fallback. Responses are
+//! built from the same cached response strings on either protocol, so
+//! binary results are **bit-identical** to JSON results by
+//! construction.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -44,7 +61,27 @@ use crate::nas::{NasSpace, NasSpaceId};
 use crate::search::evaluator::segmentation_variant;
 use crate::search::store::CacheStore;
 use crate::search::MemoCache;
+use crate::util::codec::{self, put_f64_bits, put_u32, put_varint, ByteReader};
 use crate::util::json::{obj, Json};
+
+/// Protocol name in the hello line; anything else is not ours.
+pub const WIRE_PROTO: &str = "nahas-wire";
+/// Highest binary protocol version this build speaks.
+pub const WIRE_VERSION: usize = 1;
+
+/// Frame kind: one pipelined request burst (client -> server).
+const FK_REQ_BATCH: u8 = 1;
+/// Frame kind: one completed result (server -> client).
+const FK_RESP_ITEM: u8 = 2;
+
+/// Which wire protocol a client asks for (and, post-negotiation, got).
+/// `Binary` is a *preference*: the hello falls back to JSON against a
+/// server that does not answer it, so it is always safe to request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wire {
+    Json,
+    Binary,
+}
 
 fn space_by_name(name: &str) -> Option<NasSpaceId> {
     match name {
@@ -52,6 +89,18 @@ fn space_by_name(name: &str) -> Option<NasSpaceId> {
         "efficientnet" | "s2" => Some(NasSpaceId::EfficientNet),
         "evolved" | "s3" => Some(NasSpaceId::Evolved),
         "proxy" => Some(NasSpaceId::Proxy),
+        _ => None,
+    }
+}
+
+/// Binary-frame space byte (the discriminant [`serve_cache_key`] also
+/// uses, so both protocols key the result cache identically).
+fn space_by_byte(b: u8) -> Option<NasSpaceId> {
+    match b as usize {
+        x if x == NasSpaceId::MobileNetV2 as usize => Some(NasSpaceId::MobileNetV2),
+        x if x == NasSpaceId::EfficientNet as usize => Some(NasSpaceId::EfficientNet),
+        x if x == NasSpaceId::Evolved as usize => Some(NasSpaceId::Evolved),
+        x if x == NasSpaceId::Proxy as usize => Some(NasSpaceId::Proxy),
         _ => None,
     }
 }
@@ -259,11 +308,18 @@ enum RespTag {
     Seq(u64),
 }
 
+/// One finished message staged for a connection: a JSON response line
+/// or an already-framed binary block.
+enum OutMsg {
+    Line(String),
+    Frame(Vec<u8>),
+}
+
 /// The half of a connection shared with the simulation workers:
 /// finished responses parked here until the owning event thread drains
 /// them onto the socket.
 struct ConnShared {
-    done: Mutex<Vec<(RespTag, String)>>,
+    done: Mutex<Vec<(RespTag, OutMsg)>>,
 }
 
 /// One multiplexed connection, owned by exactly one event thread.
@@ -282,15 +338,29 @@ struct Conn {
     outstanding: usize,
     /// Peer sent EOF; the connection closes once fully drained.
     eof: bool,
+    /// Negotiated the binary protocol (bytes after the hello ack are
+    /// length-prefixed frames, not JSON lines).
+    binary: bool,
+}
+
+/// The per-item half of a binary `REQ_BATCH`: which (batch, index)
+/// slot the `RESP_ITEM` frame must name.
+#[derive(Clone, Copy)]
+struct BinSlot {
+    batch_id: u32,
+    index: u64,
 }
 
 /// One queued simulation request (the CPU-bound half of a request
-/// line, computed off the event threads).
+/// line or frame, computed off the event threads).
 struct SimJob {
     shared: Arc<ConnShared>,
     tag: RespTag,
     id: Option<Json>,
     req: Json,
+    /// `Some` when the request arrived as a binary frame item: the
+    /// response ships as a `RESP_ITEM` frame instead of a JSON line.
+    bin: Option<BinSlot>,
 }
 
 /// The shared simulation work queue the event threads feed.
@@ -429,6 +499,7 @@ fn event_loop(
                 held: BTreeMap::new(),
                 outstanding: 0,
                 eof: false,
+                binary: false,
             });
         }
         let mut busy = false;
@@ -458,7 +529,7 @@ fn tick_conn(
     busy: &mut bool,
 ) -> bool {
     // 1. Collect responses the sim workers finished.
-    let done: Vec<(RespTag, String)> =
+    let done: Vec<(RespTag, OutMsg)> =
         std::mem::take(&mut *conn.shared.done.lock().expect("conn outbox poisoned"));
     for (tag, resp) in done {
         conn.outstanding -= 1;
@@ -501,7 +572,11 @@ fn tick_conn(
         }
     }
 
-    // 4. Frame and answer complete request lines.
+    // 4. Frame and answer complete requests: binary frames after a
+    // successful hello, JSON lines otherwise.
+    if conn.binary {
+        return tick_binary_frames(conn, requests, sim_pool, busy);
+    }
     while let Some(pos) = conn.read_buf.iter().position(|&b| b == b'\n') {
         let raw: Vec<u8> = conn.read_buf.drain(..=pos).collect();
         let line = String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned();
@@ -517,7 +592,31 @@ fn tick_conn(
                     .to_string();
                 requests.fetch_add(1, Ordering::Relaxed);
                 let tag = next_tag(conn, &None);
-                release(conn, tag, resp);
+                release(conn, tag, OutMsg::Line(resp));
+            }
+            // Wire negotiation: a supported hello flips this
+            // connection to binary framing; the ack goes out as the
+            // last JSON line. Unsupported hellos get a plain error
+            // line and the connection stays on JSON.
+            Ok(req) if req.get("hello").is_some() => {
+                requests.fetch_add(1, Ordering::Relaxed);
+                let proto = req.get("hello").and_then(Json::as_str);
+                let version = req.get("version").and_then(Json::as_usize).unwrap_or(0);
+                let resp = if proto == Some(WIRE_PROTO) && version >= 1 {
+                    conn.binary = true;
+                    obj(vec![
+                        ("hello", WIRE_PROTO.into()),
+                        ("version", (version.min(WIRE_VERSION) as f64).into()),
+                    ])
+                } else {
+                    obj(vec![("valid", false.into()), ("error", "unsupported hello".into())])
+                };
+                release(conn, RespTag::Ident, OutMsg::Line(resp.to_string()));
+                if conn.binary {
+                    // Anything already buffered past the hello line is
+                    // binary frames.
+                    return tick_binary_frames(conn, requests, sim_pool, busy);
+                }
             }
             // `{"stats": true}`: report this server's counters (used by
             // `nahas cluster-status` to surface cache effectiveness).
@@ -534,7 +633,7 @@ fn tick_conn(
                 let id = req.get("id").cloned();
                 let resp = attach_id(resp.to_string(), id.clone());
                 let tag = next_tag(conn, &id);
-                release(conn, tag, resp);
+                release(conn, tag, OutMsg::Line(resp));
             }
             Ok(req) => {
                 // Simulation work goes to the worker pool; the event
@@ -547,12 +646,116 @@ fn tick_conn(
                     .jobs
                     .lock()
                     .expect("sim pool poisoned")
-                    .push_back(SimJob { shared: conn.shared.clone(), tag, id, req });
+                    .push_back(SimJob { shared: conn.shared.clone(), tag, id, req, bin: None });
                 sim_pool.ready.notify_one();
             }
         }
     }
     true
+}
+
+/// Frame-split and dispatch the binary half of [`tick_conn`]. Returns
+/// `false` on a malformed frame (the connection is dropped — there is
+/// no way to resynchronize a binary stream after framing is lost).
+fn tick_binary_frames(
+    conn: &mut Conn,
+    requests: &AtomicU64,
+    sim_pool: &SimPool,
+    busy: &mut bool,
+) -> bool {
+    loop {
+        let (payload, total) = match codec::frame_payload(&conn.read_buf) {
+            Ok(Some((payload, total))) => (payload.to_vec(), total),
+            Ok(None) => return true,
+            Err(_) => return false,
+        };
+        conn.read_buf.drain(..total);
+        *busy = true;
+        if !dispatch_binary_frame(conn, &payload, requests, sim_pool) {
+            return false;
+        }
+    }
+}
+
+/// Decode one client frame and queue its simulate jobs. Only
+/// `REQ_BATCH` is a valid client->server frame.
+fn dispatch_binary_frame(
+    conn: &mut Conn,
+    payload: &[u8],
+    requests: &AtomicU64,
+    sim_pool: &SimPool,
+) -> bool {
+    let mut r = ByteReader::new(payload);
+    if r.u8() != Some(FK_REQ_BATCH) {
+        return false;
+    }
+    let (Some(space_byte), Some(seg_byte), Some(nas_len), Some(batch_id), Some(count)) =
+        (r.u8(), r.u8(), r.varint_usize(), r.u32(), r.varint_usize())
+    else {
+        return false;
+    };
+    let (Some(space_id), true) = (space_by_byte(space_byte), seg_byte <= 1) else {
+        return false;
+    };
+    let space_name = service_space_name(space_id);
+    let seg = seg_byte == 1;
+    let arr = |v: &[usize]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+    let mut jobs = Vec::with_capacity(count);
+    for index in 0..count {
+        let Some(key) = r.usize_slice() else { return false };
+        if key.len() < nas_len {
+            return false;
+        }
+        let (nas_d, has_d) = key.split_at(nas_len);
+        // The same request object the JSON protocol would have parsed,
+        // so the cache key, validation ladder and response string are
+        // shared between protocols.
+        let req = obj(vec![
+            ("space", space_name.into()),
+            ("nas", arr(nas_d)),
+            ("hw", arr(has_d)),
+            ("task", if seg { "seg".into() } else { "cls".into() }),
+        ]);
+        jobs.push(SimJob {
+            shared: conn.shared.clone(),
+            tag: RespTag::Ident,
+            id: None,
+            req,
+            bin: Some(BinSlot { batch_id, index: index as u64 }),
+        });
+    }
+    if !r.is_empty() {
+        return false;
+    }
+    requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+    conn.outstanding += jobs.len();
+    let mut q = sim_pool.jobs.lock().expect("sim pool poisoned");
+    for job in jobs {
+        q.push_back(job);
+        sim_pool.ready.notify_one();
+    }
+    true
+}
+
+/// Encode one finished response string as a framed `RESP_ITEM`: the
+/// result's f64s ship as raw bits parsed from the *same* cached
+/// response string the JSON protocol serves, which is what makes the
+/// two protocols bit-identical.
+fn encode_resp_item(slot: BinSlot, resp: &str) -> Vec<u8> {
+    let parsed = Json::parse(resp).ok();
+    let field = |k: &str| -> f64 {
+        parsed.as_ref().and_then(|j| j.get(k)).and_then(Json::as_f64).unwrap_or(f64::NAN)
+    };
+    let valid = parsed.as_ref().and_then(|j| j.get("valid")) == Some(&Json::Bool(true));
+    let mut body = Vec::with_capacity(1 + 4 + 10 + 1 + 32);
+    body.push(FK_RESP_ITEM);
+    put_u32(&mut body, slot.batch_id);
+    put_varint(&mut body, slot.index);
+    body.push(valid as u8);
+    for k in ["latency_ms", "energy_mj", "area_mm2", "utilization"] {
+        put_f64_bits(&mut body, field(k));
+    }
+    codec::frame(&body)
 }
 
 /// Ordering tag for the next response on `conn`: id'd requests release
@@ -567,9 +770,17 @@ fn next_tag(conn: &mut Conn, id: &Option<Json>) -> RespTag {
     }
 }
 
-/// Stage a finished response line for writing, honoring its ordering
-/// tag.
-fn release(conn: &mut Conn, tag: RespTag, resp: String) {
+/// Stage a finished response for writing, honoring its ordering tag.
+/// Binary frames are always completion-ordered (the `RESP_ITEM` header
+/// carries the slot), so only JSON lines ever hold a `Seq` tag.
+fn release(conn: &mut Conn, tag: RespTag, resp: OutMsg) {
+    let resp = match resp {
+        OutMsg::Frame(bytes) => {
+            conn.write_buf.extend_from_slice(&bytes);
+            return;
+        }
+        OutMsg::Line(line) => line,
+    };
     match tag {
         RespTag::Ident => {
             conn.write_buf.extend_from_slice(resp.as_bytes());
@@ -611,8 +822,11 @@ fn sim_worker(stop: &AtomicBool, cache: &ServeCache, sim_pool: &SimPool) {
             Some(key) => cache.get_or_compute(key, &job.req),
             None => handle_request(&job.req).to_string(),
         };
-        let resp = attach_id(resp, job.id);
-        job.shared.done.lock().expect("conn outbox poisoned").push((job.tag, resp));
+        let out = match job.bin {
+            Some(slot) => OutMsg::Frame(encode_resp_item(slot, &resp)),
+            None => OutMsg::Line(attach_id(resp, job.id)),
+        };
+        job.shared.done.lock().expect("conn outbox poisoned").push((job.tag, out));
     }
 }
 
@@ -623,6 +837,18 @@ pub struct Client {
     /// Socket read/write timeout this client was opened with; carried
     /// so transparent reconnects preserve the policy.
     io_timeout: Option<std::time::Duration>,
+    /// Wire preference this client was opened with (reconnects
+    /// renegotiate with the same preference).
+    wire_pref: Wire,
+    /// Negotiated mode: true only when a binary hello was acked.
+    binary: bool,
+    /// Next binary batch id (frames of concurrent bursts on one
+    /// connection could otherwise not be told apart).
+    next_batch: u32,
+    /// Application bytes written/read on this connection, both
+    /// protocols — the `perf_wire_codec` bytes-on-wire measurement.
+    tx_bytes: u64,
+    rx_bytes: u64,
 }
 
 impl Client {
@@ -635,6 +861,84 @@ impl Client {
     /// failover) instead of blocking the caller forever.
     pub fn connect_with_io_timeout(addr: &str, timeout: std::time::Duration) -> Result<Client> {
         Self::connect_opts(addr, Some(timeout))
+    }
+
+    /// Connect with an explicit wire preference. `Wire::Binary` sends
+    /// the versioned hello and downgrades to the JSON line protocol if
+    /// the server answers anything but a hello-ack — old servers treat
+    /// the hello as an ordinary (failing) request line, so mixed
+    /// clusters keep working.
+    pub fn connect_wire(
+        addr: &str,
+        io_timeout: Option<std::time::Duration>,
+        wire: Wire,
+    ) -> Result<Client> {
+        let mut client = Self::connect_opts(addr, io_timeout)?;
+        if wire == Wire::Binary {
+            client.wire_pref = Wire::Binary;
+            client.negotiate()?;
+        }
+        Ok(client)
+    }
+
+    /// Reconnect-with-the-same-policy: timeout and wire preference
+    /// carry over (a binary client renegotiates; against a downgraded
+    /// server it lands back on JSON).
+    fn reconnect(&self, addr: &str) -> Result<Client> {
+        Self::connect_wire(addr, self.io_timeout, self.wire_pref)
+    }
+
+    /// One hello roundtrip; flips `self.binary` on a versioned ack.
+    fn negotiate(&mut self) -> Result<()> {
+        let hello = obj(vec![
+            ("hello", WIRE_PROTO.into()),
+            ("version", (WIRE_VERSION as f64).into()),
+        ]);
+        self.write_line(&hello.to_string())?;
+        let line = self.read_line()?;
+        let resp = Json::parse(line.trim()).map_err(|e| anyhow!("bad hello response: {e}"))?;
+        self.binary = resp.get("hello").and_then(Json::as_str) == Some(WIRE_PROTO)
+            && resp.get("version").and_then(Json::as_usize).unwrap_or(0) >= 1;
+        Ok(())
+    }
+
+    /// True when the binary protocol was negotiated on this connection.
+    pub fn is_binary(&self) -> bool {
+        self.binary
+    }
+
+    /// (bytes written, bytes read) on this connection so far.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        (self.tx_bytes, self.rx_bytes)
+    }
+
+    fn write_line(&mut self, line: &str) -> Result<()> {
+        self.tx_bytes += line.len() as u64 + 1;
+        writeln!(self.writer, "{line}")?;
+        Ok(())
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("connection closed"));
+        }
+        self.rx_bytes += line.len() as u64;
+        Ok(line)
+    }
+
+    /// Read one length-prefixed binary frame (payload only).
+    fn read_frame(&mut self) -> Result<Vec<u8>> {
+        let mut len4 = [0u8; 4];
+        self.reader.read_exact(&mut len4)?;
+        let len = u32::from_le_bytes(len4) as usize;
+        if len == 0 || len > codec::MAX_FRAME_PAYLOAD {
+            return Err(anyhow!("bad frame length {len}"));
+        }
+        let mut payload = vec![0u8; len];
+        self.reader.read_exact(&mut payload)?;
+        self.rx_bytes += 4 + len as u64;
+        Ok(payload)
     }
 
     fn connect_opts(addr: &str, io_timeout: Option<std::time::Duration>) -> Result<Client> {
@@ -656,7 +960,16 @@ impl Client {
         stream.set_read_timeout(io_timeout)?;
         stream.set_write_timeout(io_timeout)?;
         let writer = stream.try_clone()?;
-        Ok(Client { reader: BufReader::new(stream), writer, io_timeout })
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer,
+            io_timeout,
+            wire_pref: Wire::Json,
+            binary: false,
+            next_batch: 0,
+            tx_bytes: 0,
+            rx_bytes: 0,
+        })
     }
 
     /// Query one (space, nas, hw) sample; returns the raw response.
@@ -667,6 +980,12 @@ impl Client {
         has_d: &[usize],
         seg: bool,
     ) -> Result<Json> {
+        if self.binary {
+            let key: Vec<usize> = nas_d.iter().chain(has_d).copied().collect();
+            let mut resps =
+                self.query_pipelined(space, seg, std::slice::from_ref(&key), nas_d.len())?;
+            return Ok(resps.pop().expect("one response per key"));
+        }
         let arr = |v: &[usize]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
         let req = obj(vec![
             ("space", space.into()),
@@ -674,10 +993,10 @@ impl Client {
             ("hw", arr(has_d)),
             ("task", if seg { "seg".into() } else { "cls".into() }),
         ]);
-        writeln!(self.writer, "{req}")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))
+        self.write_line(&req.to_string())?;
+        let line = self.read_line()?;
+        Json::parse(line.trim_end_matches(['\n', '\r']))
+            .map_err(|e| anyhow!("bad response: {e}"))
     }
 
     /// Pipeline a burst of joint-key queries on this one connection:
@@ -698,6 +1017,9 @@ impl Client {
         if keys.is_empty() {
             return Ok(Vec::new());
         }
+        if self.binary {
+            return self.query_pipelined_binary(space, seg, keys, nas_len);
+        }
         let arr = |v: &[usize]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
         let mut burst = String::new();
         for (i, key) in keys.iter().enumerate() {
@@ -712,14 +1034,13 @@ impl Client {
             burst.push_str(&req.to_string());
             burst.push('\n');
         }
+        self.tx_bytes += burst.len() as u64;
         self.writer.write_all(burst.as_bytes())?;
         let mut out: Vec<Option<Json>> = vec![None; keys.len()];
         for _ in 0..keys.len() {
-            let mut line = String::new();
-            if self.reader.read_line(&mut line)? == 0 {
-                return Err(anyhow!("connection closed mid-pipeline"));
-            }
-            let resp = Json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))?;
+            let line = self.read_line().map_err(|_| anyhow!("connection closed mid-pipeline"))?;
+            let resp = Json::parse(line.trim_end_matches(['\n', '\r']))
+                .map_err(|e| anyhow!("bad response: {e}"))?;
             let Some(id) = resp.get("id").and_then(Json::as_usize) else {
                 return Err(anyhow!("pipelined response without id: {line}"));
             };
@@ -731,6 +1052,73 @@ impl Client {
             *slot = Some(resp);
         }
         Ok(out.into_iter().map(|r| r.expect("every id matched")).collect())
+    }
+
+    /// The binary-mode burst: one `REQ_BATCH` frame out, `keys.len()`
+    /// `RESP_ITEM` frames back in completion order, matched by the
+    /// (batch, index) slot each frame names. Each item is rebuilt as
+    /// the response object the JSON protocol would have produced (raw
+    /// bits, never re-parsed text), so callers cannot tell the
+    /// protocols apart — except by the bytes moved.
+    fn query_pipelined_binary(
+        &mut self,
+        space: &str,
+        seg: bool,
+        keys: &[Vec<usize>],
+        nas_len: usize,
+    ) -> Result<Vec<Json>> {
+        let space_id =
+            space_by_name(space).ok_or_else(|| anyhow!("unknown space '{space}'"))?;
+        let batch_id = self.next_batch;
+        self.next_batch = self.next_batch.wrapping_add(1);
+        let mut body = Vec::with_capacity(16 + keys.len() * (keys[0].len() + 2));
+        body.push(FK_REQ_BATCH);
+        body.push(space_id as u8);
+        body.push(seg as u8);
+        put_varint(&mut body, nas_len as u64);
+        put_u32(&mut body, batch_id);
+        put_varint(&mut body, keys.len() as u64);
+        for key in keys {
+            codec::put_usize_slice(&mut body, key);
+        }
+        let frame = codec::frame(&body);
+        self.tx_bytes += frame.len() as u64;
+        self.writer.write_all(&frame)?;
+        let mut out: Vec<Option<Json>> = vec![None; keys.len()];
+        for _ in 0..keys.len() {
+            let payload = self.read_frame()?;
+            let mut r = ByteReader::new(&payload);
+            if r.u8() != Some(FK_RESP_ITEM) {
+                return Err(anyhow!("unexpected frame kind"));
+            }
+            let (Some(bid), Some(index), Some(valid)) = (r.u32(), r.varint_usize(), r.u8())
+            else {
+                return Err(anyhow!("truncated RESP_ITEM frame"));
+            };
+            if bid != batch_id {
+                return Err(anyhow!("response for stale batch {bid} (expected {batch_id})"));
+            }
+            let mut fields = [0.0f64; 4];
+            for f in &mut fields {
+                *f = r.f64_bits().ok_or_else(|| anyhow!("truncated RESP_ITEM frame"))?;
+            }
+            let resp = obj(vec![
+                ("id", Json::Num(index as f64)),
+                ("valid", (valid == 1).into()),
+                ("latency_ms", fields[0].into()),
+                ("energy_mj", fields[1].into()),
+                ("area_mm2", fields[2].into()),
+                ("utilization", fields[3].into()),
+            ]);
+            let slot = out
+                .get_mut(index)
+                .ok_or_else(|| anyhow!("response index {index} out of range"))?;
+            if slot.is_some() {
+                return Err(anyhow!("duplicate response index {index}"));
+            }
+            *slot = Some(resp);
+        }
+        Ok(out.into_iter().map(|r| r.expect("every index matched")).collect())
     }
 }
 
@@ -850,6 +1238,93 @@ mod tests {
     }
 
     #[test]
+    fn binary_negotiation_roundtrips_bit_identically_to_json() {
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let mut bin = Client::connect_wire(&addr, None, Wire::Binary).unwrap();
+        assert!(bin.is_binary(), "new server must ack the hello");
+        let mut json = Client::connect(&addr).unwrap();
+        assert!(!json.is_binary());
+        let space = NasSpace::new(NasSpaceId::EfficientNet);
+        let has = HasSpace::new();
+        let mut rng = Rng::new(13);
+        for _ in 0..6 {
+            let nas_d = space.random(&mut rng);
+            let hw = has.baseline_decisions();
+            let b = bin.query("efficientnet", &nas_d, &hw, false).unwrap();
+            let j = json.query("efficientnet", &nas_d, &hw, false).unwrap();
+            assert_eq!(b.get("valid"), j.get("valid"));
+            for k in ["latency_ms", "energy_mj", "area_mm2", "utilization"] {
+                let bb = b.get(k).and_then(Json::as_f64).map(f64::to_bits);
+                let jb = j.get(k).and_then(Json::as_f64).map(f64::to_bits);
+                assert_eq!(bb, jb, "field {k} must be bit-identical across protocols");
+            }
+        }
+        // Pipelined bursts through the binary frame, matched by index.
+        let keys: Vec<Vec<usize>> = (0..8)
+            .map(|_| {
+                let mut k = space.random(&mut rng);
+                k.extend(has.baseline_decisions());
+                k
+            })
+            .collect();
+        let nas_len = space.num_decisions();
+        let br = bin.query_pipelined("efficientnet", false, &keys, nas_len).unwrap();
+        let jr = json.query_pipelined("efficientnet", false, &keys, nas_len).unwrap();
+        for (b, j) in br.iter().zip(&jr) {
+            assert_eq!(b.get("valid"), j.get("valid"));
+            let bb = b.get("latency_ms").and_then(Json::as_f64).map(f64::to_bits);
+            let jb = j.get("latency_ms").and_then(Json::as_f64).map(f64::to_bits);
+            assert_eq!(bb, jb);
+        }
+        // And the binary burst moved fewer application bytes.
+        let (btx, brx) = bin.wire_bytes();
+        let (jtx, jrx) = json.wire_bytes();
+        assert!(btx < jtx, "binary tx {btx} must be below json tx {jtx}");
+        assert!(brx < jrx, "binary rx {brx} must be below json rx {jrx}");
+        server.stop();
+    }
+
+    #[test]
+    fn binary_preference_falls_back_to_json_against_an_old_server() {
+        // A pre-binary "server": answers every line with an error
+        // object, which is exactly what an old nahas serve does with a
+        // hello line it has never heard of.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream);
+            let mut line = String::new();
+            while r.read_line(&mut line).unwrap_or(0) > 0 {
+                writeln!(w, "{{\"valid\": false, \"error\": \"missing 'space'\"}}").unwrap();
+                line.clear();
+            }
+        });
+        let client = Client::connect_wire(&addr, None, Wire::Binary).unwrap();
+        assert!(!client.is_binary(), "no hello-ack means the JSON line protocol");
+        drop(client);
+        handle.join().unwrap();
+
+        // A real server keeps speaking JSON on the same connection
+        // after rejecting a hello it does not support.
+        let server = Server::spawn("127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        writeln!(stream, "{{\"hello\": \"other-proto\", \"version\": 9}}").unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("valid"), Some(&Json::Bool(false)));
+        writeln!(stream, "{{\"stats\": true}}").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(Json::parse(line.trim()).unwrap().get("requests").is_some());
+        server.stop();
+    }
+
+    #[test]
     fn malformed_requests_get_errors_not_crashes() {
         let server = Server::spawn("127.0.0.1:0").unwrap();
         let mut stream = TcpStream::connect(server.addr).unwrap();
@@ -919,7 +1394,7 @@ pub(crate) fn query_with_reconnect(
     if let Ok(resp) = client.query(space_name, nas_d, has_d, seg) {
         return Ok(resp);
     }
-    let mut fresh = Client::connect_opts(addr, client.io_timeout)?;
+    let mut fresh = client.reconnect(addr)?;
     let resp = fresh.query(space_name, nas_d, has_d, seg)?;
     *client = fresh;
     Ok(resp)
@@ -955,9 +1430,25 @@ pub struct ServiceEvaluator {
 
 impl ServiceEvaluator {
     /// Connect `workers` parallel clients to a `nahas serve` instance.
+    /// Prefers the binary wire protocol (safe: the hello downgrades to
+    /// JSON against a server that does not speak it); pass
+    /// [`Wire::Json`] through [`ServiceEvaluator::connect_wire`] to
+    /// force the line protocol.
     pub fn connect(addr: &str, id: NasSpaceId, seed: u64, workers: usize) -> Result<Self> {
+        Self::connect_wire(addr, id, seed, workers, Wire::Binary)
+    }
+
+    /// [`ServiceEvaluator::connect`] with an explicit wire preference
+    /// (CLI `--wire json|binary`).
+    pub fn connect_wire(
+        addr: &str,
+        id: NasSpaceId,
+        seed: u64,
+        workers: usize,
+        wire: Wire,
+    ) -> Result<Self> {
         let conns = (0..workers.max(1))
-            .map(|_| Client::connect(addr))
+            .map(|_| Client::connect_wire(addr, None, wire))
             .collect::<Result<Vec<Client>>>()?;
         Ok(ServiceEvaluator {
             conns,
@@ -978,6 +1469,22 @@ impl ServiceEvaluator {
 
     pub fn workers(&self) -> usize {
         self.conns.len()
+    }
+
+    /// True when every pooled connection negotiated the binary
+    /// protocol.
+    pub fn all_binary(&self) -> bool {
+        self.conns.iter().all(Client::is_binary)
+    }
+
+    /// Total (bytes written, bytes read) across the connection pool —
+    /// the `perf_wire_codec` bytes-on-wire measurement. Connections
+    /// replaced by a transparent reconnect restart their counters.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        self.conns
+            .iter()
+            .map(Client::wire_bytes)
+            .fold((0, 0), |(tx, rx), (t, r)| (tx + t, rx + r))
     }
 
     /// One service roundtrip through [`query_with_reconnect`]. The
@@ -1032,7 +1539,7 @@ impl ServiceEvaluator {
                 // if even the reconnect fails, the whole slice is a
                 // transport failure (uncacheable, retried on the next
                 // resample).
-                match Client::connect_opts(addr, client.io_timeout) {
+                match client.reconnect(addr) {
                     Ok(fresh) => {
                         *client = fresh;
                         keys.iter()

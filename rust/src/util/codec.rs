@@ -1,0 +1,574 @@
+//! One binary codec, two transports: the length-prefixed frame and
+//! checksummed-segment primitives shared by the service wire protocol
+//! (`service::Client`/`Conn` binary mode) and the persistent store
+//! (`search::store` `nahas-cache v2` segments, `search::sweep`
+//! checkpoints).
+//!
+//! Everything here is defensive by construction: decoders never panic
+//! on hostile bytes — they return `None`/`Err` and let the caller
+//! degrade (cold start, JSON fallback, salvage the verified prefix).
+//! f64 values always travel as raw `to_bits` u64s so NaN payloads,
+//! infinities and signed zeros roundtrip bit-exactly; that is what
+//! makes "binary is bit-identical to JSON" a structural property
+//! rather than a numerical accident.
+//!
+//! Layouts (all integers little-endian):
+//!
+//! * **Wire frame** (`frame_*`): `[u32 payload_len][payload]` where
+//!   `payload[0]` is the frame kind byte. The length prefix covers the
+//!   whole payload including the kind byte.
+//! * **Store segment** (`write_segment`/`read_segments`):
+//!   `[u8 0xC5][u8 flags][u32 payload_len][u32 entry_count]
+//!   [u64 fnv1a(payload)][payload]`, flag bit 0 = payload is
+//!   block-compressed ([`compress`]). The `(offset, entries)` pairs a
+//!   reader accumulates form the explicit `Pos`-style segment index —
+//!   the checkpoint state resumable readers seek by.
+
+/// Maximum segment payload accepted by [`read_segments`] (64 MiB) —
+/// a corrupt length prefix must not drive a multi-gigabyte allocation.
+const MAX_SEGMENT_PAYLOAD: usize = 64 << 20;
+
+/// Maximum wire-frame payload accepted by [`frame_payload`] (16 MiB).
+pub const MAX_FRAME_PAYLOAD: usize = 16 << 20;
+
+/// First byte of every store segment block.
+pub const SEG_MAGIC: u8 = 0xC5;
+
+/// Segment flag bit 0: payload is [`compress`]ed.
+pub const SEG_FLAG_COMPRESSED: u8 = 0b0000_0001;
+
+/// Fixed bytes of a segment header preceding the payload.
+pub const SEG_HEADER_LEN: usize = 1 + 1 + 4 + 4 + 8;
+
+// ---------------------------------------------------------------------------
+// Primitive writers
+// ---------------------------------------------------------------------------
+
+/// Append a LEB128-style varint (7 bits per byte, high bit = more).
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Append a little-endian u32.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian u64.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an f64 as its raw little-endian bit pattern (NaN-preserving).
+pub fn put_f64_bits(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+/// Append a length-prefixed UTF-8 string (varint byte length + bytes).
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append a length-prefixed `usize` slice (varint count + varint elems).
+pub fn put_usize_slice(out: &mut Vec<u8>, v: &[usize]) {
+    put_varint(out, v.len() as u64);
+    for &x in v {
+        put_varint(out, x as u64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ByteReader — bounds-checked sequential decoder
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked cursor over a byte slice. Every accessor returns
+/// `None` past the end instead of panicking, so truncated or hostile
+/// input degrades into a decode failure the caller can translate
+/// (cold start, protocol error, salvage).
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when every byte has been consumed — decoders use this to
+    /// reject trailing garbage.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        let b = *self.buf.get(self.pos)?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    pub fn u32(&mut self) -> Option<u32> {
+        let bytes = self.take(4)?;
+        Some(u32::from_le_bytes(bytes.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Option<u64> {
+        let bytes = self.take(8)?;
+        Some(u64::from_le_bytes(bytes.try_into().unwrap()))
+    }
+
+    pub fn f64_bits(&mut self) -> Option<f64> {
+        self.u64().map(f64::from_bits)
+    }
+
+    /// LEB128 varint; rejects encodings longer than 10 bytes (which
+    /// could not have been produced by [`put_varint`]).
+    pub fn varint(&mut self) -> Option<u64> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let b = self.u8()?;
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// Varint narrowed to usize (decode fails on overflow).
+    pub fn varint_usize(&mut self) -> Option<usize> {
+        usize::try_from(self.varint()?).ok()
+    }
+
+    /// Consume `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+
+    /// Length-prefixed UTF-8 string ([`put_str`] inverse).
+    pub fn str(&mut self) -> Option<String> {
+        let n = self.varint_usize()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).ok()
+    }
+
+    /// Length-prefixed `usize` slice ([`put_usize_slice`] inverse).
+    /// The count is clamped against the remaining bytes before
+    /// allocating, so a corrupt length cannot force a huge allocation.
+    pub fn usize_slice(&mut self) -> Option<Vec<usize>> {
+        let n = self.varint_usize()?;
+        if n > self.remaining() {
+            return None; // each element takes >= 1 byte
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.varint_usize()?);
+        }
+        Some(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FNV-1a checksum
+// ---------------------------------------------------------------------------
+
+/// 64-bit FNV-1a over `bytes` — the segment payload checksum. Not
+/// cryptographic; it only needs to catch truncation, bit rot and torn
+/// writes, and to be dependency-free.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Wire frames
+// ---------------------------------------------------------------------------
+
+/// Prefix `payload` with its u32 length (the wire frame envelope).
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Try to split one complete frame off the front of `buf`. Returns
+/// `Ok(None)` when more bytes are needed, `Ok(Some((payload, total)))`
+/// with the payload slice and the total frame size consumed, or
+/// `Err(reason)` when the prefix itself is invalid (oversized length,
+/// zero-length payload) and the connection should be dropped.
+pub fn frame_payload(buf: &[u8]) -> Result<Option<(&[u8], usize)>, String> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len == 0 {
+        return Err("zero-length frame".to_string());
+    }
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(format!("oversized frame ({len} bytes)"));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some((&buf[4..4 + len], 4 + len)))
+}
+
+// ---------------------------------------------------------------------------
+// Block compression (LZSS, dependency-free)
+// ---------------------------------------------------------------------------
+
+/// Minimum match length the compressor emits (shorter matches cost
+/// more than the literals they replace).
+const MIN_MATCH: usize = 4;
+/// Maximum match length one token can carry: 0x80..=0xFF encode
+/// lengths MIN_MATCH..=MIN_MATCH+127.
+const MAX_MATCH: usize = MIN_MATCH + 127;
+/// Match window (u16 offset, 0 is invalid).
+const MAX_OFFSET: usize = u16::MAX as usize;
+
+/// Block-compress `data` with a greedy LZSS coder: token bytes
+/// `0x00..=0x7F` mean "copy the next `token+1` literal bytes"; tokens
+/// with the high bit set mean "copy `(token & 0x7F) + MIN_MATCH`
+/// bytes from `offset` (the following little-endian u16) back". Cold
+/// store segments are highly self-similar (repeated key prefixes), so
+/// even this dependency-free coder cuts them substantially.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    // Hash table of the most recent position of each 4-byte prefix.
+    const HASH_BITS: u32 = 15;
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let hash = |w: &[u8]| -> usize {
+        let v = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+        (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+    };
+    let mut lit_start = 0;
+    let mut i = 0;
+    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize| {
+        let mut p = from;
+        while p < to {
+            let run = (to - p).min(128);
+            out.push((run - 1) as u8);
+            out.extend_from_slice(&data[p..p + run]);
+            p += run;
+        }
+    };
+    while i + MIN_MATCH <= data.len() {
+        let h = hash(&data[i..i + 4]);
+        let cand = table[h];
+        table[h] = i;
+        let mut matched = 0;
+        if cand != usize::MAX && i - cand <= MAX_OFFSET && data[cand..cand + 4] == data[i..i + 4]
+        {
+            matched = 4;
+            let limit = (data.len() - i).min(MAX_MATCH);
+            while matched < limit && data[cand + matched] == data[i + matched] {
+                matched += 1;
+            }
+        }
+        if matched >= MIN_MATCH {
+            flush_literals(&mut out, lit_start, i);
+            out.push(0x80 | (matched - MIN_MATCH) as u8);
+            out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+            // Seed the table through the match so later repeats of its
+            // interior still find a candidate.
+            let end = (i + matched).min(data.len().saturating_sub(MIN_MATCH - 1));
+            let mut j = i + 1;
+            while j < end {
+                table[hash(&data[j..j + 4])] = j;
+                j += 1;
+            }
+            i += matched;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, lit_start, data.len());
+    out
+}
+
+/// Inverse of [`compress`]. Returns `None` on any malformed token
+/// (offset before the start of the output, truncated literal run or
+/// offset bytes) — corrupt compressed payloads degrade, never panic.
+pub fn decompress(data: &[u8]) -> Option<Vec<u8>> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut r = ByteReader::new(data);
+    while let Some(tok) = r.u8() {
+        if tok & 0x80 == 0 {
+            let run = usize::from(tok) + 1;
+            out.extend_from_slice(r.take(run)?);
+        } else {
+            let len = usize::from(tok & 0x7f) + MIN_MATCH;
+            let off_bytes = r.take(2)?;
+            let off = usize::from(u16::from_le_bytes(off_bytes.try_into().unwrap()));
+            if off == 0 || off > out.len() {
+                return None;
+            }
+            let start = out.len() - off;
+            for k in 0..len {
+                // Byte-at-a-time: matches may overlap their own output
+                // (RLE-style back-references with offset < len).
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// Store segments
+// ---------------------------------------------------------------------------
+
+/// One segment's position in a file — the explicit `Pos`-style index
+/// entry a resumable reader seeks by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SegPos {
+    /// Byte offset of the segment header within the segment stream.
+    pub offset: usize,
+    /// Entries the segment claims to carry.
+    pub entries: usize,
+    /// Whether the payload was block-compressed.
+    pub compressed: bool,
+}
+
+/// How [`read_segments`] treats a defective tail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadPolicy {
+    /// Any defect anywhere fails the whole read (the eval cache: a
+    /// damaged file degrades to a cold start, all-or-nothing).
+    Strict,
+    /// A defective or torn trailing segment is dropped and the
+    /// verified prefix returned (sweep checkpoints: a kill mid-write
+    /// must not discard the scenarios already completed).
+    Salvage,
+}
+
+/// A decoded segment: its payload (decompressed if needed), claimed
+/// entry count, and position index entry.
+pub struct Segment {
+    pub payload: Vec<u8>,
+    pub entries: usize,
+    pub pos: SegPos,
+}
+
+/// Append one segment block (header + checksummed payload) to `out`.
+/// `compress_payload` block-compresses the payload first (cold
+/// segments); appends of fresh single entries stay uncompressed so a
+/// crash tears at most the final partial block.
+pub fn write_segment(out: &mut Vec<u8>, payload: &[u8], entries: usize, compress_payload: bool) {
+    let stored: std::borrow::Cow<[u8]> =
+        if compress_payload { compress(payload).into() } else { payload.into() };
+    out.push(SEG_MAGIC);
+    out.push(if compress_payload { SEG_FLAG_COMPRESSED } else { 0 });
+    put_u32(out, stored.len() as u32);
+    put_u32(out, entries as u32);
+    put_u64(out, fnv1a64(&stored));
+    out.extend_from_slice(&stored);
+}
+
+/// Parse a stream of segment blocks. `Strict` returns `Err(reason)`
+/// on the first defect; `Salvage` stops at the first defect and
+/// returns the verified prefix. Either way every returned segment has
+/// a verified checksum and (when compressed) a valid decompression.
+pub fn read_segments(bytes: &[u8], policy: ReadPolicy) -> Result<Vec<Segment>, String> {
+    let mut segs = Vec::new();
+    let mut off = 0;
+    while off < bytes.len() {
+        match read_one_segment(&bytes[off..], off) {
+            Ok(seg) => {
+                off += SEG_HEADER_LEN + seg.pos_payload_len;
+                segs.push(seg.segment);
+            }
+            Err(why) => {
+                return match policy {
+                    ReadPolicy::Strict => Err(format!("{why} at offset {off}")),
+                    ReadPolicy::Salvage => Ok(segs),
+                };
+            }
+        }
+    }
+    Ok(segs)
+}
+
+struct ReadSeg {
+    segment: Segment,
+    pos_payload_len: usize,
+}
+
+fn read_one_segment(bytes: &[u8], offset: usize) -> Result<ReadSeg, String> {
+    let mut r = ByteReader::new(bytes);
+    let magic = r.u8().ok_or("truncated segment header")?;
+    if magic != SEG_MAGIC {
+        return Err(format!("bad segment magic 0x{magic:02x}"));
+    }
+    let flags = r.u8().ok_or("truncated segment header")?;
+    if flags & !SEG_FLAG_COMPRESSED != 0 {
+        return Err(format!("unknown segment flags 0x{flags:02x}"));
+    }
+    let payload_len = r.u32().ok_or("truncated segment header")? as usize;
+    if payload_len > MAX_SEGMENT_PAYLOAD {
+        return Err(format!("oversized segment ({payload_len} bytes)"));
+    }
+    let entries = r.u32().ok_or("truncated segment header")? as usize;
+    let checksum = r.u64().ok_or("truncated segment header")?;
+    let stored = r.take(payload_len).ok_or("truncated segment payload")?;
+    if fnv1a64(stored) != checksum {
+        return Err("segment checksum mismatch".to_string());
+    }
+    let compressed = flags & SEG_FLAG_COMPRESSED != 0;
+    let payload = if compressed {
+        decompress(stored).ok_or("corrupt compressed segment payload")?
+    } else {
+        stored.to_vec()
+    };
+    Ok(ReadSeg {
+        segment: Segment {
+            payload,
+            entries,
+            pos: SegPos { offset, entries, compressed },
+        },
+        pos_payload_len: payload_len,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn varints_roundtrip_across_the_range() {
+        let vals = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &vals {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = ByteReader::new(&buf);
+            assert_eq!(r.varint(), Some(v));
+            assert!(r.is_empty());
+        }
+    }
+
+    #[test]
+    fn strings_and_slices_roundtrip() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "hello|world\nwith newline");
+        put_usize_slice(&mut buf, &[0, 1, 300, usize::from(u16::MAX)]);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.str().as_deref(), Some("hello|world\nwith newline"));
+        assert_eq!(r.usize_slice(), Some(vec![0, 1, 300, usize::from(u16::MAX)]));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn nan_and_inf_f64s_roundtrip_bit_exactly() {
+        let vals = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, 1.5e-300];
+        let mut buf = Vec::new();
+        for &v in &vals {
+            put_f64_bits(&mut buf, v);
+        }
+        let mut r = ByteReader::new(&buf);
+        for &v in &vals {
+            assert_eq!(r.f64_bits().map(f64::to_bits), Some(v.to_bits()));
+        }
+    }
+
+    #[test]
+    fn frames_split_cleanly_and_reject_bad_prefixes() {
+        let f = frame(b"payload");
+        assert_eq!(frame_payload(&f).unwrap(), Some((&b"payload"[..], f.len())));
+        // Partial frame: need more bytes.
+        assert_eq!(frame_payload(&f[..3]).unwrap(), None);
+        assert_eq!(frame_payload(&f[..6]).unwrap(), None);
+        // Hostile prefixes are errors, not allocations.
+        assert!(frame_payload(&[0xff, 0xff, 0xff, 0x7f, 0]).is_err());
+        assert!(frame_payload(&frame(b"")).is_err());
+    }
+
+    #[test]
+    fn compression_roundtrips_and_shrinks_redundant_data() {
+        let mut data = Vec::new();
+        for i in 0..200u32 {
+            data.extend_from_slice(format!("key-prefix/{}/value|", i % 7).as_bytes());
+        }
+        let packed = compress(&data);
+        assert!(packed.len() < data.len(), "{} !< {}", packed.len(), data.len());
+        assert_eq!(decompress(&packed).as_deref(), Some(&data[..]));
+        // Incompressible and empty inputs still roundtrip.
+        let mut rng = Rng::new(42);
+        let noise: Vec<u8> = (0..1000).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        assert_eq!(decompress(&compress(&noise)).as_deref(), Some(&noise[..]));
+        assert_eq!(decompress(&compress(&[])).as_deref(), Some(&[][..]));
+    }
+
+    #[test]
+    fn decompress_rejects_bad_backrefs_without_panicking() {
+        // Match token referencing before the start of output.
+        assert_eq!(decompress(&[0x80, 0x05, 0x00]), None);
+        // Zero offset.
+        assert_eq!(decompress(&[0x00, b'a', 0x80, 0x00, 0x00]), None);
+        // Truncated literal run.
+        assert_eq!(decompress(&[0x05, b'a']), None);
+        // Truncated offset.
+        assert_eq!(decompress(&[0x00, b'a', 0x80]), None);
+    }
+
+    #[test]
+    fn segments_roundtrip_and_carry_an_index() {
+        let mut stream = Vec::new();
+        write_segment(&mut stream, b"first payload first payload", 3, true);
+        let second_at = stream.len();
+        write_segment(&mut stream, b"second", 1, false);
+        let segs = read_segments(&stream, ReadPolicy::Strict).unwrap();
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].payload, b"first payload first payload");
+        assert_eq!(segs[0].entries, 3);
+        assert_eq!(segs[0].pos, SegPos { offset: 0, entries: 3, compressed: true });
+        assert_eq!(segs[1].payload, b"second");
+        assert_eq!(segs[1].pos, SegPos { offset: second_at, entries: 1, compressed: false });
+    }
+
+    #[test]
+    fn strict_fails_and_salvage_keeps_the_verified_prefix() {
+        let mut stream = Vec::new();
+        write_segment(&mut stream, b"complete", 1, false);
+        let torn_from = stream.len();
+        write_segment(&mut stream, b"will be torn", 1, false);
+        let torn = &stream[..torn_from + SEG_HEADER_LEN + 3];
+        assert!(read_segments(torn, ReadPolicy::Strict).is_err());
+        let salvaged = read_segments(torn, ReadPolicy::Salvage).unwrap();
+        assert_eq!(salvaged.len(), 1);
+        assert_eq!(salvaged[0].payload, b"complete");
+        // Flipping a payload bit fails the checksum under both modes.
+        let mut flipped = stream.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        assert!(read_segments(&flipped, ReadPolicy::Strict).is_err());
+        assert_eq!(read_segments(&flipped, ReadPolicy::Salvage).unwrap().len(), 1);
+    }
+}

@@ -4,6 +4,7 @@
 //! vendored, so the PRNG, JSON handling and property-testing helpers that
 //! would normally come from `rand` / `serde_json` / `proptest` live here.
 
+pub mod codec;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -138,18 +138,29 @@ fn corrupt_or_truncated_cache_degrades_to_clean_cold_start() {
         let broker = EvalBroker::with_store(backend("local", seed), store);
         run_scenario(&broker, &sc);
     }
-    let pristine = fs::read_to_string(&path).unwrap();
+    let pristine = fs::read(&path).unwrap();
+    assert!(pristine.starts_with(b"nahas-cache v2 "), "cold run must spill the v2 format");
 
-    // Cut mid-entry (right after the last key/value separator), the
-    // shape a crash mid-append leaves behind.
-    let cut = pristine.rfind('|').unwrap() + 1;
-    let damages: Vec<(&str, String)> = vec![
-        ("truncated", pristine[..cut].to_string()),
-        ("corrupt line", format!("{pristine}not,a|valid entry\n")),
-        ("binary garbage", format!("{pristine}\u{1}\u{2}\u{3}")),
-    ];
-    for (name, text) in damages {
-        fs::write(&path, text).unwrap();
+    // Cut mid-segment (a crash mid-append), append garbage after the
+    // last segment (bad magic), and flip a payload byte (checksum
+    // mismatch): the eval cache reads strictly, so each must discard
+    // the whole file rather than salvage around the damage.
+    let truncated = pristine[..pristine.len() - 3].to_vec();
+    let bad_magic = {
+        let mut b = pristine.clone();
+        b.extend_from_slice(&[0x00, 0x01, 0x02]);
+        b
+    };
+    let flipped = {
+        let mut b = pristine.clone();
+        let i = b.len() - 1;
+        b[i] ^= 0x40;
+        b
+    };
+    let damages: Vec<(&str, Vec<u8>)> =
+        vec![("truncated", truncated), ("bad magic", bad_magic), ("checksum flip", flipped)];
+    for (name, bytes) in damages {
+        fs::write(&path, &bytes).unwrap();
         let store = CacheStore::open(&path, &fp).unwrap();
         assert!(store.discarded().is_some(), "{name}: damage must be detected");
         assert_eq!(store.loaded_len(), 0, "{name}: nothing salvaged");
@@ -166,6 +177,107 @@ fn corrupt_or_truncated_cache_degrades_to_clean_cold_start() {
         assert!(store.discarded().is_none(), "{name}: restart left a bad file");
         assert!(store.loaded_len() > 0, "{name}: cold start did not re-spill");
     }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn v1_text_cache_loads_under_v2_reader_bit_identically() {
+    use nahas::search::store::STORE_FORMAT;
+    use nahas::search::CacheValue;
+
+    let seed = 7u64;
+    let dir = tmp_dir("v1-migrate");
+    let path = dir.join("evals.cache");
+    let fp = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, seed);
+    let sc = scenarios(seed).remove(0);
+
+    // Reference cold run and a populated v2 file to harvest entries.
+    let want = run_scenario(&EvalBroker::new(backend("local", seed)), &sc);
+    {
+        let store = CacheStore::open(&path, &fp).unwrap();
+        let broker = EvalBroker::with_store(backend("local", seed), store);
+        run_scenario(&broker, &sc);
+    }
+    let mut store = CacheStore::open(&path, &fp).unwrap();
+    assert!(store.discarded().is_none());
+    let entries = store.take_loaded();
+    assert!(!entries.is_empty());
+    drop(store);
+
+    // Rewrite the same entries as a v1 text file — the format earlier
+    // releases spilled.
+    let mut text = format!("{STORE_FORMAT} {fp}\n");
+    for (k, v) in &entries {
+        let key: Vec<String> = k.iter().map(|d| d.to_string()).collect();
+        text.push_str(&format!("{}|{}\n", key.join(","), v.encode()));
+    }
+    fs::write(&path, text).unwrap();
+
+    // The v2 reader loads the v1 file bit-identically: a warm run off
+    // it replays the whole scenario with zero backend evaluations.
+    let store = CacheStore::open(&path, &fp).unwrap();
+    assert!(store.discarded().is_none(), "v1 file must stay loadable under the v2 reader");
+    assert_eq!(store.loaded_len(), entries.len(), "every v1 entry must load");
+    let broker = EvalBroker::with_store(backend("local", seed), store);
+    let got = run_scenario(&broker, &sc);
+    assert_scenario_identical(&want, &got, "v1 migration");
+    assert_eq!(broker.backend_stats().requests, 0, "v1-warmed run touched the backend");
+    drop(broker);
+    // And opening it migrated the file to the v2 binary format.
+    let bytes = fs::read(&path).unwrap();
+    assert!(bytes.starts_with(b"nahas-cache v2 "), "v1 file was not migrated to v2");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_sweep_resumes_from_checkpoint_without_reevaluating() {
+    use nahas::search::{run_sweep_resumable, SweepCheckpoint};
+
+    let seed = 42u64;
+    let dir = tmp_dir("sweep-resume");
+    let fp = eval_fingerprint(NasSpaceId::EfficientNet, Task::Classification, seed);
+    let scs = scenarios(seed);
+
+    // Reference: the whole sweep, no checkpointing.
+    let want = run_sweep(&EvalBroker::new(backend("local", seed)), &scs);
+
+    // "Killed" run: only the first two scenarios complete before the
+    // process dies (simulated by sweeping a prefix of the list).
+    {
+        let mut ckpt = SweepCheckpoint::open(&dir, &fp).unwrap();
+        assert_eq!(ckpt.loaded_len(), 0);
+        let broker = EvalBroker::new(backend("local", seed));
+        run_sweep_resumable(&broker, &scs[..2], Some(&mut ckpt), 2);
+        assert_eq!(ckpt.recorded(), 2);
+    }
+
+    // Restart: the completed scenarios replay from the checkpoint —
+    // only the unfinished one costs backend work.
+    let mut ckpt = SweepCheckpoint::open(&dir, &fp).unwrap();
+    assert!(ckpt.discarded().is_none(), "clean checkpoint must reload");
+    assert_eq!(ckpt.loaded_len(), 2);
+    let broker = EvalBroker::new(backend("local", seed));
+    let got = run_sweep_resumable(&broker, &scs, Some(&mut ckpt), scs.len());
+    assert_eq!(ckpt.resumed(), 2, "both completed scenarios must resume");
+    assert_eq!(ckpt.recorded(), 1, "only the unfinished scenario is recorded");
+    assert!(broker.stats().requests > 0, "the unfinished scenario still needs evaluating");
+    for (w, g) in want.outcomes.iter().zip(&got.outcomes) {
+        assert_scenario_identical(w, g, &format!("resume, {}", w.scenario.name));
+    }
+    assert_eq!(want.union, got.union, "resume: union frontier");
+    drop(broker);
+
+    // Second restart: everything is checkpointed — zero re-evaluations.
+    let mut ckpt = SweepCheckpoint::open(&dir, &fp).unwrap();
+    assert_eq!(ckpt.loaded_len(), 3);
+    let broker = EvalBroker::new(backend("local", seed));
+    let again = run_sweep_resumable(&broker, &scs, Some(&mut ckpt), scs.len());
+    assert_eq!(ckpt.resumed(), 3);
+    assert_eq!(broker.stats().requests, 0, "fully-checkpointed sweep re-evaluated");
+    for (w, g) in want.outcomes.iter().zip(&again.outcomes) {
+        assert_scenario_identical(w, g, &format!("full resume, {}", w.scenario.name));
+    }
+    assert_eq!(want.union, again.union, "full resume: union frontier");
     let _ = fs::remove_dir_all(&dir);
 }
 

@@ -11,8 +11,10 @@ use std::path::PathBuf;
 use nahas::has::{validate, HasSpace};
 use nahas::nas::{NasSpace, NasSpaceId};
 use nahas::search::{
-    CacheStore, EvalBroker, EvalResult, Evaluator, MemoCache, ParallelSim, SurrogateSim,
+    CacheStore, CacheValue, EvalBroker, EvalResult, Evaluator, MemoCache, ParallelSim,
+    SurrogateSim,
 };
+use nahas::util::codec::{self, ByteReader, ReadPolicy};
 use nahas::util::proptest;
 use nahas::util::Rng;
 
@@ -326,6 +328,161 @@ fn prop_append_then_reload_equals_in_memory_map() {
                 memo.entries().map(|(k, v)| (k.to_vec(), bits(v))).collect();
             if got != want {
                 return Err(format!("disk {} entries vs memory {}", got.len(), want.len()));
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---- binary codec properties (`nahas::util::codec`) ----
+
+/// The wire frame codec round-trips arbitrary cache entries — NaN,
+/// infinity, subnormal and negative-zero metric values included —
+/// bit-exactly through a concatenated frame stream, the same encoding
+/// the binary service protocol and the v2 cache segments carry.
+#[test]
+fn prop_frame_codec_roundtrips_arbitrary_entries_bit_exactly() {
+    proptest::check(
+        "wire frames roundtrip entries",
+        128,
+        |r| {
+            let n = 1 + r.below(12);
+            arbitrary_entries(r, n)
+        },
+        |entries| {
+            let mut buf = Vec::new();
+            for (k, v) in entries {
+                let mut payload = Vec::new();
+                codec::put_usize_slice(&mut payload, k);
+                v.encode_bin(&mut payload);
+                buf.extend_from_slice(&codec::frame(&payload));
+            }
+            let mut at = 0;
+            let mut got: Vec<(Vec<usize>, EvalResult)> = Vec::new();
+            while at < buf.len() {
+                let Some((payload, used)) = codec::frame_payload(&buf[at..])? else {
+                    return Err("complete stream parsed as incomplete".to_string());
+                };
+                let mut rd = ByteReader::new(payload);
+                let k = rd.usize_slice().ok_or_else(|| "bad key".to_string())?;
+                let v =
+                    EvalResult::decode_bin(&mut rd).ok_or_else(|| "bad value".to_string())?;
+                if !rd.is_empty() {
+                    return Err("trailing payload bytes".to_string());
+                }
+                got.push((k, v));
+                at += used;
+            }
+            if got.len() != entries.len() {
+                return Err(format!("{} frames decoded of {}", got.len(), entries.len()));
+            }
+            for ((wk, wv), (gk, gv)) in entries.iter().zip(&got) {
+                if wk != gk || bits(wv) != bits(gv) {
+                    return Err(format!("entry diverged: {wk:?}/{wv:?} vs {gk:?}/{gv:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Truncating or bit-flipping a framed stream never panics the parser
+/// and never stalls it: every step either consumes bytes, reports an
+/// incomplete tail, or rejects the stream with an error. The segment
+/// reader gets the same fuzz, and Salvage mode must never error.
+#[test]
+fn prop_mangled_frame_and_segment_streams_never_panic_or_stall() {
+    proptest::check(
+        "mangled byte streams parse totally",
+        128,
+        |r| {
+            let entries = arbitrary_entries(r, 1 + r.below(8));
+            let mut buf = Vec::new();
+            for (k, v) in &entries {
+                let mut payload = Vec::new();
+                codec::put_usize_slice(&mut payload, k);
+                v.encode_bin(&mut payload);
+                buf.extend_from_slice(&codec::frame(&payload));
+                let mut seg = Vec::new();
+                codec::write_segment(&mut seg, &payload, 1, r.below(2) == 0);
+                buf.extend_from_slice(&seg);
+            }
+            // Mutate: truncate to an arbitrary prefix, then flip a bit.
+            buf.truncate(r.below(buf.len() + 1));
+            if !buf.is_empty() {
+                let i = r.below(buf.len());
+                buf[i] ^= 1 << r.below(8);
+            }
+            buf
+        },
+        |buf| {
+            let mut at = 0;
+            while at < buf.len() {
+                match codec::frame_payload(&buf[at..]) {
+                    Ok(Some((_, used))) => {
+                        if used == 0 {
+                            return Err("frame parser made no progress".to_string());
+                        }
+                        at += used;
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+            // Strict may reject, Salvage must always return a (possibly
+            // empty) verified prefix; neither may panic.
+            let _ = codec::read_segments(buf, ReadPolicy::Strict);
+            if let Err(e) = codec::read_segments(buf, ReadPolicy::Salvage) {
+                return Err(format!("salvage read errored: {e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Damaged or stale v2 cache files degrade, never panic and never
+/// invent data: whatever a reopen loads is byte-for-byte something the
+/// writer wrote (the checksummed segments guarantee it), and a
+/// fingerprint mismatch always discards with a reason.
+#[test]
+fn prop_corrupt_or_stale_v2_store_files_cold_start_cleanly() {
+    let path = tmp("corrupt-v2");
+    proptest::check(
+        "corrupt v2 store bytes degrade cleanly",
+        64,
+        |r| {
+            let n = 1 + r.below(12);
+            (arbitrary_entries(r, n), r.next_u64(), r.next_u64())
+        },
+        |(entries, m, pos)| {
+            let _ = std::fs::remove_file(&path);
+            {
+                let mut store: CacheStore =
+                    CacheStore::open(&path, "prop/fp").map_err(|e| e.to_string())?;
+                for (k, v) in entries {
+                    store.append(k, *v);
+                }
+            }
+            let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+            let kind = m % 3;
+            let fp = if kind == 2 { "prop/other-fp" } else { "prop/fp" };
+            if kind == 0 {
+                bytes.truncate(*pos as usize % (bytes.len() + 1));
+            } else if kind == 1 {
+                let i = *pos as usize % bytes.len();
+                bytes[i] ^= 1 << (m % 8) as u8;
+            }
+            std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+            let mut store: CacheStore =
+                CacheStore::open(&path, fp).map_err(|e| e.to_string())?;
+            if kind == 2 && !store.discarded().is_some_and(|w| w.contains("fingerprint")) {
+                return Err(format!("stale header not discarded: {:?}", store.discarded()));
+            }
+            for (k, v) in &store.take_loaded() {
+                let genuine = entries.iter().any(|(wk, wv)| wk == k && bits(wv) == bits(v));
+                if !genuine {
+                    return Err(format!("loaded entry {k:?} was never written"));
+                }
             }
             Ok(())
         },
