@@ -1,0 +1,106 @@
+//! §Perf — simulator hot-path A/B: per-eval allocation vs batch-level
+//! scratch reuse.
+//!
+//! `SurrogateSim::evaluate_pure` historically rebuilt the decoded
+//! `NetworkIr` (layer `Vec` + name `String`, plus the segmentation
+//! variant's second network) from scratch for every sample, and the
+//! timing model recomputed its per-config constants for every layer.
+//! The hot path now decodes into a caller-owned [`SimScratch`]
+//! (`evaluate_pure_in`) and hoists the per-config constants once per
+//! network (`CostCtx`). This bench pins the contract and measures the
+//! win:
+//!
+//! * A — the old shape: `evaluate_pure`, fresh allocations per eval;
+//! * B — the batch shape: `evaluate_pure_in` with one reused scratch;
+//! * the two must produce **bit-identical** `EvalResult`s on the same
+//!   random sample set (asserted, not eyeballed), because the broker
+//!   memo cache and every equivalence test key on exact bits;
+//! * the before/after wall-clock row goes in
+//!   `docs/BENCH_TRAJECTORY.md` §perf_sim_hotpath.
+
+use nahas::bench;
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{EvalResult, SimScratch, SurrogateSim};
+use nahas::util::Rng;
+
+fn bits(r: &EvalResult) -> (bool, u64, u64, u64, u64) {
+    (
+        r.valid,
+        r.acc.to_bits(),
+        r.latency_ms.to_bits(),
+        r.energy_mj.to_bits(),
+        r.area_mm2.to_bits(),
+    )
+}
+
+fn main() {
+    let sim = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3);
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(7);
+    let samples: Vec<(Vec<usize>, Vec<usize>)> =
+        (0..256).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect();
+
+    // Contract first: scratch reuse must not change a single bit.
+    let mut scratch = SimScratch::default();
+    for (nas_d, has_d) in &samples {
+        let a = sim.evaluate_pure(nas_d, has_d);
+        let b = sim.evaluate_pure_in(nas_d, has_d, &mut scratch);
+        assert_eq!(bits(&a), bits(&b), "scratch reuse changed a result for {nas_d:?}");
+    }
+    println!("bit-identity: {} samples, alloc-per-eval == scratch-reuse", samples.len());
+
+    // A: the pre-optimization shape (allocate per eval).
+    let a = bench::bench("sim hot path A: evaluate_pure (alloc per eval)", 5, 40, || {
+        let mut acc = 0u64;
+        for (nas_d, has_d) in &samples {
+            acc ^= sim.evaluate_pure(nas_d, has_d).latency_ms.to_bits();
+        }
+        acc
+    });
+
+    // B: the batch shape (one scratch across the sample set) — what
+    // `SurrogateSim::evaluate_batch` and `ParallelSim` workers run.
+    let b = bench::bench("sim hot path B: evaluate_pure_in (scratch reuse)", 5, 40, || {
+        let mut scratch = SimScratch::default();
+        let mut acc = 0u64;
+        for (nas_d, has_d) in &samples {
+            acc ^= sim.evaluate_pure_in(nas_d, has_d, &mut scratch).latency_ms.to_bits();
+        }
+        acc
+    });
+
+    let per_eval_a = a.mean_ns / samples.len() as f64;
+    let per_eval_b = b.mean_ns / samples.len() as f64;
+    println!(
+        "    -> A {:.2} us/eval, B {:.2} us/eval, speedup {:.2}x \
+         ({:.0} evals/s warm path)",
+        per_eval_a / 1e3,
+        per_eval_b / 1e3,
+        per_eval_a / per_eval_b,
+        1e9 / per_eval_b
+    );
+
+    // Segmentation doubles the decode work (backbone + seg variant),
+    // so the scratch win there bounds the multi-task sweeps.
+    let seg = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), 3).segmentation();
+    let mut scratch = SimScratch::default();
+    for (nas_d, has_d) in samples.iter().take(64) {
+        let a = seg.evaluate_pure(nas_d, has_d);
+        let b = seg.evaluate_pure_in(nas_d, has_d, &mut scratch);
+        assert_eq!(bits(&a), bits(&b), "seg scratch reuse changed a result");
+    }
+    let sb = bench::bench("sim hot path B (segmentation task)", 5, 20, || {
+        let mut scratch = SimScratch::default();
+        let mut acc = 0u64;
+        for (nas_d, has_d) in &samples {
+            acc ^= seg.evaluate_pure_in(nas_d, has_d, &mut scratch).latency_ms.to_bits();
+        }
+        acc
+    });
+    println!(
+        "    -> segmentation {:.2} us/eval with scratch reuse",
+        sb.mean_ns / samples.len() as f64 / 1e3
+    );
+}

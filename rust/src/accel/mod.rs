@@ -26,3 +26,4 @@ pub mod timing;
 
 pub use config::AcceleratorConfig;
 pub use simulator::{simulate_network, simulate_network_detailed, SimError, SimReport};
+pub use timing::{layer_cost, layer_cost_ctx, CostCtx, LayerCost};

@@ -9,7 +9,7 @@
 use super::area::chip_area_mm2;
 use super::config::{AcceleratorConfig, CLOCK_GHZ};
 use super::energy::{layer_dynamic_energy_j, leakage_energy_j};
-use super::timing::{layer_cost, LayerCost};
+use super::timing::{layer_cost_ctx, CostCtx, LayerCost};
 use crate::model::NetworkIr;
 
 /// Why a (model, hw) pairing could not be simulated — the paper's
@@ -97,9 +97,11 @@ fn simulate_inner(
     let mut util_weighted = 0.0f64;
     // The network input arrives from DRAM.
     let mut prev_retained = false;
+    // Per-config cost-model constants, hoisted out of the layer loop.
+    let ctx = CostCtx::new(cfg);
 
     for li in &net.layers {
-        let cost = layer_cost(cfg, li, prev_retained, weights_resident)?;
+        let cost = layer_cost_ctx(cfg, &ctx, li, prev_retained, weights_resident)?;
         // Retain this layer's output on-chip iff it fits in the
         // retention slice of local memory (then the next layer skips its
         // input fetch and we skip this output's write-back).

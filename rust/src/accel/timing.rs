@@ -117,12 +117,58 @@ fn input_tile_bytes(cfg: &AcceleratorConfig, li: &LayerInstance) -> (u64, u64) {
     (ih * iw * cin, (k - 1) * iw * cin)
 }
 
+/// Per-configuration constants of the cost model, hoisted out of the
+/// per-layer loop: every field is a pure function of the
+/// [`AcceleratorConfig`] alone, recomputed identically for each layer
+/// before this struct existed. Build one per config (one network walk)
+/// and feed every [`layer_cost_ctx`] call — bit-identical to the
+/// per-layer recomputation by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct CostCtx {
+    /// Register-file accumulator capacity, in accumulator elements.
+    acc_elems: u64,
+    /// Usable PE-local memory, bytes.
+    usable: u64,
+    /// DMA bytes per core cycle at the config's IO bandwidth.
+    bytes_per_cycle: f64,
+    /// Peak MACs per cycle across the whole array.
+    peak_macs_cycle: f64,
+}
+
+impl CostCtx {
+    pub fn new(cfg: &AcceleratorConfig) -> Self {
+        CostCtx {
+            acc_elems: ((cfg.register_file_kb * 1024) as f64 * RF_ACC_FRACTION
+                / ACC_BYTES as f64)
+                .max(1.0) as u64,
+            usable: (cfg.local_memory_mb * 1e6 * MEM_USABLE_FRACTION).max(1.0) as u64,
+            bytes_per_cycle: cfg.io_bandwidth_gbps / super::config::CLOCK_GHZ,
+            peak_macs_cycle: (cfg.num_pes() * cfg.compute_lanes * cfg.macs_per_lane_cycle())
+                as f64,
+        }
+    }
+}
+
 /// Full per-layer cost. `input_retained` skips the input DRAM fetch
 /// (activations already resident from the previous layer);
 /// `weights_resident` skips the weight DRAM stream (the whole network's
-/// weights are pinned on-chip — steady-state serving).
+/// weights are pinned on-chip — steady-state serving). Builds a fresh
+/// [`CostCtx`] per call; network walks build one and call
+/// [`layer_cost_ctx`] directly.
 pub fn layer_cost(
     cfg: &AcceleratorConfig,
+    li: &LayerInstance,
+    input_retained: bool,
+    weights_resident: bool,
+) -> Result<LayerCost, SimError> {
+    layer_cost_ctx(cfg, &CostCtx::new(cfg), li, input_retained, weights_resident)
+}
+
+/// [`layer_cost`] with the per-config constants precomputed — the
+/// simulator hot path (`ctx` must be built from this `cfg`).
+pub fn layer_cost_ctx(
+    cfg: &AcceleratorConfig,
+    ctx: &CostCtx,
     li: &LayerInstance,
     input_retained: bool,
     weights_resident: bool,
@@ -133,10 +179,7 @@ pub fn layer_cost(
     let (lane_cycles, out_elems_lane) = lane_compute_cycles(cfg, li);
 
     // Register-file accumulation chunks.
-    let acc_elems = ((cfg.register_file_kb * 1024) as f64 * RF_ACC_FRACTION
-        / ACC_BYTES as f64)
-        .max(1.0) as u64;
-    let rf_chunks = ceil_div(out_elems_lane, acc_elems);
+    let rf_chunks = ceil_div(out_elems_lane, ctx.acc_elems);
     let compute_cycles = lane_cycles + rf_chunks * RF_DRAIN_CYCLES;
 
     // PE-local working set. Oversized activation tiles are row-striped:
@@ -144,8 +187,7 @@ pub fn layer_cost(
     // mapper's fallback for high-resolution layers), each stripe
     // re-fetching its halo rows; the mapping only fails when even one
     // stripe cannot fit.
-    let usable =
-        (cfg.local_memory_mb * 1e6 * MEM_USABLE_FRACTION).max(1.0) as u64;
+    let usable = ctx.usable;
     let (in_tile, halo_row) = input_tile_bytes(cfg, li);
     let out_tile = ceil_div(out_bytes, cfg.num_pes() as u64);
     let act_split = ceil_div(in_tile + out_tile, usable).max(1);
@@ -184,22 +226,19 @@ pub fn layer_cost(
         + out_bytes;
 
     // DMA cycles at io bandwidth (bytes per core cycle).
-    let bytes_per_cycle = cfg.io_bandwidth_gbps / super::config::CLOCK_GHZ;
-    let dma_cycles = (dram_read as f64 / bytes_per_cycle).ceil() as u64;
+    let dma_cycles = (dram_read as f64 / ctx.bytes_per_cycle).ceil() as u64;
 
     // Pass walk with double buffering: DMA of pass i+1 overlaps compute
-    // of pass i.
+    // of pass i. Every pass costs the same, so the walk closes to one
+    // multiply (exact u64 arithmetic — identical to the loop it
+    // replaces): pipeline fill, then n identical overlapped passes.
     let comp_per_pass = ceil_div(compute_cycles, n_passes);
     let dma_per_pass = ceil_div(dma_cycles, n_passes);
-    let mut cycles = dma_per_pass; // pipeline fill
-    for _ in 0..n_passes {
-        cycles += comp_per_pass.max(dma_per_pass) + PASS_OVERHEAD_CYCLES;
-    }
-    cycles += LAYER_OVERHEAD_CYCLES;
+    let cycles = dma_per_pass
+        + n_passes * (comp_per_pass.max(dma_per_pass) + PASS_OVERHEAD_CYCLES)
+        + LAYER_OVERHEAD_CYCLES;
 
-    let peak_macs_cycle =
-        (cfg.num_pes() * cfg.compute_lanes * cfg.macs_per_lane_cycle()) as f64;
-    let utilization = macs as f64 / (cycles as f64 * peak_macs_cycle);
+    let utilization = macs as f64 / (cycles as f64 * ctx.peak_macs_cycle);
 
     Ok(LayerCost {
         cycles,

@@ -434,6 +434,10 @@ impl Evaluator for ShardedEvaluator {
         self.pool.total_conns()
     }
 
+    fn wire_bytes(&self) -> (u64, u64) {
+        self.pool.wire_bytes()
+    }
+
     fn stats(&self) -> EvalStats {
         let mut st = self.counters.stats();
         let snaps = self.pool.snapshot();

@@ -149,6 +149,17 @@ impl HostPool {
         self.conns.iter().map(Vec::len).sum::<usize>().max(1)
     }
 
+    /// Total (bytes written, bytes read) across every host's
+    /// connection sub-pool. Connections replaced by a transparent
+    /// reconnect (or a host-recovery refill) restart their counters.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        self.conns
+            .iter()
+            .flat_map(|sub| sub.iter())
+            .map(Client::wire_bytes)
+            .fold((0, 0), |(tx, rx), (t, r)| (tx + t, rx + r))
+    }
+
     /// Shared states, for handing to a [`super::HealthMonitor`].
     pub fn shared_hosts(&self) -> Arc<Vec<HostState>> {
         self.hosts.clone()

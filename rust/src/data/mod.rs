@@ -152,7 +152,7 @@ mod tests {
                 .min_by(|&a, &b| {
                     let da: f32 = f.iter().zip(&cents[a]).map(|(u, v)| (u - v) * (u - v)).sum();
                     let db: f32 = f.iter().zip(&cents[b]).map(|(u, v)| (u - v) * (u - v)).sum();
-                    da.partial_cmp(&db).unwrap()
+                    da.total_cmp(&db)
                 })
                 .unwrap();
             if best == y[i] as usize {

@@ -39,9 +39,10 @@ use nahas::search::store::{
 };
 use nahas::search::{
     builtin_registry, compile_substrates, evolution::EvolutionController, joint_search,
-    run_sweep_resumable, scenario_grid, CacheStore, CacheValue, Controller, CostObjective,
-    EvalBroker, Evaluator, MultiTaskEval, ParallelSim, RandomController, RewardCfg, Scenario,
-    SearchCfg, SubstrateParams, SurrogateSim, SweepCheckpoint, SweepDriver, Task,
+    run_sweep_observed, scenario_grid, BrokerSnapshot, CacheStore, CacheValue, Controller,
+    CostObjective, EvalBroker, Evaluator, MultiTaskEval, ParallelSim, RandomController,
+    RewardCfg, Scenario, SearchCfg, SubstrateParams, SurrogateSim, SweepCheckpoint,
+    SweepDriver, SweepProgress, Task,
 };
 use nahas::service::{ServeCache, Server, ServerOpts, ServiceEvaluator, Wire};
 use nahas::trainer::ProxyTrainer;
@@ -492,6 +493,8 @@ fn print_usage() {
          \x20              [--checkpoint DIR  resumable sweep: completed scenarios\n\
          \x20              \x20survive a kill and replay bit-identically on re-run]\n\
          \x20              [--sweep-threads N  concurrent scenarios (default: all)]\n\
+         \x20              [--metrics FILE --metrics-interval SECS  live JSONL rows +\n\
+         \x20              \x20a stderr progress line while the sweep runs]\n\
          \x20              runs all scenarios concurrently over one shared broker\n\
          \x20 scenarios    list registered scenario substrates (for sweep --scenario)\n\
          \x20 phase        [--space s2 --samples 500 --target-ms 0.5 --seed S]\n\
@@ -503,6 +506,7 @@ fn print_usage() {
          \x20 costmodel    [--data 2000 --train-steps 600 --eval 256 --space s2]\n\
          \x20 serve        [--addr 127.0.0.1:7878 --cache-dir DIR]\n\
          \x20              [--event-threads N --sim-workers N  event-loop sizing]\n\
+         \x20              [--metrics FILE --metrics-interval SECS  live JSONL rows]\n\
          \x20 cluster-status [--hosts a:7878,b:7878=2 --timeout-ms 1000]"
     );
 }
@@ -811,7 +815,34 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
         None => None,
     };
     let threads = flags.usize("sweep-threads", scenarios.len())?.max(1);
-    let out = run_sweep_resumable(&broker, &scenarios, ckpt.as_mut(), threads);
+    // `--metrics FILE`: live JSONL side channel (one row per
+    // `--metrics-interval` seconds) plus a progress line on stderr.
+    // Observation is read-only — the broker snapshot never waits out a
+    // dispatch and the progress gauge is relaxed atomics — so search
+    // results are bit-identical with or without it
+    // (`tests/metrics_stream.rs`).
+    let progress = std::sync::Arc::new(SweepProgress::new());
+    let streamer = match flags.get("metrics") {
+        Some(path) => {
+            let interval = flags.f64("metrics-interval", 5.0)?;
+            let sink = metrics::MetricsSink::create(path)?;
+            println!("live metrics -> {path} (one row every {interval}s)");
+            Some(metrics::MetricsStreamer::spawn(
+                broker.clone(),
+                sink,
+                std::time::Duration::from_secs_f64(interval.max(0.05)),
+                Some(progress.clone()),
+            ))
+        }
+        None => None,
+    };
+    let out = run_sweep_observed(&broker, &scenarios, ckpt.as_mut(), threads, Some(&progress));
+    if let Some(s) = streamer {
+        // Emits one final row + the final stderr summary (the metrics
+        // CI smoke greps both), and surfaces any stream write error.
+        let (path, rows) = s.stop()?;
+        println!("metrics stream: {rows} rows -> {}", path.display());
+    }
     if let Some(c) = &ckpt {
         // Resumed scenarios replay from the checkpoint file and never
         // reach the broker, so their re-evaluation count is zero by
@@ -1051,6 +1082,27 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         "simulator service on {} ({} event threads, {} sim workers); Ctrl-C to stop",
         server.addr, opts.event_threads, opts.sim_workers
     );
+    // `--metrics FILE`: one JSONL row per `--metrics-interval` seconds
+    // from the server's own counters — same row schema as the sweep
+    // stream, with `requests` the simulate requests (hits + evals) so
+    // `cache_hits` is exactly the serve cache's hit counter; the
+    // dispatch gauges stay zero (there is no broker here).
+    if let Some(path) = flags.get("metrics") {
+        let interval = flags.f64("metrics-interval", 5.0)?.max(0.05);
+        let mut sink = metrics::MetricsSink::create(path)?;
+        println!("live metrics -> {path} (one row every {interval}s)");
+        let t0 = std::time::Instant::now();
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+            let relaxed = std::sync::atomic::Ordering::Relaxed;
+            let hits = server.cache.hits.load(relaxed) as usize;
+            let evals = server.cache.sim_evals.load(relaxed) as usize;
+            let snap =
+                BrokerSnapshot { requests: hits + evals, evals, ..Default::default() };
+            let row = sink.emit(t0.elapsed().as_secs_f64(), &snap, None)?;
+            eprintln!("{}", row.progress_line());
+        }
+    }
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

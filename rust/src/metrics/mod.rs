@@ -1,6 +1,10 @@
 //! Run logging: CSV/JSON emitters for search histories and bench rows,
-//! written under `results/` so every paper figure can be re-plotted.
+//! written under `results/` so every paper figure can be re-plotted —
+//! plus [`stream`]: the live JSONL metrics side channel
+//! (`--metrics FILE --metrics-interval SECS`) that makes long sweeps
+//! observable while they run.
 
+use std::collections::VecDeque;
 use std::io::Write;
 use std::path::Path;
 
@@ -8,11 +12,16 @@ use anyhow::{Context, Result};
 
 use crate::search::joint::Sample;
 
+pub mod stream;
+
+pub use stream::{MetricsRow, MetricsSink, MetricsStreamer};
+
 /// Write a search history as CSV (one row per trial — the raw data
 /// behind Fig. 7's scatter and Fig. 9's curves).
 pub fn write_history_csv(path: impl AsRef<Path>, history: &[Sample]) -> Result<()> {
     if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent).ok();
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating parent directory {parent:?}"))?;
     }
     let mut f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("creating {:?}", path.as_ref()))?;
@@ -40,9 +49,11 @@ pub fn write_csv(
     rows: &[Vec<String>],
 ) -> Result<()> {
     if let Some(parent) = path.as_ref().parent() {
-        std::fs::create_dir_all(parent).ok();
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating parent directory {parent:?}"))?;
     }
-    let mut f = std::fs::File::create(path.as_ref())?;
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
     writeln!(f, "{}", headers.join(","))?;
     for r in rows {
         writeln!(f, "{}", r.join(","))?;
@@ -56,7 +67,7 @@ pub struct RewardCurve {
     pub steps: Vec<usize>,
     pub mean: Vec<f64>,
     pub max: Vec<f64>,
-    window: Vec<f64>,
+    window: VecDeque<f64>,
     best: f64,
 }
 
@@ -66,9 +77,13 @@ impl RewardCurve {
     }
 
     pub fn push(&mut self, step: usize, reward: f64, window: usize) {
-        self.window.push(reward);
+        // Ring buffer: O(1) per push where `Vec::remove(0)` was O(n)
+        // (quadratic over a long search). The deque iterates front to
+        // back, the same order the Vec summed in, so the mean series
+        // stays bit-identical.
+        self.window.push_back(reward);
         if self.window.len() > window {
-            self.window.remove(0);
+            self.window.pop_front();
         }
         self.best = self.best.max(reward);
         self.steps.push(step);

@@ -1,0 +1,412 @@
+//! Live metrics streaming: the JSONL side channel behind `nahas sweep
+//! --metrics FILE --metrics-interval SECS` (and `nahas serve
+//! --metrics`).
+//!
+//! A long sweep is otherwise a black box until it prints its final
+//! tables; this module makes it observable while it runs without
+//! perturbing what it computes:
+//!
+//! * [`MetricsSink`] owns the output file and writes one compact JSON
+//!   object per line ([`MetricsRow`]), flushed per row so `tail -f`
+//!   (or a crashed run's partial file) always ends on a complete line;
+//! * rows are built from [`EvalBroker::snapshot`] — the broker's
+//!   *non-blocking* observation seam. Unlike `EvalBroker::stats`, a
+//!   snapshot never waits out an in-flight dispatch, so the observer
+//!   can never stall the sweep; the price is that the backend's own
+//!   counters (wire bytes, per-host attribution) are only fresh when
+//!   the backend happened to be parked, and the sink carries the last
+//!   known values forward (`backend_fresh` says which);
+//! * [`MetricsStreamer`] runs the sink on a background thread at a
+//!   fixed interval, printing a one-line progress summary to stderr
+//!   per row; [`MetricsStreamer::stop`] emits one final row (so even a
+//!   sweep shorter than the interval gets a complete stream) and a
+//!   final stderr summary line.
+//!
+//! Determinism contract: observation is read-only. The snapshot takes
+//! the broker's state lock for bounded bookkeeping only, and the sweep
+//! progress gauge is relaxed atomics — a run with `--metrics` attached
+//! produces bit-identical search results to one without
+//! (`tests/metrics_stream.rs`).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::search::broker::{BrokerSnapshot, EvalBroker, SessionCounters};
+use crate::search::evaluator::HostEvalStats;
+use crate::search::sweep::SweepProgress;
+use crate::util::json::{obj, Json};
+
+fn num(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+/// One emitted metrics row: cumulative broker counters, live gauges,
+/// per-interval rates, and the per-session / per-host breakdowns.
+/// Serialized as one JSON object per line by [`MetricsRow::to_json`].
+#[derive(Clone, Debug)]
+pub struct MetricsRow {
+    /// 0-based row index within the stream.
+    pub row: usize,
+    /// Seconds since the stream started.
+    pub t_s: f64,
+    /// Cumulative samples requested through the broker.
+    pub requests: usize,
+    /// Cumulative backend evaluations (deduped misses).
+    pub evals: usize,
+    /// `requests - evals`: every flavor of cache/dedup hit.
+    pub cache_hits: usize,
+    pub invalid: usize,
+    pub cross_session_hits: usize,
+    pub persisted_hits: usize,
+    pub inflight_hits: usize,
+    /// Claimed keys parked in the dispatch queue right now (gauge).
+    pub queue_depth: usize,
+    /// Session batches currently admitted (gauge).
+    pub admitted: usize,
+    /// Claimed-but-unfinished keys in flight (gauge).
+    pub inflight_keys: usize,
+    pub dispatches: usize,
+    pub coalesced_dispatches: usize,
+    pub chunked_dispatches: usize,
+    /// Backend evaluations since the previous row.
+    pub evals_delta: usize,
+    /// `evals_delta` over the wall-clock interval since the previous
+    /// row (0 for the first row or a zero-length interval).
+    pub evals_per_sec: f64,
+    /// Cumulative wire bytes written (remote backends; carried forward
+    /// from the last fresh backend view when mid-dispatch).
+    pub wire_tx_bytes: u64,
+    /// Cumulative wire bytes read.
+    pub wire_rx_bytes: u64,
+    /// Whether the backend counters in this row were read at snapshot
+    /// time (`true`) or carried forward from an earlier row because a
+    /// dispatch was in flight (`false`).
+    pub backend_fresh: bool,
+    /// Hosts currently marked down (cluster backend; carried forward
+    /// like the wire counters).
+    pub hosts_down: usize,
+    /// Per-session cumulative deltas; these sum to the broker-wide
+    /// counters above at every row.
+    pub sessions: Vec<SessionCounters>,
+    /// Per-host attribution (cluster backend; carried forward).
+    pub per_host: Vec<HostEvalStats>,
+    /// Sweep scenarios completed, when a progress gauge is attached.
+    pub scenarios_done: Option<usize>,
+    /// Total sweep scenarios, when a progress gauge is attached.
+    pub scenarios_total: Option<usize>,
+}
+
+impl MetricsRow {
+    /// The row as a compact single-line JSON object.
+    pub fn to_json(&self) -> Json {
+        let sessions = Json::Arr(
+            self.sessions
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("id", num(s.id as usize)),
+                        ("requests", num(s.requests)),
+                        ("evals", num(s.evals)),
+                        ("invalid", num(s.invalid)),
+                        ("cross_session_hits", num(s.cross_session_hits)),
+                        ("persisted_hits", num(s.persisted_hits)),
+                        ("inflight_hits", num(s.inflight_hits)),
+                        ("dispatched_chunks", num(s.dispatched_chunks)),
+                    ])
+                })
+                .collect(),
+        );
+        let per_host = Json::Arr(
+            self.per_host
+                .iter()
+                .map(|h| {
+                    obj(vec![
+                        ("host", Json::Str(h.host.clone())),
+                        ("requests", num(h.requests)),
+                        ("evals", num(h.evals)),
+                        ("down", Json::Bool(h.down)),
+                    ])
+                })
+                .collect(),
+        );
+        let mut pairs = vec![
+            ("row", num(self.row)),
+            ("t_s", Json::Num(self.t_s)),
+            ("requests", num(self.requests)),
+            ("evals", num(self.evals)),
+            ("cache_hits", num(self.cache_hits)),
+            ("invalid", num(self.invalid)),
+            ("cross_session_hits", num(self.cross_session_hits)),
+            ("persisted_hits", num(self.persisted_hits)),
+            ("inflight_hits", num(self.inflight_hits)),
+            ("queue_depth", num(self.queue_depth)),
+            ("admitted", num(self.admitted)),
+            ("inflight_keys", num(self.inflight_keys)),
+            ("dispatches", num(self.dispatches)),
+            ("coalesced_dispatches", num(self.coalesced_dispatches)),
+            ("chunked_dispatches", num(self.chunked_dispatches)),
+            ("evals_delta", num(self.evals_delta)),
+            ("evals_per_sec", Json::Num(self.evals_per_sec)),
+            ("wire_tx_bytes", Json::Num(self.wire_tx_bytes as f64)),
+            ("wire_rx_bytes", Json::Num(self.wire_rx_bytes as f64)),
+            ("backend_fresh", Json::Bool(self.backend_fresh)),
+            ("hosts_down", num(self.hosts_down)),
+            ("sessions", sessions),
+            ("per_host", per_host),
+        ];
+        if let Some(done) = self.scenarios_done {
+            pairs.push(("scenarios_done", num(done)));
+        }
+        if let Some(total) = self.scenarios_total {
+            pairs.push(("scenarios_total", num(total)));
+        }
+        obj(pairs)
+    }
+
+    /// The one-line stderr progress summary for this row.
+    pub fn progress_line(&self) -> String {
+        let mut line = format!(
+            "[metrics] t={:.1}s evals={} (+{}, {:.1}/s) cache_hits={} queue={} admitted={}",
+            self.t_s,
+            self.evals,
+            self.evals_delta,
+            self.evals_per_sec,
+            self.cache_hits,
+            self.queue_depth,
+            self.admitted,
+        );
+        if let (Some(done), Some(total)) = (self.scenarios_done, self.scenarios_total) {
+            line.push_str(&format!(" scenarios={done}/{total}"));
+        }
+        line
+    }
+}
+
+/// Owns the JSONL output file and turns [`BrokerSnapshot`]s into
+/// written [`MetricsRow`]s. Carries backend-tier values (wire bytes,
+/// per-host stats) forward across snapshots that caught the backend
+/// checked out, and tracks the per-interval eval delta/rate.
+pub struct MetricsSink {
+    out: BufWriter<File>,
+    path: PathBuf,
+    rows: usize,
+    last_t: f64,
+    last_evals: usize,
+    last_wire: (u64, u64),
+    last_hosts_down: usize,
+    last_per_host: Vec<HostEvalStats>,
+}
+
+impl MetricsSink {
+    /// Create (truncate) the stream file, creating parent directories
+    /// as needed. All I/O errors propagate with path context.
+    pub fn create(path: impl AsRef<Path>) -> Result<MetricsSink> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating parent directory {parent:?}"))?;
+            }
+        }
+        let f = File::create(&path).with_context(|| format!("creating {path:?}"))?;
+        Ok(MetricsSink {
+            out: BufWriter::new(f),
+            path,
+            rows: 0,
+            last_t: 0.0,
+            last_evals: 0,
+            last_wire: (0, 0),
+            last_hosts_down: 0,
+            last_per_host: Vec::new(),
+        })
+    }
+
+    /// Where the stream is being written.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Rows written so far.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Build one row from a broker snapshot at stream time `t_s`
+    /// (seconds since the stream started), write it as one JSON line,
+    /// and flush — so the file always ends on a complete line.
+    /// `scenarios` is `(completed, total)` when a sweep progress gauge
+    /// is attached.
+    pub fn emit(
+        &mut self,
+        t_s: f64,
+        snap: &BrokerSnapshot,
+        scenarios: Option<(usize, usize)>,
+    ) -> Result<MetricsRow> {
+        let backend_fresh = snap.backend.is_some();
+        if let Some(b) = &snap.backend {
+            self.last_wire = (b.wire_tx, b.wire_rx);
+            self.last_hosts_down = b.hosts_down;
+            self.last_per_host = b.per_host.clone();
+        }
+        let dt = t_s - self.last_t;
+        let evals_delta = snap.evals.saturating_sub(self.last_evals);
+        let evals_per_sec =
+            if self.rows > 0 && dt > 0.0 { evals_delta as f64 / dt } else { 0.0 };
+        let row = MetricsRow {
+            row: self.rows,
+            t_s,
+            requests: snap.requests,
+            evals: snap.evals,
+            cache_hits: snap.requests.saturating_sub(snap.evals),
+            invalid: snap.invalid,
+            cross_session_hits: snap.cross_session_hits,
+            persisted_hits: snap.persisted_hits,
+            inflight_hits: snap.inflight_hits,
+            queue_depth: snap.queue_depth,
+            admitted: snap.admitted,
+            inflight_keys: snap.inflight_keys,
+            dispatches: snap.dispatches,
+            coalesced_dispatches: snap.coalesced_dispatches,
+            chunked_dispatches: snap.chunked_dispatches,
+            evals_delta,
+            evals_per_sec,
+            wire_tx_bytes: self.last_wire.0,
+            wire_rx_bytes: self.last_wire.1,
+            backend_fresh,
+            hosts_down: self.last_hosts_down,
+            sessions: snap.sessions.clone(),
+            per_host: self.last_per_host.clone(),
+            scenarios_done: scenarios.map(|(done, _)| done),
+            scenarios_total: scenarios.map(|(_, total)| total),
+        };
+        writeln!(self.out, "{}", row.to_json())
+            .with_context(|| format!("writing metrics row to {:?}", self.path))?;
+        self.out
+            .flush()
+            .with_context(|| format!("flushing metrics stream {:?}", self.path))?;
+        self.rows += 1;
+        self.last_t = t_s;
+        self.last_evals = snap.evals;
+        Ok(row)
+    }
+}
+
+/// Background observer: snapshots a broker every `interval`, streams
+/// rows through a [`MetricsSink`], and prints a progress line to
+/// stderr per row. The observed broker/sweep never waits on it.
+pub struct MetricsStreamer {
+    stop_tx: mpsc::Sender<()>,
+    handle: JoinHandle<Result<(PathBuf, usize)>>,
+}
+
+impl MetricsStreamer {
+    /// Start streaming. `progress`, when given, attributes sweep
+    /// completion (`scenarios_done/_total`) to every row. Intervals
+    /// below 50 ms are clamped up — the snapshot itself is cheap, but
+    /// a zero interval would busy-spin the observer thread.
+    pub fn spawn(
+        broker: EvalBroker,
+        mut sink: MetricsSink,
+        interval: Duration,
+        progress: Option<Arc<SweepProgress>>,
+    ) -> MetricsStreamer {
+        let interval = interval.max(Duration::from_millis(50));
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let handle = std::thread::spawn(move || -> Result<(PathBuf, usize)> {
+            let t0 = Instant::now();
+            loop {
+                // An interruptible sleep: a stop request (or the
+                // handle being dropped) ends the stream after one
+                // final row, so short runs still get a complete file.
+                let stopped = !matches!(
+                    stop_rx.recv_timeout(interval),
+                    Err(mpsc::RecvTimeoutError::Timeout)
+                );
+                let snap = broker.snapshot();
+                let scen = progress.as_ref().map(|p| (p.completed(), p.total()));
+                let row = sink.emit(t0.elapsed().as_secs_f64(), &snap, scen)?;
+                if stopped {
+                    eprintln!(
+                        "[metrics] final: {} rows -> {} ({} evals, {} cache hits, {} dispatches)",
+                        sink.rows(),
+                        sink.path().display(),
+                        row.evals,
+                        row.cache_hits,
+                        row.dispatches,
+                    );
+                    return Ok((sink.path().to_path_buf(), sink.rows()));
+                }
+                eprintln!("{}", row.progress_line());
+            }
+        });
+        MetricsStreamer { stop_tx, handle }
+    }
+
+    /// Stop the stream: emits one final row and the final stderr
+    /// summary, then returns `(path, rows_written)`. Propagates any
+    /// write error the streamer thread hit.
+    pub fn stop(self) -> Result<(PathBuf, usize)> {
+        let _ = self.stop_tx.send(());
+        self.handle.join().map_err(|_| anyhow!("metrics streamer thread panicked"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(requests: usize, evals: usize) -> BrokerSnapshot {
+        BrokerSnapshot { requests, evals, ..Default::default() }
+    }
+
+    #[test]
+    fn rows_are_single_parseable_json_lines() {
+        let dir = std::env::temp_dir().join("nahas_test_metrics_stream");
+        let path = dir.join("rows.jsonl");
+        let mut sink = MetricsSink::create(&path).unwrap();
+        sink.emit(0.0, &snap(10, 4), Some((0, 3))).unwrap();
+        sink.emit(1.0, &snap(30, 9), Some((2, 3))).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(first.get("evals").unwrap().as_usize(), Some(4));
+        assert_eq!(second.get("evals").unwrap().as_usize(), Some(9));
+        assert_eq!(second.get("evals_delta").unwrap().as_usize(), Some(5));
+        assert_eq!(second.get("cache_hits").unwrap().as_usize(), Some(21));
+        assert_eq!(second.get("scenarios_done").unwrap().as_usize(), Some(2));
+        assert!((second.get("evals_per_sec").unwrap().as_f64().unwrap() - 5.0).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backend_values_carry_forward_when_checked_out() {
+        let dir = std::env::temp_dir().join("nahas_test_metrics_carry");
+        let path = dir.join("rows.jsonl");
+        let mut sink = MetricsSink::create(&path).unwrap();
+        let mut fresh = snap(5, 5);
+        fresh.backend = Some(crate::search::broker::BackendSnapshot {
+            requests: 5,
+            hosts_down: 1,
+            per_host: Vec::new(),
+            wire_tx: 100,
+            wire_rx: 200,
+        });
+        let r0 = sink.emit(0.0, &fresh, None).unwrap();
+        assert!(r0.backend_fresh);
+        // Next snapshot catches the backend mid-dispatch: wire and
+        // host values repeat instead of dropping to zero.
+        let r1 = sink.emit(1.0, &snap(8, 8), None).unwrap();
+        assert!(!r1.backend_fresh);
+        assert_eq!((r1.wire_tx_bytes, r1.wire_rx_bytes), (100, 200));
+        assert_eq!(r1.hosts_down, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -126,6 +126,19 @@ impl NetworkIr {
         NetworkIr { name: name.to_string(), input_h: h, input_w: w, input_c: c, layers: vec![] }
     }
 
+    /// Reset in place to the state [`NetworkIr::new`] would build,
+    /// keeping the name and layer allocations. Decode-buffer reuse for
+    /// the evaluation hot path: a batch decodes thousands of networks
+    /// into one buffer instead of allocating each.
+    pub fn reset(&mut self, name: &str, h: usize, w: usize, c: usize) {
+        self.name.clear();
+        self.name.push_str(name);
+        self.input_h = h;
+        self.input_w = w;
+        self.input_c = c;
+        self.layers.clear();
+    }
+
     /// Append a layer; its input spatial size is the current output.
     pub fn push(&mut self, op: Layer) {
         let (h, w) = self.cur_hw();

@@ -194,14 +194,24 @@ impl NasSpace {
 
     /// Decode a decision vector into the simulator IR.
     pub fn decode(&self, d: &[usize]) -> NetworkIr {
+        let mut net = NetworkIr::default();
+        self.decode_into(d, &mut net);
+        net
+    }
+
+    /// [`NasSpace::decode`] into a caller-owned buffer, reusing its
+    /// allocations (the batch evaluation hot path decodes thousands of
+    /// networks into one scratch IR instead of allocating each).
+    /// Bit-identical to `decode` — it *is* `decode`'s body.
+    pub fn decode_into(&self, d: &[usize], net: &mut NetworkIr) {
         assert_eq!(d.len(), self.specs.len(), "decision vector length");
         match self.id {
-            NasSpaceId::Proxy => self.decode_proxy_ir(d),
-            _ => self.decode_imagenet_ir(d),
+            NasSpaceId::Proxy => self.decode_proxy_ir(d, net),
+            _ => self.decode_imagenet_ir(d, net),
         }
     }
 
-    fn decode_imagenet_ir(&self, d: &[usize]) -> NetworkIr {
+    fn decode_imagenet_ir(&self, d: &[usize], net: &mut NetworkIr) {
         // Evolved space: global compound scaling (width/depth/resolution).
         let (wm, dm, res) = if self.global_decisions() == 1 {
             COMPOUND_SCALES[d[0]]
@@ -209,23 +219,28 @@ impl NasSpace {
             (1.0, 1.0, 224)
         };
         let (stem, head_ch, classes) = (scale_ch(32, wm), 1280, 1000);
-        let mut net = NetworkIr::new(self.space_name(), res, res, 3);
+        net.reset(self.space_name(), res, res, 3);
         net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: stem, stride: 2, groups: 1 });
         // Depth multiplier: round(S * (dm - 1)) extra stride-1 repeats,
         // assigned to the deepest stride-1 slots (compound-scaling
-        // convention; deepest blocks are spatially cheapest).
-        let s1_slots: Vec<usize> = (1..self.blocks.len())
-            .filter(|&b| self.blocks[b].stride == 1)
-            .collect();
-        let extra = ((s1_slots.len() as f64) * (dm - 1.0)).round() as usize;
-        let deep_extra: &[usize] = &s1_slots[s1_slots.len().saturating_sub(extra)..];
+        // convention; deepest blocks are spatially cheapest). A block's
+        // repeat count depends only on its rank among the stride-1
+        // slots, so the walk below needs no slot list allocation.
+        let s1_count = (1..self.blocks.len()).filter(|&b| self.blocks[b].stride == 1).count();
+        let extra = ((s1_count as f64) * (dm - 1.0)).round() as usize;
+        let deep_from = s1_count.saturating_sub(extra);
+        let mut s1_rank = 0;
         for (b, def) in self.blocks.iter().enumerate() {
             let (ki, ei, op, fi, gi) = self.block_decisions(d, b);
             let k = KERNEL_SIZES[ki];
             // First block runs expansion 1 (both backbones).
             let e = if b == 0 { 1 } else { EXPANSIONS[ei] };
             let cout = scale_ch(def.cout, FILTER_MULTS[fi] * wm);
-            let reps = if deep_extra.contains(&b) { 2 } else { 1 };
+            let deep = b >= 1 && def.stride == 1 && {
+                s1_rank += 1;
+                s1_rank - 1 >= deep_from
+            };
+            let reps = if deep { 2 } else { 1 };
             for r in 0..reps {
                 let stride = if r == 0 { def.stride } else { 1 };
                 if op == 1 {
@@ -239,11 +254,10 @@ impl NasSpace {
         net.push(Layer::Conv2d { kh: 1, kw: 1, cin: c, cout: head_ch, stride: 1, groups: 1 });
         net.push(Layer::GlobalPool { c: head_ch });
         net.push(Layer::Dense { cin: head_ch, cout: classes });
-        net
     }
 
-    fn decode_proxy_ir(&self, d: &[usize]) -> NetworkIr {
-        let mut net = NetworkIr::new("proxy", PROXY_IMG, PROXY_IMG, 3);
+    fn decode_proxy_ir(&self, d: &[usize], net: &mut NetworkIr) {
+        net.reset("proxy", PROXY_IMG, PROXY_IMG, 3);
         net.push(Layer::Conv2d { kh: 3, kw: 3, cin: 3, cout: PROXY_STEM, stride: 1, groups: 1 });
         for (b, def) in self.blocks.iter().enumerate() {
             let (ki, ei, op, fi, _) = self.block_decisions(d, b);
@@ -259,7 +273,6 @@ impl NasSpace {
         let c = net.cur_c();
         net.push(Layer::GlobalPool { c });
         net.push(Layer::Dense { cin: c, cout: 16 });
-        net
     }
 
     fn space_name(&self) -> &'static str {

@@ -29,14 +29,19 @@ impl Point {
 pub fn frontier(points: &[Point]) -> Vec<Point> {
     let mut sorted: Vec<&Point> = points.iter().collect();
     // Sort by cost asc, acc desc: then a sweep keeping the running max
-    // accuracy yields the frontier in O(n log n).
-    sorted.sort_by(|a, b| {
-        a.cost.partial_cmp(&b.cost).unwrap().then(b.acc.partial_cmp(&a.acc).unwrap())
-    });
+    // accuracy yields the frontier in O(n log n). `total_cmp` keeps the
+    // sort total when a degenerate reward config produces NaN metrics:
+    // NaN costs sort last (after +inf) and NaN accuracies sort below
+    // every real accuracy, so they never abort the sort. NaN points
+    // sit outside the dominance order entirely, so neither coordinate
+    // may put one on the frontier: a NaN accuracy fails the
+    // `> best_acc` sweep by itself, and a NaN cost is skipped
+    // explicitly below.
+    sorted.sort_by(|a, b| a.cost.total_cmp(&b.cost).then(b.acc.total_cmp(&a.acc)));
     let mut out: Vec<Point> = Vec::new();
     let mut best_acc = f64::NEG_INFINITY;
     for p in sorted {
-        if p.acc > best_acc {
+        if p.acc > best_acc && !p.cost.is_nan() {
             out.push(p.clone());
             best_acc = p.acc;
         }
@@ -260,7 +265,7 @@ mod tests {
             frontier(&pts2).iter().map(|q| (q.acc, q.cost)).collect();
         let mut fn_: Vec<(f64, f64)> =
             frontier_nd(&ptsn).iter().map(|q| (q.acc, q.costs[0])).collect();
-        fn_.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        fn_.sort_by(|a, b| a.1.total_cmp(&b.1));
         assert_eq!(f2, fn_);
     }
 

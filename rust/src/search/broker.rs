@@ -100,11 +100,11 @@
 //! whatever the interleaving (`tests/sweep_equivalence.rs`,
 //! `tests/broker_admission.rs`).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
-use crate::search::evaluator::{EvalResult, EvalStats, Evaluator};
+use crate::search::evaluator::{EvalResult, EvalStats, Evaluator, HostEvalStats};
 use crate::search::parallel::{joint_key, MemoCache};
 use crate::search::store::CacheStore;
 
@@ -186,6 +186,11 @@ struct CacheTier {
     cross_session_hits: usize,
     persisted_hits: usize,
     inflight_hits: usize,
+    /// Per-session counter deltas, keyed by session id. Updated in the
+    /// same lock acquisition as the broker-global counters above, so an
+    /// [`EvalBroker::snapshot`] always sees the two in exact agreement
+    /// (per-session fields sum to the broker-wide ones).
+    sessions: BTreeMap<u64, SessionCounters>,
 }
 
 /// Dispatch tier: everything between the cache and the backend. The
@@ -442,6 +447,82 @@ pub struct BrokerOverlapStats {
     pub peak_queue_depth: usize,
 }
 
+/// One session's cumulative counter deltas as kept in the broker's
+/// registry ([`BrokerSnapshot::sessions`]). The registry is written in
+/// the same lock acquisition as the broker-global counters, at batch
+/// granularity, so at any snapshot the per-session fields sum exactly
+/// to the broker-wide ones.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionCounters {
+    /// Session id, in [`EvalBroker::session`] creation order from 0.
+    pub id: u64,
+    pub requests: usize,
+    pub evals: usize,
+    pub invalid: usize,
+    pub cross_session_hits: usize,
+    pub persisted_hits: usize,
+    pub inflight_hits: usize,
+    /// Backend dispatches this session drove.
+    pub dispatched_chunks: usize,
+}
+
+/// The backend tier's own counters as seen by a snapshot — present
+/// only when the backend happened to be parked (not checked out for a
+/// dispatch) at that instant.
+#[derive(Clone, Debug, Default)]
+pub struct BackendSnapshot {
+    /// Requests the backend has served — equals the broker's deduped
+    /// misses ([`BrokerSnapshot::evals`]) when quiescent.
+    pub requests: usize,
+    /// Hosts currently marked down (cluster tier; 0 elsewhere).
+    pub hosts_down: usize,
+    /// Per-host attribution when the backend is the cluster tier.
+    pub per_host: Vec<HostEvalStats>,
+    /// Cumulative bytes written to the wire (remote tiers; 0 locally).
+    pub wire_tx: u64,
+    /// Cumulative bytes read from the wire.
+    pub wire_rx: u64,
+}
+
+/// One non-blocking observation of the whole broker
+/// ([`EvalBroker::snapshot`]): cache-tier counters, the dispatch
+/// tier's live queue/admission gauges, the per-session registry, and —
+/// when the backend happens to be parked — the backend's own counters
+/// and wire totals. This is what [`crate::metrics::MetricsSink`] rows
+/// are built from.
+#[derive(Clone, Debug, Default)]
+pub struct BrokerSnapshot {
+    pub requests: usize,
+    pub evals: usize,
+    pub invalid: usize,
+    pub cross_session_hits: usize,
+    pub persisted_hits: usize,
+    pub inflight_hits: usize,
+    /// Entries pre-loaded from the persistent store at open.
+    pub persisted_loaded: usize,
+    /// Claimed keys parked in the dispatch queue right now (gauge).
+    pub queue_depth: usize,
+    /// Session batches currently admitted (gauge).
+    pub admitted: usize,
+    /// Claimed-but-unfinished keys in the in-flight table (gauge).
+    pub inflight_keys: usize,
+    pub dispatches: usize,
+    pub coalesced_dispatches: usize,
+    pub chunked_dispatches: usize,
+    pub peak_queue_depth: usize,
+    pub peak_admitted: usize,
+    pub inflight_limit: usize,
+    pub capacity: usize,
+    pub chunk_limit: usize,
+    /// Per-session cumulative deltas, ascending session id. Counter
+    /// fields sum exactly to the broker-wide ones above.
+    pub sessions: Vec<SessionCounters>,
+    /// The backend's own view, if it was parked at snapshot time;
+    /// `None` means a dispatch was in flight — the consumer carries
+    /// the last known values forward.
+    pub backend: Option<BackendSnapshot>,
+}
+
 /// Shared handle to one evaluation backend. Cheap to clone; create one
 /// [`BrokerSession`] per concurrent search with [`EvalBroker::session`].
 ///
@@ -515,6 +596,7 @@ impl EvalBroker {
                         cross_session_hits: 0,
                         persisted_hits: 0,
                         inflight_hits: 0,
+                        sessions: BTreeMap::new(),
                     },
                     dispatch: DispatchTier {
                         backend: Some(backend),
@@ -643,6 +725,51 @@ impl EvalBroker {
             chunk_limit: st.dispatch.chunk_limit,
             chunked_dispatches: st.dispatch.chunked_dispatches,
             peak_queue_depth: st.dispatch.peak_queue_depth,
+        }
+    }
+
+    /// One non-blocking observation of the whole broker, for the live
+    /// metrics stream. Unlike [`EvalBroker::stats`] this never waits
+    /// out an in-flight dispatch: it takes the plain state lock (which
+    /// is only ever held for bounded bookkeeping, never across a
+    /// backend call) and reads the backend's own counters only if the
+    /// backend happens to be parked — [`BrokerSnapshot::backend`] is
+    /// `None` mid-dispatch, and the consumer carries the last known
+    /// values forward.
+    pub fn snapshot(&self) -> BrokerSnapshot {
+        let st = self.core.lock_state();
+        let backend = st.dispatch.backend.as_ref().map(|b| {
+            let stats = b.stats();
+            let (wire_tx, wire_rx) = b.wire_bytes();
+            BackendSnapshot {
+                requests: stats.requests,
+                hosts_down: stats.hosts_down,
+                per_host: stats.per_host,
+                wire_tx,
+                wire_rx,
+            }
+        });
+        BrokerSnapshot {
+            requests: st.cache.requests,
+            evals: st.cache.evals,
+            invalid: st.cache.invalid,
+            cross_session_hits: st.cache.cross_session_hits,
+            persisted_hits: st.cache.persisted_hits,
+            inflight_hits: st.cache.inflight_hits,
+            persisted_loaded: st.cache.persisted_loaded,
+            queue_depth: st.dispatch.queue.len(),
+            admitted: st.dispatch.admitted,
+            inflight_keys: st.dispatch.inflight.len(),
+            dispatches: st.dispatch.dispatches,
+            coalesced_dispatches: st.dispatch.coalesced_dispatches,
+            chunked_dispatches: st.dispatch.chunked_dispatches,
+            peak_queue_depth: st.dispatch.peak_queue_depth,
+            peak_admitted: st.dispatch.peak_admitted,
+            inflight_limit: st.dispatch.inflight_limit,
+            capacity: st.dispatch.capacity,
+            chunk_limit: st.dispatch.chunk_limit,
+            sessions: st.cache.sessions.values().copied().collect(),
+            backend,
         }
     }
 
@@ -791,6 +918,21 @@ impl Evaluator for BrokerSession {
         st.cache.cross_session_hits += tally.cross;
         st.cache.persisted_hits += tally.persisted;
         st.cache.inflight_hits += tally.inflight_hits;
+        // Mirror the same deltas into this session's registry slot
+        // under the same lock acquisition, so any snapshot sees the
+        // per-session and broker-wide counters in exact agreement.
+        let sc = st
+            .cache
+            .sessions
+            .entry(self.id)
+            .or_insert_with(|| SessionCounters { id: self.id, ..Default::default() });
+        sc.requests += batch.len();
+        sc.evals += claimed;
+        sc.invalid += invalid;
+        sc.cross_session_hits += tally.cross;
+        sc.persisted_hits += tally.persisted;
+        sc.inflight_hits += tally.inflight_hits;
+        sc.dispatched_chunks += drove;
         if admitted_here {
             st.dispatch.admitted -= 1;
         }

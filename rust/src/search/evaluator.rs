@@ -279,6 +279,16 @@ pub trait Evaluator {
     fn capacity(&self) -> usize {
         1
     }
+
+    /// Cumulative `(tx, rx)` wire bytes this evaluator has moved, for
+    /// the live metrics rows ([`crate::metrics::MetricsSink`]). Local
+    /// tiers put nothing on a wire and keep the `(0, 0)` default; the
+    /// remote tiers ([`crate::service::ServiceEvaluator`],
+    /// [`crate::cluster::ShardedEvaluator`]) sum their per-connection
+    /// counters. Purely observational: never affects results.
+    fn wire_bytes(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Simulator + surrogate-accuracy evaluator.
@@ -338,17 +348,32 @@ impl SurrogateSim {
     /// a deterministic function of (space, task, seed, nas_d, has_d),
     /// which is what lets [`crate::search::ParallelSim`] call it from
     /// scoped worker threads and still match the serial path bit for
-    /// bit.
+    /// bit. Allocates fresh decode buffers per call — the reference
+    /// path; batch loops use [`SurrogateSim::evaluate_pure_in`].
     pub fn evaluate_pure(&self, nas_d: &[usize], has_d: &[usize]) -> EvalResult {
+        self.evaluate_pure_in(nas_d, has_d, &mut SimScratch::default())
+    }
+
+    /// [`SurrogateSim::evaluate_pure`] with caller-owned decode
+    /// buffers: the batch hot path decodes every sample into one
+    /// reused [`SimScratch`] instead of allocating a `NetworkIr` (and,
+    /// for segmentation, a second one) per evaluation. Bit-identical
+    /// to `evaluate_pure` — it *is* its body.
+    pub fn evaluate_pure_in(
+        &self,
+        nas_d: &[usize],
+        has_d: &[usize],
+        scratch: &mut SimScratch,
+    ) -> EvalResult {
         let cfg = self.has.decode(has_d);
         if validate(&cfg).is_err() {
             return EvalResult::invalid();
         }
-        let net = self.network(nas_d);
-        match simulate_network(&cfg, &net) {
+        let net = self.network_in(nas_d, scratch);
+        match simulate_network(&cfg, net) {
             Err(_) => EvalResult::invalid(),
             Ok(rep) => EvalResult {
-                acc: self.accuracy(&net),
+                acc: self.accuracy(net),
                 latency_ms: rep.latency_ms,
                 energy_mj: rep.energy_mj,
                 area_mm2: rep.area_mm2,
@@ -356,6 +381,29 @@ impl SurrogateSim {
             },
         }
     }
+
+    /// [`SurrogateSim::network`] into the scratch buffers; returns the
+    /// IR the simulator and surrogate should read (the segmentation
+    /// variant when that is the task).
+    fn network_in<'s>(&self, nas_d: &[usize], scratch: &'s mut SimScratch) -> &'s NetworkIr {
+        self.space.decode_into(nas_d, &mut scratch.net);
+        match self.task {
+            Task::Classification => &scratch.net,
+            Task::Segmentation => {
+                segmentation_variant_into(&scratch.net, &mut scratch.seg);
+                &scratch.seg
+            }
+        }
+    }
+}
+
+/// Reusable decode buffers for [`SurrogateSim::evaluate_pure_in`]: the
+/// decoded backbone plus (for segmentation) its dense-prediction
+/// variant. One per worker/batch loop; never shared across threads.
+#[derive(Default)]
+pub struct SimScratch {
+    net: NetworkIr,
+    seg: NetworkIr,
 }
 
 impl Evaluator for SurrogateSim {
@@ -366,6 +414,23 @@ impl Evaluator for SurrogateSim {
             self.invalid_count += 1;
         }
         r
+    }
+
+    /// Serial like the default, but the whole batch shares one decode
+    /// scratch instead of allocating per sample.
+    fn evaluate_batch(&mut self, batch: &[(Vec<usize>, Vec<usize>)]) -> Vec<EvalResult> {
+        let mut scratch = SimScratch::default();
+        batch
+            .iter()
+            .map(|(nas_d, has_d)| {
+                self.eval_count += 1;
+                let r = self.evaluate_pure_in(nas_d, has_d, &mut scratch);
+                if !r.valid {
+                    self.invalid_count += 1;
+                }
+                r
+            })
+            .collect()
     }
 
     fn stats(&self) -> EvalStats {
@@ -383,7 +448,17 @@ impl Evaluator for SurrogateSim {
 /// FCN-style decoder head instead of pool+classifier. Reproduces the
 /// ~10x latency scale of the paper's Table 4.
 pub fn segmentation_variant(net: &NetworkIr) -> NetworkIr {
-    let mut seg = NetworkIr::new(&format!("{}-seg", net.name), 640, 640, net.input_c);
+    let mut seg = NetworkIr::default();
+    segmentation_variant_into(net, &mut seg);
+    seg
+}
+
+/// [`segmentation_variant`] into a caller-owned buffer, reusing its
+/// allocations (the batch hot path). Bit-identical to the allocating
+/// wrapper — it *is* its body.
+pub fn segmentation_variant_into(net: &NetworkIr, seg: &mut NetworkIr) {
+    seg.reset(&net.name, 640, 640, net.input_c);
+    seg.name.push_str("-seg");
     for li in &net.layers {
         match li.op {
             // Strip the classification head.
@@ -395,7 +470,6 @@ pub fn segmentation_variant(net: &NetworkIr) -> NetworkIr {
     // FCN decoder: 3x3 fuse + 1x1 to 19 Cityscapes classes.
     seg.push(Layer::Conv2d { kh: 3, kw: 3, cin: c, cout: 256, stride: 1, groups: 1 });
     seg.push(Layer::Conv2d { kh: 1, kw: 1, cin: 256, cout: 19, stride: 1, groups: 1 });
-    seg
 }
 
 /// Real-proxy-training evaluator (Proxy space only): accuracy from the

@@ -76,9 +76,17 @@ impl Controller for EvolutionController {
     }
 
     fn best(&self) -> Vec<usize> {
+        // Total order so a NaN reward (degenerate objective) cannot
+        // panic the selection; NaN explicitly loses to every real
+        // reward (sorts last) and ties break via `total_cmp` so the
+        // pick stays deterministic even when all rewards are NaN.
         self.population
             .iter()
-            .max_by(|a, b| a.reward.partial_cmp(&b.reward).unwrap())
+            .max_by(|a, b| {
+                (!a.reward.is_nan())
+                    .cmp(&!b.reward.is_nan())
+                    .then(a.reward.total_cmp(&b.reward))
+            })
             .map(|m| m.decisions.clone())
             .unwrap_or_else(|| vec![0; self.cards.len()])
     }

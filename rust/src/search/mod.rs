@@ -49,8 +49,13 @@ pub mod scenario;
 pub mod store;
 pub mod sweep;
 
-pub use broker::{BrokerOverlapStats, BrokerSession, EvalBroker};
-pub use evaluator::{EvalResult, EvalStats, Evaluator, HostEvalStats, SurrogateSim, Task};
+pub use broker::{
+    BackendSnapshot, BrokerOverlapStats, BrokerSession, BrokerSnapshot, EvalBroker,
+    SessionCounters,
+};
+pub use evaluator::{
+    EvalResult, EvalStats, Evaluator, HostEvalStats, SimScratch, SurrogateSim, Task,
+};
 pub use joint::{joint_search, Sample, SearchCfg, SearchOutcome};
 pub use parallel::{joint_key, MemoCache, ParallelSim};
 pub use reward::{ConstraintMode, CostObjective, RewardCfg};
@@ -60,8 +65,9 @@ pub use scenario::{
 };
 pub use store::{CacheStore, CacheValue};
 pub use sweep::{
-    run_scenario, run_sweep, run_sweep_resumable, scenario_grid, ControllerKind, Scenario,
-    ScenarioOutcome, SweepCheckpoint, SweepDriver, SweepOutcome,
+    run_scenario, run_sweep, run_sweep_observed, run_sweep_resumable, scenario_grid,
+    ControllerKind, Scenario, ScenarioOutcome, SweepCheckpoint, SweepDriver, SweepOutcome,
+    SweepProgress,
 };
 
 use crate::util::Rng;

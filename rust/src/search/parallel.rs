@@ -23,7 +23,9 @@
 use std::collections::HashMap;
 
 use crate::nas::NasSpace;
-use crate::search::evaluator::{EvalCounters, EvalResult, EvalStats, Evaluator, SurrogateSim};
+use crate::search::evaluator::{
+    EvalCounters, EvalResult, EvalStats, Evaluator, SimScratch, SurrogateSim,
+};
 
 /// Bounded memo cache over joint `nas ++ has` decision vectors.
 ///
@@ -220,9 +222,10 @@ impl ParallelSim {
     fn run_workers(&self, keys: &[Vec<usize>], nas_len: usize) -> Vec<EvalResult> {
         let workers = self.workers.min(keys.len()).max(1);
         if workers == 1 {
+            let mut scratch = SimScratch::default();
             return keys
                 .iter()
-                .map(|k| self.sim.evaluate_pure(&k[..nas_len], &k[nas_len..]))
+                .map(|k| self.sim.evaluate_pure_in(&k[..nas_len], &k[nas_len..], &mut scratch))
                 .collect();
         }
         let sim = &self.sim;
@@ -232,9 +235,14 @@ impl ParallelSim {
             let handles: Vec<_> = keys
                 .chunks(chunk)
                 .map(|ck| {
+                    // One decode scratch per worker thread: the chunk
+                    // reuses its buffers, threads never share them.
                     s.spawn(move || {
+                        let mut scratch = SimScratch::default();
                         ck.iter()
-                            .map(|k| sim.evaluate_pure(&k[..nas_len], &k[nas_len..]))
+                            .map(|k| {
+                                sim.evaluate_pure_in(&k[..nas_len], &k[nas_len..], &mut scratch)
+                            })
                             .collect::<Vec<EvalResult>>()
                     })
                 })

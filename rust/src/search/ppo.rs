@@ -37,10 +37,20 @@ impl Policy {
     }
 
     pub fn argmax(&self) -> Vec<usize> {
+        // Total order so a NaN logit (diverged update) cannot panic the
+        // argmax; NaN explicitly loses to every real logit (sorts
+        // last), and `max_by`'s last-of-equals tie-break is unchanged
+        // so the pick stays deterministic even when every logit is NaN.
         self.logits
             .iter()
             .map(|l| {
-                l.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+                l.iter()
+                    .enumerate()
+                    .max_by(|a, b| {
+                        (!a.1.is_nan()).cmp(&!b.1.is_nan()).then(a.1.total_cmp(b.1))
+                    })
+                    .unwrap()
+                    .0
             })
             .collect()
     }

@@ -53,6 +53,7 @@ use std::collections::{HashMap, VecDeque};
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -453,6 +454,42 @@ pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
     run_sweep_resumable(broker, scenarios, None, scenarios.len())
 }
 
+/// Live completion gauge of a sweep, shared with an observer thread
+/// (the [`crate::metrics::MetricsStreamer`] progress line). Workers
+/// bump `completed` the moment a scenario outcome is published
+/// (checkpoint-resumed scenarios count immediately, before any worker
+/// starts), so an observer reads monotone progress without touching
+/// any of the sweep's locks.
+#[derive(Debug, Default)]
+pub struct SweepProgress {
+    completed: AtomicUsize,
+    total: AtomicUsize,
+}
+
+impl SweepProgress {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scenarios finished so far (checkpoint-resumed ones included).
+    pub fn completed(&self) -> usize {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Total scenarios of the observed sweep (0 until it starts).
+    pub fn total(&self) -> usize {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    fn set_total(&self, n: usize) {
+        self.total.store(n, Ordering::Relaxed);
+    }
+
+    fn mark_done(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// [`run_sweep`] with checkpointing and a worker cap. Scenarios with a
 /// matching record in `ckpt` (same name, same config digest, same
 /// fingerprint via [`SweepCheckpoint::open`]) are *replayed* from the
@@ -466,8 +503,22 @@ pub fn run_sweep(broker: &EvalBroker, scenarios: &[Scenario]) -> SweepOutcome {
 pub fn run_sweep_resumable(
     broker: &EvalBroker,
     scenarios: &[Scenario],
+    ckpt: Option<&mut SweepCheckpoint>,
+    threads: usize,
+) -> SweepOutcome {
+    run_sweep_observed(broker, scenarios, ckpt, threads, None)
+}
+
+/// [`run_sweep_resumable`] with an optional [`SweepProgress`] gauge for
+/// a live observer (`nahas sweep --metrics`). The gauge is written
+/// from the worker threads with relaxed atomics only — attaching one
+/// changes nothing about what the sweep computes.
+pub fn run_sweep_observed(
+    broker: &EvalBroker,
+    scenarios: &[Scenario],
     mut ckpt: Option<&mut SweepCheckpoint>,
     threads: usize,
+    progress: Option<&SweepProgress>,
 ) -> SweepOutcome {
     let t0 = Instant::now();
     // One broker backend decodes one search space; scenarios from a
@@ -497,11 +548,19 @@ pub fn run_sweep_resumable(
             sc.name
         );
     }
+    if let Some(p) = progress {
+        p.set_total(scenarios.len());
+    }
     let mut slots: Vec<Option<ScenarioOutcome>> = Vec::with_capacity(scenarios.len());
     let mut pending: VecDeque<usize> = VecDeque::new();
     for (i, sc) in scenarios.iter().enumerate() {
         match ckpt.as_mut().and_then(|c| c.take(sc)) {
-            Some(out) => slots.push(Some(out)),
+            Some(out) => {
+                slots.push(Some(out));
+                if let Some(p) = progress {
+                    p.mark_done();
+                }
+            }
             None => {
                 slots.push(None);
                 pending.push_back(i);
@@ -527,6 +586,9 @@ pub fn run_sweep_resumable(
                     c.record(&out);
                 }
                 slots.lock().unwrap()[i] = Some(out);
+                if let Some(p) = progress {
+                    p.mark_done();
+                }
             });
         }
     });

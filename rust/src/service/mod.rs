@@ -1676,6 +1676,10 @@ impl crate::search::Evaluator for ServiceEvaluator {
     fn capacity(&self) -> usize {
         self.conns.len()
     }
+
+    fn wire_bytes(&self) -> (u64, u64) {
+        ServiceEvaluator::wire_bytes(self)
+    }
 }
 
 #[cfg(test)]

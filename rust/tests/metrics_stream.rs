@@ -1,0 +1,193 @@
+//! The live metrics stream's three contracts:
+//!
+//! * **rows reconcile** — every emitted JSONL row parses, cumulative
+//!   counters are monotone across rows, the per-session deltas sum to
+//!   the broker-wide counters in the *same* row, and the final row
+//!   agrees with `EvalBroker::stats()` once the run is quiescent;
+//! * **observation is live** — a [`MetricsStreamer`] attached to a
+//!   real concurrent sweep writes at least one row while it runs plus
+//!   the final row at stop, without deadlocking against dispatches;
+//! * **observation is free** — a sweep with the streamer attached
+//!   produces bit-identical frontiers to the same sweep without it
+//!   (the snapshot seam never perturbs the search).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nahas::metrics::{MetricsSink, MetricsStreamer};
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{
+    run_sweep, run_sweep_observed, scenario_grid, CostObjective, EvalBroker, Evaluator,
+    ParallelSim, Scenario, SurrogateSim, SweepDriver, SweepOutcome, SweepProgress,
+};
+use nahas::util::json::Json;
+
+fn scenarios(seed: u64) -> Vec<Scenario> {
+    scenario_grid(
+        &[0.35, 0.5],
+        &[CostObjective::Latency, CostObjective::Energy],
+        &[SweepDriver::Joint],
+        NasSpaceId::EfficientNet,
+        64,
+        16,
+        seed,
+    )
+}
+
+fn local_broker(seed: u64) -> EvalBroker {
+    EvalBroker::new(Box::new(SurrogateSim::new(
+        NasSpace::new(NasSpaceId::EfficientNet),
+        seed,
+    )))
+}
+
+fn parallel_broker(seed: u64) -> EvalBroker {
+    EvalBroker::new(Box::new(ParallelSim::new(
+        NasSpace::new(NasSpaceId::EfficientNet),
+        seed,
+        4,
+    )))
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("nahas_metrics_stream_{name}_{}", std::process::id()))
+}
+
+fn usize_field(row: &Json, key: &str) -> usize {
+    row.get(key)
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("row missing numeric field {key:?}: {row}"))
+}
+
+#[test]
+fn rows_parse_reconcile_and_match_final_stats() {
+    let broker = local_broker(3);
+    let dir = tmp_path("reconcile");
+    let path = dir.join("rows.jsonl");
+    let mut sink = MetricsSink::create(&path).unwrap();
+
+    // Drive two sessions by hand, snapshotting between batches — a
+    // deterministic stand-in for the interval thread.
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = nahas::has::HasSpace::new();
+    let mut rng = nahas::util::Rng::new(11);
+    let mut a = broker.session();
+    let mut b = broker.session();
+    let mut t = 0.0f64;
+    for round in 0..4 {
+        let batch: Vec<(Vec<usize>, Vec<usize>)> =
+            (0..8).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect();
+        if round % 2 == 0 {
+            a.evaluate_batch(&batch);
+        } else {
+            b.evaluate_batch(&batch);
+        }
+        // Re-issue one earlier key from the other session so the
+        // cross-session counters are exercised too.
+        if round == 3 {
+            a.evaluate_batch(&batch);
+        }
+        t += 1.0;
+        sink.emit(t, &broker.snapshot(), Some((round, 4))).unwrap();
+    }
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let rows: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(rows.len(), 4);
+
+    // Cumulative counters are monotone; gauges parse; session deltas
+    // sum to the broker-wide counters row by row.
+    let mut last = (0usize, 0usize);
+    for row in &rows {
+        let (req, ev) = (usize_field(row, "requests"), usize_field(row, "evals"));
+        assert!(req >= last.0 && ev >= last.1, "counters went backwards: {row}");
+        last = (req, ev);
+        assert_eq!(usize_field(row, "cache_hits"), req - ev);
+        let sessions = row.get("sessions").and_then(Json::as_arr).unwrap();
+        let sum =
+            |key: &str| sessions.iter().map(|s| usize_field(s, key)).sum::<usize>();
+        assert_eq!(sum("requests"), req, "session requests don't sum: {row}");
+        assert_eq!(sum("evals"), ev, "session evals don't sum: {row}");
+        assert_eq!(sum("cross_session_hits"), usize_field(row, "cross_session_hits"));
+        assert_eq!(sum("dispatched_chunks"), usize_field(row, "dispatches"));
+    }
+
+    // Quiescent: the last row equals the blocking stats() view.
+    let stats = broker.stats();
+    let fin = rows.last().unwrap();
+    assert_eq!(usize_field(fin, "requests"), stats.requests);
+    assert_eq!(usize_field(fin, "evals"), stats.evals);
+    assert_eq!(usize_field(fin, "invalid"), stats.invalid);
+    assert_eq!(usize_field(fin, "cross_session_hits"), stats.cross_session_hits);
+    assert_eq!(usize_field(fin, "queue_depth"), 0);
+    assert_eq!(usize_field(fin, "admitted"), 0);
+    assert_eq!(usize_field(fin, "scenarios_done"), 3);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streamer_observes_a_live_sweep() {
+    let broker = parallel_broker(5);
+    let dir = tmp_path("live");
+    let path = dir.join("rows.jsonl");
+    let progress = Arc::new(SweepProgress::new());
+    let streamer = MetricsStreamer::spawn(
+        broker.clone(),
+        MetricsSink::create(&path).unwrap(),
+        Duration::from_millis(60),
+        Some(progress.clone()),
+    );
+    let scs = scenarios(7);
+    let out = run_sweep_observed(&broker, &scs, None, scs.len(), Some(&progress));
+    let (written, rows) = streamer.stop().unwrap();
+    assert_eq!(written, path);
+    assert!(rows >= 1, "expected at least the final row");
+    assert_eq!(progress.completed(), scs.len());
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(parsed.len(), rows);
+    // The final row was emitted after the sweep returned, so it must
+    // agree with the merged outcome's totals exactly.
+    let fin = parsed.last().unwrap();
+    assert_eq!(usize_field(fin, "requests"), out.eval_stats.requests);
+    assert_eq!(usize_field(fin, "evals"), out.eval_stats.evals);
+    assert_eq!(usize_field(fin, "scenarios_done"), scs.len());
+    assert_eq!(usize_field(fin, "scenarios_total"), scs.len());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn frontier_bits(out: &SweepOutcome) -> Vec<(String, u64, u64, String)> {
+    out.union
+        .iter()
+        .flat_map(|(obj, front)| {
+            front.iter().map(move |p| {
+                (format!("{obj:?}"), p.acc.to_bits(), p.cost.to_bits(), p.tag.clone())
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn observation_never_changes_search_results() {
+    let scs = scenarios(42);
+    let plain = run_sweep(&local_broker(9), &scs);
+
+    let broker = local_broker(9);
+    let dir = tmp_path("bitident");
+    let progress = Arc::new(SweepProgress::new());
+    let streamer = MetricsStreamer::spawn(
+        broker.clone(),
+        MetricsSink::create(dir.join("rows.jsonl")).unwrap(),
+        Duration::from_millis(50),
+        Some(progress.clone()),
+    );
+    let observed = run_sweep_observed(&broker, &scs, None, scs.len(), Some(&progress));
+    streamer.stop().unwrap();
+
+    assert_eq!(frontier_bits(&plain), frontier_bits(&observed));
+    assert_eq!(plain.eval_stats.requests, observed.eval_stats.requests);
+    std::fs::remove_dir_all(&dir).ok();
+}

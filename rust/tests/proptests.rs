@@ -10,6 +10,9 @@ use std::path::PathBuf;
 
 use nahas::has::{validate, HasSpace};
 use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::pareto::{
+    frontier, frontier_nd, union_frontier, union_frontier_nd, MultiPoint, Point,
+};
 use nahas::search::{
     CacheStore, CacheValue, EvalBroker, EvalResult, Evaluator, MemoCache, ParallelSim,
     SurrogateSim,
@@ -562,4 +565,115 @@ fn prop_interleaved_brokers_on_separate_files_never_cross_contaminate() {
     );
     let _ = std::fs::remove_file(&path_a);
     let _ = std::fs::remove_file(&path_b);
+}
+
+// ---------------------------------------------------------------------------
+// Pareto totality over hostile (NaN / ±inf) metrics
+// ---------------------------------------------------------------------------
+// A degenerate reward config can hand the frontier code NaN or
+// infinite metrics. The ranking convention (`total_cmp`, NaN sorts
+// last and sits outside the dominance order) must make every frontier
+// entry point *total*: no panic, deterministic output, and no NaN
+// coordinate ever on a 2-D frontier.
+
+/// A coordinate that is frequently non-finite: explicit specials and
+/// raw-bit f64s (which include NaNs of every payload) mixed with small
+/// reals.
+fn hostile(r: &mut Rng) -> f64 {
+    match r.below(6) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => f64::from_bits(r.next_u64()),
+        _ => (r.below(100) as f64) / 10.0,
+    }
+}
+
+fn point_bits(f: &[Point]) -> Vec<(u64, u64, String)> {
+    f.iter().map(|p| (p.acc.to_bits(), p.cost.to_bits(), p.tag.clone())).collect()
+}
+
+fn mp_bits(f: &[MultiPoint]) -> Vec<(u64, Vec<u64>, String)> {
+    f.iter()
+        .map(|p| {
+            (p.acc.to_bits(), p.costs.iter().map(|c| c.to_bits()).collect(), p.tag.clone())
+        })
+        .collect()
+}
+
+#[test]
+fn prop_frontier_total_and_nan_free_on_hostile_metrics() {
+    proptest::check(
+        "frontier hostile totality",
+        proptest::CASES,
+        |r: &mut Rng| {
+            (0..r.below(24))
+                .map(|i| Point::new(hostile(r), hostile(r), format!("{i}")))
+                .collect::<Vec<_>>()
+        },
+        |pts| {
+            let f = frontier(pts);
+            // Deterministic: the same input yields the same bits.
+            if point_bits(&f) != point_bits(&frontier(pts)) {
+                return Err("frontier nondeterministic on hostile input".into());
+            }
+            // The NaN convention: a NaN coordinate never reaches the
+            // frontier (NaN sits outside the dominance order).
+            if f.iter().any(|p| p.acc.is_nan() || p.cost.is_nan()) {
+                return Err(format!("NaN point in frontier: {f:?}"));
+            }
+            // Mutually non-dominated (NaN-free output, so `!=` is a
+            // real distinctness test), and a fixed point of re-merging.
+            for a in &f {
+                for b in &f {
+                    if a != b && a.dominates(b) {
+                        return Err(format!("{a:?} dominates {b:?} in frontier"));
+                    }
+                }
+            }
+            if point_bits(&union_frontier(&[f.clone()])) != point_bits(&f) {
+                return Err("union_frontier not idempotent on hostile frontier".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_frontier_nd_total_and_deterministic_on_hostile_metrics() {
+    proptest::check(
+        "frontier_nd hostile totality",
+        proptest::CASES,
+        |r: &mut Rng| {
+            (0..r.below(20))
+                .map(|i| {
+                    MultiPoint::new(hostile(r), vec![hostile(r), hostile(r)], format!("{i}"))
+                })
+                .collect::<Vec<_>>()
+        },
+        |pts| {
+            let f = frontier_nd(pts);
+            if mp_bits(&f) != mp_bits(&frontier_nd(pts)) {
+                return Err("frontier_nd nondeterministic on hostile input".into());
+            }
+            if f.len() > pts.len() {
+                return Err("frontier_nd grew".into());
+            }
+            // NaN points are incomparable (they dominate nothing and
+            // nothing dominates them), so they may survive — but the
+            // survivors must still be mutually non-dominated and a
+            // fixed point of re-merging.
+            for a in &f {
+                for b in &f {
+                    if a.dominates(b) {
+                        return Err(format!("{a:?} dominates {b:?} in frontier_nd"));
+                    }
+                }
+            }
+            if mp_bits(&union_frontier_nd(&[f.clone()])) != mp_bits(&f) {
+                return Err("union_frontier_nd not idempotent on hostile frontier".into());
+            }
+            Ok(())
+        },
+    );
 }
