@@ -1,0 +1,124 @@
+//! §Perf — elastic membership churn: what a live join and leave cost,
+//! and what the warm cache handoff buys the joining host.
+//!
+//! One warmed 2-host pool; a third host then joins twice — once cold
+//! (no warm source) and once with the warm handoff streaming its key
+//! range first — and a fresh evaluator replays the same batch against
+//! each 3-host pool. The warm join should push the joining host's
+//! first-contact simulations to (near) zero and speed up the replay;
+//! the leave path is timed for its drain + re-rank cost.
+
+use std::time::{Duration, Instant};
+
+use nahas::cluster::{query_host_stats, ShardedEvaluator};
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::{joint_key, EvalResult, Evaluator};
+use nahas::service::Server;
+use nahas::util::Rng;
+
+const BATCH: usize = 384;
+const CONNS_PER_HOST: usize = 4;
+const SEED: u64 = 3;
+
+fn fixed_batch() -> Vec<(Vec<usize>, Vec<usize>)> {
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(SEED);
+    (0..BATCH).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect()
+}
+
+/// Warm a fresh 2-host pool with the batch and return (servers,
+/// warm entries) — the starting state both join variants share.
+fn warmed_pool(
+    batch: &[(Vec<usize>, Vec<usize>)],
+) -> (Vec<Server>, Vec<String>, Vec<(Vec<usize>, EvalResult)>) {
+    let servers: Vec<Server> =
+        (0..2).map(|_| Server::spawn("127.0.0.1:0").expect("spawn server")).collect();
+    let hosts: Vec<String> = servers.iter().map(|s| s.addr.to_string()).collect();
+    let mut cluster =
+        ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, SEED, CONNS_PER_HOST)
+            .expect("connect cluster");
+    let results = cluster.evaluate_batch(batch);
+    let mut entries: Vec<(Vec<usize>, EvalResult)> = Vec::new();
+    for ((n, h), r) in batch.iter().zip(&results) {
+        let k = joint_key(n, h);
+        if !entries.iter().any(|(e, _)| *e == k) {
+            entries.push((k, *r));
+        }
+    }
+    (servers, hosts, entries)
+}
+
+fn main() {
+    println!("membership churn: {BATCH} samples, {CONNS_PER_HOST} conns/host\n");
+    let batch = fixed_batch();
+    let probe = Duration::from_secs(2);
+
+    let mut replay_tput = [0.0f64; 2];
+    for (warm, label) in [(false, "cold join"), (true, "warm join")] {
+        let (servers, hosts, entries) = warmed_pool(&batch);
+        let mut cluster =
+            ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, SEED, CONNS_PER_HOST)
+                .expect("connect cluster");
+        if warm {
+            cluster.warm_source().set(move || entries.clone());
+        }
+        let joiner = Server::spawn("127.0.0.1:0").expect("spawn joiner");
+        let t0 = Instant::now();
+        let event = cluster.join_host(&joiner.addr.to_string(), 1.0).expect("join");
+        let join_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "  {label:9}  {join_ms:>7.1} ms   {} entries handed off",
+            event.handed_off
+        );
+
+        // A fresh evaluator (restarted search, same long-lived pool)
+        // replays the batch against the grown pool: the joining host's
+        // share is either all cold simulation or all cache.
+        let grown: Vec<String> = {
+            let mut g = hosts.clone();
+            g.push(joiner.addr.to_string());
+            g
+        };
+        let mut fresh =
+            ShardedEvaluator::connect(&grown, NasSpaceId::EfficientNet, SEED, CONNS_PER_HOST)
+                .expect("connect grown cluster");
+        let t0 = Instant::now();
+        let results = fresh.evaluate_batch(&batch);
+        let dt = t0.elapsed().as_secs_f64();
+        replay_tput[warm as usize] = BATCH as f64 / dt;
+        let valid = results.iter().filter(|r| r.valid).count();
+        let js = query_host_stats(&joiner.addr.to_string(), probe).expect("stats probe");
+        println!(
+            "    replay    {:>8.0} samples/s  joiner: {} sim evals, {} cache hits, \
+             {} installed  ({valid} valid)",
+            BATCH as f64 / dt,
+            js.sim_evals,
+            js.cache_hits,
+            js.installed
+        );
+        if warm {
+            assert!(js.installed > 0, "warm join handed nothing off");
+            assert!(
+                js.cache_hits > 0,
+                "warm join served nothing from the handed-off cache"
+            );
+        }
+
+        // Leave: drain (structural — between batches) + re-rank.
+        let t0 = Instant::now();
+        cluster.leave_host(&joiner.addr.to_string()).expect("leave");
+        let leave_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!("    leave     {leave_ms:>7.2} ms");
+
+        joiner.stop();
+        for s in servers {
+            s.stop();
+        }
+    }
+    println!(
+        "\n  warm/cold replay speedup: {:.2}x",
+        replay_tput[1] / replay_tput[0]
+    );
+}

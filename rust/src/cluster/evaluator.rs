@@ -35,12 +35,14 @@
 //! never be spilled either (`tests/cluster_failover.rs`).
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::health::HealthMonitor;
-use super::pool::{HostPool, HostSnapshot, HostState, IO_TIMEOUT};
+use super::membership::{self, MembershipCmd, MembershipEvent, MembershipLog, WarmSource};
+use super::pool::{HostPool, HostSnapshot, HostState};
 use super::ring::HashRing;
 use crate::nas::{NasSpace, NasSpaceId};
 use crate::search::evaluator::{EvalCounters, EvalResult, EvalStats, Evaluator, HostEvalStats};
@@ -57,6 +59,8 @@ struct ShardCtx<'a> {
     /// Wire preference for ephemeral/replacement connections, matching
     /// the pool's so failover never silently changes protocol policy.
     wire: Wire,
+    /// I/O timeout for those connections, matching the pool's.
+    io_timeout: Duration,
 }
 
 /// Sharded multi-host remote evaluator (the cluster tier).
@@ -71,6 +75,18 @@ pub struct ShardedEvaluator {
     cache: MemoCache,
     counters: EvalCounters,
     monitor: Option<HealthMonitor>,
+    /// Probe cadence, kept so membership changes (which swap the
+    /// pool's shared host `Arc`) can restart the monitor on it.
+    probe_interval: Option<Duration>,
+    /// Batches evaluated so far — the clock `schedule_membership`
+    /// indices run on.
+    batches: usize,
+    /// Programmatic membership commands: (apply before batch N, cmd).
+    scheduled: Vec<(usize, MembershipCmd)>,
+    /// Plan-file admin channel: (dir, plan lines already consumed).
+    plan: Option<(PathBuf, usize)>,
+    warm: WarmSource,
+    events: MembershipLog,
 }
 
 impl ShardedEvaluator {
@@ -115,8 +131,30 @@ impl ShardedEvaluator {
         conns_per_host: usize,
         wire: Wire,
     ) -> Result<Self> {
+        Self::connect_weighted_opts(
+            hosts,
+            id,
+            seed,
+            conns_per_host,
+            wire,
+            super::pool::DEFAULT_IO_TIMEOUT,
+        )
+    }
+
+    /// [`ShardedEvaluator::connect_weighted_wire`] with an explicit
+    /// per-roundtrip I/O timeout (`--io-timeout SECS` on the CLI,
+    /// which validates whole seconds >= 1; the API takes any positive
+    /// [`Duration`] so churn tests can use sub-second timeouts).
+    pub fn connect_weighted_opts(
+        hosts: &[(String, f64)],
+        id: NasSpaceId,
+        seed: u64,
+        conns_per_host: usize,
+        wire: Wire,
+        io_timeout: Duration,
+    ) -> Result<Self> {
         let addrs: Vec<&str> = hosts.iter().map(|(a, _)| a.as_str()).collect();
-        let pool = HostPool::connect_wire(&addrs, conns_per_host, wire)?;
+        let pool = HostPool::connect_opts(&addrs, conns_per_host, wire, io_timeout)?;
         Ok(ShardedEvaluator {
             ring: HashRing::weighted(hosts),
             pool,
@@ -126,6 +164,12 @@ impl ShardedEvaluator {
             cache: MemoCache::new(16 * 1024),
             counters: EvalCounters::default(),
             monitor: None,
+            probe_interval: None,
+            batches: 0,
+            scheduled: Vec::new(),
+            plan: None,
+            warm: WarmSource::default(),
+            events: MembershipLog::default(),
         })
     }
 
@@ -140,6 +184,7 @@ impl ShardedEvaluator {
     /// stay deterministic).
     pub fn with_health_probes(mut self, interval: Duration) -> Self {
         let timeout = interval.min(Duration::from_millis(500));
+        self.probe_interval = Some(interval);
         self.monitor = Some(HealthMonitor::start(self.pool.shared_hosts(), interval, timeout));
         self
     }
@@ -165,6 +210,174 @@ impl ShardedEvaluator {
     /// with (individual hosts may still have negotiated down to JSON).
     pub fn wire(&self) -> Wire {
         self.pool.wire()
+    }
+
+    /// Poll `dir/membership.plan` before every batch and apply any
+    /// commands appended since — the cross-process admin channel
+    /// behind `nahas cluster join|leave --membership-dir DIR`.
+    /// Commands already in the plan predate this evaluator and are
+    /// skipped (otherwise every restart would replay the history).
+    pub fn with_membership_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        let dir = dir.into();
+        let cursor = membership::plan_len(&dir);
+        self.plan = Some((dir, cursor));
+        self
+    }
+
+    /// Schedule `cmd` to apply immediately before (0-based) batch
+    /// `batch_index` — the deterministic trigger churn tests and the
+    /// churn bench use. An index already passed applies before the
+    /// next batch.
+    pub fn schedule_membership(&mut self, batch_index: usize, cmd: MembershipCmd) {
+        self.scheduled.push((batch_index, cmd));
+    }
+
+    /// The shared membership event log: every applied join/leave lands
+    /// here. Clone it into a metrics sink
+    /// ([`crate::metrics::MetricsSink::with_membership`]) to carry
+    /// transitions in the metrics rows.
+    pub fn membership_log(&self) -> MembershipLog {
+        self.events.clone()
+    }
+
+    /// The warm-inventory slot join handoffs are carved from. The CLI
+    /// fills it *after* boxing this evaluator into an
+    /// [`crate::search::EvalBroker`], with a closure over a broker
+    /// clone calling [`crate::search::EvalBroker::warm_entries`] —
+    /// which takes only the broker's state lock, free while this
+    /// backend is checked out and dispatching, so there is no cycle.
+    pub fn warm_source(&self) -> WarmSource {
+        self.warm.clone()
+    }
+
+    /// Batches evaluated so far (the clock membership scheduling runs
+    /// on).
+    pub fn batches_evaluated(&self) -> usize {
+        self.batches
+    }
+
+    /// Add `addr` to the live pool: rank it into the rendezvous ring
+    /// (keys move only *to* it — every other host's pairwise argmax is
+    /// untouched), stream its key range from the warm source as a
+    /// cache handoff, open its connection sub-pool, and restart the
+    /// health monitor on the grown pool. The handoff is an
+    /// optimization, never a correctness dependency: any failure is
+    /// recorded in the event's `detail` and the host starts cold.
+    pub fn join_host(&mut self, addr: &str, weight: f64) -> Result<MembershipEvent> {
+        if (0..self.pool.len()).any(|i| self.pool.host(i).addr() == addr) {
+            return Err(anyhow!("host {addr} is already in the pool"));
+        }
+        let join_index = self.pool.len();
+        let mut ring = self.ring.clone();
+        ring.join(addr, weight);
+        // Hand off the joining host's key range BEFORE it takes
+        // traffic, so its first shard batch is answerable from cache.
+        let (mut handed_off, mut detail) = (0usize, String::new());
+        if let Some(entries) = self.warm.entries() {
+            let nas_len = self.sim.space.num_decisions();
+            let key_len = nas_len + self.sim.has.num_decisions();
+            let slice = membership::handoff_slice(
+                &entries,
+                &ring,
+                join_index,
+                self.sim.space.id,
+                self.seg,
+                nas_len,
+                key_len,
+            );
+            match membership::send_handoff(addr, self.pool.io_timeout(), &slice) {
+                Ok(n) => handed_off = n,
+                Err(e) => detail = format!("handoff skipped: {e}"),
+            }
+        }
+        let up = self.pool.add_host(addr);
+        self.ring = ring;
+        if !up && detail.is_empty() {
+            detail = "unreachable at join; starting down".to_string();
+        }
+        self.restart_monitor();
+        let event = MembershipEvent {
+            batch: self.batches,
+            action: "join",
+            addr: addr.to_string(),
+            hosts: self.pool.len(),
+            handed_off,
+            detail,
+        };
+        println!("{}", event.line());
+        self.events.push(event.clone());
+        Ok(event)
+    }
+
+    /// Remove `addr` from the live pool: its in-flight bursts are
+    /// already drained (membership applies between batches, after the
+    /// previous round's shard threads joined), its connection
+    /// sub-pool closes, and its key range re-ranks onto the survivors
+    /// — each key to its second-ranked host, exactly the route the
+    /// failover ladder would have picked had the host crashed.
+    pub fn leave_host(&mut self, addr: &str) -> Result<MembershipEvent> {
+        let i = (0..self.pool.len())
+            .find(|&i| self.pool.host(i).addr() == addr)
+            .ok_or_else(|| anyhow!("host {addr} is not in the pool"))?;
+        if self.pool.len() == 1 {
+            return Err(anyhow!("refusing to remove the last host"));
+        }
+        self.pool.remove_host(i);
+        self.ring.leave(i);
+        self.restart_monitor();
+        let event = MembershipEvent {
+            batch: self.batches,
+            action: "leave",
+            addr: addr.to_string(),
+            hosts: self.pool.len(),
+            handed_off: 0,
+            detail: String::new(),
+        };
+        println!("{}", event.line());
+        self.events.push(event.clone());
+        Ok(event)
+    }
+
+    /// Membership changes swap the pool's shared host `Arc`; a running
+    /// monitor probes the stale one, so it is restarted on the new.
+    fn restart_monitor(&mut self) {
+        if let Some(interval) = self.probe_interval {
+            let timeout = interval.min(Duration::from_millis(500));
+            self.monitor = None; // drop joins the old thread first
+            self.monitor =
+                Some(HealthMonitor::start(self.pool.shared_hosts(), interval, timeout));
+        }
+    }
+
+    /// Apply due membership changes. Runs at the front of every batch:
+    /// the previous batch's scoped shard threads have joined, so this
+    /// is the structural drain point — no burst is ever in flight
+    /// across a membership change.
+    fn apply_membership(&mut self) {
+        let batch = self.batches;
+        let mut due: Vec<MembershipCmd> = Vec::new();
+        self.scheduled.retain(|(idx, cmd)| {
+            if *idx <= batch {
+                due.push(cmd.clone());
+                false
+            } else {
+                true
+            }
+        });
+        if let Some((dir, cursor)) = self.plan.take() {
+            let (cmds, cursor) = membership::read_plan(&dir, cursor);
+            due.extend(cmds);
+            self.plan = Some((dir, cursor));
+        }
+        for cmd in due {
+            let res = match &cmd {
+                MembershipCmd::Join { addr, weight } => self.join_host(addr, *weight),
+                MembershipCmd::Leave { addr } => self.leave_host(addr),
+            };
+            if let Err(e) = res {
+                eprintln!("cluster membership: '{}' failed: {e}", cmd.to_line());
+            }
+        }
     }
 
     /// One roundtrip through the shared
@@ -204,7 +417,7 @@ impl ShardedEvaluator {
         let mut ephemeral;
         let client: &mut Client = match client.take() {
             Some(c) => c,
-            None => match Client::connect_wire(state.addr(), Some(IO_TIMEOUT), ctx.wire) {
+            None => match Client::connect_wire(state.addr(), Some(ctx.io_timeout), ctx.wire) {
                 Ok(c) => {
                     ephemeral = c;
                     &mut ephemeral
@@ -230,7 +443,7 @@ impl ShardedEvaluator {
                         .collect();
                     return (done, Vec::new());
                 }
-                Err(_) => match Client::connect_wire(state.addr(), Some(IO_TIMEOUT), ctx.wire) {
+                Err(_) => match Client::connect_wire(state.addr(), Some(ctx.io_timeout), ctx.wire) {
                     Ok(fresh) => *client = fresh,
                     Err(_) => {
                         state.set_up(false);
@@ -301,6 +514,7 @@ impl ShardedEvaluator {
             seg: self.seg,
             nas_len,
             wire: self.pool.wire(),
+            io_timeout: self.pool.io_timeout(),
         };
         let mut failed: Vec<usize> = Vec::new();
         std::thread::scope(|s| {
@@ -409,6 +623,8 @@ impl Evaluator for ShardedEvaluator {
         if batch.is_empty() {
             return Vec::new();
         }
+        self.apply_membership();
+        self.batches += 1;
         self.counters.requests += batch.len();
         let nas_len = batch[0].0.len();
         assert!(

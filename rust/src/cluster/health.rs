@@ -106,6 +106,9 @@ pub struct HostServeStats {
     /// Resident entries in the server-side result cache (0 when the
     /// host predates the field).
     pub cache_size: u64,
+    /// Entries installed by warm-cache handoffs (0 when the host
+    /// predates the field).
+    pub installed: u64,
 }
 
 /// One stats roundtrip against a `nahas serve` host. `None` if the
@@ -126,6 +129,7 @@ pub fn query_host_stats(addr: &str, timeout: Duration) -> Option<HostServeStats>
         cache_hits: field("cache_hits")?,
         sim_evals: field("sim_evals")?,
         cache_size: field("cache_size").unwrap_or(0),
+        installed: field("installed").unwrap_or(0),
     })
 }
 

@@ -1,0 +1,406 @@
+//! Elastic cluster membership: the commands, events and warm-cache
+//! handoff machinery that let hosts join and leave a live
+//! [`super::ShardedEvaluator`].
+//!
+//! A membership change is applied *between* batches (the previous
+//! round's shard threads have joined, so in-flight bursts are drained
+//! structurally) and touches exactly three things: the rendezvous ring
+//! gains or loses one seed, the pool gains or loses one connection
+//! sub-pool, and — on join — the new host receives its key range from
+//! the broker's warm cache as a [`crate::search::store`] segment
+//! stream over the binary wire ([`send_handoff`]), so it answers its
+//! first shard traffic from cache instead of cold simulation.
+//!
+//! Rendezvous scores are per-(host, key), so the PR 2 invariant
+//! carries over verbatim: a join moves keys only *to* the new host, a
+//! leave only *from* the departed one — every other pairwise argmax is
+//! untouched (property-tested in `tests/proptests.rs`). Results are
+//! bit-identical either way: routing decides *where* a key is
+//! evaluated, never *what* it computes.
+//!
+//! Two triggers feed a live evaluator:
+//!
+//! * [`super::ShardedEvaluator::schedule_membership`] applies a
+//!   command immediately before a given batch index — the
+//!   deterministic trigger churn tests and benches use;
+//! * a *plan file* (`membership.plan` under `--membership-dir`),
+//!   appended to by the `nahas cluster join|leave` admin commands and
+//!   polled before every batch — the cross-process admin channel.
+
+use std::fs::{self, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::ring::HashRing;
+use crate::nas::NasSpaceId;
+use crate::search::evaluator::EvalResult;
+use crate::search::store;
+use crate::service::{Client, Wire};
+use crate::util::json::obj;
+
+/// One membership change, as scheduled or read from a plan file.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MembershipCmd {
+    /// Add `addr` to the pool with the given ring weight.
+    Join { addr: String, weight: f64 },
+    /// Remove `addr` from the pool.
+    Leave { addr: String },
+}
+
+impl MembershipCmd {
+    /// One plan-file line: `join ADDR WEIGHT` or `leave ADDR`.
+    pub fn to_line(&self) -> String {
+        match self {
+            MembershipCmd::Join { addr, weight } => format!("join {addr} {weight}"),
+            MembershipCmd::Leave { addr } => format!("leave {addr}"),
+        }
+    }
+
+    /// Inverse of [`MembershipCmd::to_line`]; `None` on anything else.
+    pub fn parse(line: &str) -> Option<MembershipCmd> {
+        let mut it = line.split_ascii_whitespace();
+        let cmd = match (it.next()?, it.next()) {
+            ("join", Some(addr)) => {
+                let weight = match it.next() {
+                    Some(w) => w.parse().ok()?,
+                    None => 1.0,
+                };
+                MembershipCmd::Join { addr: addr.to_string(), weight }
+            }
+            ("leave", Some(addr)) => MembershipCmd::Leave { addr: addr.to_string() },
+            _ => return None,
+        };
+        if it.next().is_some() {
+            return None;
+        }
+        Some(cmd)
+    }
+
+    /// The address this command is about.
+    pub fn addr(&self) -> &str {
+        match self {
+            MembershipCmd::Join { addr, .. } | MembershipCmd::Leave { addr } => addr,
+        }
+    }
+}
+
+/// A membership transition that was applied to a live evaluator.
+#[derive(Clone, Debug)]
+pub struct MembershipEvent {
+    /// Batch index the change was applied before (0-based).
+    pub batch: usize,
+    /// `"join"` or `"leave"`.
+    pub action: &'static str,
+    pub addr: String,
+    /// Pool size after the change.
+    pub hosts: usize,
+    /// Warm-cache entries handed off to the joining host (0 on leave,
+    /// or when no warm source / no binary wire was available).
+    pub handed_off: usize,
+    /// Why something was skipped or degraded; empty on a clean apply.
+    pub detail: String,
+}
+
+impl MembershipEvent {
+    /// The human-readable transition line (printed by the evaluator,
+    /// grepped by the CI churn-smoke job).
+    pub fn line(&self) -> String {
+        let detail = if self.detail.is_empty() {
+            String::new()
+        } else {
+            format!("; {}", self.detail)
+        };
+        format!(
+            "cluster membership: {} {} ({} hosts, {} entries handed off{})",
+            self.action, self.addr, self.hosts, self.handed_off, detail
+        )
+    }
+}
+
+/// Shared, cloneable log of applied membership events. The evaluator
+/// appends; the metrics sink (and anyone else holding a clone) reads
+/// incrementally via [`MembershipLog::since`].
+#[derive(Clone, Default)]
+pub struct MembershipLog {
+    events: Arc<Mutex<Vec<MembershipEvent>>>,
+}
+
+impl MembershipLog {
+    pub fn push(&self, event: MembershipEvent) {
+        self.events.lock().expect("membership log poisoned").push(event);
+    }
+
+    /// Events `from..` plus the new cursor (pass the cursor back next
+    /// call for an incremental drain without consuming the log).
+    pub fn since(&self, from: usize) -> (Vec<MembershipEvent>, usize) {
+        let events = self.events.lock().expect("membership log poisoned");
+        (events[from.min(events.len())..].to_vec(), events.len())
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().expect("membership log poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The warm-inventory source a joining host's handoff slice is carved
+/// from: a shared slot filled *after* the evaluator is boxed into a
+/// broker (the closure captures an [`crate::search::EvalBroker`]
+/// clone; [`crate::search::EvalBroker::warm_entries`] takes only the
+/// state lock, which is free while the broker's backend — this
+/// evaluator — is checked out and dispatching, so there is no
+/// deadlock). An unset slot just means joins start cold.
+#[derive(Clone, Default)]
+pub struct WarmSource {
+    #[allow(clippy::type_complexity)]
+    source: Arc<Mutex<Option<Box<dyn Fn() -> Vec<(Vec<usize>, EvalResult)> + Send>>>>,
+}
+
+impl WarmSource {
+    pub fn set(&self, f: impl Fn() -> Vec<(Vec<usize>, EvalResult)> + Send + 'static) {
+        *self.source.lock().expect("warm source poisoned") = Some(Box::new(f));
+    }
+
+    /// The current warm inventory; `None` when no source was attached.
+    pub fn entries(&self) -> Option<Vec<(Vec<usize>, EvalResult)>> {
+        self.source.lock().expect("warm source poisoned").as_ref().map(|f| f())
+    }
+}
+
+/// The plan file the admin commands append to and a live evaluator
+/// polls.
+pub fn plan_path(dir: &Path) -> PathBuf {
+    dir.join("membership.plan")
+}
+
+/// Append one command to `dir`'s plan file (creating both as needed) —
+/// the `nahas cluster join|leave` admin path. The line lands as one
+/// `O_APPEND` write, so a concurrent reader sees whole lines only.
+pub fn append_cmd(dir: &Path, cmd: &MembershipCmd) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let path = plan_path(dir);
+    let mut f = OpenOptions::new().create(true).append(true).open(&path)?;
+    f.write_all(format!("{}\n", cmd.to_line()).as_bytes())?;
+    Ok(())
+}
+
+/// Number of complete (newline-terminated) lines currently in `dir`'s
+/// plan — the cursor a fresh evaluator starts at, so it never replays
+/// commands that predate it.
+pub fn plan_len(dir: &Path) -> usize {
+    fs::read_to_string(plan_path(dir))
+        .map(|c| c.bytes().filter(|&b| b == b'\n').count())
+        .unwrap_or(0)
+}
+
+/// Read plan commands starting at (0-based) line `from`, returning
+/// them plus the new cursor. Only newline-terminated lines are
+/// consumed — a torn final line stays pending for the next poll —
+/// and unparseable complete lines are warned about and skipped.
+pub fn read_plan(dir: &Path, from: usize) -> (Vec<MembershipCmd>, usize) {
+    let Ok(content) = fs::read_to_string(plan_path(dir)) else {
+        return (Vec::new(), from);
+    };
+    let complete = match content.rfind('\n') {
+        Some(i) => &content[..=i],
+        None => return (Vec::new(), from),
+    };
+    let mut cmds = Vec::new();
+    let mut cursor = 0usize;
+    for (i, line) in complete.lines().enumerate() {
+        cursor = i + 1;
+        if i < from || line.trim().is_empty() {
+            continue;
+        }
+        match MembershipCmd::parse(line) {
+            Some(cmd) => cmds.push(cmd),
+            None => eprintln!("cluster membership: ignoring bad plan line {}: '{line}'", i + 1),
+        }
+    }
+    (cmds, cursor.max(from))
+}
+
+/// Carve the joining host's slice out of a warm inventory: exactly
+/// the entries whose owner on the *post-join* ring is `join_index`
+/// (everything else stays put — the moves-only-changed-host
+/// invariant), valid and finite only, re-encoded as serve-cache
+/// entries (serve key + response line) ready for [`send_handoff`].
+///
+/// Bit-identity of the replay: both wire protocols derive the
+/// client-visible f64s by parsing the cached response text, Rust's
+/// f64 `Display` is shortest-round-trip (`parse(format(x)) == x`),
+/// and the accuracy half is always computed client-side — so a
+/// synthesized line answers exactly like the line the host would have
+/// cached by simulating. `utilization` is omitted: no client reads it
+/// and the broker result does not carry it. Invalid results are
+/// skipped because their response lines carry backend-specific error
+/// strings this side cannot know; the joining host re-derives them
+/// deterministically on first contact.
+pub fn handoff_slice(
+    entries: &[(Vec<usize>, EvalResult)],
+    ring_after: &HashRing,
+    join_index: usize,
+    space: NasSpaceId,
+    seg: bool,
+    nas_len: usize,
+    key_len: usize,
+) -> Vec<(Vec<usize>, String)> {
+    let mut out = Vec::new();
+    for (key, r) in entries {
+        if !r.valid
+            || key.len() != key_len
+            || ![r.latency_ms, r.energy_mj, r.area_mm2].iter().all(|v| v.is_finite())
+        {
+            continue;
+        }
+        if ring_after.owner(key) != Some(join_index) {
+            continue;
+        }
+        out.push((serve_key(key, space, seg, nas_len), serve_line(r)));
+    }
+    out
+}
+
+/// The serve-cache key of a joint decision key, exactly as the server
+/// derives it from a simulate request: `[space, seg, nas_len, nas...,
+/// hw...]`.
+fn serve_key(joint: &[usize], space: NasSpaceId, seg: bool, nas_len: usize) -> Vec<usize> {
+    let mut key = Vec::with_capacity(3 + joint.len());
+    key.push(space as usize);
+    key.push(seg as usize);
+    key.push(nas_len);
+    key.extend_from_slice(joint);
+    key
+}
+
+/// The response line the owning server would serve for this result.
+fn serve_line(r: &EvalResult) -> String {
+    obj(vec![
+        ("valid", true.into()),
+        ("latency_ms", r.latency_ms.into()),
+        ("energy_mj", r.energy_mj.into()),
+        ("area_mm2", r.area_mm2.into()),
+    ])
+    .to_string()
+}
+
+/// Stream a handoff slice to `addr`: the serve fingerprint plus the
+/// slice as checksummed [`store::encode_handoff`] segments, one
+/// `CACHE_INSTALL` frame over the binary wire. Returns how many
+/// entries the host installed. A JSON-only peer (predates the
+/// protocol) is an error — the caller records it and the host simply
+/// starts cold; correctness never depends on a handoff landing.
+pub fn send_handoff(
+    addr: &str,
+    io_timeout: Duration,
+    entries: &[(Vec<usize>, String)],
+) -> Result<usize> {
+    if entries.is_empty() {
+        return Ok(0);
+    }
+    let mut client = Client::connect_wire(addr, Some(io_timeout), Wire::Binary)?;
+    if !client.is_binary() {
+        return Err(anyhow!("host speaks JSON only (predates the handoff protocol)"));
+    }
+    let segments = store::encode_handoff(entries);
+    client.install_cache(&store::serve_fingerprint(), &segments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_lines_roundtrip() {
+        for cmd in [
+            MembershipCmd::Join { addr: "10.0.0.9:7878".into(), weight: 2.5 },
+            MembershipCmd::Join { addr: "h:1".into(), weight: 1.0 },
+            MembershipCmd::Leave { addr: "10.0.0.9:7878".into() },
+        ] {
+            assert_eq!(MembershipCmd::parse(&cmd.to_line()), Some(cmd));
+        }
+        assert_eq!(
+            MembershipCmd::parse("join h:1"),
+            Some(MembershipCmd::Join { addr: "h:1".into(), weight: 1.0 })
+        );
+        for bad in ["", "join", "leave", "join h:1 x", "leave h:1 extra", "restart h:1"] {
+            assert_eq!(MembershipCmd::parse(bad), None, "'{bad}' parsed");
+        }
+    }
+
+    #[test]
+    fn plan_file_appends_and_reads_incrementally() {
+        let dir = std::env::temp_dir()
+            .join(format!("nahas-membership-plan-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let (cmds, cursor) = read_plan(&dir, 0);
+        assert!(cmds.is_empty());
+        assert_eq!(cursor, 0);
+        let join = MembershipCmd::Join { addr: "h:1".into(), weight: 1.0 };
+        let leave = MembershipCmd::Leave { addr: "h:2".into() };
+        append_cmd(&dir, &join).unwrap();
+        let (cmds, cursor) = read_plan(&dir, 0);
+        assert_eq!(cmds, vec![join]);
+        assert_eq!(cursor, 1);
+        append_cmd(&dir, &leave).unwrap();
+        let (cmds, cursor) = read_plan(&dir, cursor);
+        assert_eq!(cmds, vec![leave]);
+        assert_eq!(cursor, 2);
+        // Nothing new: the cursor holds.
+        let (cmds, cursor) = read_plan(&dir, cursor);
+        assert!(cmds.is_empty());
+        assert_eq!(cursor, 2);
+        // A torn final line (no newline yet) stays pending.
+        let mut f =
+            OpenOptions::new().append(true).open(plan_path(&dir)).unwrap();
+        f.write_all(b"join h:3").unwrap();
+        drop(f);
+        let (cmds, cursor) = read_plan(&dir, cursor);
+        assert!(cmds.is_empty(), "torn line must not be consumed");
+        assert_eq!(cursor, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn membership_log_drains_incrementally() {
+        let log = MembershipLog::default();
+        assert!(log.is_empty());
+        let ev = |a: &str| MembershipEvent {
+            batch: 0,
+            action: "join",
+            addr: a.to_string(),
+            hosts: 2,
+            handed_off: 0,
+            detail: String::new(),
+        };
+        log.push(ev("h:1"));
+        let (events, cursor) = log.since(0);
+        assert_eq!(events.len(), 1);
+        log.push(ev("h:2"));
+        let (events, cursor) = log.since(cursor);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].addr, "h:2");
+        assert_eq!(log.since(cursor).0.len(), 0);
+    }
+
+    #[test]
+    fn event_line_is_the_grep_target() {
+        let line = MembershipEvent {
+            batch: 3,
+            action: "join",
+            addr: "10.0.0.4:7878".to_string(),
+            hosts: 3,
+            handed_off: 42,
+            detail: String::new(),
+        }
+        .line();
+        assert_eq!(line, "cluster membership: join 10.0.0.4:7878 (3 hosts, 42 entries handed off)");
+    }
+}

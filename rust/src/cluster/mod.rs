@@ -21,7 +21,12 @@
 //!   or without failover. It advertises the pool's total pooled
 //!   connections as its [`crate::search::Evaluator::capacity`] hint,
 //!   so a shared [`crate::search::EvalBroker`] admits overlapping
-//!   session batches against it (`--broker-inflight`).
+//!   session batches against it (`--broker-inflight`);
+//! * [`membership`] — elastic membership: hosts join and leave the
+//!   live pool between batches (`nahas cluster join|leave`), with a
+//!   joining host's key range streamed from the broker's warm cache
+//!   as a checksummed segment handoff so it answers its first shard
+//!   traffic without simulating.
 //!
 //! CLI: `nahas search --evaluator cluster --hosts a:7878,b:7878` and
 //! `nahas cluster-status --hosts ...`. The whole stack, including how
@@ -32,6 +37,7 @@
 
 pub mod evaluator;
 pub mod health;
+pub mod membership;
 pub mod pool;
 pub mod ring;
 
@@ -39,5 +45,6 @@ pub use evaluator::ShardedEvaluator;
 pub use health::{
     probe_host, probe_wire, query_host_stats, HealthMonitor, HostProbe, HostServeStats,
 };
+pub use membership::{MembershipCmd, MembershipEvent, MembershipLog, WarmSource};
 pub use pool::{HostPool, HostSnapshot, HostState};
 pub use ring::HashRing;

@@ -11,10 +11,13 @@ use anyhow::{bail, Result};
 
 use crate::service::{Client, Wire};
 
-/// Socket read/write timeout for every cluster connection: a stalled
-/// host must surface as a transport failure (and fail over) rather
-/// than hang a shard worker — and with it the whole batch — forever.
-pub(crate) const IO_TIMEOUT: Duration = Duration::from_secs(10);
+/// Default socket read/write timeout for cluster connections: a
+/// stalled host must surface as a transport failure (and fail over)
+/// rather than hang a shard worker — and with it the whole batch —
+/// forever. Overridable per pool ([`HostPool::connect_opts`],
+/// `--io-timeout` on the CLI) so churn tests can use sub-second
+/// timeouts instead of sleeping through real 10s stalls.
+pub(crate) const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Shared per-host state. The up flag and the counters are atomics so
 /// shard worker threads, the health-probe thread and the coordinator
@@ -43,6 +46,20 @@ impl HostState {
             requests: AtomicUsize::new(0),
             evals: AtomicUsize::new(0),
             bursts: AtomicUsize::new(0),
+        }
+    }
+
+    /// A fresh state carrying over another state's counters and flag.
+    /// Membership changes rebuild the shared host `Arc` (the health
+    /// monitor holds the old one), and the per-host attribution in
+    /// `EvalStats` must survive the rebuild.
+    fn copy_of(other: &HostState) -> Self {
+        HostState {
+            addr: other.addr.clone(),
+            up: AtomicBool::new(other.is_up()),
+            requests: AtomicUsize::new(other.requests.load(Ordering::Relaxed)),
+            evals: AtomicUsize::new(other.evals.load(Ordering::Relaxed)),
+            bursts: AtomicUsize::new(other.bursts.load(Ordering::Relaxed)),
         }
     }
 
@@ -81,6 +98,8 @@ pub struct HostPool {
     /// refills): binary-negotiating by default, per-host fallback to
     /// JSON against old servers, forced JSON under `--wire json`.
     wire: Wire,
+    /// Socket read/write timeout for every connection this pool opens.
+    io_timeout: Duration,
 }
 
 impl HostPool {
@@ -101,13 +120,26 @@ impl HostPool {
         conns_per_host: usize,
         wire: Wire,
     ) -> Result<HostPool> {
+        Self::connect_opts(addrs, conns_per_host, wire, DEFAULT_IO_TIMEOUT)
+    }
+
+    /// [`HostPool::connect_wire`] with an explicit socket timeout.
+    /// Any positive `Duration` is accepted here (churn tests run with
+    /// sub-second timeouts); the CLI layer validates `--io-timeout` to
+    /// whole seconds ≥ 1.
+    pub fn connect_opts<S: AsRef<str>>(
+        addrs: &[S],
+        conns_per_host: usize,
+        wire: Wire,
+        io_timeout: Duration,
+    ) -> Result<HostPool> {
         let per_host = conns_per_host.max(1);
         let mut hosts = Vec::with_capacity(addrs.len());
         let mut conns = Vec::with_capacity(addrs.len());
         for addr in addrs {
             let addr = addr.as_ref();
             let pool: Vec<Client> = (0..per_host)
-                .filter_map(|_| Client::connect_wire(addr, Some(IO_TIMEOUT), wire).ok())
+                .filter_map(|_| Client::connect_wire(addr, Some(io_timeout), wire).ok())
                 .collect();
             if pool.is_empty() {
                 eprintln!("cluster: host {addr} unreachable at connect; starting it as down");
@@ -117,7 +149,7 @@ impl HostPool {
             hosts.push(HostState::new(addr, !pool.is_empty()));
             conns.push(pool);
         }
-        let pool = HostPool { hosts: Arc::new(hosts), conns, per_host, wire };
+        let pool = HostPool { hosts: Arc::new(hosts), conns, per_host, wire, io_timeout };
         if pool.hosts_up() == 0 {
             bail!("no cluster host reachable (tried {} hosts)", addrs.len());
         }
@@ -127,6 +159,12 @@ impl HostPool {
     /// The wire preference this pool connects with.
     pub fn wire(&self) -> Wire {
         self.wire
+    }
+
+    /// The socket read/write timeout every connection in this pool
+    /// (including refills and the ephemeral failover connects) uses.
+    pub fn io_timeout(&self) -> Duration {
+        self.io_timeout
     }
 
     pub fn len(&self) -> usize {
@@ -190,13 +228,47 @@ impl HostPool {
     pub(crate) fn refill(&mut self, i: usize) {
         let addr = self.hosts[i].addr().to_string();
         let wire = self.wire;
+        let io_timeout = self.io_timeout;
         let conns = &mut self.conns[i];
         while conns.len() < self.per_host {
-            match Client::connect_wire(&addr, Some(IO_TIMEOUT), wire) {
+            match Client::connect_wire(&addr, Some(io_timeout), wire) {
                 Ok(c) => conns.push(c),
                 Err(_) => break,
             }
         }
+    }
+
+    /// Membership join: append `addr` at index `len()`, spin up its
+    /// connection sub-pool and rebuild the shared host `Arc` (existing
+    /// counters carry over via [`HostState::copy_of`]). The caller must
+    /// re-hand the new `Arc` to its health monitor — the old one keeps
+    /// probing the pre-join states otherwise. Returns `true` if the new
+    /// host was reachable (it starts up), `false` if it starts down.
+    pub fn add_host(&mut self, addr: &str) -> bool {
+        let sub: Vec<Client> = (0..self.per_host)
+            .filter_map(|_| Client::connect_wire(addr, Some(self.io_timeout), self.wire).ok())
+            .collect();
+        let reachable = !sub.is_empty();
+        if !reachable {
+            eprintln!("cluster: joining host {addr} unreachable; starting it as down");
+        }
+        let mut hosts: Vec<HostState> = self.hosts.iter().map(HostState::copy_of).collect();
+        hosts.push(HostState::new(addr, reachable));
+        self.hosts = Arc::new(hosts);
+        self.conns.push(sub);
+        reachable
+    }
+
+    /// Membership leave: drop host `i`'s state and drain its
+    /// connection sub-pool, shifting later hosts down by one (ring
+    /// index `i` must be removed in the same breath). Counters of the
+    /// surviving hosts carry over; the departed host's attribution is
+    /// gone with it. Same `Arc`-rebuild caveat as [`Self::add_host`].
+    pub fn remove_host(&mut self, i: usize) {
+        let mut hosts: Vec<HostState> = self.hosts.iter().map(HostState::copy_of).collect();
+        hosts.remove(i);
+        self.hosts = Arc::new(hosts);
+        self.conns.remove(i);
     }
 
     pub fn snapshot(&self) -> Vec<HostSnapshot> {

@@ -131,6 +131,29 @@ impl HashRing {
     pub fn owner(&self, key: &[usize]) -> Option<usize> {
         self.route(key, &vec![true; self.seeds.len()])
     }
+
+    /// Add a host at the end of the ring (index `len()`), with the
+    /// same weight clamping as [`HashRing::weighted`]. Rendezvous
+    /// scores are per-(host, key), so a join moves keys only *to* the
+    /// new host: every pairwise argmax among the existing hosts is
+    /// untouched (property-tested in `tests/proptests.rs`).
+    pub fn join(&mut self, addr: &str, weight: f64) {
+        self.seeds.push(fnv1a(FNV_OFFSET, addr.as_bytes()));
+        self.weights.push(if weight.is_finite() && weight > 0.0 {
+            weight
+        } else {
+            f64::MIN_POSITIVE
+        });
+    }
+
+    /// Remove the host at `index`, shifting later hosts down by one
+    /// (the caller must shift its pool the same way). A leave moves
+    /// keys only *from* the removed host — each to its second-ranked
+    /// host, exactly like the down-host failover path.
+    pub fn leave(&mut self, index: usize) {
+        self.seeds.remove(index);
+        self.weights.remove(index);
+    }
 }
 
 #[cfg(test)]

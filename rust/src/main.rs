@@ -10,6 +10,7 @@
 //!   train-child    train one proxy child end-to-end through PJRT
 //!   costmodel      generate simulator-labelled data, train + evaluate the MLP
 //!   serve          run the simulator service (newline-JSON over TCP)
+//!   cluster        queue a join/leave for a live cluster pool (elastic membership)
 //!   cluster-status probe health + cache hit counts of a `--hosts` pool
 //!
 //! Run `nahas help` for flags. clap is not vendored in this offline
@@ -17,12 +18,16 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use nahas::accel::{simulate_network, AcceleratorConfig};
 use nahas::bench::Table;
-use nahas::cluster::{probe_host, probe_wire, query_host_stats, ShardedEvaluator};
+use nahas::cluster::{
+    membership, probe_host, probe_wire, query_host_stats, MembershipCmd, MembershipLog,
+    ShardedEvaluator, WarmSource,
+};
 use nahas::costmodel::{self, CostModel};
 use nahas::has::HasSpace;
 use nahas::metrics;
@@ -234,6 +239,20 @@ fn evaluator_arg(
     seed: u64,
     batch: usize,
 ) -> Result<EvalBroker> {
+    Ok(evaluator_arg_observed(flags, space, seed, batch)?.0)
+}
+
+/// [`evaluator_arg`] plus the cluster tier's [`MembershipLog`] (when
+/// the backend is the cluster tier), so `nahas sweep` can carry
+/// join/leave transitions in its metrics rows. Also fills the cluster
+/// tier's warm-handoff source with the broker's warm cache — this has
+/// to happen here, after the evaluator is boxed into the broker.
+fn evaluator_arg_observed(
+    flags: &Flags,
+    space: NasSpace,
+    seed: u64,
+    batch: usize,
+) -> Result<(EvalBroker, Option<MembershipLog>)> {
     let workers = workers_arg(flags)?;
     let seg = flags.bool("seg");
     let space_id = space.id;
@@ -253,6 +272,14 @@ fn evaluator_arg(
     if kind != "service" && kind != "cluster" && flags.get("wire").is_some() {
         bail!("--wire only applies to the service and cluster tiers");
     }
+    if kind != "cluster" {
+        for f in ["io-timeout", "membership-dir"] {
+            if flags.get(f).is_some() {
+                bail!("--{f} only applies to the cluster tier");
+            }
+        }
+    }
+    let mut cluster_hooks: Option<(WarmSource, MembershipLog)> = None;
     let backend: Box<dyn Evaluator + Send> = match kind {
         "local" => {
             let mut ev = SurrogateSim::new(space, seed);
@@ -289,19 +316,61 @@ fn evaluator_arg(
             // one connection per host and never more than the batch.
             let per_host = (workers / hosts.len()).clamp(1, batch.max(1));
             let wire = wire_arg(flags)?;
-            let mut ev =
-                ShardedEvaluator::connect_weighted_wire(&hosts, space.id, seed, per_host, wire)?
-                    .with_health_probes(std::time::Duration::from_millis(500));
+            // `--io-timeout SECS`: per-roundtrip socket timeout for
+            // every cluster connection (whole seconds, >= 1; the API
+            // below it takes any Duration for sub-second test runs).
+            let mut ev = match flags.get("io-timeout") {
+                Some(_) => {
+                    let secs = flags.u64("io-timeout", 0)?;
+                    if secs < 1 {
+                        bail!("--io-timeout must be at least 1 (whole seconds)");
+                    }
+                    ShardedEvaluator::connect_weighted_opts(
+                        &hosts,
+                        space.id,
+                        seed,
+                        per_host,
+                        wire,
+                        Duration::from_secs(secs),
+                    )?
+                }
+                None => ShardedEvaluator::connect_weighted_wire(
+                    &hosts, space.id, seed, per_host, wire,
+                )?,
+            }
+            .with_health_probes(Duration::from_millis(500));
             if seg {
                 ev = ev.segmentation();
             }
+            // `--membership-dir DIR`: poll DIR/membership.plan before
+            // every batch, so `nahas cluster join|leave ADDR
+            // --membership-dir DIR` from another terminal reshapes
+            // this live pool.
+            if let Some(dir) = flags.get("membership-dir") {
+                ev = ev.with_membership_dir(dir);
+                println!(
+                    "cluster: polling {} for membership changes",
+                    membership::plan_path(Path::new(dir)).display()
+                );
+            }
             println!("cluster: {}/{} hosts up", ev.hosts_up(), ev.hosts());
+            cluster_hooks = Some((ev.warm_source(), ev.membership_log()));
             Box::new(ev)
         }
         other => bail!("unknown evaluator '{other}' (local|parallel|service|cluster)"),
     };
     let store = cache_store_arg(flags, space_id, seg, seed)?;
-    broker_with_flags(flags, backend, store)
+    let broker = broker_with_flags(flags, backend, store)?;
+    // Warm-handoff source: a joining host's key range is carved out of
+    // the broker's warm cache. `warm_entries` takes only the broker's
+    // state lock — free while the cluster backend (which triggers
+    // joins mid-dispatch) is checked out — so this cannot deadlock.
+    let log = cluster_hooks.map(|(warm, log)| {
+        let b = broker.clone();
+        warm.set(move || b.warm_entries());
+        log
+    });
+    Ok((broker, log))
 }
 
 /// Wrap a backend in an [`EvalBroker`], honouring the shared broker
@@ -444,6 +513,11 @@ fn main() -> Result<()> {
         print_usage();
         return Ok(());
     };
+    // `cluster join|leave ADDR` carries positional operands, which the
+    // `--key value` parser rejects; peel them off before flag parsing.
+    if cmd == "cluster" {
+        return cmd_cluster(&args[1..]);
+    }
     let flags = Flags::parse(&args[1..])?;
     match cmd.as_str() {
         "simulate" => cmd_simulate(&flags),
@@ -507,7 +581,17 @@ fn print_usage() {
          \x20 serve        [--addr 127.0.0.1:7878 --cache-dir DIR]\n\
          \x20              [--event-threads N --sim-workers N  event-loop sizing]\n\
          \x20              [--metrics FILE --metrics-interval SECS  live JSONL rows]\n\
-         \x20 cluster-status [--hosts a:7878,b:7878=2 --timeout-ms 1000]"
+         \x20 cluster      join|leave ADDR --membership-dir DIR [--weight W]\n\
+         \x20              \x20queue an elastic membership change; a live sweep run\n\
+         \x20              \x20with the same --membership-dir applies it before its\n\
+         \x20              \x20next batch (joins get a warm-cache handoff first)\n\
+         \x20 cluster-status [--hosts a:7878,b:7878=2 --timeout-ms 1000]\n\
+         \x20              [--watch --watch-interval SECS --watch-count N\n\
+         \x20              \x20re-probe on an interval, printing up/DOWN transitions]\n\
+         \n\
+         cluster-tier search/sweep extras:\n\
+         \x20              [--io-timeout SECS  per-roundtrip socket timeout (>= 1)]\n\
+         \x20              [--membership-dir DIR  poll for cluster join|leave commands]"
     );
 }
 
@@ -774,10 +858,10 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
         bail!("no scenarios to run");
     }
     let multi_task = !scenarios[0].tasks_key().is_empty();
-    let broker = if multi_task {
-        multi_task_broker(flags, &scenarios, space_id, seed)?
+    let (broker, membership_log) = if multi_task {
+        (multi_task_broker(flags, &scenarios, space_id, seed)?, None)
     } else {
-        evaluator_arg(flags, space, seed, batch)?
+        evaluator_arg_observed(flags, space, seed, batch)?
     };
     println!(
         "sweep: {} scenarios x {} samples, concurrent over one shared evaluation broker",
@@ -825,7 +909,12 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
     let streamer = match flags.get("metrics") {
         Some(path) => {
             let interval = flags.f64("metrics-interval", 5.0)?;
-            let sink = metrics::MetricsSink::create(path)?;
+            let mut sink = metrics::MetricsSink::create(path)?;
+            // Cluster backend: membership transitions (join/leave +
+            // handoff counts) ride along in the metrics rows.
+            if let Some(log) = &membership_log {
+                sink = sink.with_membership(log.clone());
+            }
             println!("live metrics -> {path} (one row every {interval}s)");
             Some(metrics::MetricsStreamer::spawn(
                 broker.clone(),
@@ -1108,37 +1197,87 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
 }
 
-/// Probe every `--hosts` entry with one protocol roundtrip and print
-/// the pool's health plus each host's server-side cache counters (the
-/// operator view of the cluster tier).
-fn cmd_cluster_status(flags: &Flags) -> Result<()> {
-    let raw = flags
-        .get("hosts")
-        .ok_or_else(|| anyhow!("cluster-status requires --hosts A,B,..."))?;
-    let hosts = hosts_arg(raw)?;
-    let timeout = std::time::Duration::from_millis(flags.u64("timeout-ms", 1000)?);
+/// `nahas cluster join|leave ADDR --membership-dir DIR [--weight W]` —
+/// the elastic-membership admin commands. They do not touch the pool
+/// directly: they append one command to `DIR/membership.plan`, and any
+/// live sweep/search running its cluster tier with the same
+/// `--membership-dir` applies it before its next batch (joins receive
+/// a warm-cache handoff of their key range first).
+fn cmd_cluster(args: &[String]) -> Result<()> {
+    const USAGE: &str = "usage: nahas cluster join|leave ADDR --membership-dir DIR [--weight W]";
+    let Some((action, rest)) = args.split_first() else {
+        bail!("{USAGE}");
+    };
+    let (addr, rest) = match rest.split_first() {
+        Some((a, r)) if !a.starts_with("--") => (a.clone(), r),
+        _ => bail!("cluster {action} needs a host ADDR:PORT\n{USAGE}"),
+    };
+    let flags = Flags::parse(rest)?;
+    let dir = flags.get("membership-dir").ok_or_else(|| {
+        anyhow!(
+            "cluster {action} requires --membership-dir DIR \
+             (the directory the running sweep polls)"
+        )
+    })?;
+    let cmd = match action.as_str() {
+        "join" => {
+            let weight = flags.f64("weight", 1.0)?;
+            if !weight.is_finite() || weight <= 0.0 {
+                bail!("--weight must be a positive number");
+            }
+            MembershipCmd::Join { addr, weight }
+        }
+        "leave" => {
+            if flags.get("weight").is_some() {
+                bail!("--weight only applies to cluster join");
+            }
+            MembershipCmd::Leave { addr }
+        }
+        other => bail!("unknown cluster action '{other}' (join|leave)\n{USAGE}"),
+    };
+    membership::append_cmd(Path::new(dir), &cmd)?;
+    println!(
+        "cluster {action}: queued '{}' in {} (applies before the next batch of the \
+         sweep polling that directory)",
+        cmd.to_line(),
+        membership::plan_path(Path::new(dir)).display()
+    );
+    Ok(())
+}
+
+/// One cluster-status probe round: print the status table and return
+/// (hosts up, per-host up flags) — the flags feed `--watch`'s
+/// transition diff.
+fn print_cluster_table(hosts: &[(String, f64)], timeout: Duration) -> (usize, Vec<bool>) {
     let mut table = Table::new(&[
-        "Host", "Weight", "Status", "Wire", "RTT(ms)", "Served", "SimHits", "Cache", "Detail",
+        "Host", "Weight", "Status", "Wire", "RTT(ms)", "Served", "SimHits", "Cache",
+        "Installed", "Detail",
     ]);
     let mut up = 0;
-    for (host, weight) in &hosts {
+    let mut up_flags = Vec::with_capacity(hosts.len());
+    for (host, weight) in hosts {
         let p = probe_host(host, timeout);
         up += p.up as usize;
+        up_flags.push(p.up);
         // Negotiated wire protocol: "bin-v1" when the host acks the
         // binary hello, "json" when it predates the frame protocol.
         let wire = if p.up { probe_wire(host, timeout).unwrap_or("-") } else { "-" };
-        // Hit counts and resident size of the server-side result
-        // cache, when the host answers the stats protocol.
+        // Hit counts, resident size and handoff-installed entries of
+        // the server-side result cache, when the host answers the
+        // stats protocol.
         let stats = if p.up { query_host_stats(host, timeout) } else { None };
-        let (served, hits, cache) = stats
+        let (served, hits, cache, installed) = stats
             .map(|s| {
                 (
                     format!("{}", s.requests),
                     format!("{}", s.cache_hits),
                     format!("{}", s.cache_size),
+                    format!("{}", s.installed),
                 )
             })
-            .unwrap_or_else(|| ("-".to_string(), "-".to_string(), "-".to_string()));
+            .unwrap_or_else(|| {
+                ("-".to_string(), "-".to_string(), "-".to_string(), "-".to_string())
+            });
         table.row(vec![
             p.addr,
             format!("{weight}"),
@@ -1148,13 +1287,62 @@ fn cmd_cluster_status(flags: &Flags) -> Result<()> {
             served,
             hits,
             cache,
+            installed,
             p.detail,
         ]);
     }
     table.print();
-    println!("{up}/{} hosts up", hosts.len());
-    if up == 0 {
-        bail!("no cluster host reachable");
+    (up, up_flags)
+}
+
+/// Probe every `--hosts` entry with one protocol roundtrip and print
+/// the pool's health plus each host's server-side cache counters (the
+/// operator view of the cluster tier). With `--watch`, re-probe every
+/// `--watch-interval` seconds (default 2) and print a membership
+/// transition line whenever a host changes state; `--watch-count N`
+/// bounds the rounds (0 = until interrupted).
+fn cmd_cluster_status(flags: &Flags) -> Result<()> {
+    let raw = flags
+        .get("hosts")
+        .ok_or_else(|| anyhow!("cluster-status requires --hosts A,B,..."))?;
+    let hosts = hosts_arg(raw)?;
+    let timeout = Duration::from_millis(flags.u64("timeout-ms", 1000)?);
+    if !flags.bool("watch") {
+        for f in ["watch-interval", "watch-count"] {
+            if flags.get(f).is_some() {
+                bail!("--{f} only applies with --watch");
+            }
+        }
+        let (up, _) = print_cluster_table(&hosts, timeout);
+        println!("{up}/{} hosts up", hosts.len());
+        if up == 0 {
+            bail!("no cluster host reachable");
+        }
+        return Ok(());
     }
-    Ok(())
+    let interval = flags.f64("watch-interval", 2.0)?.max(0.1);
+    let rounds = flags.usize("watch-count", 0)?;
+    let mut prev: Option<Vec<bool>> = None;
+    let mut round = 0usize;
+    loop {
+        round += 1;
+        let (up, now) = print_cluster_table(&hosts, timeout);
+        if let Some(prev) = &prev {
+            for (i, (was, is)) in prev.iter().zip(&now).enumerate() {
+                if was != is {
+                    println!(
+                        "cluster membership: host {} {}",
+                        hosts[i].0,
+                        if *is { "DOWN -> up" } else { "up -> DOWN" }
+                    );
+                }
+            }
+        }
+        println!("[watch {round}] {up}/{} hosts up", hosts.len());
+        prev = Some(now);
+        if rounds > 0 && round >= rounds {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_secs_f64(interval));
+    }
 }

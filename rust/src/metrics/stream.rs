@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::cluster::membership::{MembershipEvent, MembershipLog};
 use crate::search::broker::{BrokerSnapshot, EvalBroker, SessionCounters};
 use crate::search::evaluator::HostEvalStats;
 use crate::search::sweep::SweepProgress;
@@ -100,6 +101,10 @@ pub struct MetricsRow {
     pub scenarios_done: Option<usize>,
     /// Total sweep scenarios, when a progress gauge is attached.
     pub scenarios_total: Option<usize>,
+    /// Cluster membership transitions applied since the previous row
+    /// (empty unless a [`MembershipLog`] is attached and a join/leave
+    /// happened in this interval).
+    pub membership: Vec<MembershipEvent>,
 }
 
 impl MetricsRow {
@@ -166,6 +171,22 @@ impl MetricsRow {
         if let Some(total) = self.scenarios_total {
             pairs.push(("scenarios_total", num(total)));
         }
+        if !self.membership.is_empty() {
+            let events = self
+                .membership
+                .iter()
+                .map(|e| {
+                    obj(vec![
+                        ("batch", num(e.batch)),
+                        ("action", Json::Str(e.action.to_string())),
+                        ("addr", Json::Str(e.addr.clone())),
+                        ("hosts", num(e.hosts)),
+                        ("handed_off", num(e.handed_off)),
+                    ])
+                })
+                .collect();
+            pairs.push(("membership", Json::Arr(events)));
+        }
         obj(pairs)
     }
 
@@ -184,6 +205,9 @@ impl MetricsRow {
         if let (Some(done), Some(total)) = (self.scenarios_done, self.scenarios_total) {
             line.push_str(&format!(" scenarios={done}/{total}"));
         }
+        for e in &self.membership {
+            line.push_str(&format!(" [{} {}]", e.action, e.addr));
+        }
         line
     }
 }
@@ -201,6 +225,8 @@ pub struct MetricsSink {
     last_wire: (u64, u64),
     last_hosts_down: usize,
     last_per_host: Vec<HostEvalStats>,
+    /// Membership event source + drain cursor, when attached.
+    membership: Option<(MembershipLog, usize)>,
 }
 
 impl MetricsSink {
@@ -224,7 +250,17 @@ impl MetricsSink {
             last_wire: (0, 0),
             last_hosts_down: 0,
             last_per_host: Vec::new(),
+            membership: None,
         })
+    }
+
+    /// Attach a cluster [`MembershipLog`]: join/leave transitions
+    /// applied since the previous row ride along in that row's
+    /// `membership` array (and its stderr progress line), so a metrics
+    /// stream records exactly when the pool changed shape.
+    pub fn with_membership(mut self, log: MembershipLog) -> MetricsSink {
+        self.membership = Some((log, 0));
+        self
     }
 
     /// Where the stream is being written.
@@ -254,6 +290,14 @@ impl MetricsSink {
             self.last_hosts_down = b.hosts_down;
             self.last_per_host = b.per_host.clone();
         }
+        let events = match &mut self.membership {
+            Some((log, cursor)) => {
+                let (events, next) = log.since(*cursor);
+                *cursor = next;
+                events
+            }
+            None => Vec::new(),
+        };
         let dt = t_s - self.last_t;
         let evals_delta = snap.evals.saturating_sub(self.last_evals);
         let evals_per_sec =
@@ -284,6 +328,7 @@ impl MetricsSink {
             per_host: self.last_per_host.clone(),
             scenarios_done: scenarios.map(|(done, _)| done),
             scenarios_total: scenarios.map(|(_, total)| total),
+            membership: events,
         };
         writeln!(self.out, "{}", row.to_json())
             .with_context(|| format!("writing metrics row to {:?}", self.path))?;
@@ -383,6 +428,40 @@ mod tests {
         assert_eq!(second.get("cache_hits").unwrap().as_usize(), Some(21));
         assert_eq!(second.get("scenarios_done").unwrap().as_usize(), Some(2));
         assert!((second.get("evals_per_sec").unwrap().as_f64().unwrap() - 5.0).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn membership_events_ride_along_in_rows_once() {
+        let dir = std::env::temp_dir().join("nahas_test_metrics_membership");
+        let path = dir.join("rows.jsonl");
+        let log = MembershipLog::default();
+        let mut sink = MetricsSink::create(&path).unwrap().with_membership(log.clone());
+        sink.emit(0.0, &snap(2, 2), None).unwrap();
+        log.push(MembershipEvent {
+            batch: 3,
+            action: "join",
+            addr: "10.0.0.4:7878".to_string(),
+            hosts: 3,
+            handed_off: 17,
+            detail: String::new(),
+        });
+        let row = sink.emit(1.0, &snap(4, 4), None).unwrap();
+        assert_eq!(row.membership.len(), 1);
+        assert!(row.progress_line().contains("[join 10.0.0.4:7878]"), "{}", row.progress_line());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let first = Json::parse(lines[0]).unwrap();
+        assert!(first.get("membership").is_none(), "no events -> no membership field");
+        let second = Json::parse(lines[1]).unwrap();
+        let events = second.get("membership").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("action").unwrap().as_str(), Some("join"));
+        assert_eq!(events[0].get("addr").unwrap().as_str(), Some("10.0.0.4:7878"));
+        assert_eq!(events[0].get("handed_off").unwrap().as_usize(), Some(17));
+        // The event was drained: the next row carries nothing.
+        let row = sink.emit(2.0, &snap(5, 5), None).unwrap();
+        assert!(row.membership.is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -668,6 +668,17 @@ impl EvalBroker {
         }
     }
 
+    /// Every resident `(key, result)` pair in the memo cache — the
+    /// warm inventory a cluster membership join carves its handoff
+    /// slice from. Only the state lock is taken (never the backend),
+    /// so this is safe to call from *inside* a backend's
+    /// `evaluate_batch` — the broker checks its backend out of the
+    /// state before dispatching.
+    pub fn warm_entries(&self) -> Vec<(Vec<usize>, EvalResult)> {
+        let st = self.core.lock_state();
+        st.cache.memo.entries().map(|(k, (r, _owner))| (k.to_vec(), *r)).collect()
+    }
+
     /// Open a new search session. Sessions are independent
     /// [`Evaluator`]s with their own zero-based counters; hand each
     /// concurrent search (or search phase) its own.

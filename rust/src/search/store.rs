@@ -273,6 +273,55 @@ fn decode_key(s: &str) -> Option<Vec<usize>> {
     s.split(',').map(|t| t.parse().ok()).collect()
 }
 
+/// Encode `entries` as a *handoff stream*: exactly the v2 store body
+/// (checksummed segments of `put_usize_slice` key +
+/// [`CacheValue::encode_bin`] value runs, block-compressed, up to
+/// [`COLD_SEGMENT_ENTRIES`] entries each) with no header line. The
+/// store file *is* the wire format — a cluster membership join streams
+/// a joining host's warm key range as one of these over the binary
+/// service wire, and the receiver decodes it with [`decode_handoff`].
+pub fn encode_handoff<V: CacheValue>(entries: &[(Vec<usize>, V)]) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    for chunk in entries.chunks(COLD_SEGMENT_ENTRIES) {
+        let mut payload = Vec::new();
+        for (key, value) in chunk {
+            codec::put_usize_slice(&mut payload, key);
+            value.encode_bin(&mut payload);
+        }
+        codec::write_segment(&mut bytes, &payload, chunk.len(), true);
+    }
+    bytes
+}
+
+/// Decode a handoff stream (or a v2 store body — same bytes). Strict
+/// all-or-nothing: any defect — truncated segment, flipped bit caught
+/// by the FNV checksum, malformed entry, trailing bytes — returns
+/// `Err` and the caller installs *nothing*, so a mangled transfer
+/// leaves the receiving host cold but consistent, never half-warm.
+pub fn decode_handoff<V: CacheValue>(bytes: &[u8]) -> Result<Vec<(Vec<usize>, V)>, String> {
+    let segs = codec::read_segments(bytes, ReadPolicy::Strict)?;
+    let mut out = Vec::new();
+    for seg in &segs {
+        let mut r = ByteReader::new(&seg.payload);
+        for i in 0..seg.entries {
+            let entry = r.usize_slice().zip(V::decode_bin(&mut r));
+            match entry {
+                Some(e) => out.push(e),
+                None => {
+                    return Err(format!(
+                        "corrupt entry {i} in segment at offset {}",
+                        seg.pos.offset
+                    ));
+                }
+            }
+        }
+        if !r.is_empty() {
+            return Err(format!("trailing bytes in segment at offset {}", seg.pos.offset));
+        }
+    }
+    Ok(out)
+}
+
 /// Disk-backed, append-only cache of `joint key -> V`, with a
 /// fingerprint header guarding staleness. See the module docs for the
 /// format and the safety rules.
@@ -405,32 +454,11 @@ impl<V: CacheValue> CacheStore<V> {
     }
 
     /// Decode a v2 segment stream (strictly: one bad segment rejects
-    /// the file) into entries, in write order.
+    /// the file) into entries, in write order. Shared with the cluster
+    /// warm-handoff path — the body and a handoff stream are the same
+    /// bytes.
     fn parse_v2(body: &[u8]) -> Result<Vec<(Vec<usize>, V)>, String> {
-        let segs = codec::read_segments(body, ReadPolicy::Strict)?;
-        let mut out = Vec::new();
-        for seg in &segs {
-            let mut r = ByteReader::new(&seg.payload);
-            for i in 0..seg.entries {
-                let entry = r.usize_slice().zip(V::decode_bin(&mut r));
-                match entry {
-                    Some(e) => out.push(e),
-                    None => {
-                        return Err(format!(
-                            "corrupt entry {i} in segment at offset {}",
-                            seg.pos.offset
-                        ));
-                    }
-                }
-            }
-            if !r.is_empty() {
-                return Err(format!(
-                    "trailing bytes in segment at offset {}",
-                    seg.pos.offset
-                ));
-            }
-        }
-        Ok(out)
+        decode_handoff(body)
     }
 
     /// Decode a legacy v1 text body (header already verified).

@@ -73,6 +73,13 @@ pub const WIRE_VERSION: usize = 1;
 const FK_REQ_BATCH: u8 = 1;
 /// Frame kind: one completed result (server -> client).
 const FK_RESP_ITEM: u8 = 2;
+/// Frame kind: a warm-cache handoff — a fingerprint plus a
+/// [`crate::search::store`] segment stream of serve-cache entries to
+/// install (client -> server). Sent to a joining cluster host so it
+/// answers its first shard traffic from cache instead of simulating.
+const FK_CACHE_INSTALL: u8 = 3;
+/// Frame kind: the install verdict (server -> client).
+const FK_CACHE_ACK: u8 = 4;
 
 /// Which wire protocol a client asks for (and, post-negotiation, got).
 /// `Binary` is a *preference*: the hello falls back to JSON against a
@@ -176,6 +183,9 @@ pub struct ServeCache {
     pub hits: AtomicU64,
     /// Simulate requests actually simulated (cacheable misses).
     pub sim_evals: AtomicU64,
+    /// Entries installed by warm-cache handoffs (`CACHE_INSTALL`
+    /// frames), cumulative.
+    pub installed: AtomicU64,
 }
 
 const SERVE_CACHE_CAPACITY: usize = 64 * 1024;
@@ -187,6 +197,7 @@ impl Default for ServeCache {
             store: Mutex::new(None),
             hits: AtomicU64::new(0),
             sim_evals: AtomicU64::new(0),
+            installed: AtomicU64::new(0),
         }
     }
 }
@@ -208,7 +219,29 @@ impl ServeCache {
             store: Mutex::new(Some(store)),
             hits: AtomicU64::new(0),
             sim_evals: AtomicU64::new(0),
+            installed: AtomicU64::new(0),
         }
+    }
+
+    /// Install a warm-handoff slice into the result cache (and the
+    /// spill store, when one is attached — a handed-off entry is as
+    /// durable as a simulated one). Later queries for these keys are
+    /// cache hits, not simulations. Returns how many entries landed.
+    pub fn install(&self, entries: Vec<(Vec<usize>, String)>) -> usize {
+        let n = entries.len();
+        {
+            let mut cache = self.lock();
+            for (key, resp) in &entries {
+                cache.insert(key.clone(), resp.clone());
+            }
+        }
+        if let Some(store) = self.store_lock().as_mut() {
+            for (key, resp) in &entries {
+                store.append(key, resp);
+            }
+        }
+        self.installed.fetch_add(n as u64, Ordering::Relaxed);
+        n
     }
 
     /// Resident entries in the result cache (the `cache_size` field of
@@ -575,7 +608,7 @@ fn tick_conn(
     // 4. Frame and answer complete requests: binary frames after a
     // successful hello, JSON lines otherwise.
     if conn.binary {
-        return tick_binary_frames(conn, requests, sim_pool, busy);
+        return tick_binary_frames(conn, requests, cache, sim_pool, busy);
     }
     while let Some(pos) = conn.read_buf.iter().position(|&b| b == b'\n') {
         let raw: Vec<u8> = conn.read_buf.drain(..=pos).collect();
@@ -615,7 +648,7 @@ fn tick_conn(
                 if conn.binary {
                     // Anything already buffered past the hello line is
                     // binary frames.
-                    return tick_binary_frames(conn, requests, sim_pool, busy);
+                    return tick_binary_frames(conn, requests, cache, sim_pool, busy);
                 }
             }
             // `{"stats": true}`: report this server's counters (used by
@@ -628,6 +661,7 @@ fn tick_conn(
                     ("cache_hits", (cache.hits.load(Ordering::Relaxed) as f64).into()),
                     ("sim_evals", (cache.sim_evals.load(Ordering::Relaxed) as f64).into()),
                     ("cache_size", (cache.len() as f64).into()),
+                    ("installed", (cache.installed.load(Ordering::Relaxed) as f64).into()),
                 ]);
                 requests.fetch_add(1, Ordering::Relaxed);
                 let id = req.get("id").cloned();
@@ -660,6 +694,7 @@ fn tick_conn(
 fn tick_binary_frames(
     conn: &mut Conn,
     requests: &AtomicU64,
+    cache: &ServeCache,
     sim_pool: &SimPool,
     busy: &mut bool,
 ) -> bool {
@@ -671,22 +706,61 @@ fn tick_binary_frames(
         };
         conn.read_buf.drain(..total);
         *busy = true;
-        if !dispatch_binary_frame(conn, &payload, requests, sim_pool) {
+        if !dispatch_binary_frame(conn, &payload, requests, cache, sim_pool) {
             return false;
         }
     }
 }
 
-/// Decode one client frame and queue its simulate jobs. Only
-/// `REQ_BATCH` is a valid client->server frame.
+/// Handle a `CACHE_INSTALL` frame inline on the event thread:
+/// `[fingerprint][handoff segment stream]`. The whole stream decodes
+/// before any entry installs — a mangled transfer acks `ok=false` and
+/// installs *nothing*, so the host stays cold but consistent. A stale
+/// fingerprint likewise refuses the lot: installing responses from a
+/// different simulator version would make this host lie.
+fn handle_cache_install(conn: &mut Conn, r: &mut ByteReader, cache: &ServeCache) -> bool {
+    let Some(fingerprint) = r.str() else { return false };
+    let ack = |ok: bool, installed: usize, msg: &str| {
+        let mut body = Vec::with_capacity(8 + msg.len());
+        body.push(FK_CACHE_ACK);
+        body.push(ok as u8);
+        put_varint(&mut body, installed as u64);
+        codec::put_str(&mut body, msg);
+        OutMsg::Frame(codec::frame(&body))
+    };
+    let want = crate::search::store::serve_fingerprint();
+    let out = if fingerprint != want {
+        ack(false, 0, &format!("fingerprint mismatch (got '{fingerprint}', want '{want}')"))
+    } else {
+        match crate::search::store::decode_handoff::<String>(r.take(r.remaining()).unwrap_or(&[]))
+        {
+            Ok(entries) => {
+                let n = cache.install(entries);
+                ack(true, n, "")
+            }
+            Err(why) => ack(false, 0, &why),
+        }
+    };
+    release(conn, RespTag::Ident, out);
+    true
+}
+
+/// Decode one client frame and queue its simulate jobs. `REQ_BATCH`
+/// and `CACHE_INSTALL` are the valid client->server frames.
 fn dispatch_binary_frame(
     conn: &mut Conn,
     payload: &[u8],
     requests: &AtomicU64,
+    cache: &ServeCache,
     sim_pool: &SimPool,
 ) -> bool {
     let mut r = ByteReader::new(payload);
-    if r.u8() != Some(FK_REQ_BATCH) {
+    let kind = r.u8();
+    if kind == Some(FK_CACHE_INSTALL) {
+        requests.fetch_add(1, Ordering::Relaxed);
+        return handle_cache_install(conn, &mut r, cache);
+    }
+    if kind != Some(FK_REQ_BATCH) {
         return false;
     }
     let (Some(space_byte), Some(seg_byte), Some(nas_len), Some(batch_id), Some(count)) =
@@ -1119,6 +1193,39 @@ impl Client {
             *slot = Some(resp);
         }
         Ok(out.into_iter().map(|r| r.expect("every index matched")).collect())
+    }
+
+    /// Stream a warm-cache handoff to this server: one `CACHE_INSTALL`
+    /// frame carrying the serve fingerprint plus a
+    /// [`crate::search::store::encode_handoff`] segment stream, one
+    /// `CACHE_ACK` back. Binary-wire only — a JSON-only peer predates
+    /// the protocol, and the caller should skip the handoff (the host
+    /// just starts cold). Returns how many entries the server
+    /// installed; a refused install (mangled stream, stale
+    /// fingerprint) is an error carrying the server's reason.
+    pub fn install_cache(&mut self, fingerprint: &str, segments: &[u8]) -> Result<usize> {
+        if !self.binary {
+            return Err(anyhow!("cache handoff needs the binary wire"));
+        }
+        let mut body = Vec::with_capacity(1 + 4 + fingerprint.len() + segments.len());
+        body.push(FK_CACHE_INSTALL);
+        codec::put_str(&mut body, fingerprint);
+        body.extend_from_slice(segments);
+        let frame = codec::frame(&body);
+        self.tx_bytes += frame.len() as u64;
+        self.writer.write_all(&frame)?;
+        let payload = self.read_frame()?;
+        let mut r = ByteReader::new(&payload);
+        if r.u8() != Some(FK_CACHE_ACK) {
+            return Err(anyhow!("unexpected frame kind in install ack"));
+        }
+        let (Some(ok), Some(installed), Some(msg)) = (r.u8(), r.varint_usize(), r.str()) else {
+            return Err(anyhow!("truncated CACHE_ACK frame"));
+        };
+        if ok != 1 {
+            return Err(anyhow!("server refused cache handoff: {msg}"));
+        }
+        Ok(installed)
     }
 }
 

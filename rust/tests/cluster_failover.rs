@@ -8,8 +8,9 @@ use std::io::ErrorKind;
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use nahas::cluster::ShardedEvaluator;
+use nahas::cluster::{query_host_stats, MembershipCmd, ShardedEvaluator};
 use nahas::has::HasSpace;
 use nahas::nas::{NasSpace, NasSpaceId};
 use nahas::search::joint::JointLayout;
@@ -232,6 +233,92 @@ fn all_hosts_down_spills_nothing() {
     bh_stop.store(true, Ordering::Relaxed);
     bh_handle.join().unwrap();
     let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn membership_churn_mid_sweep_is_bit_identical_with_zero_duplicate_evals() {
+    // Churn choreography: a third host joins mid-sweep and one of the
+    // founding hosts leaves a little later. The trajectory must be
+    // bit-identical to the same sweep on a static pool, with the same
+    // broker eval count, and *zero* duplicate backend evaluations —
+    // every unique key simulated exactly once across the whole
+    // (changing) pool, counted server-side.
+    let seed = 11u64;
+
+    // Reference: the same sweep through a broker over a static pool.
+    let (static_servers, static_hosts) = {
+        let servers: Vec<Server> =
+            (0..2).map(|_| Server::spawn("127.0.0.1:0").unwrap()).collect();
+        let hosts: Vec<String> = servers.iter().map(|s| s.addr.to_string()).collect();
+        (servers, hosts)
+    };
+    let static_cluster =
+        ShardedEvaluator::connect(&static_hosts, NasSpaceId::EfficientNet, seed, 2).unwrap();
+    // Drain-all dispatch on both brokers: one backend call per
+    // controller batch, so the evaluator's batch clock (which the
+    // membership schedule runs on) counts controller batches 0..=5.
+    let static_broker = EvalBroker::new(Box::new(static_cluster)).with_dispatch_chunk(usize::MAX);
+    let mut static_session = static_broker.session();
+    let want = run(&mut static_session, seed);
+    let static_evals = static_broker.stats().evals;
+    drop(static_session);
+    for s in static_servers {
+        s.stop();
+    }
+
+    // Churn run: start on {a, b}; c joins before batch 2, b leaves
+    // before batch 4 (96 samples / batch 16 = 6 batches, so both land
+    // strictly mid-run).
+    let a = Server::spawn("127.0.0.1:0").unwrap();
+    let b = Server::spawn("127.0.0.1:0").unwrap();
+    let c = Server::spawn("127.0.0.1:0").unwrap();
+    let hosts = vec![a.addr.to_string(), b.addr.to_string()];
+    let mut cluster =
+        ShardedEvaluator::connect(&hosts, NasSpaceId::EfficientNet, seed, 2).unwrap();
+    cluster
+        .schedule_membership(2, MembershipCmd::Join { addr: c.addr.to_string(), weight: 1.0 });
+    cluster.schedule_membership(4, MembershipCmd::Leave { addr: b.addr.to_string() });
+    let log = cluster.membership_log();
+    let broker = EvalBroker::new(Box::new(cluster)).with_dispatch_chunk(usize::MAX);
+    let mut session = broker.session();
+    let got = run(&mut session, seed);
+
+    // Bit-identical: routing (and re-routing) decides where a key is
+    // evaluated, never what it computes.
+    assert_same_trajectory(&want, &got);
+    assert_eq!(broker.stats().evals, static_evals, "churn changed the broker eval count");
+
+    // Both transitions were applied, in order, at the expected pool
+    // sizes; no warm source is wired here, so the join started cold.
+    let (events, _) = log.since(0);
+    assert_eq!(events.len(), 2, "expected exactly one join and one leave");
+    assert_eq!((events[0].action, events[0].hosts), ("join", 3));
+    assert_eq!(events[0].addr, c.addr.to_string());
+    assert_eq!(events[0].handed_off, 0, "no warm source: the join must start cold");
+    assert_eq!((events[1].action, events[1].hosts), ("leave", 2));
+    assert_eq!(events[1].addr, b.addr.to_string());
+    assert!(events[0].batch <= events[1].batch);
+
+    // Zero duplicate backend evaluations: summed across all three
+    // servers (b still runs after leaving the pool), the backend
+    // simulated exactly one eval per broker eval and never served the
+    // same key twice (an empty serve cache means any repeat would have
+    // been a sim_eval duplicate, and there are none).
+    let t = Duration::from_secs(2);
+    let stats: Vec<_> = [&a, &b, &c]
+        .iter()
+        .map(|s| query_host_stats(&s.addr.to_string(), t).expect("stats probe"))
+        .collect();
+    let sim_evals: u64 = stats.iter().map(|s| s.sim_evals).sum();
+    let cache_hits: u64 = stats.iter().map(|s| s.cache_hits).sum();
+    assert_eq!(sim_evals, static_evals as u64, "backend evals != broker evals");
+    assert_eq!(cache_hits, 0, "a server answered the same key twice");
+    assert!(stats[2].sim_evals > 0, "the joining host never took shard traffic");
+
+    drop(session);
+    a.stop();
+    b.stop();
+    c.stop();
 }
 
 #[test]

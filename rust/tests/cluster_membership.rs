@@ -1,0 +1,262 @@
+//! Elastic membership: warm cache handoff purity and the admin plan
+//! channel.
+//!
+//! A joining host must receive *exactly* its key range (the entries
+//! the post-join ring assigns to it, nothing else), install it
+//! all-or-nothing, and answer its first shard traffic from that cache
+//! with **zero** simulations — while a mangled handoff stream installs
+//! nothing and leaves the host cold but consistent. The plan-file
+//! channel behind `nahas cluster join|leave --membership-dir` applies
+//! commands between batches with bit-identical results throughout.
+
+use std::time::Duration;
+
+use nahas::cluster::{
+    membership, query_host_stats, HashRing, HostServeStats, MembershipCmd, ShardedEvaluator,
+};
+use nahas::has::HasSpace;
+use nahas::nas::{NasSpace, NasSpaceId};
+use nahas::search::store::{encode_handoff, serve_fingerprint};
+use nahas::search::{joint_key, EvalResult, Evaluator, SurrogateSim};
+use nahas::service::{Client, Server, Wire};
+use nahas::util::Rng;
+
+const PROBE: Duration = Duration::from_secs(2);
+
+fn stats(addr: &str) -> HostServeStats {
+    query_host_stats(addr, PROBE).expect("stats probe failed")
+}
+
+fn assert_bits_equal(w: &EvalResult, g: &EvalResult, what: &str) {
+    assert_eq!(w.valid, g.valid, "{what}");
+    assert_eq!(w.acc.to_bits(), g.acc.to_bits(), "{what}");
+    assert_eq!(w.latency_ms.to_bits(), g.latency_ms.to_bits(), "{what}");
+    assert_eq!(w.energy_mj.to_bits(), g.energy_mj.to_bits(), "{what}");
+    assert_eq!(w.area_mm2.to_bits(), g.area_mm2.to_bits(), "{what}");
+}
+
+#[test]
+fn warm_handoff_transfers_exactly_the_joining_hosts_range_and_serves_it_cold_free() {
+    let seed = 17u64;
+    let a = Server::spawn("127.0.0.1:0").unwrap();
+    let b = Server::spawn("127.0.0.1:0").unwrap();
+    let c = Server::spawn("127.0.0.1:0").unwrap();
+    let ab = vec![a.addr.to_string(), b.addr.to_string()];
+    let mut cluster =
+        ShardedEvaluator::connect(&ab, NasSpaceId::EfficientNet, seed, 2).unwrap();
+
+    // Warm up over {a, b}: every unique key lands in its owner's serve
+    // cache and in the warm inventory we hand the evaluator below.
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(seed);
+    let batch: Vec<(Vec<usize>, Vec<usize>)> =
+        (0..48).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect();
+    let warm_res = cluster.evaluate_batch(&batch);
+
+    // The warm source, wired exactly as the CLI wires the broker's
+    // warm inventory: joint key -> result, one entry per unique key.
+    let mut entries: Vec<(Vec<usize>, EvalResult)> = Vec::new();
+    for ((n, h), r) in batch.iter().zip(&warm_res) {
+        let k = joint_key(n, h);
+        if !entries.iter().any(|(e, _)| *e == k) {
+            entries.push((k, *r));
+        }
+    }
+    let warm = cluster.warm_source();
+    {
+        let entries = entries.clone();
+        warm.set(move || entries.clone());
+    }
+
+    // Join c: its slice streams into its serve cache before it takes
+    // any shard traffic.
+    let event = cluster.join_host(&c.addr.to_string(), 1.0).unwrap();
+    assert_eq!(event.detail, "", "join was not clean");
+
+    // The transferred slice is exactly c's key range on the post-join
+    // ring: the valid warm entries whose owner is the new index 2 —
+    // nothing more (no foreign keys), nothing less.
+    let abc = vec![ab[0].clone(), ab[1].clone(), c.addr.to_string()];
+    let ring = HashRing::new(&abc);
+    let owned_by_c: Vec<&(Vec<usize>, EvalResult)> =
+        entries.iter().filter(|(k, _)| ring.owner(k) == Some(2)).collect();
+    let transferred = owned_by_c.iter().filter(|(_, r)| r.valid).count();
+    let cold = owned_by_c.len() - transferred;
+    assert!(transferred > 0, "seed produced no warm keys for the joining host");
+    assert_eq!(event.handed_off, transferred, "handoff != the joining host's key range");
+    let cs = stats(&c.addr.to_string());
+    assert_eq!(cs.installed, transferred as u64);
+    assert_eq!(cs.cache_size, transferred as u64);
+    assert_eq!(cs.sim_evals, 0, "a handoff must not simulate anything");
+
+    // Replay the same batch on a *fresh* evaluator over {a, b, c} (a
+    // restarted search against the long-lived pool): bit-identical
+    // results, and c serves its whole transferred range from the
+    // installed cache — zero simulations for it, cold only for the
+    // invalid keys the handoff deliberately skipped.
+    let a_sim = stats(&a.addr.to_string()).sim_evals;
+    let b_sim = stats(&b.addr.to_string()).sim_evals;
+    let mut fresh =
+        ShardedEvaluator::connect(&abc, NasSpaceId::EfficientNet, seed, 2).unwrap();
+    let replay = fresh.evaluate_batch(&batch);
+    for (i, (w, g)) in warm_res.iter().zip(&replay).enumerate() {
+        assert_bits_equal(w, g, &format!("replay sample {i} diverged"));
+    }
+    let cs = stats(&c.addr.to_string());
+    assert_eq!(cs.sim_evals, cold as u64, "c simulated inside its transferred range");
+    assert_eq!(cs.cache_hits, transferred as u64, "c did not serve its range from cache");
+    let c_snap = fresh
+        .host_snapshots()
+        .into_iter()
+        .find(|s| s.addr == c.addr.to_string())
+        .unwrap();
+    assert_eq!(c_snap.evals, owned_by_c.len(), "c did not take exactly its shard share");
+    // A join moves keys only *to* the new host, so a and b replay
+    // their unchanged ranges purely from their own serve caches.
+    assert_eq!(stats(&a.addr.to_string()).sim_evals, a_sim, "a re-simulated after the join");
+    assert_eq!(stats(&b.addr.to_string()).sim_evals, b_sim, "b re-simulated after the join");
+
+    a.stop();
+    b.stop();
+    c.stop();
+}
+
+#[test]
+fn mangled_handoff_streams_install_nothing_and_leave_the_host_cold_but_consistent() {
+    let s = Server::spawn("127.0.0.1:0").unwrap();
+    let addr = s.addr.to_string();
+    let entries: Vec<(Vec<usize>, String)> = (0..6)
+        .map(|i| {
+            (
+                vec![0, 0, 3, i, i + 1, i + 2],
+                format!("{{\"valid\": true, \"latency_ms\": {i}.25}}"),
+            )
+        })
+        .collect();
+    let pristine = encode_handoff(&entries);
+    let mut client = Client::connect_wire(&addr, Some(PROBE), Wire::Binary).unwrap();
+    assert!(client.is_binary(), "fresh server must negotiate the binary wire");
+
+    // Truncated mid-segment: refused whole.
+    let err = client
+        .install_cache(&serve_fingerprint(), &pristine[..pristine.len() - 3])
+        .unwrap_err();
+    assert!(err.to_string().contains("refused"), "unexpected error: {err}");
+    // One flipped bit: the segment checksum catches it, refused whole.
+    let mut flipped = pristine.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x10;
+    let err = client.install_cache(&serve_fingerprint(), &flipped).unwrap_err();
+    assert!(err.to_string().contains("refused"), "unexpected error: {err}");
+    // A stale fingerprint never installs, however clean the bytes.
+    let err = client.install_cache("serve/v0/stale", &pristine).unwrap_err();
+    assert!(err.to_string().contains("fingerprint mismatch"), "unexpected error: {err}");
+
+    // Cold but consistent: absolutely nothing landed.
+    let st = stats(&addr);
+    assert_eq!((st.installed, st.cache_size), (0, 0), "a refused handoff half-installed");
+
+    // The pristine stream still lands whole on the same connection.
+    assert_eq!(client.install_cache(&serve_fingerprint(), &pristine).unwrap(), entries.len());
+    let st = stats(&addr);
+    assert_eq!(st.installed, entries.len() as u64);
+    assert_eq!(st.cache_size, entries.len() as u64);
+    assert_eq!(st.sim_evals, 0);
+    s.stop();
+}
+
+#[test]
+fn plan_file_drives_join_and_leave_between_batches() {
+    let seed = 23u64;
+    let a = Server::spawn("127.0.0.1:0").unwrap();
+    let b = Server::spawn("127.0.0.1:0").unwrap();
+    let c = Server::spawn("127.0.0.1:0").unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("nahas-membership-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // A command already in the plan predates the evaluator: it must be
+    // skipped, not replayed.
+    membership::append_cmd(
+        &dir,
+        &MembershipCmd::Join { addr: "10.255.0.1:1".into(), weight: 1.0 },
+    )
+    .unwrap();
+
+    let ab = vec![a.addr.to_string(), b.addr.to_string()];
+    let mut cluster = ShardedEvaluator::connect(&ab, NasSpaceId::EfficientNet, seed, 1)
+        .unwrap()
+        .with_membership_dir(dir.clone());
+    let mut local = SurrogateSim::new(NasSpace::new(NasSpaceId::EfficientNet), seed);
+    let space = NasSpace::new(NasSpaceId::EfficientNet);
+    let has = HasSpace::new();
+    let mut rng = Rng::new(seed);
+    let mut batch = |n: usize| -> Vec<(Vec<usize>, Vec<usize>)> {
+        (0..n).map(|_| (space.random(&mut rng), has.random(&mut rng))).collect()
+    };
+
+    let b1 = batch(6);
+    let r1 = cluster.evaluate_batch(&b1);
+    assert_eq!(cluster.hosts(), 2, "a pre-existing plan line was replayed");
+
+    // Queue a join the way `nahas cluster join` does; it applies
+    // before the next batch, not in the middle of one.
+    membership::append_cmd(
+        &dir,
+        &MembershipCmd::Join { addr: c.addr.to_string(), weight: 1.0 },
+    )
+    .unwrap();
+    assert_eq!(cluster.hosts(), 2, "membership changed outside a batch boundary");
+    let b2 = batch(6);
+    let r2 = cluster.evaluate_batch(&b2);
+    assert_eq!(cluster.hosts(), 3);
+
+    membership::append_cmd(&dir, &MembershipCmd::Leave { addr: b.addr.to_string() }).unwrap();
+    let b3 = batch(6);
+    let r3 = cluster.evaluate_batch(&b3);
+    assert_eq!(cluster.hosts(), 2);
+
+    let (events, _) = cluster.membership_log().since(0);
+    assert_eq!(events.len(), 2);
+    assert_eq!(events[0].action, "join");
+    assert_eq!(events[0].addr, c.addr.to_string());
+    assert_eq!(events[1].action, "leave");
+    assert_eq!(events[1].addr, b.addr.to_string());
+
+    // Bit-identical to the local simulator through every transition.
+    for (bt, rs) in [(&b1, &r1), (&b2, &r2), (&b3, &r3)] {
+        for (i, ((n, h), g)) in bt.iter().zip(rs).enumerate() {
+            assert_bits_equal(&local.evaluate(n, h), g, &format!("sample {i} diverged"));
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+    a.stop();
+    b.stop();
+    c.stop();
+}
+
+#[test]
+fn membership_error_paths_reject_without_touching_the_pool() {
+    let a = Server::spawn("127.0.0.1:0").unwrap();
+    let b = Server::spawn("127.0.0.1:0").unwrap();
+    let ab = vec![a.addr.to_string(), b.addr.to_string()];
+    let mut cluster =
+        ShardedEvaluator::connect(&ab, NasSpaceId::EfficientNet, 1, 1).unwrap();
+
+    let err = cluster.join_host(&a.addr.to_string(), 1.0).unwrap_err();
+    assert!(err.to_string().contains("already in the pool"), "{err}");
+    let err = cluster.leave_host("10.255.0.1:1").unwrap_err();
+    assert!(err.to_string().contains("not in the pool"), "{err}");
+    assert_eq!(cluster.hosts(), 2, "a rejected command changed the pool");
+
+    cluster.leave_host(&a.addr.to_string()).unwrap();
+    assert_eq!(cluster.hosts(), 1);
+    let err = cluster.leave_host(&b.addr.to_string()).unwrap_err();
+    assert!(err.to_string().contains("last host"), "{err}");
+    assert_eq!(cluster.hosts(), 1);
+
+    a.stop();
+    b.stop();
+}

@@ -3,11 +3,15 @@
 //! validator totality over the HAS space, memo-cache transparency, and
 //! the persistent-store invariants (bit-exact round-trip,
 //! append-then-reload equals the in-memory map, no cross-file
-//! contamination between concurrently flushing brokers).
+//! contamination between concurrently flushing brokers), and the
+//! elastic-membership invariants (ring join/leave moves keys only
+//! to/from the changed host; a mangled warm-handoff stream decodes
+//! all-or-nothing, never panicking and never inventing entries).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
+use nahas::cluster::HashRing;
 use nahas::has::{validate, HasSpace};
 use nahas::nas::{NasSpace, NasSpaceId};
 use nahas::pareto::{
@@ -565,6 +569,131 @@ fn prop_interleaved_brokers_on_separate_files_never_cross_contaminate() {
     );
     let _ = std::fs::remove_file(&path_a);
     let _ = std::fs::remove_file(&path_b);
+}
+
+// ---- elastic membership properties (`nahas::cluster`) ----
+
+/// A join moves keys only *to* the new host and a leave only *from*
+/// the departed one: rendezvous scores are per-(host, key), so the
+/// changed host's score is the only one that appears or disappears —
+/// every pairwise argmax among the untouched hosts is unchanged. This
+/// is the invariant that makes a warm handoff slice well-defined (the
+/// joining host's range is exactly the keys it now wins) and keeps
+/// everyone else's cache affinity intact through churn.
+#[test]
+fn prop_ring_join_and_leave_move_keys_only_to_or_from_the_changed_host() {
+    proptest::check(
+        "rendezvous join/leave isolation",
+        proptest::CASES,
+        |r| {
+            let n = 2 + r.below(5); // 2..=6 hosts
+            let key: Vec<usize> = (0..(1 + r.below(30))).map(|_| r.below(8)).collect();
+            // Joining weight spans light to heavy (0.25 .. 4.0).
+            let weight = 0.25 * (1 + r.below(16)) as f64;
+            let leave = r.below(n);
+            (n, key, weight, leave)
+        },
+        |(n, key, weight, leave)| {
+            let named: Vec<String> = (0..*n).map(|i| format!("10.0.0.{i}:7878")).collect();
+            let before = HashRing::new(&named);
+            let owner = before.owner(key).unwrap();
+
+            // Join: the new host lands at index n; keys either keep
+            // their owner or move to the newcomer, never between two
+            // incumbent hosts.
+            let mut joined = before.clone();
+            joined.join("10.0.9.9:7878", *weight);
+            let after_join = joined.owner(key).unwrap();
+            if after_join != owner && after_join != *n {
+                return Err(format!(
+                    "join (weight {weight}) moved a key between incumbents {owner} -> {after_join}"
+                ));
+            }
+
+            // Leave: survivors keep their keys; the departed host's
+            // keys land on a survivor. Indices above the removed slot
+            // shift down by one, so map back before comparing.
+            let mut left = before.clone();
+            left.leave(*leave);
+            let shifted = left.owner(key).unwrap();
+            let after_leave = if shifted >= *leave { shifted + 1 } else { shifted };
+            if owner != *leave && after_leave != owner {
+                return Err(format!(
+                    "leave of {leave} moved a key between survivors {owner} -> {after_leave}"
+                ));
+            }
+
+            // Join then leave of the same host is a no-op on ownership.
+            joined.leave(*n);
+            if joined.owner(key) != Some(owner) {
+                return Err("join+leave of the same host changed an owner".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A truncated or bit-flipped handoff stream never panics the decoder
+/// and never half-installs: [`nahas::search::store::decode_handoff`]
+/// is strict all-or-nothing per segment, so whatever it accepts is a
+/// byte-exact prefix of what the sender encoded — a mangled transfer
+/// leaves the joining host cold (or short) but consistent, never
+/// holding an entry the sender did not write.
+#[test]
+fn prop_mangled_handoff_stream_decodes_all_or_nothing() {
+    proptest::check(
+        "mangled handoff decode total",
+        128,
+        |r| {
+            let entries: Vec<(Vec<usize>, String)> = (0..1 + r.below(12))
+                .map(|i| {
+                    let key: Vec<usize> = (0..1 + r.below(8)).map(|_| r.below(100)).collect();
+                    (key, format!("{{\"valid\": true, \"latency_ms\": {i}.5}}"))
+                })
+                .collect();
+            let mut bytes = nahas::search::store::encode_handoff(&entries);
+            // kind 0: pristine; 1: truncate; 2: truncate + bit-flip.
+            let kind = r.below(3);
+            if kind >= 1 {
+                bytes.truncate(r.below(bytes.len() + 1));
+            }
+            if kind == 2 && !bytes.is_empty() {
+                let i = r.below(bytes.len());
+                bytes[i] ^= 1 << r.below(8);
+            }
+            (entries, bytes, kind)
+        },
+        |(entries, bytes, kind)| {
+            let got: Result<Vec<(Vec<usize>, String)>, String> =
+                nahas::search::store::decode_handoff(bytes);
+            match got {
+                Ok(got) => {
+                    if *kind == 0 && got.len() != entries.len() {
+                        return Err(format!(
+                            "pristine stream decoded {} of {} entries",
+                            got.len(),
+                            entries.len()
+                        ));
+                    }
+                    // Whatever survives the checksums is a prefix of
+                    // the genuine entry sequence — never invented data.
+                    if got.len() > entries.len() {
+                        return Err("decoder invented entries".into());
+                    }
+                    for (i, (g, w)) in got.iter().zip(entries.iter()).enumerate() {
+                        if g != w {
+                            return Err(format!("entry {i} diverged: {g:?} vs {w:?}"));
+                        }
+                    }
+                    Ok(())
+                }
+                // Rejection is the expected outcome for mangled bytes;
+                // the property is totality plus all-or-nothing.
+                Err(_) if *kind >= 1 => Ok(()),
+                Err(e) => Err(format!("pristine stream rejected: {e}")),
+            }
+        },
+    );
 }
 
 // ---------------------------------------------------------------------------
